@@ -1,0 +1,130 @@
+//! Bench target: coordinator service benchmarks — request overhead,
+//! batching benefit, and the E2E serving throughput (headline claim:
+//! fused non-separable schemes cut barrier/launch count and beat their
+//! separable counterparts at the service level too).
+
+use dwt_accel::benchutil::{bench, default_budget, gbs, summarize, Table};
+use dwt_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Request};
+use dwt_accel::dwt::Image;
+use dwt_accel::polyphase::schemes::Scheme;
+use std::time::{Duration, Instant};
+
+fn native_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifacts_dir: None,
+        workers: 2,
+        batch: BatchPolicy::default(),
+        tile: 256,
+        tiled_threshold: usize::MAX,
+    }
+}
+
+fn main() {
+    println!("\n=== coordinator service ===\n");
+
+    // dispatch overhead: tiny image through the full submit/respond path
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let tiny = Image::synthetic(8, 8, 1);
+    let st = bench(
+        || {
+            coord
+                .transform(Request {
+                    image: tiny.clone(),
+                    wavelet: "cdf53".into(),
+                    scheme: Scheme::SepLifting,
+                    inverse: false,
+                    levels: 1,
+                })
+                .unwrap();
+        },
+        default_budget(),
+        10,
+        5000,
+    );
+    println!(
+        "submit/respond overhead (8x8 native): p50 {:.1} us",
+        st.median_us()
+    );
+
+    // native serving throughput per scheme (256^2)
+    let img = Image::synthetic(256, 256, 2);
+    let t = Table::new(&[13, 10, 10]);
+    t.header(&["scheme", "ms/req", "GB/s"]);
+    for scheme in Scheme::ALL {
+        let st = bench(
+            || {
+                coord
+                    .transform(Request {
+                        image: img.clone(),
+                        wavelet: "cdf97".into(),
+                        scheme,
+                        inverse: false,
+                        levels: 1,
+                    })
+                    .unwrap();
+            },
+            default_budget(),
+            3,
+            200,
+        );
+        t.row(&[
+            scheme.name().into(),
+            format!("{:.2}", st.median_ms()),
+            format!("{:.3}", gbs(img.data.len() * 4, st.median)),
+        ]);
+    }
+
+    // batching benefit on the PJRT path (skipped without artifacts)
+    if dwt_accel::runtime::default_artifacts_dir()
+        .join("manifest.json")
+        .exists()
+    {
+        println!("\nPJRT path: batched vs unbatched (cdf97 ns_polyconv, 32 reqs)");
+        for (label, max_batch) in [("batch=1", 1usize), ("batch=8", 8)] {
+            let coord = Coordinator::new(CoordinatorConfig {
+                batch: BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_millis(3),
+                },
+                ..Default::default()
+            })
+            .unwrap();
+            // warm the executable caches
+            coord
+                .transform(Request {
+                    image: img.clone(),
+                    wavelet: "cdf97".into(),
+                    scheme: Scheme::NsPolyconv,
+                    inverse: false,
+                    levels: 1,
+                })
+                .unwrap();
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..32)
+                .map(|_| {
+                    coord.submit(Request {
+                        image: img.clone(),
+                        wavelet: "cdf97".into(),
+                        scheme: Scheme::NsPolyconv,
+                        inverse: false,
+                        levels: 1,
+                    })
+                })
+                .collect();
+            let mut lats = Vec::new();
+            for h in handles {
+                lats.push(h.recv().unwrap().unwrap().latency);
+            }
+            let wall = t0.elapsed();
+            let s = summarize(&mut lats);
+            println!(
+                "  {label}: wall {:.1} ms, req p50 {:.1} ms, batches {}",
+                wall.as_secs_f64() * 1e3,
+                s.median_ms(),
+                coord.metrics.summary().batches
+            );
+        }
+    } else {
+        println!("\n(PJRT batching bench skipped: run `make artifacts` first)");
+    }
+}

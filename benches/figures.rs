@@ -1,0 +1,78 @@
+//! Bench target F7/F8/F9: regenerate Figures 7, 8, 9 — throughput vs
+//! image size for every scheme, in two forms:
+//!   (a) the gpusim execution-model prediction for the paper's two
+//!       devices (the published curves' *shape*), and
+//!   (b) measured wallclock GB/s of the native rust engine on this host
+//!       (an independent physical reproduction of the orderings).
+
+use dwt_accel::benchutil::{bench, default_budget, gbs, Table};
+use dwt_accel::dwt::{Engine, Image};
+use dwt_accel::gpusim::{self, Device, PipelineKind};
+use dwt_accel::polyphase::schemes::Scheme;
+use dwt_accel::polyphase::wavelets::Wavelet;
+
+fn schemes_for(w: &Wavelet) -> Vec<Scheme> {
+    Scheme::ALL
+        .into_iter()
+        .filter(|s| {
+            !(matches!(s, Scheme::SepPolyconv | Scheme::NsPolyconv) && w.n_pairs() < 2)
+        })
+        .collect()
+}
+
+fn main() {
+    for w in Wavelet::paper_set() {
+        let fig = match w.name {
+            "cdf53" => 7,
+            "cdf97" => 8,
+            _ => 9,
+        };
+        println!("\n=== F{fig}: Figure {fig} — performance for {} ===", w.title);
+
+        // (a) simulated curves on the paper's devices
+        for (dev, pipe) in [
+            (Device::amd6970(), PipelineKind::OpenCl),
+            (Device::titanx(), PipelineKind::Shaders),
+        ] {
+            println!("\n  simulated GB/s — {} / {}:", dev.model, pipe.name());
+            let sizes = gpusim::cost::default_sizes();
+            let t = Table::new(&[26usize].iter().copied().chain(sizes.iter().map(|_| 8)).collect::<Vec<_>>());
+            let mut hdr: Vec<String> = vec!["scheme \\ Mpel".into()];
+            hdr.extend(sizes.iter().map(|n| format!("{:.2}", *n as f64 / 1e6)));
+            t.row(&hdr);
+            for s in schemes_for(&w) {
+                let mut row = vec![s.label().to_string()];
+                for p in gpusim::simulate(&dev, pipe, s, &w) {
+                    row.push(format!("{:.1}", p.gbs));
+                }
+                t.row(&row);
+            }
+        }
+
+        // (b) measured native-engine curves on this host
+        println!("\n  measured native GB/s (this host):");
+        let sizes = [128usize, 256, 512, 1024];
+        let mut hdr: Vec<String> = vec!["scheme \\ size".into()];
+        hdr.extend(sizes.iter().map(|s| format!("{s}^2")));
+        let t = Table::new(&[26usize, 8, 8, 8, 8]);
+        t.row(&hdr);
+        for s in schemes_for(&w) {
+            let engine = Engine::new(s, w.clone());
+            let mut row = vec![s.label().to_string()];
+            for &side in &sizes {
+                let img = Image::synthetic(side, side, 88);
+                let stats = bench(
+                    || {
+                        std::hint::black_box(engine.forward(std::hint::black_box(&img)));
+                    },
+                    default_budget(),
+                    3,
+                    500,
+                );
+                row.push(format!("{:.3}", gbs(side * side * 4, stats.median)));
+            }
+            t.row(&row);
+        }
+    }
+    println!("\n(shape claims asserted in gpusim::cost tests; see EXPERIMENTS.md F7-F9)");
+}

@@ -1,0 +1,120 @@
+//! Bench target: native engine micro-benchmarks — the L3 hot path.
+//! Used by the §Perf iteration log in EXPERIMENTS.md: per-scheme
+//! transform wallclock, the specialized lifting fast path vs the
+//! generic evaluator, tiled vs monolithic, and memcpy roofline.
+
+use dwt_accel::benchutil::{bench, default_budget, gbs, Table};
+use dwt_accel::coordinator::tiler;
+use dwt_accel::dwt::{apply, lifting, Engine, Image, Planes};
+use dwt_accel::polyphase::schemes::{self, Scheme};
+use dwt_accel::polyphase::wavelets::Wavelet;
+
+fn main() {
+    let side = 1024usize;
+    let img = Image::synthetic(side, side, 5);
+    let bytes = side * side * 4;
+
+    println!("\n=== native engine, {side}x{side} f32 ===\n");
+
+    // roofline anchor: plane copy
+    let src = img.data.clone();
+    let mut dst = vec![0.0f32; src.len()];
+    let s = bench(
+        || {
+            dst.copy_from_slice(std::hint::black_box(&src));
+            std::hint::black_box(&mut dst);
+        },
+        default_budget(),
+        5,
+        2000,
+    );
+    println!(
+        "memcpy roofline:            {:>8.2} GB/s ({:.3} ms)",
+        gbs(bytes, s.median),
+        s.median_ms()
+    );
+
+    // specialized lifting fast path vs generic matrix evaluator
+    let w = Wavelet::cdf97();
+    let planes0 = Planes::split(&img);
+    let s_fast = bench(
+        || {
+            let mut p = planes0.clone();
+            lifting::forward_in_place(&w, &mut p);
+            std::hint::black_box(&p);
+        },
+        default_budget(),
+        3,
+        500,
+    );
+    let steps = schemes::build(Scheme::SepLifting, &w);
+    let s_generic = bench(
+        || {
+            std::hint::black_box(apply::apply_chain(&steps, std::hint::black_box(&planes0)));
+        },
+        default_budget(),
+        3,
+        500,
+    );
+    println!(
+        "sep_lifting fast path:      {:>8.2} GB/s ({:.3} ms)",
+        gbs(bytes, s_fast.median),
+        s_fast.median_ms()
+    );
+    println!(
+        "sep_lifting generic eval:   {:>8.2} GB/s ({:.3} ms)  (x{:.2} slower)",
+        gbs(bytes, s_generic.median),
+        s_generic.median_ms(),
+        s_generic.median.as_secs_f64() / s_fast.median.as_secs_f64()
+    );
+
+    // per-scheme, per-wavelet forward
+    println!();
+    let t = Table::new(&[7, 13, 10, 10, 9]);
+    t.header(&["wavelet", "scheme", "ms", "GB/s", "MACs/pel"]);
+    for w in Wavelet::all() {
+        for scheme in Scheme::ALL {
+            let engine = Engine::new(scheme, w.clone());
+            let st = bench(
+                || {
+                    std::hint::black_box(engine.forward(std::hint::black_box(&img)));
+                },
+                default_budget(),
+                3,
+                200,
+            );
+            t.row(&[
+                w.name.into(),
+                scheme.name().into(),
+                format!("{:.2}", st.median_ms()),
+                format!("{:.3}", gbs(bytes, st.median)),
+                format!("{:.1}", engine.macs_per_pixel()),
+            ]);
+        }
+    }
+
+    // tiled vs monolithic (the coordinator's large-image path)
+    let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
+    let s_mono = bench(
+        || {
+            std::hint::black_box(engine.forward(std::hint::black_box(&img)));
+        },
+        default_budget(),
+        3,
+        200,
+    );
+    let s_tiled = bench(
+        || {
+            std::hint::black_box(tiler::tiled_forward(&engine, std::hint::black_box(&img), 256));
+        },
+        default_budget(),
+        3,
+        200,
+    );
+    println!(
+        "\nmonolithic sep_lifting:     {:.3} ms;  tiled(256): {:.3} ms (halo overhead x{:.2})",
+        s_mono.median_ms(),
+        s_tiled.median_ms(),
+        s_tiled.median.as_secs_f64() / s_mono.median.as_secs_f64()
+    );
+}

@@ -1,0 +1,64 @@
+//! Bench target T1: regenerate Table 1 and measure how the *native*
+//! engine's wallclock tracks the paper's operation counts (ops should be
+//! roughly proportional to time for compute-bound schemes — the paper's
+//! own premise in section 2).
+
+use dwt_accel::benchutil::{bench, default_budget, Table};
+use dwt_accel::dwt::{Engine, Image};
+use dwt_accel::polyphase::opcount::{self, Mode};
+use dwt_accel::polyphase::schemes::Scheme;
+use dwt_accel::polyphase::wavelets::Wavelet;
+
+fn main() {
+    println!("\n=== T1: Table 1 — steps & operation counts, plus native wallclock ===\n");
+    let img = Image::synthetic(512, 512, 77);
+    let t = Table::new(&[7, 13, 5, 6, 6, 7, 8, 10, 10]);
+    t.header(&[
+        "wavelet", "scheme", "steps", "plain", "opt", "opencl", "shaders", "native ms", "us/kop",
+    ]);
+    for row in opcount::table1() {
+        let w = Wavelet::by_name(&row.wavelet).unwrap();
+        let engine = Engine::new(row.scheme, w);
+        let stats = bench(
+            || {
+                std::hint::black_box(engine.forward(std::hint::black_box(&img)));
+            },
+            default_budget(),
+            3,
+            200,
+        );
+        // ops per output quadruple -> total kop for the image
+        let kops = row.plain as f64 * (img.width * img.height) as f64 / 4.0 / 1e3;
+        t.row(&[
+            row.wavelet.clone(),
+            row.scheme.name().into(),
+            row.steps.to_string(),
+            row.plain.to_string(),
+            row.optimized.to_string(),
+            row.paper_opencl.to_string(),
+            row.paper_shaders.to_string(),
+            format!("{:.2}", stats.median_ms()),
+            format!("{:.3}", stats.median_us() / kops),
+        ]);
+    }
+    let exact: usize = opcount::table1()
+        .iter()
+        .map(|r| r.opencl_exact as usize + r.shaders_exact as usize)
+        .sum();
+    println!("\n{exact}/28 published op-count cells exact; remainder bracketed by [opt, plain].");
+    println!("(native 512x512, median of adaptive runs; see EXPERIMENTS.md T1)");
+    // polyconv rows Table 1 omits (K=1 wavelets) for completeness
+    println!("\nderived polyconvolution rows for K=1 wavelets (not in the paper's table):");
+    for wn in ["cdf53", "dd137"] {
+        let w = Wavelet::by_name(wn).unwrap();
+        for s in [Scheme::SepPolyconv, Scheme::NsPolyconv] {
+            println!(
+                "  {wn} {:<13} steps={} plain={} opt={}",
+                s.name(),
+                opcount::steps(s, &w),
+                opcount::count(s, &w, Mode::Plain),
+                opcount::count(s, &w, Mode::Optimized),
+            );
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! JPEG-2000-motivated compression demo: multi-level CDF 9/7 pyramid,
+//! coefficient thresholding + uniform quantization, inverse, rate/PSNR
+//! curve — the workload the paper's introduction motivates.
+//!
+//!     cargo run --release --example compress [-- path/to/image.pgm]
+
+use dwt_accel::dwt::{multilevel, Engine, Image};
+use dwt_accel::polyphase::schemes::Scheme;
+use dwt_accel::polyphase::wavelets::Wavelet;
+
+fn main() -> anyhow::Result<()> {
+    let img = match std::env::args().nth(1) {
+        Some(path) => dwt_accel::image::read_pgm(std::path::Path::new(&path))?,
+        None => Image::synthetic(512, 512, 9),
+    };
+    let levels = 4;
+    let engine = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97());
+    let packed = multilevel::forward(&engine, &img, levels);
+
+    println!("subband energy by level (HL / LH / HH):");
+    for (lvl, e) in multilevel::subband_energies(&packed, levels).iter().enumerate() {
+        println!(
+            "  level {}: {:>12.0} {:>12.0} {:>12.0}",
+            lvl + 1,
+            e[0],
+            e[1],
+            e[2]
+        );
+    }
+
+    println!("\n{:>10} {:>12} {:>10} {:>10}", "threshold", "kept coeffs", "bpp est", "PSNR dB");
+    for thresh in [1.0f32, 2.0, 5.0, 10.0, 20.0, 50.0] {
+        // threshold + quantize detail coefficients (LL kept verbatim)
+        let mut coded = packed.clone();
+        let (llw, llh) = (
+            packed.width >> levels,
+            packed.height >> levels,
+        );
+        let mut kept = 0usize;
+        for y in 0..coded.height {
+            for x in 0..coded.width {
+                if x < llw && y < llh {
+                    kept += 1;
+                    continue; // LL band
+                }
+                let v = coded.at(x, y);
+                let q = if v.abs() < thresh {
+                    0.0
+                } else {
+                    (v / thresh).round() * thresh
+                };
+                if q != 0.0 {
+                    kept += 1;
+                }
+                *coded.at_mut(x, y) = q;
+            }
+        }
+        let rec = multilevel::inverse(&engine, &coded, levels);
+        let psnr = rec.psnr(&img);
+        // crude rate estimate: nonzeros * (log2(dynamic range) + sign)
+        let bpp = kept as f64 * 12.0 / (img.width * img.height) as f64;
+        println!(
+            "{:>10.1} {:>12} {:>10.2} {:>10.2}",
+            thresh,
+            kept,
+            bpp,
+            psnr
+        );
+    }
+    println!("\ncompress OK");
+    Ok(())
+}

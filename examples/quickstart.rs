@@ -1,0 +1,47 @@
+//! Quickstart: one forward + inverse transform through the public API,
+//! on both the AOT/PJRT path and the native engine.
+//!
+//!     cargo run --release --example quickstart
+
+use dwt_accel::coordinator::{Coordinator, CoordinatorConfig, Request};
+use dwt_accel::dwt::{Engine, Image};
+use dwt_accel::polyphase::schemes::Scheme;
+use dwt_accel::polyphase::wavelets::Wavelet;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a synthetic 256x256 test image (use image::read_pgm for files)
+    let img = Image::synthetic(256, 256, 1);
+
+    // 2. transform through the coordinator (routes to the AOT artifact
+    //    compiled from the Pallas kernels when available)
+    let coord = Coordinator::new(CoordinatorConfig::default())?;
+    let resp = coord.transform(Request {
+        image: img.clone(),
+        wavelet: "cdf97".into(),
+        scheme: Scheme::NsPolyconv,
+        inverse: false,
+        levels: 1,
+    })?;
+    println!(
+        "forward via {} in {:.2} ms",
+        resp.backend.name(),
+        resp.latency.as_secs_f64() * 1e3
+    );
+
+    // 3. the same transform with the pure-rust engine — identical
+    //    coefficients (the paper's central invariant)
+    let engine = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97());
+    let native = engine.forward(&img);
+    println!(
+        "pjrt vs native max coefficient difference: {:.2e}",
+        resp.image.max_abs_diff(&native)
+    );
+
+    // 4. invert and verify perfect reconstruction
+    let rec = engine.inverse(&resp.image);
+    let psnr = rec.psnr(&img);
+    println!("inverse PSNR vs original: {psnr:.1} dB");
+    assert!(psnr > 80.0, "reconstruction failed");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Scheme explorer: print the symbolic polyphase step matrices, halos,
+//! and operation counts of any (wavelet, scheme) pair.
+//!
+//!     cargo run --release --example scheme_explorer -- cdf53 ns_lifting
+
+use dwt_accel::polyphase::opcount::{self, Mode};
+use dwt_accel::polyphase::schemes::{self, Scheme};
+use dwt_accel::polyphase::wavelets::Wavelet;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let wname = args.first().map(String::as_str).unwrap_or("cdf53");
+    let sname = args.get(1).map(String::as_str).unwrap_or("ns_lifting");
+    let w = Wavelet::by_name(wname).expect("wavelet: cdf53|cdf97|dd137");
+    let s = Scheme::by_name(sname).expect("scheme name");
+
+    println!("{} / {} ({})", w.title, s.label(), s.name());
+    let (lo, hi) = w.filter_spans();
+    println!("analysis filter spans: {lo}/{hi}\n");
+
+    for (i, step) in schemes::build(s, &w).iter().enumerate() {
+        let (t, b, l, r) = step.halo();
+        println!(
+            "step {} | ops {} | halo t{} b{} l{} r{}",
+            i + 1,
+            step.n_ops(),
+            t,
+            b,
+            l,
+            r
+        );
+        for row in &step.m {
+            let cells: Vec<String> = row
+                .iter()
+                .map(|p| {
+                    if p.is_zero() {
+                        ".".into()
+                    } else if p.is_one() {
+                        "1".into()
+                    } else {
+                        let terms: Vec<String> = p
+                            .terms
+                            .iter()
+                            .map(|(&(m, n), &c)| format!("{c:+.3}z{m},{n}"))
+                            .collect();
+                        terms.join(" ")
+                    }
+                })
+                .collect();
+            println!("    [ {} ]", cells.join(" | "));
+        }
+    }
+    println!();
+    for mode in [Mode::Plain, Mode::Optimized, Mode::OptimizedVec] {
+        println!(
+            "ops ({}): {}",
+            mode.name(),
+            opcount::count(s, &w, mode)
+        );
+    }
+    println!("steps: {}", schemes::n_steps(s, &w));
+}

@@ -1,0 +1,134 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Spins up the coordinator (PJRT executor + dynamic batcher + native
+//! worker pool), generates a mixed request stream from several client
+//! threads — serve-size images routed to the AOT Pallas/XLA artifacts,
+//! large images to the tiled native path — and reports throughput and
+//! latency percentiles per scheme.  Results are recorded in
+//! EXPERIMENTS.md (E2E row).
+//!
+//!     cargo run --release --example throughput_server
+//!     DWT_E2E_REQUESTS=512 cargo run --release --example throughput_server
+
+use dwt_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Request};
+use dwt_accel::dwt::Image;
+use dwt_accel::polyphase::schemes::Scheme;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::var("DWT_E2E_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(192);
+    let coord = Arc::new(Coordinator::new(CoordinatorConfig {
+        batch: BatchPolicy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(4),
+        },
+        ..Default::default()
+    })?);
+    println!(
+        "coordinator up: pjrt={}, workers={}",
+        coord.pjrt_available(),
+        std::thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(4)
+    );
+
+    // -- phase 1: per-scheme serve-size throughput (PJRT batched path) --
+    println!("\nper-scheme serving throughput (256x256, cdf97, {n_requests} requests):");
+    println!(
+        "{:>26} {:>9} {:>9} {:>9} {:>9} {:>10}",
+        "scheme", "GB/s", "p50 ms", "p95 ms", "p99 ms", "backend"
+    );
+    let img = Image::synthetic(256, 256, 3);
+    for scheme in Scheme::ALL {
+        let coord = Coordinator::new(CoordinatorConfig::default())?;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n_requests)
+            .map(|_| {
+                coord.submit(Request {
+                    image: img.clone(),
+                    wavelet: "cdf97".into(),
+                    scheme,
+                    inverse: false,
+                    levels: 1,
+                })
+            })
+            .collect();
+        let mut backend = "?";
+        for h in handles {
+            let r = h.recv().expect("resp")?;
+            backend = r.backend.name();
+        }
+        let dt = t0.elapsed();
+        let s = coord.metrics.summary();
+        println!(
+            "{:>26} {:>9.3} {:>9.2} {:>9.2} {:>9.2} {:>10}",
+            scheme.label(),
+            (n_requests * img.data.len() * 4) as f64 / dt.as_secs_f64() / 1e9,
+            s.p50_us as f64 / 1e3,
+            s.p95_us as f64 / 1e3,
+            s.p99_us as f64 / 1e3,
+            backend,
+        );
+    }
+
+    // -- phase 2: mixed multi-client stream (batching + tiled path) --
+    println!("\nmixed stream: 4 client threads, serve-size + 1024x1024 images");
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..4u64 {
+        let coord = coord.clone();
+        joins.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let small = Image::synthetic(256, 256, 10 + c);
+            let large = Image::synthetic(1024, 1024, 20 + c);
+            let mut bytes = 0usize;
+            let per_client = 24;
+            let handles: Vec<_> = (0..per_client)
+                .map(|i| {
+                    let (img, scheme) = if i % 6 == 5 {
+                        (large.clone(), Scheme::SepLifting)
+                    } else {
+                        (small.clone(), [Scheme::NsPolyconv, Scheme::NsConv][i % 2])
+                    };
+                    bytes += img.data.len() * 4;
+                    coord.submit(Request {
+                        image: img,
+                        wavelet: ["cdf97", "cdf53", "dd137"][i % 3].into(),
+                        scheme,
+                        inverse: false,
+                        levels: 1,
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.recv().expect("resp")?;
+            }
+            Ok(bytes)
+        }));
+    }
+    let mut total_bytes = 0usize;
+    for j in joins {
+        total_bytes += j.join().expect("client thread")?;
+    }
+    let dt = t0.elapsed();
+    let s = coord.metrics.summary();
+    println!(
+        "mixed stream done: {:.1} MB in {:.1} ms = {:.3} GB/s",
+        total_bytes as f64 / 1e6,
+        dt.as_secs_f64() * 1e3,
+        total_bytes as f64 / dt.as_secs_f64() / 1e9
+    );
+    println!(
+        "requests {} | batches {} (mean {:.1}) | p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms",
+        s.requests,
+        s.batches,
+        s.mean_batch,
+        s.p50_us as f64 / 1e3,
+        s.p95_us as f64 / 1e3,
+        s.p99_us as f64 / 1e3
+    );
+    println!("backends: {:?}", s.per_backend);
+    println!("\nthroughput_server OK");
+    Ok(())
+}

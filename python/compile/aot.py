@@ -1,0 +1,196 @@
+"""AOT compile path: lower every model variant to HLO **text** and write
+``artifacts/<name>.hlo.txt`` plus ``artifacts/manifest.json``.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")``/``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts`` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from . import opcount as oc
+from . import schemes as sch
+from . import wavelets as wv
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, *shapes) -> str:
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+# The artifact set the Rust coordinator serves.  Every scheme x wavelet
+# forward at the serving tile size, plus inverse / batched / multilevel
+# variants used by the examples and integration tests.
+SERVE_SIZE = (256, 256)
+BATCH = 8
+LEVELS = 3
+
+
+def build_entries() -> List[Dict]:
+    entries: List[Dict] = []
+    h, w = SERVE_SIZE
+    for wname in sorted(wv.WAVELETS):
+        for scheme in sch.SCHEMES:
+            entries.append(
+                dict(
+                    name=f"{wname}_{scheme}_fwd_{h}x{w}",
+                    kind="forward",
+                    scheme=scheme,
+                    wavelet=wname,
+                    optimized=False,
+                    input_shape=[h, w],
+                    output_shape=[h, w],
+                    steps=sch.n_steps(scheme, wv.get(wname)),
+                )
+            )
+        # optimized (section 5) variant of the flagship non-separable scheme
+        entries.append(
+            dict(
+                name=f"{wname}_ns_polyconv_opt_fwd_{h}x{w}",
+                kind="forward",
+                scheme="ns_polyconv",
+                wavelet=wname,
+                optimized=True,
+                input_shape=[h, w],
+                output_shape=[h, w],
+                steps=sch.n_steps("ns_polyconv", wv.get(wname)),
+            )
+        )
+        # inverse + batched + multilevel for the serving/runtime paths
+        entries.append(
+            dict(
+                name=f"{wname}_sep_lifting_inv_{h}x{w}",
+                kind="inverse",
+                scheme="sep_lifting",
+                wavelet=wname,
+                optimized=False,
+                input_shape=[h, w],
+                output_shape=[h, w],
+                steps=sch.n_steps("sep_lifting", wv.get(wname)),
+            )
+        )
+        entries.append(
+            dict(
+                name=f"{wname}_ns_polyconv_batch{BATCH}_fwd_{h}x{w}",
+                kind="batched_forward",
+                scheme="ns_polyconv",
+                wavelet=wname,
+                optimized=False,
+                input_shape=[BATCH, h, w],
+                output_shape=[BATCH, h, w],
+                steps=sch.n_steps("ns_polyconv", wv.get(wname)),
+            )
+        )
+    # multilevel pyramid (flagship wavelet only; examples use it)
+    entries.append(
+        dict(
+            name=f"cdf97_ns_polyconv_ml{LEVELS}_fwd_{h}x{w}",
+            kind="multilevel",
+            scheme="ns_polyconv",
+            wavelet="cdf97",
+            optimized=False,
+            levels=LEVELS,
+            input_shape=[h, w],
+            output_shape=[h, w],
+            steps=sch.n_steps("ns_polyconv", wv.get("cdf97")) * LEVELS,
+        )
+    )
+    entries.append(
+        dict(
+            name=f"cdf97_ns_polyconv_ml{LEVELS}_inv_{h}x{w}",
+            kind="multilevel_inverse",
+            scheme="ns_polyconv",
+            wavelet="cdf97",
+            optimized=False,
+            levels=LEVELS,
+            input_shape=[h, w],
+            output_shape=[h, w],
+            steps=sch.n_steps("ns_polyconv", wv.get("cdf97")) * LEVELS,
+        )
+    )
+    return entries
+
+
+def graph_for(entry: Dict):
+    scheme, wavelet = entry["scheme"], entry["wavelet"]
+    kind = entry["kind"]
+    if kind == "forward":
+        return model.forward_graph(scheme, wavelet, optimized=entry["optimized"])
+    if kind == "inverse":
+        return model.inverse_graph(scheme, wavelet)
+    if kind == "batched_forward":
+        return model.batched_forward(scheme, wavelet)
+    if kind == "multilevel":
+        return model.multilevel_graph(scheme, wavelet, entry["levels"])
+    if kind == "multilevel_inverse":
+        return model.multilevel_inverse_graph(scheme, wavelet, entry["levels"])
+    raise KeyError(kind)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = build_entries()
+    if args.only:
+        entries = [e for e in entries if args.only in e["name"]]
+    manifest = {"serve_size": list(SERVE_SIZE), "batch": BATCH, "entries": []}
+    for e in entries:
+        fn = graph_for(e)
+        hlo = lower_fn(fn, tuple(e["input_shape"]))
+        path = os.path.join(args.out_dir, e["name"] + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        e["file"] = os.path.basename(path)
+        manifest["entries"].append(e)
+        print(f"wrote {path} ({len(hlo)} chars)")
+    # op/step metadata for the coordinator's cost-aware scheduler
+    table = []
+    for wname, scheme, steps, ocl, shd in oc.PAPER_TABLE1:
+        w = wv.get(wname)
+        table.append(
+            dict(
+                wavelet=wname,
+                scheme=scheme,
+                steps=steps,
+                ops_plain=oc.count(scheme, w, "plain"),
+                ops_optimized=oc.count(scheme, w, "optimized"),
+                paper_opencl=ocl,
+                paper_shaders=shd,
+            )
+        )
+    manifest["table1"] = table
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Pure-jnp correctness oracle for every scheme.
+
+Two independent reference paths:
+
+1. ``lifting_forward`` / ``lifting_inverse`` — a direct, index-level
+   implementation of the separable lifting scheme (the textbook
+   algorithm).  This is the golden source of truth.
+2. ``apply_scheme`` — a generic evaluator that runs *any* scheme built
+   by :mod:`..schemes` by literally applying its polyphase-matrix steps
+   with periodic indexing (``jnp.roll``).  Because the matrix algebra is
+   exact, this must agree with (1) to rounding error for every scheme —
+   which is the paper's "all schemes compute the same values" claim.
+
+Boundary handling is **periodic** on the polyphase component planes,
+which is exactly equivalent to periodic extension of the even-length
+signal (see DESIGN.md section 6).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .. import polyalg as pa
+from .. import schemes as sch
+from ..wavelets import Wavelet
+
+Planes = Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# polyphase split / merge
+# ---------------------------------------------------------------------------
+
+
+def split(img: jnp.ndarray) -> Planes:
+    """Image (H, W) -> (ee, oe, eo, oo) planes of shape (H/2, W/2).
+
+    First parity letter = horizontal axis (W), second = vertical (H):
+    ee = img[0::2, 0::2], oe = img[0::2, 1::2] (odd column, even row),
+    eo = img[1::2, 0::2], oo = img[1::2, 1::2].
+    """
+    ee = img[0::2, 0::2]
+    oe = img[0::2, 1::2]
+    eo = img[1::2, 0::2]
+    oo = img[1::2, 1::2]
+    return ee, oe, eo, oo
+
+
+def merge(planes: Planes) -> jnp.ndarray:
+    ee, oe, eo, oo = planes
+    h2, w2 = ee.shape
+    img = jnp.zeros((h2 * 2, w2 * 2), dtype=ee.dtype)
+    img = img.at[0::2, 0::2].set(ee)
+    img = img.at[0::2, 1::2].set(oe)
+    img = img.at[1::2, 0::2].set(eo)
+    img = img.at[1::2, 1::2].set(oo)
+    return img
+
+
+# ---------------------------------------------------------------------------
+# generic polyphase-matrix evaluator
+# ---------------------------------------------------------------------------
+
+
+def apply_poly(p: pa.Poly, x: jnp.ndarray) -> jnp.ndarray:
+    """out[n, m] = sum_k c_k x[n + kn, m + km], periodic."""
+    acc = jnp.zeros_like(x)
+    for (km, kn), c in sorted(p.items()):
+        acc = acc + c * jnp.roll(x, shift=(-kn, -km), axis=(0, 1))
+    return acc
+
+
+def apply_step(mat: pa.Mat, planes: Sequence[jnp.ndarray]) -> Planes:
+    out: List[jnp.ndarray] = []
+    for i in range(4):
+        acc = jnp.zeros_like(planes[0])
+        for j in range(4):
+            p = mat[i][j]
+            if pa.p_is_zero(p):
+                continue
+            if pa.p_is_one(p):
+                acc = acc + planes[j]
+            else:
+                acc = acc + apply_poly(p, planes[j])
+        out.append(acc)
+    return tuple(out)  # type: ignore[return-value]
+
+
+def apply_scheme(scheme: str, w: Wavelet, img: jnp.ndarray) -> Planes:
+    """Run a full single-level forward transform with the given scheme.
+
+    Returns (LL, HL, LH, HH) planes.
+    """
+    planes = split(img)
+    for step in sch.build(scheme, w):
+        planes = apply_step(step, planes)
+    return planes
+
+
+# ---------------------------------------------------------------------------
+# direct lifting implementation (golden)
+# ---------------------------------------------------------------------------
+
+
+def _lift_axis(
+    s: jnp.ndarray, d: jnp.ndarray, taps: Dict[int, float], axis: int, kind: str
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One 1-D lifting step applied along ``axis`` of the planes."""
+    if kind == "predict":
+        acc = jnp.zeros_like(d)
+        for k, c in sorted(taps.items()):
+            acc = acc + c * jnp.roll(s, shift=-k, axis=axis)
+        return s, d + acc
+    acc = jnp.zeros_like(s)
+    for k, c in sorted(taps.items()):
+        acc = acc + c * jnp.roll(d, shift=-k, axis=axis)
+    return s + acc, d
+
+
+def lifting_forward(w: Wavelet, img: jnp.ndarray) -> Planes:
+    """Golden forward transform: separable lifting, per pair the order
+    T^H | T^V | S^H | S^V (matching schemes.sep_lifting)."""
+    ee, oe, eo, oo = split(img)
+    for pr in w.pairs:
+        # horizontal predict: odd-m planes from even-m planes (axis=1)
+        ee, oe = _lift_axis(ee, oe, pr.predict, 1, "predict")
+        eo, oo = _lift_axis(eo, oo, pr.predict, 1, "predict")
+        # vertical predict (axis=0): odd-n planes from even-n planes
+        ee, eo = _lift_axis(ee, eo, pr.predict, 0, "predict")
+        oe, oo = _lift_axis(oe, oo, pr.predict, 0, "predict")
+        # horizontal update
+        ee, oe = _lift_axis(ee, oe, pr.update, 1, "update")
+        eo, oo = _lift_axis(eo, oo, pr.update, 1, "update")
+        # vertical update
+        ee, eo = _lift_axis(ee, eo, pr.update, 0, "update")
+        oe, oo = _lift_axis(oe, oo, pr.update, 0, "update")
+    if w.zeta != 1.0:
+        z = w.zeta
+        ee, oe, eo, oo = ee * (z * z), oe, eo, oo / (z * z)
+    return ee, oe, eo, oo
+
+
+def lifting_inverse(w: Wavelet, planes: Planes) -> jnp.ndarray:
+    """Exact inverse of :func:`lifting_forward`."""
+    ee, oe, eo, oo = planes
+    if w.zeta != 1.0:
+        z = w.zeta
+        ee, oe, eo, oo = ee / (z * z), oe, eo, oo * (z * z)
+    for pr in reversed(w.pairs):
+        neg_u = {k: -c for k, c in pr.update.items()}
+        neg_p = {k: -c for k, c in pr.predict.items()}
+        ee, eo = _lift_axis(ee, eo, neg_u, 0, "update")
+        oe, oo = _lift_axis(oe, oo, neg_u, 0, "update")
+        ee, oe = _lift_axis(ee, oe, neg_u, 1, "update")
+        eo, oo = _lift_axis(eo, oo, neg_u, 1, "update")
+        ee, eo = _lift_axis(ee, eo, neg_p, 0, "predict")
+        oe, oo = _lift_axis(oe, oo, neg_p, 0, "predict")
+        ee, oe = _lift_axis(ee, oe, neg_p, 1, "predict")
+        eo, oo = _lift_axis(eo, oo, neg_p, 1, "predict")
+    return merge((ee, oe, eo, oo))
+
+
+# ---------------------------------------------------------------------------
+# multi-level (Mallat) composition
+# ---------------------------------------------------------------------------
+
+
+def multilevel_forward(w: Wavelet, img: jnp.ndarray, levels: int) -> List[Planes]:
+    """Returns one (LL, HL, LH, HH) tuple per level; the LL of the last
+    tuple is the final approximation."""
+    out: List[Planes] = []
+    cur = img
+    for _ in range(levels):
+        planes = lifting_forward(w, cur)
+        out.append(planes)
+        cur = planes[0]
+    return out
+
+
+def multilevel_inverse(w: Wavelet, pyramid: List[Planes]) -> jnp.ndarray:
+    cur = pyramid[-1][0]
+    for planes in reversed(pyramid):
+        cur = lifting_inverse(w, (cur, planes[1], planes[2], planes[3]))
+    return cur

@@ -1,0 +1,138 @@
+"""Layer-2 JAX model: the compute graphs that get AOT-lowered to HLO.
+
+Each entry point is a pure jax function over statically-shaped arrays,
+calling the Layer-1 Pallas kernels.  The Rust runtime loads the lowered
+HLO and never runs Python.
+
+Public graphs
+-------------
+``forward_graph``      (H, W) image -> (H, W) packed subband quadrants
+``inverse_graph``      packed quadrants -> image
+``batched_forward``    (B, H, W) -> (B, H, W) via vmap (the serving path)
+``multilevel_graph``   L-level Mallat pyramid, packed in-place (JPEG2000
+                       layout: level-l LL quadrant recursively split)
+``adjoint_graph``      the adjoint (transpose) of the forward transform,
+                       derived mechanically with jax.linear_transpose —
+                       the analogue of a backward pass for this linear
+                       "model".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import wavelets as wv
+from .kernels import pallas_dwt as pk
+
+
+def forward_graph(scheme: str, wavelet: str, *, optimized: bool = False):
+    w = wv.get(wavelet)
+
+    def fn(img: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        return (pk.forward_image(scheme, w, img, optimized=optimized),)
+
+    return fn
+
+
+def inverse_graph(scheme: str, wavelet: str):
+    w = wv.get(wavelet)
+
+    def fn(packed: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        h, wd = packed.shape
+        h2, w2 = h // 2, wd // 2
+        planes = (
+            packed[:h2, :w2],
+            packed[:h2, w2:],
+            packed[h2:, :w2],
+            packed[h2:, w2:],
+        )
+        return (pk.inverse(scheme, w, planes),)
+
+    return fn
+
+
+def batched_forward(scheme: str, wavelet: str, *, optimized: bool = False):
+    single = forward_graph(scheme, wavelet, optimized=optimized)
+
+    def fn(batch: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        return (jax.vmap(lambda x: single(x)[0])(batch),)
+
+    return fn
+
+
+def multilevel_graph(scheme: str, wavelet: str, levels: int):
+    """Mallat pyramid with the LL quadrant recursively transformed.
+    Shapes must be divisible by 2**levels."""
+    w = wv.get(wavelet)
+
+    def fn(img: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        h, wd = img.shape
+        out = img
+        size_h, size_w = h, wd
+        for _ in range(levels):
+            sub = pk.forward_image(scheme, w, out[:size_h, :size_w])
+            out = out.at[:size_h, :size_w].set(sub)
+            size_h //= 2
+            size_w //= 2
+        return (out,)
+
+    return fn
+
+
+def multilevel_inverse_graph(scheme: str, wavelet: str, levels: int):
+    w = wv.get(wavelet)
+
+    def fn(packed: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        h, wd = packed.shape
+        out = packed
+        for lvl in reversed(range(levels)):
+            size_h, size_w = h >> lvl, wd >> lvl
+            h2, w2 = size_h // 2, size_w // 2
+            planes = (
+                out[:h2, :w2],
+                out[:h2, w2:size_w],
+                out[h2:size_h, :w2],
+                out[h2:size_h, w2:size_w],
+            )
+            rec = pk.inverse(scheme, w, planes)
+            out = out.at[:size_h, :size_w].set(rec)
+        return (out,)
+
+    return fn
+
+
+def adjoint_graph(scheme: str, wavelet: str, shape: Tuple[int, int]):
+    """W^T built symbolically: the adjoint of a polyphase step matrix M is
+    M^T with every Laurent polynomial offset-reversed (p(z) -> p(1/z)),
+    applied in reverse step order.  (jax.linear_transpose cannot see
+    through pallas_call, so the transpose is done at the algebra level —
+    and stays a genuine Pallas kernel chain.)"""
+    from . import polyalg as pa
+    from . import schemes as sch
+
+    w = wv.get(wavelet)
+    steps = sch.build(scheme, w)
+    adj_steps = []
+    for m in reversed(steps):
+        adj = [[{(-km, -kn): c for (km, kn), c in m[j][i].items()}
+                for j in range(4)] for i in range(4)]
+        adj_steps.append(adj)
+
+    def fn(cot: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        h, wd = cot.shape
+        h2, w2 = h // 2, wd // 2
+        planes = (
+            cot[:h2, :w2],
+            cot[:h2, w2:],
+            cot[h2:, :w2],
+            cot[h2:, w2:],
+        )
+        for mat in adj_steps:
+            planes = pk.apply_group([mat], planes)
+        return (pk.merge(planes),)
+
+    return fn

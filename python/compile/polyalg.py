@@ -1,0 +1,305 @@
+"""Bivariate Laurent-polynomial algebra over polyphase matrices.
+
+This is the symbolic substrate behind every scheme in the paper
+(Barina et al., "Accelerating Discrete Wavelet Transforms on Parallel
+Architectures", 2017).  A 2-D FIR filter is a bivariate Laurent
+polynomial; a calculation step is a 4x4 matrix of such polynomials
+acting on the four polyphase components (ee, oe, eo, oo).
+
+Conventions
+-----------
+* A polynomial is a dict mapping an offset pair ``(km, kn)`` to a float
+  coefficient.  ``km`` is the *horizontal* (axis-1 / width) offset,
+  ``kn`` the *vertical* (axis-0 / height) offset.  A term ``(km, kn): c``
+  means ``out[n, m] += c * inp[n + kn, m + km]`` on a component plane.
+* Component vector order is ``[ee, oe, eo, oo]`` where the first parity
+  letter refers to the horizontal axis (m) and the second to the
+  vertical axis (n).  After a full single-level transform this order is
+  ``[LL, HL, LH, HH]``.
+* ``transpose`` swaps the two axes: ``G*(z_m, z_n) = G(z_n, z_m)``.
+
+The same algebra is mirrored in ``rust/src/polyphase``; the pytest suite
+cross-checks a JSON dump of these matrices against the Rust build.
+"""
+
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+Offset = Tuple[int, int]
+Poly = Dict[Offset, float]
+
+# ---------------------------------------------------------------------------
+# polynomial primitives
+# ---------------------------------------------------------------------------
+
+EPS = 1e-12
+
+
+def p_zero() -> Poly:
+    return {}
+
+
+def p_one() -> Poly:
+    return {(0, 0): 1.0}
+
+
+def p_const(c: float) -> Poly:
+    return {(0, 0): float(c)} if abs(c) > EPS else {}
+
+
+def p_horiz(taps: Dict[int, float]) -> Poly:
+    """Univariate horizontal polynomial: offsets along m only."""
+    return {(k, 0): float(c) for k, c in taps.items() if abs(c) > EPS}
+
+
+def p_vert(taps: Dict[int, float]) -> Poly:
+    """Univariate vertical polynomial: offsets along n only."""
+    return {(0, k): float(c) for k, c in taps.items() if abs(c) > EPS}
+
+
+def p_add(a: Poly, b: Poly) -> Poly:
+    out = dict(a)
+    for k, c in b.items():
+        out[k] = out.get(k, 0.0) + c
+        if abs(out[k]) <= EPS:
+            del out[k]
+    return out
+
+
+def p_scale(a: Poly, s: float) -> Poly:
+    if abs(s) <= EPS:
+        return {}
+    return {k: c * s for k, c in a.items()}
+
+
+def p_mul(a: Poly, b: Poly) -> Poly:
+    out: Poly = {}
+    for (am, an), ac in a.items():
+        for (bm, bn), bc in b.items():
+            k = (am + bm, an + bn)
+            out[k] = out.get(k, 0.0) + ac * bc
+    return {k: c for k, c in out.items() if abs(c) > EPS}
+
+
+def p_transpose(a: Poly) -> Poly:
+    """G*(z_m, z_n) = G(z_n, z_m): swap horizontal and vertical offsets."""
+    return {(kn, km): c for (km, kn), c in a.items()}
+
+
+def p_is_one(a: Poly) -> bool:
+    return len(a) == 1 and abs(a.get((0, 0), 0.0) - 1.0) <= EPS
+
+
+def p_is_zero(a: Poly) -> bool:
+    return not a
+
+
+def p_nterms(a: Poly) -> int:
+    return len(a)
+
+
+def p_split_const(a: Poly) -> Tuple[Poly, Poly]:
+    """Split P = P0 + P1 with P0 the constant (lag-0) part (paper section 5)."""
+    p0 = {k: c for k, c in a.items() if k == (0, 0)}
+    p1 = {k: c for k, c in a.items() if k != (0, 0)}
+    return p0, p1
+
+
+def p_support(a: Poly) -> Tuple[int, int, int, int]:
+    """(min_m, max_m, min_n, max_n) of the offsets; zeros for empty."""
+    if not a:
+        return (0, 0, 0, 0)
+    ms = [k[0] for k in a]
+    ns = [k[1] for k in a]
+    return (min(ms), max(ms), min(ns), max(ns))
+
+
+def p_to_dense(a: Poly) -> Tuple[List[List[float]], Tuple[int, int]]:
+    """Render as a dense (rows=n, cols=m) tap array plus the offset of
+    element [0][0] as ``(m0, n0)``: tap[r][c] applies to inp[n+n0+r, m+m0+c]."""
+    m0, m1, n0, n1 = p_support(a)
+    rows = n1 - n0 + 1
+    cols = m1 - m0 + 1
+    dense = [[0.0] * cols for _ in range(rows)]
+    for (km, kn), c in a.items():
+        dense[kn - n0][km - m0] = c
+    return dense, (m0, n0)
+
+
+# ---------------------------------------------------------------------------
+# matrices of polynomials
+# ---------------------------------------------------------------------------
+
+Mat = List[List[Poly]]
+
+
+def m_identity(size: int) -> Mat:
+    return [[p_one() if i == j else p_zero() for j in range(size)] for i in range(size)]
+
+
+def m_mul(a: Mat, b: Mat) -> Mat:
+    rows, inner, cols = len(a), len(b), len(b[0])
+    assert len(a[0]) == inner
+    out: Mat = [[p_zero() for _ in range(cols)] for _ in range(rows)]
+    for i in range(rows):
+        for j in range(cols):
+            acc: Poly = {}
+            for k in range(inner):
+                acc = p_add(acc, p_mul(a[i][k], b[k][j]))
+            out[i][j] = acc
+    return out
+
+
+def m_chain(mats: Sequence[Mat]) -> Mat:
+    """Product M_last ... M_2 M_1 (mats given in application order)."""
+    out = mats[0]
+    for m in mats[1:]:
+        out = m_mul(m, out)
+    return out
+
+
+def m_transpose_axes(a: Mat) -> Mat:
+    """Swap the roles of the two image axes: permute components
+    (ee,oe,eo,oo) -> (ee,eo,oe,oo) on rows+cols and transpose every
+    polynomial."""
+    perm = [0, 2, 1, 3]
+    size = len(a)
+    assert size == 4
+    return [[p_transpose(a[perm[i]][perm[j]]) for j in range(size)] for i in range(size)]
+
+
+def m_nterms(a: Mat) -> int:
+    return sum(p_nterms(p) for row in a for p in row)
+
+
+# ---------------------------------------------------------------------------
+# lifting steps as matrices
+# ---------------------------------------------------------------------------
+
+
+def lift2x2(kind: str, taps: Dict[int, float]) -> Mat:
+    """1-D lifting step on [even, odd]: predict -> odd += P(even);
+    update -> even += U(odd).  Horizontal univariate polynomial."""
+    p = p_horiz(taps)
+    if kind == "predict":
+        return [[p_one(), p_zero()], [p, p_one()]]
+    if kind == "update":
+        return [[p_one(), p], [p_zero(), p_one()]]
+    raise ValueError(kind)
+
+
+def scale2x2(zeta: float) -> Mat:
+    return [[p_const(zeta), p_zero()], [p_zero(), p_const(1.0 / zeta)]]
+
+
+def lift_h(kind: str, taps: Dict[int, float]) -> Mat:
+    """Horizontal 2-D lifting step T_P^H or S_U^H (paper section 2)."""
+    g = p_horiz(taps)
+    m = m_identity(4)
+    if kind == "predict":
+        m[1][0] = g          # oe += P * ee
+        m[3][2] = dict(g)    # oo += P * eo
+    elif kind == "update":
+        m[0][1] = g          # ee += U * oe
+        m[2][3] = dict(g)    # eo += U * oo
+    else:
+        raise ValueError(kind)
+    return m
+
+
+def lift_v(kind: str, taps: Dict[int, float]) -> Mat:
+    """Vertical 2-D lifting step T_P^V or S_U^V: transposed polynomials."""
+    g = p_vert(taps)
+    m = m_identity(4)
+    if kind == "predict":
+        m[2][0] = g          # eo += P* * ee
+        m[3][1] = dict(g)    # oo += P* * oe
+    elif kind == "update":
+        m[0][2] = g          # ee += U* * eo
+        m[1][3] = dict(g)    # oe += U* * oo
+    else:
+        raise ValueError(kind)
+    return m
+
+
+def lift_spatial_predict(taps: Dict[int, float]) -> Mat:
+    """Non-separable spatial predict T_P = T_P^V T_P^H (paper section 4)."""
+    p = p_horiz(taps)
+    ps = p_transpose(p)
+    m = m_identity(4)
+    m[1][0] = p
+    m[2][0] = ps
+    m[3][0] = p_mul(p, ps)
+    m[3][1] = dict(ps)
+    m[3][2] = dict(p)
+    return m
+
+
+def lift_spatial_update(taps: Dict[int, float]) -> Mat:
+    """Non-separable spatial update S_U = S_U^V S_U^H."""
+    u = p_horiz(taps)
+    us = p_transpose(u)
+    m = m_identity(4)
+    m[0][1] = u
+    m[0][2] = us
+    m[0][3] = p_mul(u, us)
+    m[1][3] = dict(us)
+    m[2][3] = dict(u)
+    return m
+
+
+def polyconv_pair(p_taps: Dict[int, float], u_taps: Dict[int, float]) -> Mat:
+    """Non-separable polyconvolution N_{P,U} for one lifting pair:
+    the full product S_U^V S_U^H T_P^V T_P^H collapsed to one matrix."""
+    return m_chain(
+        [
+            lift_h("predict", p_taps),
+            lift_v("predict", p_taps),
+            lift_h("update", u_taps),
+            lift_v("update", u_taps),
+        ]
+    )
+
+
+def conv1d_pair(p_taps: Dict[int, float], u_taps: Dict[int, float]) -> Mat:
+    """1-D convolution matrix [[V, U], [P, 1]] of one lifting pair,
+    V = UP + 1 (acting on [even, odd])."""
+    return m_mul(lift2x2("update", u_taps), lift2x2("predict", p_taps))
+
+
+def sep_h_from_2x2(m2: Mat) -> Mat:
+    """Embed a 1-D 2x2 matrix on [e, o] as the horizontal 4x4 step."""
+    z = p_zero
+    a, b, c, d = m2[0][0], m2[0][1], m2[1][0], m2[1][1]
+    return [
+        [dict(a), dict(b), z(), z()],
+        [dict(c), dict(d), z(), z()],
+        [z(), z(), dict(a), dict(b)],
+        [z(), z(), dict(c), dict(d)],
+    ]
+
+
+def sep_v_from_2x2(m2: Mat) -> Mat:
+    """Embed a 1-D 2x2 matrix as the vertical 4x4 step (transposed polys)."""
+    a, b = p_transpose(m2[0][0]), p_transpose(m2[0][1])
+    c, d = p_transpose(m2[1][0]), p_transpose(m2[1][1])
+    z = p_zero
+    # components [ee, oe, eo, oo]; vertical pairs: (ee,eo) and (oe,oo)
+    return [
+        [dict(a), z(), dict(b), z()],
+        [z(), dict(a), z(), dict(b)],
+        [dict(c), z(), dict(d), z()],
+        [z(), dict(c), z(), dict(d)],
+    ]
+
+
+def scale2d(zeta: float) -> Mat:
+    """Final 2-D scaling diag(z^2, 1, 1, 1/z^2) = scale_v . scale_h."""
+    m = m_identity(4)
+    m[0][0] = p_const(zeta * zeta)
+    m[1][1] = p_one()
+    m[2][2] = p_one()
+    m[3][3] = p_const(1.0 / (zeta * zeta))
+    return m

@@ -1,0 +1,150 @@
+"""Lifting factorizations of the three wavelets evaluated in the paper.
+
+Each wavelet is a sequence of (predict, update) lifting-step pairs plus a
+final scaling constant zeta.  Tap dictionaries map a *component offset*
+``k`` to a coefficient: for a predict step, ``d[n] += c * s[n + k]``;
+for an update step, ``s[n] += c * d[n + k]`` (``s`` = even/low component,
+``d`` = odd/high component of the same axis).
+
+With the interleaved-signal picture x[2n] = s[n], x[2n+1] = d[n]:
+predict tap k touches x[2(n+k)]   = the even sample 2k-1 left of x[2n+1];
+update  tap k touches x[2(n+k)+1] = the odd sample  2k+1 right of x[2n].
+
+CDF 5/3 and CDF 9/7 follow the JPEG 2000 conventions; DD 13/7 is the
+(13,7) Deslauriers-Dubuc / Sweldens interpolating wavelet used by the
+paper (4-tap predict and update).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+from . import polyalg as pa
+
+LiftTaps = Dict[int, float]
+
+
+@dataclass(frozen=True)
+class LiftingPair:
+    predict: LiftTaps
+    update: LiftTaps
+
+
+@dataclass(frozen=True)
+class Wavelet:
+    name: str
+    title: str
+    pairs: Tuple[LiftingPair, ...]
+    zeta: float  # final scaling: s *= zeta, d /= zeta (1.0 = none)
+
+    # ---- derived helpers -------------------------------------------------
+    def conv2x2(self) -> pa.Mat:
+        """Full 1-D polyphase convolution matrix (incl. scaling)."""
+        mats: List[pa.Mat] = []
+        for pr in self.pairs:
+            mats.append(pa.lift2x2("predict", pr.predict))
+            mats.append(pa.lift2x2("update", pr.update))
+        if self.zeta != 1.0:
+            mats.append(pa.scale2x2(self.zeta))
+        return pa.m_chain(mats)
+
+    def analysis_filters(self) -> Tuple[Dict[int, float], Dict[int, float]]:
+        """(low, high) analysis filters on the interleaved signal.
+
+        Derived from the polyphase matrix: out_s[n] = sum_k M[0][0]_k x[2n+2k]
+        + M[0][1]_k x[2n+2k+1]; similarly out_d over row 1.  Returned as
+        interleaved-tap dicts {j: c} meaning out[n] += c * x[2n + j] (low)
+        or x[2n+1+j] (high)."""
+        m = self.conv2x2()
+        low: Dict[int, float] = {}
+        high: Dict[int, float] = {}
+        for (km, _), c in m[0][0].items():
+            low[2 * km] = low.get(2 * km, 0.0) + c
+        for (km, _), c in m[0][1].items():
+            low[2 * km + 1] = low.get(2 * km + 1, 0.0) + c
+        for (km, _), c in m[1][0].items():
+            high[2 * km - 1] = high.get(2 * km - 1, 0.0) + c
+        for (km, _), c in m[1][1].items():
+            high[2 * km] = high.get(2 * km, 0.0) + c
+        return low, high
+
+    @property
+    def n_pairs(self) -> int:
+        return len(self.pairs)
+
+
+# ---------------------------------------------------------------------------
+# the three wavelets of the paper
+# ---------------------------------------------------------------------------
+
+CDF53 = Wavelet(
+    name="cdf53",
+    title="CDF 5/3 (LeGall, JPEG 2000 reversible)",
+    pairs=(
+        LiftingPair(
+            predict={0: -0.5, 1: -0.5},
+            update={0: 0.25, -1: 0.25},
+        ),
+    ),
+    zeta=1.0,
+)
+
+# JPEG 2000 irreversible 9/7 lifting constants (Daubechies & Sweldens 1998)
+_ALPHA = -1.586134342059924
+_BETA = -0.052980118572961
+_GAMMA = 0.882911075530934
+_DELTA = 0.443506852043971
+_ZETA = 1.230174104914001
+
+CDF97 = Wavelet(
+    name="cdf97",
+    title="CDF 9/7 (JPEG 2000 irreversible)",
+    pairs=(
+        LiftingPair(
+            predict={0: _ALPHA, 1: _ALPHA},
+            update={0: _BETA, -1: _BETA},
+        ),
+        LiftingPair(
+            predict={0: _GAMMA, 1: _GAMMA},
+            update={0: _DELTA, -1: _DELTA},
+        ),
+    ),
+    zeta=_ZETA,
+)
+
+# Deslauriers-Dubuc (13,7): interpolating predict on 4 even samples,
+# update on 4 odd samples (Sweldens 1996).
+DD137 = Wavelet(
+    name="dd137",
+    title="DD 13/7 (Deslauriers-Dubuc interpolating)",
+    pairs=(
+        LiftingPair(
+            predict={-1: 1.0 / 16, 0: -9.0 / 16, 1: -9.0 / 16, 2: 1.0 / 16},
+            update={-2: -1.0 / 32, -1: 9.0 / 32, 0: 9.0 / 32, 1: -1.0 / 32},
+        ),
+    ),
+    zeta=1.0,
+)
+
+# Haar (orthogonal, 2/2) — not part of the paper's evaluation, but the
+# paper states the schemes "are general, and they are not limited to any
+# specific type of DWT"; Haar exercises that claim across every layer
+# (it also exercises single-tap lifting polynomials, where P1 = 0).
+HAAR = Wavelet(
+    name="haar",
+    title="Haar (orthogonal)",
+    pairs=(LiftingPair(predict={0: -1.0}, update={0: 0.5}),),
+    zeta=2.0 ** 0.5,
+)
+
+WAVELETS: Dict[str, Wavelet] = {
+    w.name: w for w in (CDF53, CDF97, DD137, HAAR)
+}
+
+
+def get(name: str) -> Wavelet:
+    try:
+        return WAVELETS[name]
+    except KeyError:
+        raise KeyError(f"unknown wavelet {name!r}; have {sorted(WAVELETS)}")

@@ -1,0 +1,57 @@
+"""Cross-layer symbolic check: the rust polyphase algebra and the python
+polyalg must build *identical* step matrices for every (wavelet, scheme).
+
+Runs `dwt-accel dump-matrices` (skipped when the release binary has not
+been built) and compares term-by-term.
+"""
+
+import json
+import os
+import shutil
+import subprocess
+
+import pytest
+
+from compile import schemes as sch
+from compile import wavelets as wv
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), "../.."))
+BIN = os.path.join(REPO, "target/release/dwt-accel")
+
+
+@pytest.fixture(scope="module")
+def rust_dump():
+    if not os.path.exists(BIN):
+        pytest.skip("rust binary not built (cargo build --release)")
+    out = subprocess.run(
+        [BIN, "dump-matrices"], capture_output=True, text=True, check=True
+    )
+    return json.loads(out.stdout)
+
+
+@pytest.mark.parametrize("wname", sorted(wv.WAVELETS))
+@pytest.mark.parametrize("scheme", sch.SCHEMES)
+def test_matrices_identical(rust_dump, wname, scheme):
+    w = wv.get(wname)
+    py_steps = sch.build(scheme, w)
+    rs_steps = rust_dump[wname][scheme]
+    assert len(py_steps) == len(rs_steps), "step count differs"
+    for si, (pm, rm) in enumerate(zip(py_steps, rs_steps)):
+        for i in range(4):
+            for j in range(4):
+                py_terms = {k: c for k, c in pm[i][j].items()}
+                rs_terms = {(km, kn): c for km, kn, c in rm[i][j]}
+                assert set(py_terms) == set(rs_terms), (
+                    f"step {si} entry ({i},{j}): offsets differ "
+                    f"{set(py_terms) ^ set(rs_terms)}"
+                )
+                for k in py_terms:
+                    assert abs(py_terms[k] - rs_terms[k]) < 1e-12, (
+                        f"step {si} entry ({i},{j}) term {k}"
+                    )
+
+
+def test_dump_covers_all_schemes(rust_dump):
+    assert set(rust_dump) == set(wv.WAVELETS)
+    for wname in rust_dump:
+        assert set(rust_dump[wname]) == set(sch.SCHEMES)

@@ -1,0 +1,118 @@
+"""Layer-2 model graphs + the AOT path (HLO text emission)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile import wavelets as wv
+from compile.kernels import ref
+
+RNG = np.random.default_rng(11)
+
+
+def rand_img(h, w):
+    return jnp.asarray(RNG.standard_normal((h, w)), dtype=jnp.float32)
+
+
+class TestModelGraphs:
+    def test_forward_inverse_roundtrip(self):
+        fwd = model.forward_graph("ns_polyconv", "cdf97")
+        inv = model.inverse_graph("ns_polyconv", "cdf97")
+        img = rand_img(32, 32)
+        (packed,) = fwd(img)
+        (rec,) = inv(packed)
+        np.testing.assert_allclose(rec, img, atol=3e-5)
+
+    def test_batched_forward_matches_single(self):
+        fwd = model.forward_graph("ns_lifting", "cdf53")
+        bat = model.batched_forward("ns_lifting", "cdf53")
+        batch = jnp.stack([rand_img(16, 16) for _ in range(3)])
+        (out,) = bat(batch)
+        for i in range(3):
+            np.testing.assert_allclose(out[i], fwd(batch[i])[0], atol=1e-6)
+
+    def test_multilevel_roundtrip(self):
+        fwd = model.multilevel_graph("sep_lifting", "cdf97", 3)
+        inv = model.multilevel_inverse_graph("sep_lifting", "cdf97", 3)
+        img = rand_img(64, 64)
+        (packed,) = fwd(img)
+        (rec,) = inv(packed)
+        np.testing.assert_allclose(rec, img, atol=1e-4)
+
+    def test_multilevel_matches_ref_pyramid(self):
+        levels = 2
+        fwd = model.multilevel_graph("sep_lifting", "cdf53", levels)
+        img = rand_img(32, 32)
+        (packed,) = fwd(img)
+        pyr = ref.multilevel_forward(wv.get("cdf53"), img, levels)
+        # level-1 HH quadrant
+        np.testing.assert_allclose(packed[16:, 16:], pyr[0][3], atol=2e-5)
+        # level-2 HH quadrant nests inside the LL quadrant
+        np.testing.assert_allclose(packed[8:16, 8:16], pyr[1][3], atol=2e-5)
+
+    def test_adjoint_identity(self):
+        """<Wx, y> == <x, W^T y> for the linear_transpose graph."""
+        shape = (16, 16)
+        fwd = model.forward_graph("sep_lifting", "cdf97")
+        adj = model.adjoint_graph("sep_lifting", "cdf97", shape)
+        x, y = rand_img(*shape), rand_img(*shape)
+        (wx,) = fwd(x)
+        (wty,) = adj(y)
+        lhs = float(jnp.vdot(wx, y))
+        rhs = float(jnp.vdot(x, wty))
+        assert abs(lhs - rhs) < 1e-2 * max(1.0, abs(lhs))
+
+
+class TestAOT:
+    def test_lower_forward_to_hlo_text(self):
+        fn = model.forward_graph("ns_polyconv", "cdf53")
+        hlo = aot.lower_fn(fn, (32, 32))
+        assert hlo.startswith("HloModule")
+        assert "f32[32,32]" in hlo
+
+    def test_entry_inventory_complete(self):
+        entries = aot.build_entries()
+        names = {e["name"] for e in entries}
+        assert len(names) == len(entries)  # unique
+        # every wavelet x scheme forward present
+        for wn in wv.WAVELETS:
+            for s in (
+                "sep_conv",
+                "sep_polyconv",
+                "sep_lifting",
+                "ns_conv",
+                "ns_polyconv",
+                "ns_lifting",
+            ):
+                assert f"{wn}_{s}_fwd_256x256" in names
+        kinds = {e["kind"] for e in entries}
+        assert kinds == {
+            "forward",
+            "inverse",
+            "batched_forward",
+            "multilevel",
+            "multilevel_inverse",
+        }
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+        reason="artifacts not built (run `make artifacts`)",
+    )
+    def test_manifest_consistent_with_files(self):
+        root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        with open(os.path.join(root, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["entries"], "empty manifest"
+        for e in manifest["entries"]:
+            path = os.path.join(root, e["file"])
+            assert os.path.exists(path), path
+            with open(path) as fh:
+                head = fh.read(64)
+            assert head.startswith("HloModule")
+        # table1 metadata embedded for the coordinator
+        assert len(manifest["table1"]) == 14

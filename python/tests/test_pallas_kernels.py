@@ -1,0 +1,122 @@
+"""Layer-1 Pallas kernels vs the pure-jnp oracle (the CORE correctness
+signal), including a hypothesis sweep over shapes, tiles, and schemes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import schemes as sch
+from compile import wavelets as wv
+from compile.kernels import pallas_dwt as pk
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def rand_img(h, w):
+    return jnp.asarray(RNG.standard_normal((h, w)), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("wname", sorted(wv.WAVELETS))
+@pytest.mark.parametrize("scheme", sch.SCHEMES)
+class TestKernelVsRef:
+    def test_forward_matches_ref(self, wname, scheme):
+        w = wv.get(wname)
+        img = rand_img(32, 64)
+        gold = ref.lifting_forward(w, img)
+        got = pk.forward(scheme, w, img)
+        for a, b in zip(got, gold):
+            np.testing.assert_allclose(a, b, atol=3e-5, rtol=1e-4)
+
+    def test_forward_optimized_matches_ref(self, wname, scheme):
+        w = wv.get(wname)
+        img = rand_img(32, 32)
+        gold = ref.lifting_forward(w, img)
+        got = pk.forward(scheme, w, img, optimized=True)
+        for a, b in zip(got, gold):
+            np.testing.assert_allclose(a, b, atol=3e-5, rtol=1e-4)
+
+    def test_roundtrip(self, wname, scheme):
+        w = wv.get(wname)
+        img = rand_img(32, 32)
+        rec = pk.inverse(scheme, w, pk.forward(scheme, w, img))
+        np.testing.assert_allclose(rec, img, atol=3e-5)
+
+    def test_launch_count_equals_steps(self, wname, scheme):
+        """One pallas_call per barrier: structural fidelity to Table 1."""
+        w = wv.get(wname)
+        assert len(pk.scheme_steps(scheme, w, False)) == sch.n_steps(scheme, w)
+        assert len(pk.scheme_steps(scheme, w, True)) == sch.n_steps(scheme, w)
+
+
+class TestPackedLayout:
+    def test_forward_image_quadrants(self):
+        w = wv.get("cdf53")
+        img = rand_img(16, 16)
+        packed = pk.forward_image("ns_polyconv", w, img)
+        ll, hl, lh, hh = pk.forward("ns_polyconv", w, img)
+        np.testing.assert_allclose(packed[:8, :8], ll, atol=1e-6)
+        np.testing.assert_allclose(packed[:8, 8:], hl, atol=1e-6)
+        np.testing.assert_allclose(packed[8:, :8], lh, atol=1e-6)
+        np.testing.assert_allclose(packed[8:, 8:], hh, atol=1e-6)
+
+    def test_split_merge_roundtrip(self):
+        img = rand_img(20, 28)
+        np.testing.assert_array_equal(pk.merge(pk.split(img)), img)
+
+
+class TestHaloBookkeeping:
+    def test_mat_halo_cdf53_predict(self):
+        import compile.polyalg as pa
+
+        m = pa.lift_spatial_predict({0: -0.5, 1: -0.5})
+        # offsets reach (1,0), (0,1), (1,1): halo (top,bot,left,right)
+        assert pk.mat_halo(m) == (0, 1, 0, 1)
+
+    def test_group_halo_accumulates(self):
+        import compile.polyalg as pa
+
+        m = pa.lift_spatial_predict({0: -0.5, 1: -0.5})
+        assert pk.group_halo([m, m]) == (0, 2, 0, 2)
+
+
+@given(
+    h2=st.sampled_from([4, 6, 8, 16]),
+    w2=st.sampled_from([4, 8, 12, 64]),
+    tile=st.sampled_from([(4, 4), (8, 16), (8, 128)]),
+    wname=st.sampled_from(sorted(wv.WAVELETS)),
+    scheme=st.sampled_from(sorted(sch.SCHEMES)),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_hypothesis_shapes_tiles(h2, w2, tile, wname, scheme, seed):
+    """Sweep image shapes x tile shapes x schemes: kernel == oracle."""
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.standard_normal((2 * h2, 2 * w2)), dtype=jnp.float32)
+    w = wv.get(wname)
+    gold = ref.lifting_forward(w, img)
+    got = pk.forward(scheme, w, img, tile=tile)
+    for a, b in zip(got, gold):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-4)
+
+
+@given(
+    wname=st.sampled_from(sorted(wv.WAVELETS)),
+    scheme=st.sampled_from(sorted(sch.SCHEMES)),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_hypothesis_linearity(wname, scheme, seed):
+    """The transform is linear: T(a x + y) = a T(x) + T(y)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((16, 16)), dtype=jnp.float32)
+    y = jnp.asarray(rng.standard_normal((16, 16)), dtype=jnp.float32)
+    a = 1.7
+    w = wv.get(wname)
+    lhs = pk.forward(scheme, w, a * x + y)
+    rx = pk.forward(scheme, w, x)
+    ry = pk.forward(scheme, w, y)
+    for l, px, py in zip(lhs, rx, ry):
+        np.testing.assert_allclose(l, a * px + py, atol=5e-5, rtol=5e-4)

@@ -1,0 +1,149 @@
+"""Unit tests for the bivariate Laurent-polynomial algebra."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import polyalg as pa
+
+
+def rand_poly(draw_terms):
+    return {k: v for k, v in draw_terms}
+
+
+offsets = st.tuples(st.integers(-3, 3), st.integers(-3, 3))
+coeffs = st.floats(-4, 4, allow_nan=False, allow_infinity=False).filter(
+    lambda c: abs(c) > 1e-6
+)
+polys = st.dictionaries(offsets, coeffs, min_size=0, max_size=6)
+
+
+class TestPolyPrimitives:
+    def test_one_is_one(self):
+        assert pa.p_is_one(pa.p_one())
+        assert not pa.p_is_one(pa.p_const(2.0))
+        assert not pa.p_is_one(pa.p_zero())
+
+    def test_const_drops_zero(self):
+        assert pa.p_const(0.0) == {}
+
+    def test_add_cancels(self):
+        a = {(0, 0): 1.5, (1, 0): -2.0}
+        b = {(1, 0): 2.0}
+        assert pa.p_add(a, b) == {(0, 0): 1.5}
+
+    def test_mul_shifts_offsets(self):
+        a = {(1, 0): 2.0}
+        b = {(0, 2): 3.0}
+        assert pa.p_mul(a, b) == {(1, 2): 6.0}
+
+    def test_transpose_swaps_axes(self):
+        a = {(1, -2): 4.0, (0, 0): 1.0}
+        assert pa.p_transpose(a) == {(-2, 1): 4.0, (0, 0): 1.0}
+
+    def test_split_const(self):
+        a = {(0, 0): 0.5, (1, 0): -0.5}
+        p0, p1 = pa.p_split_const(a)
+        assert p0 == {(0, 0): 0.5}
+        assert p1 == {(1, 0): -0.5}
+
+    def test_support_and_dense(self):
+        a = {(-1, 0): 1.0, (2, 1): 2.0}
+        assert pa.p_support(a) == (-1, 2, 0, 1)
+        dense, (m0, n0) = pa.p_to_dense(a)
+        assert (m0, n0) == (-1, 0)
+        assert dense[0][0] == 1.0
+        assert dense[1][3] == 2.0
+
+    @given(a=polys, b=polys)
+    @settings(max_examples=100, deadline=None)
+    def test_mul_commutes(self, a, b):
+        ab = pa.p_mul(a, b)
+        ba = pa.p_mul(b, a)
+        assert set(ab) == set(ba)
+        for k in ab:
+            assert math.isclose(ab[k], ba[k], rel_tol=1e-9, abs_tol=1e-9)
+
+    @given(a=polys, b=polys, c=polys)
+    @settings(max_examples=60, deadline=None)
+    def test_mul_distributes(self, a, b, c):
+        lhs = pa.p_mul(a, pa.p_add(b, c))
+        rhs = pa.p_add(pa.p_mul(a, b), pa.p_mul(a, c))
+        for k in set(lhs) | set(rhs):
+            assert math.isclose(lhs.get(k, 0.0), rhs.get(k, 0.0), abs_tol=1e-7)
+
+    @given(a=polys)
+    @settings(max_examples=60, deadline=None)
+    def test_transpose_involutive(self, a):
+        assert pa.p_transpose(pa.p_transpose(a)) == a
+
+
+class TestMatrices:
+    def test_identity_mul(self):
+        m = pa.lift_h("predict", {0: -0.5, 1: -0.5})
+        assert pa.m_mul(pa.m_identity(4), m) == m
+        assert pa.m_mul(m, pa.m_identity(4)) == m
+
+    def test_lift_h_structure(self):
+        m = pa.lift_h("predict", {0: -0.5})
+        assert m[1][0] == {(0, 0): -0.5}
+        assert m[3][2] == {(0, 0): -0.5}
+        assert pa.p_is_one(m[0][0]) and pa.p_is_one(m[2][2])
+
+    def test_lift_v_transposes(self):
+        m = pa.lift_v("predict", {1: -0.5})
+        assert m[2][0] == {(0, 1): -0.5}
+
+    def test_spatial_predict_matches_product(self):
+        taps = {0: -0.5, 1: -0.5}
+        lhs = pa.lift_spatial_predict(taps)
+        rhs = pa.m_mul(pa.lift_v("predict", taps), pa.lift_h("predict", taps))
+        assert _mat_close(lhs, rhs)
+
+    def test_spatial_update_matches_product(self):
+        taps = {0: 0.25, -1: 0.25}
+        lhs = pa.lift_spatial_update(taps)
+        rhs = pa.m_mul(pa.lift_v("update", taps), pa.lift_h("update", taps))
+        assert _mat_close(lhs, rhs)
+
+    def test_polyconv_pair_is_full_product(self):
+        p, u = {0: -0.5, 1: -0.5}, {0: 0.25, -1: 0.25}
+        lhs = pa.polyconv_pair(p, u)
+        rhs = pa.m_chain(
+            [
+                pa.lift_h("predict", p),
+                pa.lift_v("predict", p),
+                pa.lift_h("update", u),
+                pa.lift_v("update", u),
+            ]
+        )
+        assert _mat_close(lhs, rhs)
+
+    def test_h_and_v_steps_commute(self):
+        """S^V S^H == S^H S^V (the linearity the paper's interleaving
+        argument relies on)."""
+        u = {0: 0.25, -1: 0.25}
+        a = pa.m_mul(pa.lift_v("update", u), pa.lift_h("update", u))
+        b = pa.m_mul(pa.lift_h("update", u), pa.lift_v("update", u))
+        assert _mat_close(a, b)
+
+    def test_conv1d_pair_v_entry(self):
+        p, u = {0: -0.5, 1: -0.5}, {0: 0.25, -1: 0.25}
+        m = pa.conv1d_pair(p, u)
+        # V = 1 + UP must sit in the even/even corner
+        v = m[0][0]
+        assert abs(v[(0, 0)] - 0.75) < 1e-12
+        assert abs(v[(1, 0)] + 0.125) < 1e-12
+        assert abs(v[(-1, 0)] + 0.125) < 1e-12
+
+
+def _mat_close(a, b, tol=1e-10):
+    for i in range(4):
+        for j in range(4):
+            keys = set(a[i][j]) | set(b[i][j])
+            for k in keys:
+                if abs(a[i][j].get(k, 0.0) - b[i][j].get(k, 0.0)) > tol:
+                    return False
+    return True

@@ -1,0 +1,214 @@
+"""Scheme-level invariants: equality of all schemes, inverses, op counts."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import opcount as oc
+from compile import polyalg as pa
+from compile import schemes as sch
+from compile import wavelets as wv
+from compile.kernels import ref
+
+WAVELET_NAMES = sorted(wv.WAVELETS)
+RNG = np.random.default_rng(1234)
+
+
+def rand_img(h, w, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal((h, w)), dtype=dtype)
+
+
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+@pytest.mark.parametrize("scheme", sch.SCHEMES)
+class TestSchemeEquality:
+    """Every scheme computes the same coefficients (paper's core claim)."""
+
+    def test_matches_golden_lifting(self, wname, scheme):
+        w = wv.get(wname)
+        img = rand_img(24, 32)
+        gold = ref.lifting_forward(w, img)
+        got = ref.apply_scheme(scheme, w, img)
+        for a, b in zip(gold, got):
+            np.testing.assert_allclose(a, b, atol=5e-5, rtol=1e-4)
+
+    def test_total_matrix_identical(self, wname, scheme):
+        """Symbolic: the composed step product equals the canonical one."""
+        w = wv.get(wname)
+        total = pa.m_chain(sch.build(scheme, w))
+        canon = sch.total_matrix(w)
+        for i in range(4):
+            for j in range(4):
+                keys = set(total[i][j]) | set(canon[i][j])
+                for k in keys:
+                    assert math.isclose(
+                        total[i][j].get(k, 0.0),
+                        canon[i][j].get(k, 0.0),
+                        abs_tol=1e-9,
+                    ), (scheme, i, j, k)
+
+    def test_inverse_composes_to_identity(self, wname, scheme):
+        w = wv.get(wname)
+        total = pa.m_chain(sch.build(scheme, w) + sch.build_inverse(scheme, w))
+        for i in range(4):
+            for j in range(4):
+                want = 1.0 if i == j else 0.0
+                got = total[i][j].get((0, 0), 0.0)
+                assert math.isclose(got, want, abs_tol=1e-9)
+                for k, c in total[i][j].items():
+                    if k != (0, 0):
+                        assert abs(c) < 1e-9
+
+    def test_step_count_matches_paper(self, wname, scheme):
+        w = wv.get(wname)
+        expect = {
+            "sep_conv": 2,
+            "sep_polyconv": 2 * w.n_pairs,
+            "sep_lifting": 4 * w.n_pairs,
+            "ns_conv": 1,
+            "ns_polyconv": w.n_pairs,
+            "ns_lifting": 2 * w.n_pairs,
+        }[scheme]
+        assert sch.n_steps(scheme, w) == expect
+
+    def test_optimized_structure_equality(self, wname, scheme):
+        """Section-5 optimized groups compose to the plain scheme."""
+        w = wv.get(wname)
+        img = rand_img(16, 16)
+        gold = ref.lifting_forward(w, img)
+        planes = ref.split(img)
+        for g in oc.build_optimized(scheme, w):
+            for m in g:
+                planes = ref.apply_step(m, planes)
+        for a, b in zip(gold, planes):
+            np.testing.assert_allclose(a, b, atol=5e-5, rtol=1e-4)
+
+    def test_optimized_barrier_count_unchanged(self, wname, scheme):
+        w = wv.get(wname)
+        assert len(oc.build_optimized(scheme, w)) == sch.n_steps(scheme, w)
+
+
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+class TestLiftingRoundtrip:
+    def test_roundtrip(self, wname):
+        w = wv.get(wname)
+        img = rand_img(40, 24)
+        rec = ref.lifting_inverse(w, ref.lifting_forward(w, img))
+        np.testing.assert_allclose(rec, img, atol=2e-5)
+
+    def test_multilevel_roundtrip(self, wname):
+        w = wv.get(wname)
+        img = rand_img(64, 64)
+        pyr = ref.multilevel_forward(w, img, 3)
+        rec = ref.multilevel_inverse(w, pyr)
+        np.testing.assert_allclose(rec, img, atol=5e-5)
+
+    def test_dc_goes_to_ll(self, wname):
+        """A constant image must land (almost) entirely in LL."""
+        w = wv.get(wname)
+        img = jnp.ones((32, 32), jnp.float32) * 7.0
+        ll, hl, lh, hh = ref.lifting_forward(w, img)
+        assert float(jnp.max(jnp.abs(hl))) < 1e-4
+        assert float(jnp.max(jnp.abs(lh))) < 1e-4
+        assert float(jnp.max(jnp.abs(hh))) < 1e-4
+
+    def test_energy_preserved_cdf97_approx(self, wname):
+        """CDF 9/7 is near-orthogonal: energy roughly preserved."""
+        if wname not in ("cdf97", "haar"):
+            pytest.skip("only meaningful for (near-)orthogonal wavelets")
+        w = wv.get(wname)
+        img = rand_img(64, 64)
+        planes = ref.lifting_forward(w, img)
+        e_in = float(jnp.sum(img**2))
+        e_out = sum(float(jnp.sum(p**2)) for p in planes)
+        assert abs(e_out / e_in - 1.0) < 0.2
+
+
+class TestAnalysisFilters:
+    """Filter supports must match the wavelet names (5/3, 9/7, 13/7)."""
+
+    @pytest.mark.parametrize(
+        "wname,lo_span,hi_span",
+        [("cdf53", 5, 3), ("cdf97", 9, 7), ("dd137", 13, 7)],
+    )
+    def test_filter_spans(self, wname, lo_span, hi_span):
+        w = wv.get(wname)
+        lo, hi = w.analysis_filters()
+        span = lambda f: max(f) - min(f) + 1
+        assert span(lo) == lo_span
+        assert span(hi) == hi_span
+
+    @pytest.mark.parametrize(
+        "wname,gain",
+        [("cdf53", 1.0), ("cdf97", wv.get("cdf97").zeta ** 2),
+         ("dd137", 1.0), ("haar", 2.0 ** 0.5)],
+    )
+    def test_lowpass_dc_gain(self, wname, gain):
+        """DC gain of the analysis low-pass (zeta^2 for CDF 9/7: one zeta
+        from the lifting factorization, one from the final scaling); the
+        high-pass has a zero at DC (vanishing moment)."""
+        w = wv.get(wname)
+        lo, hi = w.analysis_filters()
+        assert math.isclose(sum(lo.values()), gain, rel_tol=1e-9)
+        assert abs(sum(hi.values())) < 1e-9
+
+    @pytest.mark.parametrize("wname", ["cdf53", "cdf97", "dd137"])
+    def test_filters_symmetric(self, wname):
+        """The paper's three wavelets are (whole-sample) symmetric
+        (Haar is half-sample symmetric and excluded)."""
+        w = wv.get(wname)
+        lo, hi = w.analysis_filters()
+        for f in (lo, hi):
+            for k, c in f.items():
+                assert math.isclose(f.get(-k, 0.0), c, rel_tol=1e-9, abs_tol=1e-12)
+
+
+class TestTable1:
+    """Regeneration of Table 1 (see opcount docstring for the exact-cell
+    inventory; remaining published cells sit inside [optimized, plain])."""
+
+    @pytest.mark.parametrize("row", oc.PAPER_TABLE1, ids=lambda r: f"{r[0]}-{r[1]}")
+    def test_steps_column(self, row):
+        wname, scheme, steps, _, _ = row
+        assert sch.n_steps(scheme, wv.get(wname)) == steps
+
+    @pytest.mark.parametrize(
+        "cell", sorted(oc.EXACT_CELLS), ids=lambda c: "-".join(c)
+    )
+    def test_exact_cells(self, cell):
+        wname, scheme, platform = cell
+        mode = oc.EXACT_CELLS[cell]
+        row = next(
+            r for r in oc.PAPER_TABLE1 if r[0] == wname and r[1] == scheme
+        )
+        target = row[3] if platform == "opencl" else row[4]
+        assert oc.count(scheme, wv.get(wname), mode) == target
+
+    @pytest.mark.parametrize("row", oc.PAPER_TABLE1, ids=lambda r: f"{r[0]}-{r[1]}")
+    def test_bracketing(self, row):
+        """Every published op count lies in [min(opt, vec), plain]."""
+        wname, scheme, _, ocl, shd = row
+        w = wv.get(wname)
+        lo = min(oc.count(scheme, w, "optimized"), oc.count(scheme, w, "optimized_vec"))
+        hi = oc.count(scheme, w, "plain")
+        for t in (ocl, shd):
+            assert lo <= t <= hi, (row, lo, hi)
+
+    def test_lifting_cheaper_than_convolution(self):
+        """Lifting needs fewer ops than convolution (paper section 1)."""
+        for wname in WAVELET_NAMES:
+            w = wv.get(wname)
+            assert oc.count("sep_lifting", w, "plain") < oc.count(
+                "sep_conv", w, "plain"
+            )
+            assert oc.count("ns_lifting", w, "optimized") < oc.count(
+                "ns_conv", w, "plain"
+            )
+
+    def test_nonseparable_halves_steps(self):
+        for wname in WAVELET_NAMES:
+            w = wv.get(wname)
+            assert sch.n_steps("ns_conv", w) * 2 == sch.n_steps("sep_conv", w)
+            assert sch.n_steps("ns_lifting", w) * 2 == sch.n_steps("sep_lifting", w)

@@ -1,0 +1,141 @@
+//! Bench-harness substrate: timing, robust statistics, and table
+//! printing for the `cargo bench` targets (no external bench crate is
+//! available in the offline build — this is the project's criterion).
+
+use std::time::{Duration, Instant};
+
+/// Robust summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Median absolute deviation — spread estimate robust to outliers.
+    pub mad: Duration,
+}
+
+impl Stats {
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+}
+
+/// Time `f` adaptively: warm up, then run until `budget` is spent or
+/// `max_iters` reached (at least `min_iters`).
+pub fn bench<F: FnMut()>(mut f: F, budget: Duration, min_iters: usize, max_iters: usize) -> Stats {
+    // warmup
+    f();
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < min_iters)
+        || (start.elapsed() < budget && samples.len() < max_iters)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(&mut samples)
+}
+
+/// Summarize a sample set (sorts in place).
+pub fn summarize(samples: &mut [Duration]) -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort_unstable();
+    let n = samples.len();
+    let median = samples[n / 2];
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    let mut devs: Vec<Duration> = samples
+        .iter()
+        .map(|&s| {
+            if s > median {
+                s - median
+            } else {
+                median - s
+            }
+        })
+        .collect();
+    devs.sort_unstable();
+    Stats {
+        iters: n,
+        median,
+        mean,
+        min: samples[0],
+        max: samples[n - 1],
+        mad: devs[n / 2],
+    }
+}
+
+/// Throughput in GB/s for `bytes` processed in `d`.
+pub fn gbs(bytes: usize, d: Duration) -> f64 {
+    bytes as f64 / d.as_secs_f64() / 1e9
+}
+
+/// Default per-case budget, overridable with `DWT_BENCH_BUDGET_MS`.
+pub fn default_budget() -> Duration {
+    let ms = std::env::var("DWT_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(300);
+    Duration::from_millis(ms)
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(widths: &[usize]) -> Self {
+        Self {
+            widths: widths.to_vec(),
+        }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (cell, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{:>width$}  ", cell, width = w));
+        }
+        println!("{}", line.trim_end());
+    }
+
+    pub fn header(&self, cells: &[&str]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+        let total: usize = self.widths.iter().sum::<usize>() + 2 * self.widths.len();
+        println!("{}", "-".repeat(total));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_at_least_min_iters() {
+        let mut n = 0;
+        let s = bench(|| n += 1, Duration::from_millis(1), 5, 100);
+        assert!(s.iters >= 5);
+        assert!(n >= s.iters);
+    }
+
+    #[test]
+    fn summarize_orders_stats() {
+        let mut samples: Vec<Duration> = (1..=9).map(Duration::from_micros).collect();
+        let s = summarize(&mut samples);
+        assert_eq!(s.median, Duration::from_micros(5));
+        assert_eq!(s.min, Duration::from_micros(1));
+        assert_eq!(s.max, Duration::from_micros(9));
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn gbs_math() {
+        assert!((gbs(1_000_000_000, Duration::from_secs(1)) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,145 @@
+//! Dynamic batcher: groups pending same-key requests into batches for
+//! the AOT batched executables.  Pure logic, unit-testable without any
+//! PJRT client.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Target batch size (the AOT batched artifact's leading dim).
+    pub max_batch: usize,
+    /// Flush a partial batch after this long at the head of the queue.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// An item waiting to be batched.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// A FIFO batcher over one key (wavelet x scheme x shape).
+#[derive(Debug)]
+pub struct Batcher<T> {
+    pub policy: BatchPolicy,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            queue: VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, payload: T) {
+        self.queue.push_back(Pending {
+            payload,
+            enqueued: Instant::now(),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// True when a batch should be emitted right now.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(head) => now.duration_since(head.enqueued) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the head item times out (for the executor's park).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queue
+            .front()
+            .map(|h| h.enqueued + self.policy.max_wait)
+    }
+
+    /// Pop up to `max_batch` items (call when [`Batcher::ready`]).
+    pub fn take_batch(&mut self) -> Vec<T> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).map(|p| p.payload).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+        }
+    }
+
+    #[test]
+    fn full_batch_is_ready_immediately() {
+        let mut b = Batcher::new(policy(3, 1000));
+        for i in 0..3 {
+            b.push(i);
+        }
+        assert!(b.ready(Instant::now()));
+        assert_eq!(b.take_batch(), vec![0, 1, 2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_waits_for_timeout() {
+        let mut b = Batcher::new(policy(8, 50));
+        b.push(1);
+        assert!(!b.ready(Instant::now()));
+        assert!(b.ready(Instant::now() + Duration::from_millis(51)));
+    }
+
+    #[test]
+    fn take_batch_caps_at_max() {
+        let mut b = Batcher::new(policy(2, 0));
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.take_batch(), vec![0, 1]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.take_batch(), vec![2, 3]);
+        assert_eq!(b.take_batch(), vec![4]);
+    }
+
+    #[test]
+    fn empty_batcher_never_ready() {
+        let b: Batcher<u32> = Batcher::new(policy(1, 0));
+        assert!(!b.ready(Instant::now()));
+        assert!(b.next_deadline().is_none());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(policy(10, 0));
+        for i in 0..7 {
+            b.push(i);
+        }
+        assert_eq!(b.take_batch(), (0..7).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,148 @@
+//! Service metrics: latency percentiles, throughput, per-backend
+//! counters.  Lock-cheap: one mutex around a bounded reservoir.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Which execution path served a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT artifact on the PJRT executor thread (possibly batched).
+    Pjrt,
+    /// Native engine, whole image.
+    Native,
+    /// Native engine, tiled across the worker pool.
+    NativeTiled,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Native => "native",
+            Backend::NativeTiled => "native-tiled",
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<u64>,
+    bytes: u64,
+    requests: u64,
+    batches: u64,
+    batched_requests: u64,
+    per_backend: [u64; 3],
+}
+
+/// Aggregated service metrics (thread-safe).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A percentile summary snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub bytes: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub per_backend: [(&'static str, u64); 3],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, latency: Duration, bytes: usize, backend: Backend) {
+        let mut g = self.inner.lock().unwrap();
+        // bounded reservoir: keep the most recent 1M samples
+        if g.latencies_us.len() >= 1_000_000 {
+            g.latencies_us.clear();
+        }
+        g.latencies_us.push(latency.as_micros() as u64);
+        g.bytes += bytes as u64;
+        g.requests += 1;
+        let idx = backend as usize;
+        g.per_backend[idx] += 1;
+    }
+
+    pub fn record_batch(&self, batch_size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batched_requests += batch_size as u64;
+    }
+
+    pub fn summary(&self) -> Summary {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies_us.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() - 1) as f64 * p) as usize]
+            }
+        };
+        Summary {
+            requests: g.requests,
+            batches: g.batches,
+            mean_batch: if g.batches > 0 {
+                g.batched_requests as f64 / g.batches as f64
+            } else {
+                0.0
+            },
+            bytes: g.bytes,
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            max_us: lat.last().copied().unwrap_or(0),
+            per_backend: [
+                ("pjrt", g.per_backend[0]),
+                ("native", g.per_backend[1]),
+                ("native-tiled", g.per_backend[2]),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record(Duration::from_micros(i), 64, Backend::Native);
+        }
+        let s = m.summary();
+        assert_eq!(s.requests, 100);
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
+        assert_eq!(s.max_us, 100);
+        assert_eq!(s.per_backend[1], ("native", 100));
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(8);
+        m.record_batch(4);
+        let s = m.summary();
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_zeroed() {
+        let s = Metrics::new().summary();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p99_us, 0);
+    }
+}

@@ -1,0 +1,31 @@
+//! Layer-3 coordinator: request routing, dynamic batching, tiled
+//! parallel execution, and metrics for the transform service.
+//!
+//! Topology (all std threads; the PJRT client is `Rc`-based and lives
+//! confined to one executor thread):
+//!
+//! ```text
+//!  clients ──► Coordinator::submit ──► router
+//!                │  serve-size + artifact?        │ otherwise
+//!                ▼                                ▼
+//!        executor thread (PJRT)           native worker pool
+//!        dynamic batcher over             whole-image or tiled
+//!        AOT executables                  lifting engine
+//!                └──────────► respond (oneshot channel) ◄──┘
+//! ```
+//!
+//! The router prefers the AOT Pallas/XLA path for shapes that match a
+//! compiled artifact and falls back to the native engine elsewhere —
+//! large images are split into halo'd tiles processed in parallel
+//! (overlap-save; identical coefficients to the monolithic transform).
+
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+pub mod tiler;
+pub mod worker;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use service::{Coordinator, CoordinatorConfig, Request, Response};
+pub use tiler::TileGrid;

@@ -1,0 +1,460 @@
+//! The coordinator service: routing, the PJRT executor thread with
+//! dynamic batching, and the native fallback paths.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::{Backend, Metrics};
+use super::tiler::TileGrid;
+use super::worker::WorkerPool;
+use crate::dwt::{Engine, Image};
+use crate::polyphase::schemes::Scheme;
+use crate::polyphase::wavelets::Wavelet;
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A transform request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub image: Image,
+    pub wavelet: String,
+    pub scheme: Scheme,
+    /// Inverse transform (packed quadrants in, image out).
+    pub inverse: bool,
+    /// Mallat pyramid depth (1 = single level).  Multi-level requests
+    /// run on the native engine (or the matching AOT multilevel
+    /// artifact when one exists at the serve size).
+    pub levels: usize,
+}
+
+/// A completed transform.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub image: Image,
+    pub backend: Backend,
+    pub latency: Duration,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Artifact directory; `None` disables the PJRT path entirely.
+    pub artifacts_dir: Option<PathBuf>,
+    /// Native worker pool size.
+    pub workers: usize,
+    /// Dynamic batching policy for the PJRT executor.
+    pub batch: BatchPolicy,
+    /// Tile side for the tiled-parallel native path.
+    pub tile: usize,
+    /// Image pixel count at/above which the tiled path is used.
+    pub tiled_threshold: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: Some(crate::runtime::default_artifacts_dir()),
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(8),
+            batch: BatchPolicy::default(),
+            tile: 256,
+            tiled_threshold: 1024 * 1024,
+        }
+    }
+}
+
+type Respond = Sender<Result<Response>>;
+
+enum ExecMsg {
+    Run {
+        request: Request,
+        entry_name: String,
+        batchable: Option<String>, // batched artifact name when available
+        respond: Respond,
+        start: Instant,
+    },
+    Shutdown,
+}
+
+/// The coordinator: see module docs for the topology.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    pub metrics: Arc<Metrics>,
+    exec_tx: Option<Sender<ExecMsg>>,
+    exec_handle: Option<std::thread::JoinHandle<()>>,
+    /// (serve_h, serve_w) of the artifact set, when PJRT is up.
+    serve_size: Option<(usize, usize)>,
+    /// manifest index: (wavelet, scheme) -> (single entry, batched entry)
+    artifact_index: HashMap<(String, String), (String, Option<String>)>,
+    pool: WorkerPool,
+    engines: Mutex<HashMap<(Scheme, &'static str), Arc<Engine>>>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Result<Self> {
+        let metrics = Arc::new(Metrics::new());
+        let mut serve_size = None;
+        let mut artifact_index = HashMap::new();
+        let mut exec_tx = None;
+        let mut exec_handle = None;
+        if let Some(dir) = cfg.artifacts_dir.clone() {
+            // executor thread owns the (non-Send) PJRT client; report
+            // init success/failure back over a oneshot channel
+            let (tx, rx) = channel::<ExecMsg>();
+            let (init_tx, init_rx) = channel::<Result<crate::runtime::Manifest>>();
+            let policy = cfg.batch.clone();
+            let metrics2 = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name("dwt-executor".into())
+                .spawn(move || executor_main(dir, rx, init_tx, policy, metrics2))
+                .expect("spawn executor");
+            match init_rx.recv() {
+                Ok(Ok(manifest)) => {
+                    serve_size = Some(manifest.serve_size);
+                    for e in &manifest.entries {
+                        if e.kind == "forward" && !e.optimized {
+                            let key = (e.wavelet.clone(), e.scheme.clone());
+                            artifact_index.entry(key).or_insert((e.name.clone(), None));
+                        }
+                    }
+                    for e in &manifest.entries {
+                        if e.kind == "batched_forward" {
+                            if let Some(slot) =
+                                artifact_index.get_mut(&(e.wavelet.clone(), e.scheme.clone()))
+                            {
+                                slot.1 = Some(e.name.clone());
+                            }
+                        }
+                    }
+                    exec_tx = Some(tx);
+                    exec_handle = Some(handle);
+                }
+                Ok(Err(err)) => {
+                    eprintln!("coordinator: PJRT path disabled ({err}); native only");
+                    let _ = handle.join();
+                }
+                Err(_) => {
+                    eprintln!("coordinator: executor thread died during init; native only");
+                    let _ = handle.join();
+                }
+            }
+        }
+        let pool = WorkerPool::new(cfg.workers);
+        Ok(Self {
+            cfg,
+            metrics,
+            exec_tx,
+            exec_handle,
+            serve_size,
+            artifact_index,
+            pool,
+            engines: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// True when the AOT/PJRT path is live.
+    pub fn pjrt_available(&self) -> bool {
+        self.exec_tx.is_some()
+    }
+
+    fn engine(&self, scheme: Scheme, wavelet: &Wavelet) -> Arc<Engine> {
+        let key = (scheme, wavelet.name);
+        if let Some(e) = self.engines.lock().unwrap().get(&key) {
+            return e.clone();
+        }
+        let e = Arc::new(Engine::new(scheme, wavelet.clone()));
+        self.engines.lock().unwrap().insert(key, e.clone());
+        e
+    }
+
+    /// Submit a request; returns a handle to await the response on.
+    pub fn submit(&self, request: Request) -> Receiver<Result<Response>> {
+        let (respond, handle) = channel();
+        let start = Instant::now();
+        let wavelet = match Wavelet::by_name(&request.wavelet) {
+            Some(w) => w,
+            None => {
+                let _ = respond.send(Err(anyhow!("unknown wavelet {}", request.wavelet)));
+                return handle;
+            }
+        };
+        // route 1: PJRT artifact (forward, serve size, single level)
+        if !request.inverse && request.levels <= 1 {
+            if let (Some(tx), Some((sh, sw))) = (&self.exec_tx, self.serve_size) {
+                if request.image.height == sh && request.image.width == sw {
+                    if let Some((single, batched)) = self
+                        .artifact_index
+                        .get(&(request.wavelet.clone(), request.scheme.name().to_string()))
+                    {
+                        let msg = ExecMsg::Run {
+                            entry_name: single.clone(),
+                            batchable: batched.clone(),
+                            request,
+                            respond,
+                            start,
+                        };
+                        match tx.send(msg) {
+                            Ok(()) => return handle,
+                            Err(std::sync::mpsc::SendError(ExecMsg::Run {
+                                request, respond, ..
+                            })) => {
+                                // executor gone: recover the request and
+                                // serve it natively
+                                self.native_async(wavelet, request, respond, start);
+                                return handle;
+                            }
+                            Err(_) => unreachable!("send returns the message"),
+                        }
+                    }
+                }
+            }
+        }
+        // route 2/3: native
+        self.native_async(wavelet, request, respond, start);
+        handle
+    }
+
+    fn native_async(&self, wavelet: Wavelet, request: Request, respond: Respond, start: Instant) {
+        let engine = self.engine(request.scheme, &wavelet);
+        let metrics = self.metrics.clone();
+        let tile = self.cfg.tile;
+        let use_tiled = !request.inverse
+            && request.levels <= 1
+            && request.image.width * request.image.height >= self.cfg.tiled_threshold
+            && request.image.width % tile == 0
+            && request.image.height % tile == 0;
+        if use_tiled {
+            // orchestrate tiles on a dedicated thread, fan out to the pool
+            let halo = TileGrid::halo_for(&engine.wavelet);
+            let n_workers = self.pool.size;
+            let img = request.image;
+            std::thread::spawn(move || {
+                let grid = TileGrid::new(img.width, img.height, tile, halo);
+                let out = Arc::new(Mutex::new(Image::new(img.width, img.height)));
+                let img = Arc::new(img);
+                let grid = Arc::new(grid);
+                // shard tiles across n_workers jobs run on plain threads
+                let mut shards: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_workers];
+                for ty in 0..grid.tiles_y {
+                    for tx in 0..grid.tiles_x {
+                        shards[(ty * grid.tiles_x + tx) % n_workers].push((tx, ty));
+                    }
+                }
+                let mut joins = Vec::new();
+                for shard in shards {
+                    let (img, grid, out, engine) =
+                        (img.clone(), grid.clone(), out.clone(), engine.clone());
+                    joins.push(std::thread::spawn(move || {
+                        for (tx_, ty) in shard {
+                            let t = grid.extract(&img, tx_, ty);
+                            let packed = engine.forward(&t);
+                            let mut o = out.lock().unwrap();
+                            grid.stitch_packed(&mut o, &packed, tx_, ty);
+                        }
+                    }));
+                }
+                for j in joins {
+                    let _ = j.join();
+                }
+                let result = Arc::try_unwrap(out)
+                    .map(|m| m.into_inner().unwrap())
+                    .unwrap_or_else(|a| a.lock().unwrap().clone());
+                let latency = start.elapsed();
+                metrics.record(latency, result.data.len() * 4, Backend::NativeTiled);
+                let _ = respond.send(Ok(Response {
+                    image: result,
+                    backend: Backend::NativeTiled,
+                    latency,
+                }));
+            });
+            return;
+        }
+        let inverse = request.inverse;
+        let levels = request.levels.max(1);
+        let img = request.image;
+        self.pool.submit(move || {
+            let result = match (inverse, levels) {
+                (false, 1) => engine.forward(&img),
+                (true, 1) => engine.inverse(&img),
+                (false, l) => crate::dwt::multilevel::forward(&engine, &img, l),
+                (true, l) => crate::dwt::multilevel::inverse(&engine, &img, l),
+            };
+            let latency = start.elapsed();
+            metrics.record(latency, result.data.len() * 4, Backend::Native);
+            let _ = respond.send(Ok(Response {
+                image: result,
+                backend: Backend::Native,
+                latency,
+            }));
+        });
+    }
+
+    /// Synchronous convenience wrapper.
+    pub fn transform(&self, request: Request) -> Result<Response> {
+        self.submit(request)
+            .recv()
+            .map_err(|_| anyhow!("coordinator dropped the request"))?
+    }
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Self {
+            image: Image::new(2, 2),
+            wavelet: "cdf53".into(),
+            scheme: Scheme::SepLifting,
+            inverse: false,
+            levels: 1,
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(tx) = self.exec_tx.take() {
+            let _ = tx.send(ExecMsg::Shutdown);
+        }
+        if let Some(h) = self.exec_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The executor thread main loop: owns the PJRT runtime, performs
+/// dynamic batching per (batched artifact) key.
+fn executor_main(
+    artifacts_dir: PathBuf,
+    rx: Receiver<ExecMsg>,
+    init_tx: Sender<Result<crate::runtime::Manifest>>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
+    let runtime = match Runtime::new(&artifacts_dir) {
+        Ok(r) => {
+            let _ = init_tx.send(Ok(r.manifest.clone()));
+            r
+        }
+        Err(e) => {
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    };
+    type Item = (Request, Respond, Instant, String);
+    let mut batchers: HashMap<String, Batcher<Item>> = HashMap::new();
+    loop {
+        // park until the next batch deadline (or a message arrives)
+        let deadline = batchers
+            .values()
+            .filter(|b| !b.is_empty())
+            .filter_map(|b| b.next_deadline())
+            .min();
+        let msg = match deadline {
+            Some(d) => {
+                let now = Instant::now();
+                let wait = d.saturating_duration_since(now);
+                match rx.recv_timeout(wait) {
+                    Ok(m) => Some(m),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            },
+        };
+        match msg {
+            Some(ExecMsg::Shutdown) => break,
+            Some(ExecMsg::Run {
+                request,
+                entry_name,
+                batchable,
+                respond,
+                start,
+            }) => {
+                if let Some(batch_name) = batchable {
+                    batchers
+                        .entry(batch_name.clone())
+                        .or_insert_with(|| Batcher::new(policy.clone()))
+                        .push((request, respond, start, entry_name));
+                } else {
+                    // unbatched artifact: execute immediately
+                    let out = runtime.execute_image(&entry_name, &request.image);
+                    respond_one(out, respond, start, &metrics);
+                }
+            }
+            None => {} // timeout: fall through to flush
+        }
+        // flush all ready batchers
+        let now = Instant::now();
+        for (batch_name, b) in batchers.iter_mut() {
+            while b.ready(now) {
+                let items = b.take_batch();
+                metrics.record_batch(items.len());
+                run_batch(&runtime, batch_name, items, &metrics);
+            }
+        }
+    }
+}
+
+fn respond_one(
+    out: Result<Image>,
+    respond: Respond,
+    start: Instant,
+    metrics: &Metrics,
+) {
+    let latency = start.elapsed();
+    match out {
+        Ok(image) => {
+            metrics.record(latency, image.data.len() * 4, Backend::Pjrt);
+            let _ = respond.send(Ok(Response {
+                image,
+                backend: Backend::Pjrt,
+                latency,
+            }));
+        }
+        Err(e) => {
+            let _ = respond.send(Err(e));
+        }
+    }
+}
+
+fn run_batch(
+    runtime: &Runtime,
+    batch_name: &str,
+    items: Vec<(Request, Respond, Instant, String)>,
+    metrics: &Metrics,
+) {
+    let b = runtime
+        .manifest
+        .find(batch_name)
+        .map(|e| e.input_shape[0])
+        .unwrap_or(items.len());
+    // pad the batch to the artifact's fixed leading dimension
+    let mut images: Vec<Image> = items.iter().map(|(r, _, _, _)| r.image.clone()).collect();
+    while images.len() < b {
+        images.push(images[0].clone());
+    }
+    match runtime.execute_batch(batch_name, &images) {
+        Ok(outs) => {
+            for ((_, respond, start, _), out) in items.into_iter().zip(outs) {
+                respond_one(Ok(out), respond, start, metrics);
+            }
+        }
+        Err(e) => {
+            // batched path failed: fall back to per-image execution
+            let msg = format!("{e}");
+            for (req, respond, start, entry_name) in items {
+                let out = runtime
+                    .execute_image(&entry_name, &req.image)
+                    .map_err(|e2| anyhow!("batch failed ({msg}); single failed: {e2}"));
+                respond_one(out, respond, start, metrics);
+            }
+        }
+    }
+}

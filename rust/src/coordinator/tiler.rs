@@ -1,0 +1,184 @@
+//! Overlap-save tiling: split a large image into halo'd tiles whose
+//! independent transforms stitch back into exactly the monolithic
+//! transform (periodic boundary semantics).
+//!
+//! Parity note: tile origins are even, so the polyphase phase of every
+//! tile matches the full image, and the halo is even as well so the
+//! component planes of the halo'd tile align.
+
+use crate::dwt::Image;
+
+/// A tiling plan for one image.
+#[derive(Debug, Clone)]
+pub struct TileGrid {
+    pub image_w: usize,
+    pub image_h: usize,
+    pub tile: usize,
+    pub halo: usize,
+    pub tiles_x: usize,
+    pub tiles_y: usize,
+}
+
+impl TileGrid {
+    /// Plan a grid of `tile x tile` output tiles with `halo` pixels of
+    /// context on every side.  `tile` must divide both image sides;
+    /// `tile` and `halo` must be even (parity alignment).
+    pub fn new(image_w: usize, image_h: usize, tile: usize, halo: usize) -> Self {
+        assert!(tile % 2 == 0 && halo % 2 == 0, "tile/halo must be even");
+        assert!(
+            image_w % tile == 0 && image_h % tile == 0,
+            "tile {tile} must divide image {image_w}x{image_h}"
+        );
+        Self {
+            image_w,
+            image_h,
+            tile,
+            halo,
+            tiles_x: image_w / tile,
+            tiles_y: image_h / tile,
+        }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles_x * self.tiles_y
+    }
+
+    /// Extract tile (tx, ty) with halo, wrapping periodically.
+    pub fn extract(&self, img: &Image, tx: usize, ty: usize) -> Image {
+        let side = self.tile + 2 * self.halo;
+        let mut out = Image::new(side, side);
+        let x0 = (tx * self.tile) as isize - self.halo as isize;
+        let y0 = (ty * self.tile) as isize - self.halo as isize;
+        for y in 0..side {
+            let sy = (y0 + y as isize).rem_euclid(self.image_h as isize) as usize;
+            for x in 0..side {
+                let sx = (x0 + x as isize).rem_euclid(self.image_w as isize) as usize;
+                out.data[y * side + x] = img.at(sx, sy);
+            }
+        }
+        out
+    }
+
+    /// Stitch a transformed tile (packed quadrant layout, halo'd size)
+    /// into the packed full-image output.  Each subband quadrant of the
+    /// tile contributes its center `tile/2 x tile/2` region.
+    pub fn stitch_packed(&self, out: &mut Image, tile_packed: &Image, tx: usize, ty: usize) {
+        let side = self.tile + 2 * self.halo;
+        debug_assert_eq!(tile_packed.width, side);
+        let h2 = self.halo / 2; // halo in subband samples
+        let t2 = self.tile / 2; // tile in subband samples
+        let s2 = side / 2;
+        let (gw2, gh2) = (self.image_w / 2, self.image_h / 2);
+        // quadrant origins in the tile / in the full packed image
+        for (qy, qx, gy0, gx0) in [
+            (0usize, 0usize, 0usize, 0usize), // LL
+            (0, s2, 0, gw2),                  // HL
+            (s2, 0, gh2, 0),                  // LH
+            (s2, s2, gh2, gw2),               // HH
+        ] {
+            for y in 0..t2 {
+                let src_row = (qy + h2 + y) * side;
+                let dst_row = (gy0 + ty * t2 + y) * self.image_w;
+                let src0 = src_row + qx + h2;
+                let dst0 = dst_row + gx0 + tx * t2;
+                out.data[dst0..dst0 + t2]
+                    .copy_from_slice(&tile_packed.data[src0..src0 + t2]);
+            }
+        }
+    }
+
+    /// Halo wide enough for one forward level of any scheme of `w`:
+    /// the total polyphase matrix reach (in component samples) times 2
+    /// (image pixels per component sample), rounded up to even, plus a
+    /// safety row.
+    pub fn halo_for(w: &crate::polyphase::wavelets::Wavelet) -> usize {
+        let total = crate::polyphase::schemes::total_matrix(w);
+        let (t, b, l, r) = total.halo();
+        let reach = t.max(b).max(l).max(r) as usize;
+        ((reach + 1) * 2 + 1).next_multiple_of(2)
+    }
+}
+
+/// Convenience: full tiled forward transform with the native engine
+/// (single-threaded reference; the coordinator parallelizes the loop).
+pub fn tiled_forward(
+    engine: &crate::dwt::Engine,
+    img: &Image,
+    tile: usize,
+) -> Image {
+    let halo = TileGrid::halo_for(&engine.wavelet);
+    let grid = TileGrid::new(img.width, img.height, tile, halo);
+    let mut out = Image::new(img.width, img.height);
+    for ty in 0..grid.tiles_y {
+        for tx in 0..grid.tiles_x {
+            let t = grid.extract(img, tx, ty);
+            let packed = engine.forward(&t);
+            grid.stitch_packed(&mut out, &packed, tx, ty);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dwt::Engine;
+    use crate::polyphase::schemes::Scheme;
+    use crate::polyphase::wavelets::Wavelet;
+
+    #[test]
+    fn extract_interior_and_wrap() {
+        let img = Image::synthetic(32, 32, 30);
+        let grid = TileGrid::new(32, 32, 16, 4);
+        let t = grid.extract(&img, 0, 0);
+        assert_eq!(t.width, 24);
+        // interior sample
+        assert_eq!(t.at(4, 4), img.at(0, 0));
+        // wrapped corner: (-4, -4) -> (28, 28)
+        assert_eq!(t.at(0, 0), img.at(28, 28));
+    }
+
+    #[test]
+    fn tiled_equals_monolithic_all_wavelets() {
+        for w in Wavelet::all() {
+            let engine = Engine::new(Scheme::SepLifting, w.clone());
+            let img = Image::synthetic(64, 64, 31);
+            let mono = engine.forward(&img);
+            let tiled = tiled_forward(&engine, &img, 32);
+            let err = tiled.max_abs_diff(&mono);
+            assert!(err < 1e-3, "{}: tiled != monolithic ({err})", w.name);
+        }
+    }
+
+    #[test]
+    fn tiled_equals_monolithic_nonseparable() {
+        let engine = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97());
+        let img = Image::synthetic(64, 32, 32);
+        let mono = engine.forward(&img);
+        let halo = TileGrid::halo_for(&engine.wavelet);
+        let grid = TileGrid::new(64, 32, 16, halo);
+        let mut out = Image::new(64, 32);
+        for ty in 0..grid.tiles_y {
+            for tx in 0..grid.tiles_x {
+                let t = grid.extract(&img, tx, ty);
+                let packed = engine.forward(&t);
+                grid.stitch_packed(&mut out, &packed, tx, ty);
+            }
+        }
+        assert!(out.max_abs_diff(&mono) < 1e-3);
+    }
+
+    #[test]
+    fn halo_for_is_even_and_positive() {
+        for w in Wavelet::all() {
+            let h = TileGrid::halo_for(&w);
+            assert!(h >= 4 && h % 2 == 0, "{}: halo {}", w.name, h);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn rejects_nondividing_tile() {
+        let _ = TileGrid::new(48, 48, 32, 4);
+    }
+}

@@ -1,0 +1,127 @@
+//! Native worker pool: a fixed set of threads running closures — used
+//! for whole-image native transforms and for the tiled parallel path.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A minimal fixed-size thread pool.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    pub size: usize,
+}
+
+impl WorkerPool {
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("dwt-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            handles,
+            size,
+        }
+    }
+
+    /// Submit a job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker pool closed");
+    }
+
+    /// Run a batch of jobs and wait for all of them (scoped fan-out).
+    pub fn run_all<F: FnOnce() + Send + 'static>(&self, jobs: Vec<F>) {
+        let (done_tx, done_rx) = channel::<()>();
+        let n = jobs.len();
+        for job in jobs {
+            let done = done_tx.clone();
+            self.submit(move || {
+                job();
+                let _ = done.send(());
+            });
+        }
+        for _ in 0..n {
+            done_rx.recv().expect("worker died");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..64)
+            .map(|_| {
+                let c = counter.clone();
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.run_all(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn parallel_speedup_is_observable() {
+        // not a timing assertion (flaky) — just checks concurrency works
+        let pool = WorkerPool::new(2);
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f1 = flag.clone();
+        let f2 = flag.clone();
+        pool.run_all(vec![
+            Box::new(move || {
+                f1.fetch_add(1, Ordering::SeqCst);
+            }) as Box<dyn FnOnce() + Send>,
+            Box::new(move || {
+                f2.fetch_add(1, Ordering::SeqCst);
+            }),
+        ]);
+        assert_eq!(flag.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = WorkerPool::new(3);
+        pool.run_all((0..8).map(|_| || ()).collect::<Vec<_>>());
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,148 @@
+//! Generic polyphase-matrix step evaluator with periodic indexing —
+//! the numeric twin of `ref.apply_step` in the Python oracle.
+
+use super::planes::Planes;
+use crate::polyphase::{Poly, PolyMatrix};
+
+/// `out += c * shift(inp, km, kn)` with periodic wrap on the plane.
+fn accumulate_shifted(
+    out: &mut [f32],
+    inp: &[f32],
+    w2: usize,
+    h2: usize,
+    km: i32,
+    kn: i32,
+    c: f32,
+) {
+    let shift_col = km.rem_euclid(w2 as i32) as usize;
+    let shift_row = kn.rem_euclid(h2 as i32) as usize;
+    for y in 0..h2 {
+        let src_y = (y + shift_row) % h2;
+        let dst_row = y * w2;
+        let src_row = src_y * w2;
+        if shift_col == 0 {
+            for x in 0..w2 {
+                out[dst_row + x] += c * inp[src_row + x];
+            }
+        } else {
+            // split at the wrap point: x in [0, w2-shift) reads x+shift,
+            // x in [w2-shift, w2) wraps to the row start
+            let head = w2 - shift_col;
+            for x in 0..head {
+                out[dst_row + x] += c * inp[src_row + x + shift_col];
+            }
+            for x in head..w2 {
+                out[dst_row + x] += c * inp[src_row + x + shift_col - w2];
+            }
+        }
+    }
+}
+
+/// Apply one polynomial: `out[n,m] = sum_k c_k inp[n+kn, m+km]` (periodic).
+pub fn apply_poly(p: &Poly, inp: &[f32], w2: usize, h2: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; w2 * h2];
+    for (&(km, kn), &c) in &p.terms {
+        accumulate_shifted(&mut out, inp, w2, h2, km, kn, c as f32);
+    }
+    out
+}
+
+/// Apply one barrier step (4x4 matrix) to the planes.
+///
+/// Row-blocked: each output row is accumulated across *all* terms while
+/// it is hot in L1 (a non-separable convolution step has up to 256
+/// terms — sweeping the whole plane once per term thrashes the cache).
+pub fn apply_step(mat: &PolyMatrix, planes: &Planes) -> Planes {
+    let (w2, h2) = (planes.w2, planes.h2);
+    let mut out = Planes::new(w2, h2);
+    for i in 0..4 {
+        // flatten the row's polynomials into a (j, km, kn, c) term list
+        let mut terms: Vec<(usize, usize, usize, f32)> = Vec::new();
+        for j in 0..4 {
+            for (&(km, kn), &c) in &mat.m[i][j].terms {
+                let sc = km.rem_euclid(w2 as i32) as usize;
+                let sr = kn.rem_euclid(h2 as i32) as usize;
+                terms.push((j, sc, sr, c as f32));
+            }
+        }
+        let acc_plane = &mut out.p[i];
+        for y in 0..h2 {
+            let dst = &mut acc_plane[y * w2..(y + 1) * w2];
+            for &(j, shift_col, shift_row, c) in &terms {
+                let sy = (y + shift_row) % h2;
+                let src = &planes.p[j][sy * w2..(sy + 1) * w2];
+                if shift_col == 0 {
+                    for x in 0..w2 {
+                        dst[x] += c * src[x];
+                    }
+                } else {
+                    let head = w2 - shift_col;
+                    let (s_hi, s_lo) = (&src[shift_col..], &src[..shift_col]);
+                    for x in 0..head {
+                        dst[x] += c * s_hi[x];
+                    }
+                    for x in head..w2 {
+                        dst[x] += c * s_lo[x - head];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Apply a whole barrier-separated chain of steps.
+pub fn apply_chain(steps: &[PolyMatrix], planes: &Planes) -> Planes {
+    let mut cur = planes.clone();
+    for s in steps {
+        cur = apply_step(s, &cur);
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dwt::planes::Image;
+    use crate::polyphase::matrix::LiftKind;
+
+    #[test]
+    fn identity_step_is_noop() {
+        let planes = Planes::split(&Image::synthetic(16, 16, 4));
+        let out = apply_step(&PolyMatrix::identity(), &planes);
+        assert_eq!(out, planes);
+    }
+
+    #[test]
+    fn shift_wraps_periodically() {
+        // 2x1 plane, shift by 1 must swap the entries
+        let p = Poly::horiz(&[(1, 1.0)]);
+        let out = apply_poly(&p, &[1.0, 2.0], 2, 1);
+        assert_eq!(out, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn negative_shift_wraps() {
+        let p = Poly::horiz(&[(-1, 1.0)]);
+        let out = apply_poly(&p, &[1.0, 2.0, 3.0], 3, 1);
+        assert_eq!(out, vec![3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn vertical_shift() {
+        let p = Poly::vert(&[(1, 1.0)]);
+        let out = apply_poly(&p, &[1.0, 2.0, 3.0, 4.0], 1, 4);
+        assert_eq!(out, vec![2.0, 3.0, 4.0, 1.0]);
+    }
+
+    #[test]
+    fn predict_step_modifies_odd_planes_only() {
+        let planes = Planes::split(&Image::synthetic(8, 8, 5));
+        let step = PolyMatrix::lift_h(LiftKind::Predict, &[(0, -0.5), (1, -0.5)]);
+        let out = apply_step(&step, &planes);
+        assert_eq!(out.p[0], planes.p[0]);
+        assert_eq!(out.p[2], planes.p[2]);
+        assert_ne!(out.p[1], planes.p[1]);
+        assert_ne!(out.p[3], planes.p[3]);
+    }
+}

@@ -1,0 +1,144 @@
+//! The scheme engine: run any (scheme, wavelet) pair forward/inverse on
+//! an image, through either the generic matrix evaluator or the
+//! specialized lifting fast path.
+
+use super::apply::apply_chain;
+use super::lifting;
+use super::planes::{Image, Planes};
+use crate::polyphase::schemes::{self, Scheme};
+use crate::polyphase::wavelets::Wavelet;
+use crate::polyphase::PolyMatrix;
+
+/// Cached step matrices for one (scheme, wavelet) combination.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    pub scheme: Scheme,
+    pub wavelet: Wavelet,
+    forward_steps: Vec<PolyMatrix>,
+    inverse_steps: Vec<PolyMatrix>,
+    optimized_groups: Vec<Vec<PolyMatrix>>,
+}
+
+impl Engine {
+    pub fn new(scheme: Scheme, wavelet: Wavelet) -> Self {
+        let forward_steps = schemes::build(scheme, &wavelet);
+        let inverse_steps = schemes::build_inverse(scheme, &wavelet);
+        let optimized_groups = schemes::build_optimized(scheme, &wavelet);
+        Self {
+            scheme,
+            wavelet,
+            forward_steps,
+            inverse_steps,
+            optimized_groups,
+        }
+    }
+
+    /// Number of barrier-separated steps (Table 1 "steps" column).
+    pub fn n_steps(&self) -> usize {
+        self.forward_steps.len()
+    }
+
+    /// Forward transform -> packed quadrant image `[[LL, HL], [LH, HH]]`.
+    pub fn forward(&self, img: &Image) -> Image {
+        self.forward_planes(img).to_packed()
+    }
+
+    /// Forward transform -> polyphase planes (LL, HL, LH, HH).
+    pub fn forward_planes(&self, img: &Image) -> Planes {
+        // the lifting fast path is numerically identical; use it for the
+        // separable lifting scheme (the hot path), generic otherwise
+        if self.scheme == Scheme::SepLifting {
+            let mut planes = Planes::split(img);
+            lifting::forward_in_place(&self.wavelet, &mut planes);
+            return planes;
+        }
+        apply_chain(&self.forward_steps, &Planes::split(img))
+    }
+
+    /// Forward transform using the section-5 optimized structures
+    /// (identical outputs, different sub-step grouping).
+    pub fn forward_optimized(&self, img: &Image) -> Planes {
+        let mut planes = Planes::split(img);
+        for group in &self.optimized_groups {
+            for m in group {
+                planes = super::apply::apply_step(m, &planes);
+            }
+        }
+        planes
+    }
+
+    /// Inverse transform from packed quadrants.
+    pub fn inverse(&self, packed: &Image) -> Image {
+        self.inverse_planes(&Planes::from_packed(packed))
+    }
+
+    /// Inverse transform from subband planes.
+    pub fn inverse_planes(&self, planes: &Planes) -> Image {
+        if self.scheme == Scheme::SepLifting {
+            let mut p = planes.clone();
+            lifting::inverse_in_place(&self.wavelet, &mut p);
+            return p.merge();
+        }
+        apply_chain(&self.inverse_steps, planes).merge()
+    }
+
+    /// Arithmetic cost of one full image transform in multiply-accumulate
+    /// operations per input pixel (plain counting mode / 4 components).
+    pub fn macs_per_pixel(&self) -> f64 {
+        let ops: usize = self.forward_steps.iter().map(|m| m.n_ops()).sum();
+        ops as f64 / 4.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_schemes_equal_golden() {
+        for w in Wavelet::all() {
+            let img = Image::synthetic(32, 48, 9);
+            let golden = Engine::new(Scheme::SepLifting, w.clone()).forward_planes(&img);
+            for s in Scheme::ALL {
+                let got = Engine::new(s, w.clone()).forward_planes(&img);
+                let err = got.max_abs_diff(&golden);
+                assert!(err < 2e-2, "{} {} err {}", w.name, s.name(), err);
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_structures_equal_golden() {
+        for w in Wavelet::all() {
+            let img = Image::synthetic(16, 16, 10);
+            let golden = Engine::new(Scheme::SepLifting, w.clone()).forward_planes(&img);
+            for s in Scheme::ALL {
+                let got = Engine::new(s, w.clone()).forward_optimized(&img);
+                let err = got.max_abs_diff(&golden);
+                assert!(err < 2e-2, "{} {} opt err {}", w.name, s.name(), err);
+            }
+        }
+    }
+
+    #[test]
+    fn every_scheme_roundtrips() {
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                let e = Engine::new(s, w.clone());
+                let img = Image::synthetic(32, 32, 11);
+                let rec = e.inverse(&e.forward(&img));
+                let err = rec.max_abs_diff(&img);
+                assert!(err < 2e-2, "{} {} roundtrip err {}", w.name, s.name(), err);
+            }
+        }
+    }
+
+    #[test]
+    fn macs_per_pixel_ordering() {
+        let w = Wavelet::cdf97();
+        let lifting = Engine::new(Scheme::SepLifting, w.clone()).macs_per_pixel();
+        let conv = Engine::new(Scheme::SepConv, w.clone()).macs_per_pixel();
+        let nsconv = Engine::new(Scheme::NsConv, w).macs_per_pixel();
+        assert!(lifting < conv && conv < nsconv);
+    }
+}

@@ -1,0 +1,20 @@
+//! Native (pure-rust) DWT engine: every scheme of the paper executed
+//! numerically on polyphase component planes.
+//!
+//! Two execution paths:
+//! * [`apply`] — a generic evaluator that runs *any* scheme by literally
+//!   applying its polyphase-matrix steps with periodic indexing (the
+//!   semantics shared with the Pallas kernels and the pure-jnp oracle).
+//! * [`lifting`] — a hand-optimized separable-lifting fast path (the L3
+//!   hot loop used by the coordinator fallback and the benches).
+//!
+//! All paths compute identical coefficients; the test suite enforces it.
+
+pub mod apply;
+pub mod engine;
+pub mod lifting;
+pub mod multilevel;
+pub mod planes;
+
+pub use engine::Engine;
+pub use planes::{Image, Planes};

@@ -1,0 +1,124 @@
+//! Multi-level (Mallat) pyramid composition on top of the scheme engine.
+
+use super::engine::Engine;
+use super::planes::Image;
+
+/// Forward L-level pyramid: the LL quadrant is recursively transformed
+/// in place, yielding the canonical JPEG-2000 packed layout.
+pub fn forward(engine: &Engine, img: &Image, levels: usize) -> Image {
+    assert!(levels >= 1, "levels must be >= 1");
+    assert!(
+        img.width % (1 << levels) == 0 && img.height % (1 << levels) == 0,
+        "image sides must be divisible by 2^levels"
+    );
+    let mut out = img.clone();
+    let (mut w, mut h) = (img.width, img.height);
+    for _ in 0..levels {
+        let sub = crop(&out, w, h);
+        let packed = engine.forward(&sub);
+        paste(&mut out, &packed, w, h);
+        w /= 2;
+        h /= 2;
+    }
+    out
+}
+
+/// Inverse of [`forward`].
+pub fn inverse(engine: &Engine, packed: &Image, levels: usize) -> Image {
+    let mut out = packed.clone();
+    for lvl in (0..levels).rev() {
+        let w = packed.width >> lvl;
+        let h = packed.height >> lvl;
+        let sub = crop(&out, w, h);
+        let rec = engine.inverse(&sub);
+        paste(&mut out, &rec, w, h);
+    }
+    out
+}
+
+/// Per-level subband views of a packed pyramid: `(level, [LL-only at the
+/// last level] + HL/LH/HH)` energies — used by the compression example.
+pub fn subband_energies(packed: &Image, levels: usize) -> Vec<[f64; 3]> {
+    let mut out = Vec::new();
+    for lvl in 0..levels {
+        let w = packed.width >> lvl;
+        let h = packed.height >> lvl;
+        let (w2, h2) = (w / 2, h / 2);
+        let mut e = [0.0f64; 3];
+        for y in 0..h2 {
+            for x in 0..w2 {
+                let hl = packed.at(x + w2, y) as f64;
+                let lh = packed.at(x, y + h2) as f64;
+                let hh = packed.at(x + w2, y + h2) as f64;
+                e[0] += hl * hl;
+                e[1] += lh * lh;
+                e[2] += hh * hh;
+            }
+        }
+        out.push(e);
+    }
+    out
+}
+
+fn crop(img: &Image, w: usize, h: usize) -> Image {
+    let mut out = Image::new(w, h);
+    for y in 0..h {
+        out.data[y * w..(y + 1) * w]
+            .copy_from_slice(&img.data[y * img.width..y * img.width + w]);
+    }
+    out
+}
+
+fn paste(dst: &mut Image, src: &Image, w: usize, h: usize) {
+    for y in 0..h {
+        let dst_row = y * dst.width;
+        dst.data[dst_row..dst_row + w].copy_from_slice(&src.data[y * w..(y + 1) * w]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::polyphase::schemes::Scheme;
+    use crate::polyphase::wavelets::Wavelet;
+
+    #[test]
+    fn multilevel_roundtrip() {
+        for w in Wavelet::all() {
+            let e = Engine::new(Scheme::NsPolyconv, w);
+            let img = Image::synthetic(64, 64, 12);
+            let packed = forward(&e, &img, 3);
+            let rec = inverse(&e, &packed, 3);
+            let err = rec.max_abs_diff(&img);
+            assert!(err < 5e-2, "{} err {}", e.wavelet.name, err);
+        }
+    }
+
+    #[test]
+    fn level_one_equals_single() {
+        let e = Engine::new(Scheme::SepLifting, Wavelet::cdf53());
+        let img = Image::synthetic(32, 32, 13);
+        assert_eq!(forward(&e, &img, 1), e.forward(&img));
+    }
+
+    #[test]
+    fn deeper_levels_shrink_ll_energy_share() {
+        let e = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
+        let img = Image::synthetic(64, 64, 14);
+        let packed = forward(&e, &img, 3);
+        let energies = subband_energies(&packed, 3);
+        assert_eq!(energies.len(), 3);
+        // detail energy exists at every level for a textured image
+        for e3 in energies {
+            assert!(e3.iter().sum::<f64>() > 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn rejects_indivisible_sizes() {
+        let e = Engine::new(Scheme::SepLifting, Wavelet::cdf53());
+        let img = Image::synthetic(36, 36, 15);
+        let _ = forward(&e, &img, 3); // 36 not divisible by 8
+    }
+}

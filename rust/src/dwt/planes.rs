@@ -1,0 +1,252 @@
+//! Image and polyphase-plane containers.
+
+/// A row-major single-channel f32 image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Self {
+        Self {
+            width,
+            height,
+            data: vec![0.0; width * height],
+        }
+    }
+
+    pub fn from_data(width: usize, height: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), width * height, "data length mismatch");
+        Self {
+            width,
+            height,
+            data,
+        }
+    }
+
+    /// Deterministic synthetic test image (smooth gradients + edges),
+    /// the workload generator used by benches and examples.
+    pub fn synthetic(width: usize, height: usize, seed: u64) -> Self {
+        let mut img = Self::new(width, height);
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut rnd = move || {
+            // xorshift64*
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            (state.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32
+        };
+        for y in 0..height {
+            for x in 0..width {
+                let fx = x as f32 / width as f32;
+                let fy = y as f32 / height as f32;
+                let smooth = 128.0 + 80.0 * (6.0 * fx).sin() * (4.0 * fy).cos();
+                let edge = if (x / 16 + y / 16) % 2 == 0 { 24.0 } else { -24.0 };
+                let noise = 4.0 * (rnd() - 0.5);
+                img.data[y * width + x] = smooth + edge + noise;
+            }
+        }
+        img
+    }
+
+    #[inline]
+    pub fn at(&self, x: usize, y: usize) -> f32 {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, x: usize, y: usize) -> &mut f32 {
+        &mut self.data[y * self.width + x]
+    }
+
+    /// Peak signal-to-noise ratio against a reference, in dB (peak=255).
+    pub fn psnr(&self, reference: &Image) -> f64 {
+        assert_eq!(self.data.len(), reference.data.len());
+        let mse: f64 = self
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64;
+        if mse == 0.0 {
+            f64::INFINITY
+        } else {
+            10.0 * (255.0f64 * 255.0 / mse).log10()
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Image) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// The four polyphase component planes `[ee, oe, eo, oo]`, each of shape
+/// `(h2, w2)`; first parity letter = horizontal axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Planes {
+    pub w2: usize,
+    pub h2: usize,
+    /// `[ee, oe, eo, oo]` — after a transform: `[LL, HL, LH, HH]`.
+    pub p: [Vec<f32>; 4],
+}
+
+impl Planes {
+    pub fn new(w2: usize, h2: usize) -> Self {
+        Self {
+            w2,
+            h2,
+            p: std::array::from_fn(|_| vec![0.0; w2 * h2]),
+        }
+    }
+
+    /// Polyphase split of an even-sized image.
+    pub fn split(img: &Image) -> Self {
+        assert!(
+            img.width % 2 == 0 && img.height % 2 == 0,
+            "image sides must be even (got {}x{})",
+            img.width,
+            img.height
+        );
+        let (w2, h2) = (img.width / 2, img.height / 2);
+        let mut out = Self::new(w2, h2);
+        let w = img.width;
+        for y in 0..h2 {
+            let even = &img.data[2 * y * w..2 * y * w + w];
+            let odd = &img.data[(2 * y + 1) * w..(2 * y + 1) * w + w];
+            let r = y * w2..(y + 1) * w2;
+            let (ee, rest) = out.p.split_at_mut(1);
+            let (oe, rest) = rest.split_at_mut(1);
+            let (eo, oo) = rest.split_at_mut(1);
+            let (ee, oe) = (&mut ee[0][r.clone()], &mut oe[0][r.clone()]);
+            let (eo, oo) = (&mut eo[0][r.clone()], &mut oo[0][r]);
+            for x in 0..w2 {
+                ee[x] = even[2 * x];
+                oe[x] = even[2 * x + 1];
+                eo[x] = odd[2 * x];
+                oo[x] = odd[2 * x + 1];
+            }
+        }
+        out
+    }
+
+    /// Interleaving merge (exact inverse of [`Planes::split`]).
+    pub fn merge(&self) -> Image {
+        let (w2, h2) = (self.w2, self.h2);
+        let w = w2 * 2;
+        let mut img = Image::new(w, h2 * 2);
+        for y in 0..h2 {
+            let r = y * w2..(y + 1) * w2;
+            let (ee, oe, eo, oo) = (
+                &self.p[0][r.clone()],
+                &self.p[1][r.clone()],
+                &self.p[2][r.clone()],
+                &self.p[3][r],
+            );
+            let (even, odd) = img.data[2 * y * w..(2 * y + 2) * w].split_at_mut(w);
+            for x in 0..w2 {
+                even[2 * x] = ee[x];
+                even[2 * x + 1] = oe[x];
+                odd[2 * x] = eo[x];
+                odd[2 * x + 1] = oo[x];
+            }
+        }
+        img
+    }
+
+    /// Pack subbands in the canonical quadrant layout
+    /// `[[LL, HL], [LH, HH]]` (the layout the AOT artifacts emit).
+    pub fn to_packed(&self) -> Image {
+        let (w2, h2) = (self.w2, self.h2);
+        let w = w2 * 2;
+        let mut img = Image::new(w, h2 * 2);
+        for y in 0..h2 {
+            let r = y * w2..(y + 1) * w2;
+            img.data[y * w..y * w + w2].copy_from_slice(&self.p[0][r.clone()]);
+            img.data[y * w + w2..(y + 1) * w].copy_from_slice(&self.p[1][r.clone()]);
+            let by = y + h2;
+            img.data[by * w..by * w + w2].copy_from_slice(&self.p[2][r.clone()]);
+            img.data[by * w + w2..(by + 1) * w].copy_from_slice(&self.p[3][r]);
+        }
+        img
+    }
+
+    /// Inverse of [`Planes::to_packed`].
+    pub fn from_packed(img: &Image) -> Self {
+        let (w2, h2) = (img.width / 2, img.height / 2);
+        let w = img.width;
+        let mut out = Self::new(w2, h2);
+        for y in 0..h2 {
+            let r = y * w2..(y + 1) * w2;
+            let by = y + h2;
+            out.p[0][r.clone()].copy_from_slice(&img.data[y * w..y * w + w2]);
+            out.p[1][r.clone()].copy_from_slice(&img.data[y * w + w2..(y + 1) * w]);
+            out.p[2][r.clone()].copy_from_slice(&img.data[by * w..by * w + w2]);
+            out.p[3][r].copy_from_slice(&img.data[by * w + w2..(by + 1) * w]);
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Planes) -> f32 {
+        let mut worst = 0.0f32;
+        for c in 0..4 {
+            for (a, b) in self.p[c].iter().zip(&other.p[c]) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_merge_roundtrip() {
+        let img = Image::synthetic(16, 12, 1);
+        let rec = Planes::split(&img).merge();
+        assert_eq!(img, rec);
+    }
+
+    #[test]
+    fn packed_roundtrip() {
+        let img = Image::synthetic(20, 8, 2);
+        let planes = Planes::split(&img);
+        let rec = Planes::from_packed(&planes.to_packed());
+        assert_eq!(planes, rec);
+    }
+
+    #[test]
+    fn split_component_order() {
+        // 2x2 image: pixel (x,y) values encode position
+        let img = Image::from_data(2, 2, vec![0.0, 1.0, 2.0, 3.0]);
+        let pl = Planes::split(&img);
+        assert_eq!(pl.p[0][0], 0.0); // ee = (0,0)
+        assert_eq!(pl.p[1][0], 1.0); // oe = (1,0)
+        assert_eq!(pl.p[2][0], 2.0); // eo = (0,1)
+        assert_eq!(pl.p[3][0], 3.0); // oo = (1,1)
+    }
+
+    #[test]
+    fn psnr_identity_infinite() {
+        let img = Image::synthetic(8, 8, 3);
+        assert!(img.psnr(&img).is_infinite());
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn split_rejects_odd() {
+        let img = Image::new(3, 4);
+        let _ = Planes::split(&img);
+    }
+}

@@ -1,0 +1,233 @@
+//! The cost model: predicted transform time and throughput for a
+//! (device, pipeline, scheme, wavelet, image size) combination.
+//!
+//! Per step: `T_step = launch + max(traffic / BW_eff, flops / ALU_eff)`,
+//! with two second-order effects the evaluation section reports:
+//! * a low-resolution bandwidth transient (sub-2-Mpel region of the
+//!   figures) — modelled in [`Device::effective_bandwidth_gbs`];
+//! * an occupancy/register-pressure collapse for very operation-rich
+//!   fused bodies (the published "DD 13/7 convolutions are not
+//!   conclusive" effect) — modelled in [`spill_factor`].
+
+use super::device::{Device, Memory};
+use super::pipeline::{scheme_load, PipelineKind, SchemeLoad};
+use crate::polyphase::schemes::Scheme;
+use crate::polyphase::wavelets::Wavelet;
+
+/// One simulated measurement point.
+#[derive(Debug, Clone)]
+pub struct SimPoint {
+    pub pixels: usize,
+    /// Predicted transform time in milliseconds.
+    pub time_ms: f64,
+    /// Predicted throughput in GB/s (the paper's y-axis: 4 bytes/pel).
+    pub gbs: f64,
+}
+
+/// Register-pressure / occupancy penalty for operation-rich bodies.
+///
+/// A fragment computing one output quadruple with `ops` MACs holds all
+/// partial sums and tap values in registers; past the register budget
+/// (~threshold ops) occupancy collapses steeply (it is quantized in
+/// whole wavefronts).  Shader pipelines hit this on the big fused
+/// non-separable convolutions (CDF 9/7: 200 ops, DD 13/7: 228), the
+/// VLIW OpenCL path hits a clause/register-packing variant of it.
+pub fn spill_factor(ops: f64, threshold: f64, power: f64) -> f64 {
+    if ops <= threshold {
+        1.0
+    } else {
+        (threshold / ops).powf(power)
+    }
+}
+
+fn step_time_ms(
+    device: &Device,
+    pipeline: PipelineKind,
+    bytes_per_pixel: f64,
+    ops_per_quad: f64,
+    total_ops: f64,
+    pixels: f64,
+) -> f64 {
+    let image_bytes = pixels * 4.0;
+    // --- memory term ---
+    let mut bw = device.effective_bandwidth_gbs(image_bytes);
+    match (pipeline, device.memory) {
+        (PipelineKind::Shaders, _) => {
+            // register pressure lowers latency hiding on rich bodies
+            bw *= spill_factor(total_ops, 192.0, 4.0);
+        }
+        (PipelineKind::OpenCl, Memory::OnChip) => {}
+        (PipelineKind::OpenCl, Memory::OffChip) => {}
+    }
+    let mem_ms = image_bytes * bytes_per_pixel / 4.0 / (bw * 1e9) * 1e3;
+    // --- compute term ---
+    // MACs per pixel = ops/quad / 4 pixels; 2 flops per MAC
+    let flops = pixels * ops_per_quad / 4.0 * 2.0;
+    let mut gf = device.effective_gflops(total_ops);
+    if pipeline == PipelineKind::OpenCl {
+        // VLIW clause/register packing collapses past ~160 ops/quad
+        gf *= spill_factor(total_ops, 160.0, 2.0);
+    }
+    let alu_ms = flops / (gf * 1e9) * 1e3;
+    device.launch_overhead_us / 1e3 + mem_ms.max(alu_ms)
+}
+
+/// Predict one point.
+pub fn predict(
+    device: &Device,
+    pipeline: PipelineKind,
+    scheme: Scheme,
+    w: &Wavelet,
+    pixels: usize,
+) -> SimPoint {
+    let load: SchemeLoad = scheme_load(scheme, w, pipeline);
+    let px = pixels as f64;
+    let time_ms: f64 = load
+        .steps
+        .iter()
+        .map(|s| {
+            step_time_ms(
+                device,
+                pipeline,
+                s.bytes_per_pixel,
+                s.ops_per_quad,
+                load.total_ops,
+                px,
+            )
+        })
+        .sum();
+    let gbs = px * 4.0 / (time_ms * 1e-3) / 1e9;
+    SimPoint {
+        pixels,
+        time_ms,
+        gbs,
+    }
+}
+
+/// The resolution sweep used by the figures (64^2 .. 8192^2).
+pub fn default_sizes() -> Vec<usize> {
+    (6..=13).map(|p| (1usize << p) * (1usize << p)).collect()
+}
+
+/// Full sweep for one (device, pipeline, scheme, wavelet).
+pub fn simulate(
+    device: &Device,
+    pipeline: PipelineKind,
+    scheme: Scheme,
+    w: &Wavelet,
+) -> Vec<SimPoint> {
+    default_sizes()
+        .into_iter()
+        .map(|n| predict(device, pipeline, scheme, w, n))
+        .collect()
+}
+
+/// Throughput at the large-image asymptote (the figure's right edge).
+pub fn asymptotic_gbs(device: &Device, pipeline: PipelineKind, scheme: Scheme, w: &Wavelet) -> f64 {
+    predict(device, pipeline, scheme, w, 8192 * 8192).gbs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn amd() -> Device {
+        Device::amd6970()
+    }
+    fn nv() -> Device {
+        Device::titanx()
+    }
+
+    /// Paper: "the non-separable schemes outperform their separable
+    /// counterparts on numerous setups, especially the pixel shaders",
+    /// with the DD 13/7 convolutions as the stated exception.
+    #[test]
+    fn nonseparable_beats_separable_for_cdf() {
+        for w in [Wavelet::cdf53(), Wavelet::cdf97()] {
+            for (dev, pipe) in [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)] {
+                let a = asymptotic_gbs(&dev, pipe, Scheme::NsConv, &w);
+                let b = asymptotic_gbs(&dev, pipe, Scheme::SepConv, &w);
+                assert!(a > b, "{} ns_conv {} <= sep_conv {} on {}", w.name, a, b, dev.label);
+                let c = asymptotic_gbs(&dev, pipe, Scheme::NsLifting, &w);
+                let d = asymptotic_gbs(&dev, pipe, Scheme::SepLifting, &w);
+                assert!(c > d, "{} ns_lifting on {}", w.name, dev.label);
+            }
+        }
+    }
+
+    #[test]
+    fn dd137_convolutions_not_conclusive() {
+        // the exception the paper states: non-separable convolution does
+        // not clearly win for DD 13/7 (within 25% or losing)
+        let w = Wavelet::dd137();
+        for (dev, pipe) in [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)] {
+            let ns = asymptotic_gbs(&dev, pipe, Scheme::NsConv, &w);
+            let sep = asymptotic_gbs(&dev, pipe, Scheme::SepConv, &w);
+            assert!(
+                ns < sep * 1.25,
+                "DD ns_conv should not clearly win on {}: {} vs {}",
+                dev.label,
+                ns,
+                sep
+            );
+        }
+        // but DD non-separable lifting still beats separable lifting
+        for (dev, pipe) in [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)] {
+            assert!(
+                asymptotic_gbs(&dev, pipe, Scheme::NsLifting, &w)
+                    > asymptotic_gbs(&dev, pipe, Scheme::SepLifting, &w)
+            );
+        }
+    }
+
+    #[test]
+    fn cdf97_polyconv_beats_ns_lifting() {
+        // paper: "for CDF wavelets ... the non-separable
+        // (poly)convolutions have a better performance than the
+        // non-separable lifting scheme"
+        let w = Wavelet::cdf97();
+        for (dev, pipe) in [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)] {
+            assert!(
+                asymptotic_gbs(&dev, pipe, Scheme::NsPolyconv, &w)
+                    > asymptotic_gbs(&dev, pipe, Scheme::NsLifting, &w),
+                "on {}",
+                dev.label
+            );
+        }
+    }
+
+    #[test]
+    fn low_resolution_transient_exists() {
+        // figures: throughput climbs in the sub-2-Mpel region
+        let w = Wavelet::cdf53();
+        let pts = simulate(&nv(), PipelineKind::Shaders, Scheme::NsConv, &w);
+        let small = pts.first().unwrap().gbs;
+        let large = pts.last().unwrap().gbs;
+        assert!(large > 1.5 * small, "no transient: {small} vs {large}");
+    }
+
+    #[test]
+    fn throughput_below_peak_bandwidth() {
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                for (dev, pipe) in
+                    [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)]
+                {
+                    let g = asymptotic_gbs(&dev, pipe, s, &w);
+                    assert!(g > 0.0 && g < dev.bandwidth_gbs, "{} {}", dev.label, s.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn steps_dominate_on_shaders() {
+        // halving steps should roughly double shader throughput when
+        // memory-bound (CDF 5/3 lifting pair)
+        let w = Wavelet::cdf53();
+        let ns = asymptotic_gbs(&nv(), PipelineKind::Shaders, Scheme::NsLifting, &w);
+        let sep = asymptotic_gbs(&nv(), PipelineKind::Shaders, Scheme::SepLifting, &w);
+        let ratio = ns / sep;
+        assert!(ratio > 1.6 && ratio < 2.4, "ratio {ratio}");
+    }
+}

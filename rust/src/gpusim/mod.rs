@@ -1,0 +1,19 @@
+//! Analytic GPU execution-model simulator.
+//!
+//! The paper's testbed (AMD Radeon HD 6970 with OpenCL, NVIDIA Titan X
+//! with DirectX pixel shaders) is unavailable; this module substitutes
+//! the closest synthetic equivalent: a barrier + bandwidth + ALU cost
+//! model parameterized by the published device specs (Table 2) and the
+//! published execution-model facts (section 5 / 6).  Figures 7-9 are
+//! *shape* claims — which scheme wins, by what factor, where the
+//! low-resolution transient sits — and the shape is a function of
+//! (steps x launch overhead) + (traffic / bandwidth) + (ops / ALU),
+//! which the model captures.  See DESIGN.md section 2 and section 8.
+
+pub mod cost;
+pub mod device;
+pub mod pipeline;
+
+pub use cost::{simulate, SimPoint};
+pub use device::Device;
+pub use pipeline::PipelineKind;

@@ -1,0 +1,29 @@
+//! # dwt-accel
+//!
+//! A reproduction of *"Accelerating Discrete Wavelet Transforms on
+//! Parallel Architectures"* (Barina, Kula, Matysek, Zemcik, 2017) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — coordinator, native engine, GPU
+//!   execution-model simulator, PJRT runtime, CLI.
+//! * **Layer 2** — JAX compute graphs (`python/compile/model.py`),
+//!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`), one
+//!   `pallas_call` per barrier step of each scheme.
+//!
+//! The paper's six calculation schemes (separable/non-separable x
+//! convolution/polyconvolution/lifting) are implemented symbolically in
+//! [`polyphase`], numerically in [`dwt`], and cost-modelled in
+//! [`gpusim`]; all compute identical coefficients (enforced by tests).
+
+pub mod benchutil;
+pub mod coordinator;
+pub mod dwt;
+pub mod gpusim;
+pub mod image;
+pub mod polyphase;
+pub mod runtime;
+
+pub use dwt::{Image, Planes};
+pub use polyphase::wavelets::Wavelet;
+pub use polyphase::Scheme;

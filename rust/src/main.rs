@@ -1,0 +1,407 @@
+//! dwt-accel CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   table1                       regenerate Table 1 (op/step counts)
+//!   figures [--wavelet W|--all]  regenerate Figures 7-9 (simulated GB/s)
+//!   simulate --list-devices      show the Table-2 device profiles
+//!   transform ...                run one transform (PJRT or native)
+//!   serve ...                    run the batched throughput service
+//!   list-artifacts               show the AOT artifact inventory
+
+use dwt_accel::coordinator::{Coordinator, CoordinatorConfig, Request};
+use dwt_accel::dwt::Image;
+use dwt_accel::gpusim::{self, Device, PipelineKind};
+use dwt_accel::polyphase::opcount;
+use dwt_accel::polyphase::schemes::Scheme;
+use dwt_accel::polyphase::wavelets::Wavelet;
+use std::collections::HashMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            usage();
+            return;
+        }
+    };
+    let flags = parse_flags(&rest);
+    let result = match cmd {
+        "table1" => cmd_table1(),
+        "figures" => cmd_figures(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "transform" => cmd_transform(&flags),
+        "serve" => cmd_serve(&flags),
+        "list-artifacts" => cmd_list_artifacts(),
+        "dump-matrices" => cmd_dump_matrices(),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "dwt-accel — non-separable 2-D DWT schemes (Barina et al. 2017)\n\
+         \n\
+         USAGE: dwt-accel <command> [flags]\n\
+         \n\
+         COMMANDS\n\
+           table1                      regenerate Table 1 of the paper\n\
+           figures [--wavelet cdf97]   regenerate Figures 7-9 (simulator)\n\
+                   [--all]\n\
+           simulate --list-devices     Table-2 device profiles\n\
+           transform --wavelet W --scheme S [--size N] [--input img.pgm]\n\
+                     [--output out.pgm] [--native] [--inverse] [--levels L]\n\
+           serve [--requests N] [--wavelet W] [--scheme S]\n\
+           list-artifacts              show compiled artifact inventory\n\
+           dump-matrices               JSON dump of all scheme matrices\n\
+                                       (cross-checked against python)"
+    );
+}
+
+fn parse_flags(rest: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < rest.len() {
+        let a = &rest[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let has_value = i + 1 < rest.len() && !rest[i + 1].starts_with("--");
+            if has_value {
+                flags.insert(name.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn cmd_table1() -> anyhow::Result<()> {
+    println!("Table 1 — steps and operation counts (computed vs paper)\n");
+    println!(
+        "{:<7} {:<13} {:>5} | {:>5} {:>5} {:>5} | {:>6} {:>7} | match",
+        "wavelet", "scheme", "steps", "plain", "opt", "vec", "opencl", "shaders"
+    );
+    println!("{}", "-".repeat(84));
+    for row in opcount::table1() {
+        let mark = |exact: bool, target: usize, lo: usize, hi: usize| {
+            if exact {
+                "exact".to_string()
+            } else if lo <= target && target <= hi {
+                format!("[{lo},{hi}]")
+            } else {
+                "MISS".to_string()
+            }
+        };
+        let lo = row.optimized.min(row.optimized_vec);
+        println!(
+            "{:<7} {:<13} {:>5} | {:>5} {:>5} {:>5} | {:>6} {:>7} | {} / {}",
+            row.wavelet,
+            row.scheme.name(),
+            row.steps,
+            row.plain,
+            row.optimized,
+            row.optimized_vec,
+            row.paper_opencl,
+            row.paper_shaders,
+            mark(row.opencl_exact, row.paper_opencl, lo, row.plain),
+            mark(row.shaders_exact, row.paper_shaders, lo, row.plain),
+        );
+    }
+    let exact = opcount::table1()
+        .iter()
+        .map(|r| r.opencl_exact as usize + r.shaders_exact as usize)
+        .sum::<usize>();
+    println!("\n{exact}/28 published cells matched exactly; all others bracketed.");
+    Ok(())
+}
+
+fn wavelets_for(flags: &HashMap<String, String>) -> Vec<Wavelet> {
+    if flags.contains_key("all") {
+        return Wavelet::paper_set();
+    }
+    match flags.get("wavelet") {
+        Some(name) => vec![Wavelet::by_name(name).expect("unknown wavelet")],
+        None => Wavelet::paper_set(),
+    }
+}
+
+fn cmd_figures(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    for w in wavelets_for(flags) {
+        let fig = match w.name {
+            "cdf53" => 7,
+            "cdf97" => 8,
+            _ => 9,
+        };
+        println!("\nFigure {fig}: performance for the {} wavelet (simulated GB/s)", w.title);
+        for (dev, pipe) in [
+            (Device::amd6970(), PipelineKind::OpenCl),
+            (Device::titanx(), PipelineKind::Shaders),
+        ] {
+            println!("\n  {} / {}:", dev.model, pipe.name());
+            print!("  {:<26}", "scheme \\ Mpel");
+            for n in gpusim::cost::default_sizes() {
+                print!("{:>8.2}", n as f64 / 1e6);
+            }
+            println!();
+            for s in Scheme::ALL {
+                if (s == Scheme::SepPolyconv || s == Scheme::NsPolyconv) && w.n_pairs() < 2 {
+                    continue; // polyconv only meaningful for K > 1 (paper)
+                }
+                print!("  {:<26}", s.label());
+                for p in gpusim::simulate(&dev, pipe, s, &w) {
+                    print!("{:>8.1}", p.gbs);
+                }
+                println!();
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    if flags.contains_key("list-devices") {
+        println!("Table 2 — evaluated GPU profiles\n");
+        for d in Device::all() {
+            println!("label            {}", d.label);
+            println!("model            {}", d.model);
+            println!("multiprocessors  {}", d.multiprocessors);
+            println!("total processors {}", d.total_processors);
+            println!("processor clock  {} MHz", d.processor_clock_mhz);
+            println!("performance      {} GFLOPS", d.gflops);
+            println!("memory clock     {} MHz", d.memory_clock_mhz);
+            println!("bandwidth        {} GB/s", d.bandwidth_gbs);
+            println!("on-chip memory   {} KiB", d.onchip_kib);
+            println!("occupancy        {:.2} %", d.occupancy * 100.0);
+            println!();
+        }
+        return Ok(());
+    }
+    Err(anyhow::anyhow!(
+        "simulate: pass --list-devices (figures are under `figures`)"
+    ))
+}
+
+fn cmd_transform(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let wavelet = flags.get("wavelet").map(String::as_str).unwrap_or("cdf97");
+    let scheme_name = flags
+        .get("scheme")
+        .map(String::as_str)
+        .unwrap_or("ns_polyconv");
+    let scheme = Scheme::by_name(scheme_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme {scheme_name}"))?;
+    let img = match flags.get("input") {
+        Some(path) => dwt_accel::image::read_pgm(std::path::Path::new(path))?,
+        None => {
+            let size: usize = flags
+                .get("size")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(256);
+            Image::synthetic(size, size, 42)
+        }
+    };
+    let inverse = flags.contains_key("inverse");
+    let cfg = CoordinatorConfig {
+        artifacts_dir: if flags.contains_key("native") {
+            None
+        } else {
+            Some(dwt_accel::runtime::default_artifacts_dir())
+        },
+        ..Default::default()
+    };
+    let coord = Coordinator::new(cfg)?;
+    let t0 = std::time::Instant::now();
+    let levels: usize = flags
+        .get("levels")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1);
+    let resp = coord.transform(Request {
+        image: img.clone(),
+        wavelet: wavelet.to_string(),
+        scheme,
+        inverse,
+        levels,
+    })?;
+    let dt = t0.elapsed();
+    let px = img.width * img.height;
+    println!(
+        "{}x{} {} {} via {}: {:.2} ms ({:.2} GB/s)",
+        img.width,
+        img.height,
+        wavelet,
+        scheme.name(),
+        resp.backend.name(),
+        dt.as_secs_f64() * 1e3,
+        px as f64 * 4.0 / dt.as_secs_f64() / 1e9
+    );
+    if let Some(out) = flags.get("output") {
+        dwt_accel::image::write_pgm(std::path::Path::new(out), &resp.image)?;
+        println!("wrote {out}");
+    } else {
+        let (w2, h2) = (img.width / 2, img.height / 2);
+        let mean = |x0: usize, y0: usize| -> f64 {
+            let mut s = 0.0;
+            for y in y0..y0 + h2 {
+                for x in x0..x0 + w2 {
+                    s += resp.image.at(x, y).abs() as f64;
+                }
+            }
+            s / (w2 * h2) as f64
+        };
+        println!(
+            "subband mean |coeff|: LL {:.2}  HL {:.4}  LH {:.4}  HH {:.4}",
+            mean(0, 0),
+            mean(w2, 0),
+            mean(0, h2),
+            mean(w2, h2)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let n: usize = flags
+        .get("requests")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(256);
+    let wavelet = flags.get("wavelet").map(String::as_str).unwrap_or("cdf97");
+    let scheme = Scheme::by_name(
+        flags
+            .get("scheme")
+            .map(String::as_str)
+            .unwrap_or("ns_polyconv"),
+    )
+    .ok_or_else(|| anyhow::anyhow!("unknown scheme"))?;
+    let coord = Coordinator::new(CoordinatorConfig::default())?;
+    println!(
+        "serving {n} requests ({} {}), pjrt={}",
+        wavelet,
+        scheme.name(),
+        coord.pjrt_available()
+    );
+    let img = Image::synthetic(256, 256, 7);
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..n)
+        .map(|_| {
+            coord.submit(Request {
+                image: img.clone(),
+                wavelet: wavelet.to_string(),
+                scheme,
+                inverse: false,
+                levels: 1,
+            })
+        })
+        .collect();
+    for h in handles {
+        h.recv().expect("response")?;
+    }
+    let dt = t0.elapsed();
+    let s = coord.metrics.summary();
+    let bytes = n * img.data.len() * 4;
+    println!(
+        "done in {:.1} ms: {:.2} GB/s, p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
+        dt.as_secs_f64() * 1e3,
+        bytes as f64 / dt.as_secs_f64() / 1e9,
+        s.p50_us as f64 / 1e3,
+        s.p95_us as f64 / 1e3,
+        s.p99_us as f64 / 1e3,
+    );
+    println!(
+        "batches: {} (mean size {:.1}); backends: {:?}",
+        s.batches, s.mean_batch, s.per_backend
+    );
+    Ok(())
+}
+
+fn cmd_list_artifacts() -> anyhow::Result<()> {
+    let dir = dwt_accel::runtime::default_artifacts_dir();
+    let m = dwt_accel::runtime::Manifest::load(&dir)?;
+    println!(
+        "{} artifacts in {:?} (serve size {:?}):",
+        m.entries.len(),
+        dir,
+        m.serve_size
+    );
+    for e in &m.entries {
+        println!(
+            "  {:<44} {:<20} steps={} shape={:?}",
+            e.name, e.kind, e.steps, e.input_shape
+        );
+    }
+    Ok(())
+}
+
+/// JSON dump of every (wavelet, scheme) step-matrix sequence — consumed
+/// by `python/tests/test_cross_layer.py` to prove the rust and python
+/// polyphase algebras are the same algebra.
+fn cmd_dump_matrices() -> anyhow::Result<()> {
+    use dwt_accel::polyphase::schemes;
+    let mut out = String::from("{");
+    let mut first_w = true;
+    for w in Wavelet::all() {
+        if !first_w {
+            out.push(',');
+        }
+        first_w = false;
+        out.push_str(&format!("\"{}\":{{", w.name));
+        let mut first_s = true;
+        for s in Scheme::ALL {
+            if !first_s {
+                out.push(',');
+            }
+            first_s = false;
+            out.push_str(&format!("\"{}\":[", s.name()));
+            let steps = schemes::build(s, &w);
+            for (si, step) in steps.iter().enumerate() {
+                if si > 0 {
+                    out.push(',');
+                }
+                out.push('[');
+                for (i, row) in step.m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('[');
+                    for (j, poly) in row.iter().enumerate() {
+                        if j > 0 {
+                            out.push(',');
+                        }
+                        out.push('[');
+                        for (ti, (&(km, kn), &c)) in poly.terms.iter().enumerate() {
+                            if ti > 0 {
+                                out.push(',');
+                            }
+                            out.push_str(&format!("[{},{},{:.17e}]", km, kn, c));
+                        }
+                        out.push(']');
+                    }
+                    out.push(']');
+                }
+                out.push(']');
+            }
+            out.push(']');
+        }
+        out.push('}');
+    }
+    out.push('}');
+    println!("{out}");
+    Ok(())
+}

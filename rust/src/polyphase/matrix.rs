@@ -1,0 +1,371 @@
+//! 4x4 matrices of Laurent polynomials acting on the polyphase
+//! component vector `[ee, oe, eo, oo]` (first parity letter = horizontal
+//! axis).  One matrix = one barrier-separated calculation step.
+
+use super::poly::Poly;
+
+/// A 4x4 polyphase matrix (one calculation step of a scheme).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolyMatrix {
+    pub m: [[Poly; 4]; 4],
+}
+
+impl PolyMatrix {
+    pub fn identity() -> Self {
+        let mut m: [[Poly; 4]; 4] = Default::default();
+        for (i, row) in m.iter_mut().enumerate() {
+            row[i] = Poly::one();
+        }
+        Self { m }
+    }
+
+    /// Horizontal lifting step `T_P^H` (predict) or `S_U^H` (update).
+    pub fn lift_h(kind: LiftKind, taps: &[(i32, f64)]) -> Self {
+        let g = Poly::horiz(taps);
+        let mut out = Self::identity();
+        match kind {
+            LiftKind::Predict => {
+                out.m[1][0] = g.clone(); // oe += P * ee
+                out.m[3][2] = g; // oo += P * eo
+            }
+            LiftKind::Update => {
+                out.m[0][1] = g.clone(); // ee += U * oe
+                out.m[2][3] = g; // eo += U * oo
+            }
+        }
+        out
+    }
+
+    /// Vertical lifting step `T_P^V` / `S_U^V` (transposed polynomials).
+    pub fn lift_v(kind: LiftKind, taps: &[(i32, f64)]) -> Self {
+        let g = Poly::vert(taps);
+        let mut out = Self::identity();
+        match kind {
+            LiftKind::Predict => {
+                out.m[2][0] = g.clone(); // eo += P* * ee
+                out.m[3][1] = g; // oo += P* * oe
+            }
+            LiftKind::Update => {
+                out.m[0][2] = g.clone(); // ee += U* * eo
+                out.m[1][3] = g; // oe += U* * oo
+            }
+        }
+        out
+    }
+
+    /// Non-separable spatial predict `T_P = T_P^V T_P^H` (paper eq. for
+    /// the non-separable lifting scheme).
+    pub fn spatial_predict(taps: &[(i32, f64)]) -> Self {
+        let p = Poly::horiz(taps);
+        let ps = p.transpose();
+        let mut out = Self::identity();
+        out.m[1][0] = p.clone();
+        out.m[2][0] = ps.clone();
+        out.m[3][0] = p.mul(&ps);
+        out.m[3][1] = ps;
+        out.m[3][2] = p;
+        out
+    }
+
+    /// Non-separable spatial update `S_U = S_U^V S_U^H`.
+    pub fn spatial_update(taps: &[(i32, f64)]) -> Self {
+        let u = Poly::horiz(taps);
+        let us = u.transpose();
+        let mut out = Self::identity();
+        out.m[0][1] = u.clone();
+        out.m[0][2] = us.clone();
+        out.m[0][3] = u.mul(&us);
+        out.m[1][3] = us;
+        out.m[2][3] = u;
+        out
+    }
+
+    /// Final 2-D scaling `diag(zeta^2, 1, 1, 1/zeta^2)`.
+    pub fn scale2d(zeta: f64) -> Self {
+        let mut out = Self::identity();
+        out.m[0][0] = Poly::constant(zeta * zeta);
+        out.m[3][3] = Poly::constant(1.0 / (zeta * zeta));
+        out
+    }
+
+    /// Matrix product `self * rhs` (apply `rhs` first).
+    pub fn mul(&self, rhs: &Self) -> Self {
+        let mut out: [[Poly; 4]; 4] = Default::default();
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut acc = Poly::zero();
+                for (k, rhs_row) in rhs.m.iter().enumerate() {
+                    if self.m[i][k].is_zero() || rhs_row[j].is_zero() {
+                        continue;
+                    }
+                    acc = acc.add(&self.m[i][k].mul(&rhs_row[j]));
+                }
+                out[i][j] = acc;
+            }
+        }
+        Self { m: out }
+    }
+
+    /// Product of a chain given in *application order* (first applied
+    /// first): returns `M_k ... M_2 M_1`.
+    pub fn chain(mats: &[Self]) -> Self {
+        let mut out = mats[0].clone();
+        for m in &mats[1..] {
+            out = m.mul(&out);
+        }
+        out
+    }
+
+    /// Total term count, excluding units on the diagonal (the paper's
+    /// operation-count rule).
+    pub fn n_ops(&self) -> usize {
+        let mut total = 0;
+        for (i, row) in self.m.iter().enumerate() {
+            for (j, p) in row.iter().enumerate() {
+                if i == j && p.is_one() {
+                    continue;
+                }
+                total += p.n_terms();
+            }
+        }
+        total
+    }
+
+    /// Term count with each distinct polynomial counted once (the SIMD
+    /// "vectorized copies" mode of the opcount module).
+    pub fn n_ops_vec(&self) -> usize {
+        let mut seen: Vec<&Poly> = Vec::new();
+        let mut total = 0;
+        for (i, row) in self.m.iter().enumerate() {
+            for (j, p) in row.iter().enumerate() {
+                if (i == j && p.is_one()) || p.is_zero() {
+                    continue;
+                }
+                if seen.iter().any(|q| q.approx_eq(p, 1e-12)) {
+                    continue;
+                }
+                seen.push(p);
+                total += p.n_terms();
+            }
+        }
+        total
+    }
+
+    /// True when the matrix is a pure diagonal constant scaling.
+    pub fn is_scale(&self) -> bool {
+        for (i, row) in self.m.iter().enumerate() {
+            for (j, p) in row.iter().enumerate() {
+                if i != j && !p.is_zero() {
+                    return false;
+                }
+                if i == j {
+                    if p.n_terms() > 1 {
+                        return false;
+                    }
+                    if let Some(k) = p.terms.keys().next() {
+                        if *k != (0, 0) {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Combined halo (top, bottom, left, right) of all entries.
+    pub fn halo(&self) -> (i32, i32, i32, i32) {
+        let mut h = (0, 0, 0, 0);
+        for row in &self.m {
+            for p in row {
+                let ph = p.halo();
+                h.0 = h.0.max(ph.0);
+                h.1 = h.1.max(ph.1);
+                h.2 = h.2.max(ph.2);
+                h.3 = h.3.max(ph.3);
+            }
+        }
+        h
+    }
+
+    /// Adjoint (transpose over the Laurent ring with offset reversal).
+    pub fn adjoint(&self) -> Self {
+        let mut out: [[Poly; 4]; 4] = Default::default();
+        for (i, row) in out.iter_mut().enumerate() {
+            for (j, p) in row.iter_mut().enumerate() {
+                *p = self.m[j][i].reverse();
+            }
+        }
+        Self { m: out }
+    }
+
+    pub fn approx_eq(&self, other: &Self, tol: f64) -> bool {
+        for i in 0..4 {
+            for j in 0..4 {
+                if !self.m[i][j].approx_eq(&other.m[i][j], tol) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Embed a 1-D 2x2 matrix on `[even, odd]` as the horizontal 4x4 step
+/// (two copies: row pairs (ee,oe) and (eo,oo)).
+pub fn sep_h_from_2x2(m2: &[[Poly; 2]; 2]) -> PolyMatrix {
+    let mut out = PolyMatrix::identity();
+    out.m[0][0] = m2[0][0].clone();
+    out.m[0][1] = m2[0][1].clone();
+    out.m[1][0] = m2[1][0].clone();
+    out.m[1][1] = m2[1][1].clone();
+    out.m[2][2] = m2[0][0].clone();
+    out.m[2][3] = m2[0][1].clone();
+    out.m[3][2] = m2[1][0].clone();
+    out.m[3][3] = m2[1][1].clone();
+    out
+}
+
+/// Embed a 1-D 2x2 matrix as the vertical 4x4 step: transposed
+/// polynomials, vertical pairs (ee,eo) and (oe,oo).
+pub fn sep_v_from_2x2(m2: &[[Poly; 2]; 2]) -> PolyMatrix {
+    let a = m2[0][0].transpose();
+    let b = m2[0][1].transpose();
+    let c = m2[1][0].transpose();
+    let d = m2[1][1].transpose();
+    let mut out = PolyMatrix::identity();
+    out.m[0][0] = a.clone();
+    out.m[0][2] = b.clone();
+    out.m[2][0] = c.clone();
+    out.m[2][2] = d.clone();
+    out.m[1][1] = a;
+    out.m[1][3] = b;
+    out.m[3][1] = c;
+    out.m[3][3] = d;
+    out
+}
+
+/// 1-D lifting step on `[even, odd]`.
+pub fn lift2x2(kind: LiftKind, taps: &[(i32, f64)]) -> [[Poly; 2]; 2] {
+    let p = Poly::horiz(taps);
+    match kind {
+        LiftKind::Predict => [
+            [Poly::one(), Poly::zero()],
+            [p, Poly::one()],
+        ],
+        LiftKind::Update => [
+            [Poly::one(), p],
+            [Poly::zero(), Poly::one()],
+        ],
+    }
+}
+
+/// Product of two 1-D 2x2 matrices (`self * rhs` semantics).
+pub fn mul2x2(a: &[[Poly; 2]; 2], b: &[[Poly; 2]; 2]) -> [[Poly; 2]; 2] {
+    let mut out: [[Poly; 2]; 2] = Default::default();
+    for i in 0..2 {
+        for j in 0..2 {
+            let mut acc = Poly::zero();
+            for (k, b_row) in b.iter().enumerate() {
+                acc = acc.add(&a[i][k].mul(&b_row[j]));
+            }
+            out[i][j] = acc;
+        }
+    }
+    out
+}
+
+/// 1-D convolution matrix `[[V, U], [P, 1]]` of one lifting pair.
+pub fn conv1d_pair(predict: &[(i32, f64)], update: &[(i32, f64)]) -> [[Poly; 2]; 2] {
+    mul2x2(
+        &lift2x2(LiftKind::Update, update),
+        &lift2x2(LiftKind::Predict, predict),
+    )
+}
+
+/// Non-separable polyconvolution `N_{P,U}` for one lifting pair.
+pub fn polyconv_pair(predict: &[(i32, f64)], update: &[(i32, f64)]) -> PolyMatrix {
+    PolyMatrix::chain(&[
+        PolyMatrix::lift_h(LiftKind::Predict, predict),
+        PolyMatrix::lift_v(LiftKind::Predict, predict),
+        PolyMatrix::lift_h(LiftKind::Update, update),
+        PolyMatrix::lift_v(LiftKind::Update, update),
+    ])
+}
+
+/// Predict (`T`) vs update (`S`) lifting step kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LiftKind {
+    Predict,
+    Update,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P53: &[(i32, f64)] = &[(0, -0.5), (1, -0.5)];
+    const U53: &[(i32, f64)] = &[(0, 0.25), (-1, 0.25)];
+
+    #[test]
+    fn identity_is_neutral() {
+        let m = PolyMatrix::lift_h(LiftKind::Predict, P53);
+        assert!(m.mul(&PolyMatrix::identity()).approx_eq(&m, 1e-12));
+        assert!(PolyMatrix::identity().mul(&m).approx_eq(&m, 1e-12));
+    }
+
+    #[test]
+    fn spatial_predict_is_product_of_separable() {
+        let lhs = PolyMatrix::spatial_predict(P53);
+        let rhs = PolyMatrix::lift_v(LiftKind::Predict, P53)
+            .mul(&PolyMatrix::lift_h(LiftKind::Predict, P53));
+        assert!(lhs.approx_eq(&rhs, 1e-12));
+    }
+
+    #[test]
+    fn spatial_update_is_product_of_separable() {
+        let lhs = PolyMatrix::spatial_update(U53);
+        let rhs = PolyMatrix::lift_v(LiftKind::Update, U53)
+            .mul(&PolyMatrix::lift_h(LiftKind::Update, U53));
+        assert!(lhs.approx_eq(&rhs, 1e-12));
+    }
+
+    #[test]
+    fn h_v_lifting_steps_commute() {
+        let a = PolyMatrix::lift_v(LiftKind::Update, U53)
+            .mul(&PolyMatrix::lift_h(LiftKind::Update, U53));
+        let b = PolyMatrix::lift_h(LiftKind::Update, U53)
+            .mul(&PolyMatrix::lift_v(LiftKind::Update, U53));
+        assert!(a.approx_eq(&b, 1e-12));
+    }
+
+    #[test]
+    fn polyconv_v_corner() {
+        let n = polyconv_pair(P53, U53);
+        // HH row, oo column must be exactly 1 (bottom-right of N_{P,U})
+        assert!(n.m[3][3].is_one());
+        // LL/ee entry is V*V with V = 1 + UP
+        let v = conv1d_pair(P53, U53)[0][0].clone();
+        let vv = v.transpose().mul(&v);
+        assert!(n.m[0][0].approx_eq(&vv, 1e-12));
+    }
+
+    #[test]
+    fn n_ops_excludes_diagonal_units() {
+        let m = PolyMatrix::lift_h(LiftKind::Predict, P53);
+        assert_eq!(m.n_ops(), 4); // two copies of the 2-term P
+        assert_eq!(m.n_ops_vec(), 2); // identical copies counted once
+    }
+
+    #[test]
+    fn scale_matrix_detected() {
+        assert!(PolyMatrix::scale2d(1.23).is_scale());
+        assert!(!PolyMatrix::lift_h(LiftKind::Predict, P53).is_scale());
+    }
+
+    #[test]
+    fn adjoint_involutive() {
+        let m = polyconv_pair(P53, U53);
+        assert!(m.adjoint().adjoint().approx_eq(&m, 1e-12));
+    }
+}

@@ -1,0 +1,17 @@
+//! Symbolic substrate: bivariate Laurent-polynomial algebra over the
+//! four polyphase components of a 2-D signal.
+//!
+//! Mirrors `python/compile/polyalg.py` — the pytest suite cross-checks
+//! the two implementations through a JSON dump.  Everything the paper
+//! states about schemes (step counts, operation counts, equality of
+//! outputs) is *derived* here rather than asserted.
+
+pub mod matrix;
+pub mod opcount;
+pub mod poly;
+pub mod schemes;
+pub mod wavelets;
+
+pub use matrix::PolyMatrix;
+pub use poly::Poly;
+pub use schemes::Scheme;

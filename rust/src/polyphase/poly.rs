@@ -1,0 +1,244 @@
+//! Bivariate Laurent polynomials: sparse maps from an offset pair
+//! `(km, kn)` to a real coefficient.
+//!
+//! A term `(km, kn): c` means `out[n, m] += c * inp[n + kn, m + km]` on
+//! a polyphase component plane — `km` is the horizontal (width) offset,
+//! `kn` the vertical (height) offset.
+
+use std::collections::BTreeMap;
+
+/// Coefficients below this magnitude are treated as zero and dropped.
+pub const EPS: f64 = 1e-12;
+
+/// A sparse bivariate Laurent polynomial (2-D FIR filter).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Poly {
+    /// offset (km, kn) -> coefficient; BTreeMap for deterministic order.
+    pub terms: BTreeMap<(i32, i32), f64>,
+}
+
+impl Poly {
+    /// The zero polynomial.
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    /// The unit polynomial `1`.
+    pub fn one() -> Self {
+        Self::constant(1.0)
+    }
+
+    /// A constant (lag-0) polynomial; zero constants collapse to `zero()`.
+    pub fn constant(c: f64) -> Self {
+        let mut terms = BTreeMap::new();
+        if c.abs() > EPS {
+            terms.insert((0, 0), c);
+        }
+        Self { terms }
+    }
+
+    /// A univariate horizontal polynomial from `(offset, coeff)` taps.
+    pub fn horiz(taps: &[(i32, f64)]) -> Self {
+        let mut p = Self::zero();
+        for &(k, c) in taps {
+            if c.abs() > EPS {
+                *p.terms.entry((k, 0)).or_insert(0.0) += c;
+            }
+        }
+        p.prune();
+        p
+    }
+
+    /// A univariate vertical polynomial from `(offset, coeff)` taps.
+    pub fn vert(taps: &[(i32, f64)]) -> Self {
+        let mut p = Self::zero();
+        for &(k, c) in taps {
+            if c.abs() > EPS {
+                *p.terms.entry((0, k)).or_insert(0.0) += c;
+            }
+        }
+        p.prune();
+        p
+    }
+
+    fn prune(&mut self) {
+        self.terms.retain(|_, c| c.abs() > EPS);
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    pub fn is_one(&self) -> bool {
+        self.terms.len() == 1
+            && self
+                .terms
+                .get(&(0, 0))
+                .map(|c| (c - 1.0).abs() <= EPS)
+                .unwrap_or(false)
+    }
+
+    /// Number of (nonzero) terms — the paper's unit of "operations".
+    pub fn n_terms(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// `G*(z_m, z_n) = G(z_n, z_m)`: swap the two axes.
+    pub fn transpose(&self) -> Self {
+        let terms = self
+            .terms
+            .iter()
+            .map(|(&(km, kn), &c)| ((kn, km), c))
+            .collect();
+        Self { terms }
+    }
+
+    /// Offset-reverse `p(z) -> p(1/z)` — the adjoint filter.
+    pub fn reverse(&self) -> Self {
+        let terms = self
+            .terms
+            .iter()
+            .map(|(&(km, kn), &c)| ((-km, -kn), c))
+            .collect();
+        Self { terms }
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        let mut out = self.clone();
+        for (&k, &c) in &other.terms {
+            *out.terms.entry(k).or_insert(0.0) += c;
+        }
+        out.prune();
+        out
+    }
+
+    pub fn scale(&self, s: f64) -> Self {
+        if s.abs() <= EPS {
+            return Self::zero();
+        }
+        let terms = self.terms.iter().map(|(&k, &c)| (k, c * s)).collect();
+        Self { terms }
+    }
+
+    pub fn mul(&self, other: &Self) -> Self {
+        let mut out = Self::zero();
+        for (&(am, an), &ac) in &self.terms {
+            for (&(bm, bn), &bc) in &other.terms {
+                *out.terms.entry((am + bm, an + bn)).or_insert(0.0) += ac * bc;
+            }
+        }
+        out.prune();
+        out
+    }
+
+    /// Split `P = P0 + P1` with `P0` the constant part (paper section 5).
+    pub fn split_const(&self) -> (Self, Self) {
+        let mut p0 = Self::zero();
+        let mut p1 = Self::zero();
+        for (&k, &c) in &self.terms {
+            if k == (0, 0) {
+                p0.terms.insert(k, c);
+            } else {
+                p1.terms.insert(k, c);
+            }
+        }
+        (p0, p1)
+    }
+
+    /// `(min_m, max_m, min_n, max_n)` of the support; zeros when empty.
+    pub fn support(&self) -> (i32, i32, i32, i32) {
+        if self.terms.is_empty() {
+            return (0, 0, 0, 0);
+        }
+        let mut s = (i32::MAX, i32::MIN, i32::MAX, i32::MIN);
+        for &(km, kn) in self.terms.keys() {
+            s.0 = s.0.min(km);
+            s.1 = s.1.max(km);
+            s.2 = s.2.min(kn);
+            s.3 = s.3.max(kn);
+        }
+        s
+    }
+
+    /// Maximum absolute offset reach: (top, bottom, left, right) halo.
+    pub fn halo(&self) -> (i32, i32, i32, i32) {
+        let (m0, m1, n0, n1) = self.support();
+        ((-n0).max(0), n1.max(0), (-m0).max(0), m1.max(0))
+    }
+
+    /// Approximate equality up to `tol` on every coefficient.
+    pub fn approx_eq(&self, other: &Self, tol: f64) -> bool {
+        let keys: std::collections::BTreeSet<_> =
+            self.terms.keys().chain(other.terms.keys()).collect();
+        keys.into_iter().all(|k| {
+            let a = self.terms.get(k).copied().unwrap_or(0.0);
+            let b = other.terms.get(k).copied().unwrap_or(0.0);
+            (a - b).abs() <= tol
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_zero_collapses() {
+        assert!(Poly::constant(0.0).is_zero());
+        assert!(Poly::constant(1.0).is_one());
+    }
+
+    #[test]
+    fn add_cancels_terms() {
+        let a = Poly::horiz(&[(0, 1.5), (1, -2.0)]);
+        let b = Poly::horiz(&[(1, 2.0)]);
+        let sum = a.add(&b);
+        assert_eq!(sum.n_terms(), 1);
+        assert!((sum.terms[&(0, 0)] - 1.5).abs() < EPS);
+    }
+
+    #[test]
+    fn mul_shifts_offsets() {
+        let a = Poly::horiz(&[(1, 2.0)]);
+        let b = Poly::vert(&[(2, 3.0)]);
+        let p = a.mul(&b);
+        assert_eq!(p.terms.len(), 1);
+        assert!((p.terms[&(1, 2)] - 6.0).abs() < EPS);
+    }
+
+    #[test]
+    fn transpose_swaps_axes() {
+        let a = Poly::horiz(&[(1, 4.0)]);
+        let t = a.transpose();
+        assert!((t.terms[&(0, 1)] - 4.0).abs() < EPS);
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
+    fn split_const_partition() {
+        let p = Poly::horiz(&[(0, -0.5), (1, -0.5)]);
+        let (p0, p1) = p.split_const();
+        assert_eq!(p0.n_terms(), 1);
+        assert_eq!(p1.n_terms(), 1);
+        assert_eq!(p0.add(&p1), p);
+    }
+
+    #[test]
+    fn halo_reach() {
+        let p = Poly {
+            terms: [((-1, 0), 1.0), ((2, 1), 1.0)].into_iter().collect(),
+        };
+        assert_eq!(p.halo(), (0, 1, 1, 2));
+    }
+
+    #[test]
+    fn mul_commutes_and_distributes() {
+        let a = Poly::horiz(&[(0, 0.5), (1, -1.0)]);
+        let b = Poly::vert(&[(-1, 2.0), (0, 3.0)]);
+        let c = Poly::horiz(&[(-2, 0.25)]);
+        assert!(a.mul(&b).approx_eq(&b.mul(&a), EPS));
+        let lhs = a.mul(&b.add(&c));
+        let rhs = a.mul(&b).add(&a.mul(&c));
+        assert!(lhs.approx_eq(&rhs, 1e-9));
+    }
+}

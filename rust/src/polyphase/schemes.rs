@@ -1,0 +1,450 @@
+//! Scheme constructors: each of the paper's six calculation schemes as
+//! an explicit sequence of barrier-separated 4x4 polyphase steps, plus
+//! the section-5 optimized structures (barrier-free sub-step groups) and
+//! the symbolic inverses.
+//!
+//! Mirrors `python/compile/schemes.py` / `opcount.build_optimized`.
+
+use super::matrix::{
+    conv1d_pair, lift2x2, mul2x2, polyconv_pair, sep_h_from_2x2, sep_v_from_2x2, LiftKind,
+    PolyMatrix,
+};
+use super::wavelets::Wavelet;
+
+/// The six calculation schemes of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Scheme {
+    /// Separable convolution `N^V | N^H` (Mallat): 2 steps.
+    SepConv,
+    /// Separable polyconvolution: one 1-D pair-product per direction per
+    /// lifting pair: `2K` steps.
+    SepPolyconv,
+    /// Separable lifting `S^V|S^H|T^V|T^H` per pair: `4K` steps.
+    SepLifting,
+    /// Non-separable convolution `N = N^V N^H`: 1 step.
+    NsConv,
+    /// Non-separable polyconvolution `N_{P,U}` per pair: `K` steps.
+    NsPolyconv,
+    /// Non-separable lifting `S_U | T_P` per pair: `2K` steps.
+    NsLifting,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 6] = [
+        Scheme::SepConv,
+        Scheme::SepPolyconv,
+        Scheme::SepLifting,
+        Scheme::NsConv,
+        Scheme::NsPolyconv,
+        Scheme::NsLifting,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::SepConv => "sep_conv",
+            Scheme::SepPolyconv => "sep_polyconv",
+            Scheme::SepLifting => "sep_lifting",
+            Scheme::NsConv => "ns_conv",
+            Scheme::NsPolyconv => "ns_polyconv",
+            Scheme::NsLifting => "ns_lifting",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Scheme> {
+        Scheme::ALL.into_iter().find(|s| s.name() == name)
+    }
+
+    pub fn is_separable(&self) -> bool {
+        matches!(
+            self,
+            Scheme::SepConv | Scheme::SepPolyconv | Scheme::SepLifting
+        )
+    }
+
+    /// Human-readable label used in figures (matches the paper's legend).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheme::SepConv => "separable convolution",
+            Scheme::SepPolyconv => "separable polyconv.",
+            Scheme::SepLifting => "separable lifting",
+            Scheme::NsConv => "non-separable convolution",
+            Scheme::NsPolyconv => "non-separable polyconv.",
+            Scheme::NsLifting => "non-separable lifting",
+        }
+    }
+}
+
+fn maybe_scale(mut steps: Vec<PolyMatrix>, w: &Wavelet) -> Vec<PolyMatrix> {
+    if w.zeta != 1.0 {
+        let last = steps.pop().expect("scheme with no steps");
+        steps.push(PolyMatrix::scale2d(w.zeta).mul(&last));
+    }
+    steps
+}
+
+/// Build the barrier-separated steps of a scheme (forward transform).
+pub fn build(scheme: Scheme, w: &Wavelet) -> Vec<PolyMatrix> {
+    let steps = match scheme {
+        Scheme::SepConv => {
+            let mut m2: Option<[[super::poly::Poly; 2]; 2]> = None;
+            for pr in &w.pairs {
+                let pair = conv1d_pair(&pr.predict, &pr.update);
+                m2 = Some(match m2 {
+                    None => pair,
+                    Some(prev) => mul2x2(&pair, &prev),
+                });
+            }
+            let m2 = m2.unwrap();
+            vec![sep_h_from_2x2(&m2), sep_v_from_2x2(&m2)]
+        }
+        Scheme::SepPolyconv => {
+            let mut out = Vec::new();
+            for pr in &w.pairs {
+                out.push(sep_h_from_2x2(&conv1d_pair(&pr.predict, &pr.update)));
+            }
+            for pr in &w.pairs {
+                out.push(sep_v_from_2x2(&conv1d_pair(&pr.predict, &pr.update)));
+            }
+            out
+        }
+        Scheme::SepLifting => {
+            let mut out = Vec::new();
+            for pr in &w.pairs {
+                out.push(PolyMatrix::lift_h(LiftKind::Predict, &pr.predict));
+                out.push(PolyMatrix::lift_v(LiftKind::Predict, &pr.predict));
+                out.push(PolyMatrix::lift_h(LiftKind::Update, &pr.update));
+                out.push(PolyMatrix::lift_v(LiftKind::Update, &pr.update));
+            }
+            out
+        }
+        Scheme::NsConv => {
+            let lifting = build(Scheme::SepLifting, &unscaled(w));
+            vec![PolyMatrix::chain(&lifting)]
+        }
+        Scheme::NsPolyconv => w
+            .pairs
+            .iter()
+            .map(|pr| polyconv_pair(&pr.predict, &pr.update))
+            .collect(),
+        Scheme::NsLifting => {
+            let mut out = Vec::new();
+            for pr in &w.pairs {
+                out.push(PolyMatrix::spatial_predict(&pr.predict));
+                out.push(PolyMatrix::spatial_update(&pr.update));
+            }
+            out
+        }
+    };
+    maybe_scale(steps, w)
+}
+
+fn unscaled(w: &Wavelet) -> Wavelet {
+    Wavelet {
+        zeta: 1.0,
+        ..w.clone()
+    }
+}
+
+/// Number of barrier-separated steps — the "steps" column of Table 1.
+pub fn n_steps(scheme: Scheme, w: &Wavelet) -> usize {
+    let k = w.n_pairs();
+    match scheme {
+        Scheme::SepConv => 2,
+        Scheme::SepPolyconv => 2 * k,
+        Scheme::SepLifting => 4 * k,
+        Scheme::NsConv => 1,
+        Scheme::NsPolyconv => k,
+        Scheme::NsLifting => 2 * k,
+    }
+}
+
+/// The single 4x4 matrix every scheme composes to (canonical total).
+pub fn total_matrix(w: &Wavelet) -> PolyMatrix {
+    PolyMatrix::chain(&build(Scheme::SepLifting, w))
+}
+
+fn neg(taps: &[(i32, f64)]) -> Vec<(i32, f64)> {
+    taps.iter().map(|&(k, c)| (k, -c)).collect()
+}
+
+/// Inverse-transform steps with the forward scheme's structure and step
+/// count.  `chain(build(s,w) ++ build_inverse(s,w))` is the identity.
+pub fn build_inverse(scheme: Scheme, w: &Wavelet) -> Vec<PolyMatrix> {
+    let unscale_first = |mut steps: Vec<PolyMatrix>| -> Vec<PolyMatrix> {
+        if w.zeta != 1.0 {
+            let first = steps.remove(0);
+            steps.insert(0, first.mul(&PolyMatrix::scale2d(1.0 / w.zeta)));
+        }
+        steps
+    };
+    let inv_pair_steps = |pr: &super::wavelets::LiftingPair| -> Vec<PolyMatrix> {
+        vec![
+            PolyMatrix::lift_v(LiftKind::Update, &neg(&pr.update)),
+            PolyMatrix::lift_h(LiftKind::Update, &neg(&pr.update)),
+            PolyMatrix::lift_v(LiftKind::Predict, &neg(&pr.predict)),
+            PolyMatrix::lift_h(LiftKind::Predict, &neg(&pr.predict)),
+        ]
+    };
+    let steps = match scheme {
+        Scheme::SepLifting => {
+            let mut out = Vec::new();
+            for pr in w.pairs.iter().rev() {
+                out.extend(inv_pair_steps(pr));
+            }
+            out
+        }
+        Scheme::NsLifting => {
+            let mut out = Vec::new();
+            for pr in w.pairs.iter().rev() {
+                let s = inv_pair_steps(pr);
+                out.push(s[1].mul(&s[0]).clone());
+                out.push(s[3].mul(&s[2]).clone());
+            }
+            out
+        }
+        Scheme::NsPolyconv => w
+            .pairs
+            .iter()
+            .rev()
+            .map(|pr| PolyMatrix::chain(&inv_pair_steps(pr)))
+            .collect(),
+        Scheme::NsConv => {
+            let mut mats = Vec::new();
+            for pr in w.pairs.iter().rev() {
+                mats.extend(inv_pair_steps(pr));
+            }
+            vec![PolyMatrix::chain(&mats)]
+        }
+        Scheme::SepConv => {
+            let mut m2: Option<[[super::poly::Poly; 2]; 2]> = None;
+            for pr in w.pairs.iter().rev() {
+                let pair = mul2x2(
+                    &lift2x2(LiftKind::Predict, &neg(&pr.predict)),
+                    &lift2x2(LiftKind::Update, &neg(&pr.update)),
+                );
+                m2 = Some(match m2 {
+                    None => pair,
+                    Some(prev) => mul2x2(&pair, &prev),
+                });
+            }
+            let m2 = m2.unwrap();
+            vec![sep_v_from_2x2(&m2), sep_h_from_2x2(&m2)]
+        }
+        Scheme::SepPolyconv => {
+            let inv2 = |pr: &super::wavelets::LiftingPair| {
+                mul2x2(
+                    &lift2x2(LiftKind::Predict, &neg(&pr.predict)),
+                    &lift2x2(LiftKind::Update, &neg(&pr.update)),
+                )
+            };
+            let mut out = Vec::new();
+            for pr in w.pairs.iter().rev() {
+                out.push(sep_v_from_2x2(&inv2(pr)));
+            }
+            for pr in w.pairs.iter().rev() {
+                out.push(sep_h_from_2x2(&inv2(pr)));
+            }
+            out
+        }
+    };
+    unscale_first(steps)
+}
+
+/// A barrier-free group of sub-step matrices (applied in order).
+pub type Group = Vec<PolyMatrix>;
+
+fn split_taps(taps: &[(i32, f64)]) -> (Vec<(i32, f64)>, Vec<(i32, f64)>) {
+    let t0 = taps.iter().copied().filter(|&(k, _)| k == 0).collect();
+    let t1 = taps.iter().copied().filter(|&(k, _)| k != 0).collect();
+    (t0, t1)
+}
+
+/// Section-5 optimized structure: barrier-separated groups of
+/// barrier-free sub-steps.  Composing everything reproduces `build`.
+pub fn build_optimized(scheme: Scheme, w: &Wavelet) -> Vec<Group> {
+    let mut groups: Vec<Group> = Vec::new();
+    match scheme {
+        Scheme::SepLifting => {
+            // the optimization is a no-op: separable lifting already is
+            // the cheapest structure
+            return build(scheme, w).into_iter().map(|m| vec![m]).collect();
+        }
+        Scheme::NsLifting => {
+            for pr in &w.pairs {
+                let (p0, p1) = split_taps(&pr.predict);
+                let (u0, u1) = split_taps(&pr.update);
+                groups.push(vec![
+                    PolyMatrix::lift_h(LiftKind::Predict, &p0),
+                    PolyMatrix::lift_v(LiftKind::Predict, &p0),
+                    PolyMatrix::spatial_predict(&p1),
+                ]);
+                groups.push(vec![
+                    PolyMatrix::lift_h(LiftKind::Update, &u0),
+                    PolyMatrix::lift_v(LiftKind::Update, &u0),
+                    PolyMatrix::spatial_update(&u1),
+                ]);
+            }
+        }
+        Scheme::NsPolyconv => {
+            for pr in &w.pairs {
+                let (p0, p1) = split_taps(&pr.predict);
+                let (u0, u1) = split_taps(&pr.update);
+                groups.push(vec![
+                    PolyMatrix::lift_h(LiftKind::Predict, &p0),
+                    PolyMatrix::lift_v(LiftKind::Predict, &p0),
+                    polyconv_pair(&p1, &u1),
+                    PolyMatrix::lift_h(LiftKind::Update, &u0),
+                    PolyMatrix::lift_v(LiftKind::Update, &u0),
+                ]);
+            }
+        }
+        Scheme::NsConv => {
+            let mut g: Group = Vec::new();
+            for pr in &w.pairs {
+                let (p0, p1) = split_taps(&pr.predict);
+                let (u0, u1) = split_taps(&pr.update);
+                g.push(PolyMatrix::lift_h(LiftKind::Predict, &p0));
+                g.push(PolyMatrix::lift_v(LiftKind::Predict, &p0));
+                g.push(polyconv_pair(&p1, &u1));
+                g.push(PolyMatrix::lift_h(LiftKind::Update, &u0));
+                g.push(PolyMatrix::lift_v(LiftKind::Update, &u0));
+            }
+            groups.push(g);
+        }
+        Scheme::SepConv => {
+            for dir in 0..2 {
+                let mut g: Group = Vec::new();
+                for pr in &w.pairs {
+                    let (p0, p1) = split_taps(&pr.predict);
+                    let (u0, u1) = split_taps(&pr.update);
+                    let embed = |m2: &[[super::poly::Poly; 2]; 2]| {
+                        if dir == 0 {
+                            sep_h_from_2x2(m2)
+                        } else {
+                            sep_v_from_2x2(m2)
+                        }
+                    };
+                    g.push(embed(&lift2x2(LiftKind::Predict, &p0)));
+                    g.push(embed(&conv1d_pair(&p1, &u1)));
+                    g.push(embed(&lift2x2(LiftKind::Update, &u0)));
+                }
+                groups.push(g);
+            }
+        }
+        Scheme::SepPolyconv => {
+            for dir in 0..2 {
+                for pr in &w.pairs {
+                    let (p0, p1) = split_taps(&pr.predict);
+                    let (u0, u1) = split_taps(&pr.update);
+                    let embed = |m2: &[[super::poly::Poly; 2]; 2]| {
+                        if dir == 0 {
+                            sep_h_from_2x2(m2)
+                        } else {
+                            sep_v_from_2x2(m2)
+                        }
+                    };
+                    groups.push(vec![
+                        embed(&lift2x2(LiftKind::Predict, &p0)),
+                        embed(&conv1d_pair(&p1, &u1)),
+                        embed(&lift2x2(LiftKind::Update, &u0)),
+                    ]);
+                }
+            }
+        }
+    }
+    if w.zeta != 1.0 {
+        groups
+            .last_mut()
+            .expect("no groups")
+            .push(PolyMatrix::scale2d(w.zeta));
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_wavelets() -> Vec<Wavelet> {
+        Wavelet::all()
+    }
+
+    #[test]
+    fn every_scheme_composes_to_the_same_total() {
+        for w in all_wavelets() {
+            let canon = total_matrix(&w);
+            for s in Scheme::ALL {
+                let total = PolyMatrix::chain(&build(s, &w));
+                assert!(
+                    total.approx_eq(&canon, 1e-9),
+                    "{} differs for {}",
+                    s.name(),
+                    w.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn step_counts_match_table1() {
+        for w in all_wavelets() {
+            for s in Scheme::ALL {
+                assert_eq!(build(s, &w).len(), n_steps(s, &w), "{}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_composes_to_identity() {
+        for w in all_wavelets() {
+            for s in Scheme::ALL {
+                let mut chain = build(s, &w);
+                chain.extend(build_inverse(s, &w));
+                let total = PolyMatrix::chain(&chain);
+                assert!(
+                    total.approx_eq(&PolyMatrix::identity(), 1e-9),
+                    "{} x {} not identity",
+                    s.name(),
+                    w.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_groups_compose_to_plain_scheme() {
+        for w in all_wavelets() {
+            let canon = total_matrix(&w);
+            for s in Scheme::ALL {
+                let mats: Vec<PolyMatrix> = build_optimized(s, &w)
+                    .into_iter()
+                    .flatten()
+                    .collect();
+                let total = PolyMatrix::chain(&mats);
+                assert!(
+                    total.approx_eq(&canon, 1e-9),
+                    "optimized {} differs for {}",
+                    s.name(),
+                    w.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_barrier_count_unchanged() {
+        for w in all_wavelets() {
+            for s in Scheme::ALL {
+                assert_eq!(build_optimized(s, &w).len(), n_steps(s, &w));
+            }
+        }
+    }
+
+    #[test]
+    fn scheme_name_roundtrip() {
+        for s in Scheme::ALL {
+            assert_eq!(Scheme::by_name(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::by_name("nope"), None);
+    }
+}

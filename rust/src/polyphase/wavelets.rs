@@ -1,0 +1,199 @@
+//! The three wavelets evaluated by the paper, as lifting factorizations.
+//!
+//! Mirrors `python/compile/wavelets.py` (same constants, same tap
+//! conventions): a predict tap `(k, c)` means `d[n] += c * s[n + k]`, an
+//! update tap `(k, c)` means `s[n] += c * d[n + k]`.
+
+use super::matrix::{conv1d_pair, mul2x2};
+use super::poly::Poly;
+
+/// One predict/update lifting pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LiftingPair {
+    pub predict: Vec<(i32, f64)>,
+    pub update: Vec<(i32, f64)>,
+}
+
+/// A wavelet as a lifting factorization plus final scaling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Wavelet {
+    pub name: &'static str,
+    pub title: &'static str,
+    pub pairs: Vec<LiftingPair>,
+    /// Final scaling: `s *= zeta`, `d /= zeta` (1.0 = none).
+    pub zeta: f64,
+}
+
+/// JPEG 2000 irreversible 9/7 lifting constants.
+pub const ALPHA: f64 = -1.586_134_342_059_924;
+pub const BETA: f64 = -0.052_980_118_572_961;
+pub const GAMMA: f64 = 0.882_911_075_530_934;
+pub const DELTA: f64 = 0.443_506_852_043_971;
+pub const ZETA: f64 = 1.230_174_104_914_001;
+
+impl Wavelet {
+    /// CDF 5/3 (LeGall, JPEG 2000 reversible path).
+    pub fn cdf53() -> Self {
+        Self {
+            name: "cdf53",
+            title: "CDF 5/3 (LeGall)",
+            pairs: vec![LiftingPair {
+                predict: vec![(0, -0.5), (1, -0.5)],
+                update: vec![(0, 0.25), (-1, 0.25)],
+            }],
+            zeta: 1.0,
+        }
+    }
+
+    /// CDF 9/7 (JPEG 2000 irreversible).
+    pub fn cdf97() -> Self {
+        Self {
+            name: "cdf97",
+            title: "CDF 9/7 (JPEG 2000 irreversible)",
+            pairs: vec![
+                LiftingPair {
+                    predict: vec![(0, ALPHA), (1, ALPHA)],
+                    update: vec![(0, BETA), (-1, BETA)],
+                },
+                LiftingPair {
+                    predict: vec![(0, GAMMA), (1, GAMMA)],
+                    update: vec![(0, DELTA), (-1, DELTA)],
+                },
+            ],
+            zeta: ZETA,
+        }
+    }
+
+    /// DD 13/7 (Deslauriers-Dubuc interpolating, Sweldens 1996).
+    pub fn dd137() -> Self {
+        Self {
+            name: "dd137",
+            title: "DD 13/7 (Deslauriers-Dubuc)",
+            pairs: vec![LiftingPair {
+                predict: vec![
+                    (-1, 1.0 / 16.0),
+                    (0, -9.0 / 16.0),
+                    (1, -9.0 / 16.0),
+                    (2, 1.0 / 16.0),
+                ],
+                update: vec![
+                    (-2, -1.0 / 32.0),
+                    (-1, 9.0 / 32.0),
+                    (0, 9.0 / 32.0),
+                    (1, -1.0 / 32.0),
+                ],
+            }],
+            zeta: 1.0,
+        }
+    }
+
+    /// Haar (orthogonal 2/2) — beyond the paper's evaluation set; it
+    /// exercises the "schemes are general" claim and the P1 = 0 corner
+    /// of the section-5 split (the predict polynomial is all-constant).
+    pub fn haar() -> Self {
+        Self {
+            name: "haar",
+            title: "Haar (orthogonal)",
+            pairs: vec![LiftingPair {
+                predict: vec![(0, -1.0)],
+                update: vec![(0, 0.5)],
+            }],
+            zeta: std::f64::consts::SQRT_2,
+        }
+    }
+
+    /// All implemented wavelets (the paper's three plus Haar).
+    pub fn all() -> Vec<Self> {
+        vec![Self::cdf53(), Self::cdf97(), Self::dd137(), Self::haar()]
+    }
+
+    /// The paper's evaluation set (Tables/Figures).
+    pub fn paper_set() -> Vec<Self> {
+        vec![Self::cdf53(), Self::cdf97(), Self::dd137()]
+    }
+
+    /// Look up a wavelet by its short name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        Self::all().into_iter().find(|w| w.name == name)
+    }
+
+    pub fn n_pairs(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Full (unscaled) 1-D polyphase convolution matrix.
+    pub fn conv2x2_unscaled(&self) -> [[Poly; 2]; 2] {
+        let mut out: Option<[[Poly; 2]; 2]> = None;
+        for pr in &self.pairs {
+            let m = conv1d_pair(&pr.predict, &pr.update);
+            out = Some(match out {
+                None => m,
+                Some(prev) => mul2x2(&m, &prev),
+            });
+        }
+        out.expect("wavelet with no lifting pairs")
+    }
+
+    /// `(low, high)` analysis filter tap counts as *support spans* on the
+    /// interleaved signal — e.g. (9, 7) for CDF 9/7.
+    pub fn filter_spans(&self) -> (usize, usize) {
+        let m = self.conv2x2_unscaled();
+        let span = |even: &Poly, even_shift: i32, odd: &Poly, odd_shift: i32| {
+            let mut lo = i32::MAX;
+            let mut hi = i32::MIN;
+            for &(km, _) in even.terms.keys() {
+                lo = lo.min(2 * km + even_shift);
+                hi = hi.max(2 * km + even_shift);
+            }
+            for &(km, _) in odd.terms.keys() {
+                lo = lo.min(2 * km + odd_shift);
+                hi = hi.max(2 * km + odd_shift);
+            }
+            (hi - lo + 1) as usize
+        };
+        // low row [V, U]: out_s[n] taps x[2n+2k] (even col) / x[2n+2k+1] (odd)
+        let low = span(&m[0][0], 0, &m[0][1], 1);
+        // high row [P, 1]: out_d[n] centred on x[2n+1]: even col taps sit at
+        // interleaved offset 2k-1, odd col at 2k
+        let high = span(&m[1][1], 0, &m[1][0], -1);
+        (low, high)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_resolve() {
+        for name in ["cdf53", "cdf97", "dd137", "haar"] {
+            assert_eq!(Wavelet::by_name(name).unwrap().name, name);
+        }
+        assert!(Wavelet::by_name("db4").is_none());
+    }
+
+    #[test]
+    fn haar_filter_spans() {
+        assert_eq!(Wavelet::haar().filter_spans(), (2, 2));
+    }
+
+    #[test]
+    fn paper_set_excludes_haar() {
+        assert_eq!(Wavelet::paper_set().len(), 3);
+        assert!(Wavelet::paper_set().iter().all(|w| w.name != "haar"));
+    }
+
+    #[test]
+    fn filter_spans_match_wavelet_names() {
+        assert_eq!(Wavelet::cdf53().filter_spans(), (5, 3));
+        assert_eq!(Wavelet::cdf97().filter_spans(), (9, 7));
+        assert_eq!(Wavelet::dd137().filter_spans(), (13, 7));
+    }
+
+    #[test]
+    fn pair_counts() {
+        assert_eq!(Wavelet::cdf53().n_pairs(), 1);
+        assert_eq!(Wavelet::cdf97().n_pairs(), 2);
+        assert_eq!(Wavelet::dd137().n_pairs(), 1);
+    }
+}

@@ -1,0 +1,159 @@
+//! The artifact manifest written by `python -m compile.aot`: which HLO
+//! files exist, their shapes, schemes, wavelets, and the embedded
+//! Table-1 metadata the coordinator's cost-aware scheduler uses.
+
+use super::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    /// forward | inverse | batched_forward | multilevel | multilevel_inverse
+    pub kind: String,
+    pub scheme: String,
+    pub wavelet: String,
+    pub optimized: bool,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub steps: usize,
+    pub levels: Option<usize>,
+    pub file: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub serve_size: (usize, usize),
+    pub batch: usize,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} (run `make artifacts`)"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let serve = root
+            .get("serve_size")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("manifest missing serve_size"))?;
+        let serve_size = (
+            serve[0].as_usize().unwrap_or(0),
+            serve[1].as_usize().unwrap_or(0),
+        );
+        let batch = root
+            .get("batch")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing batch"))?;
+        let mut entries = Vec::new();
+        for e in root
+            .get("entries")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let shape = |key: &str| -> Result<Vec<usize>> {
+                Ok(e.get(key)
+                    .and_then(Json::as_array)
+                    .ok_or_else(|| anyhow!("entry missing {key}"))?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect())
+            };
+            let str_field = |key: &str| -> Result<String> {
+                Ok(e.get(key)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing {key}"))?
+                    .to_string())
+            };
+            entries.push(Entry {
+                name: str_field("name")?,
+                kind: str_field("kind")?,
+                scheme: str_field("scheme")?,
+                wavelet: str_field("wavelet")?,
+                optimized: e.get("optimized").and_then(Json::as_bool).unwrap_or(false),
+                input_shape: shape("input_shape")?,
+                output_shape: shape("output_shape")?,
+                steps: e.get("steps").and_then(Json::as_usize).unwrap_or(0),
+                levels: e.get("levels").and_then(Json::as_usize),
+                file: artifacts_dir.join(str_field("file")?),
+            });
+        }
+        Ok(Self {
+            serve_size,
+            batch,
+            entries,
+        })
+    }
+
+    /// Find the forward entry for (wavelet, scheme) at the serve size.
+    pub fn find_forward(&self, wavelet: &str, scheme: &str, optimized: bool) -> Option<&Entry> {
+        self.entries.iter().find(|e| {
+            e.kind == "forward"
+                && e.wavelet == wavelet
+                && e.scheme == scheme
+                && e.optimized == optimized
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entries.len() >= 18);
+        assert_eq!(m.serve_size, (256, 256));
+        // every wavelet x scheme forward entry resolvable
+        for w in ["cdf53", "cdf97", "dd137"] {
+            for s in [
+                "sep_conv",
+                "sep_polyconv",
+                "sep_lifting",
+                "ns_conv",
+                "ns_polyconv",
+                "ns_lifting",
+            ] {
+                let e = m.find_forward(w, s, false).expect("forward entry");
+                assert!(e.file.exists(), "{:?}", e.file);
+            }
+        }
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("dwt_accel_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"serve_size": [64, 64], "batch": 2, "entries": [
+                {"name": "x", "kind": "forward", "scheme": "ns_conv",
+                 "wavelet": "cdf53", "optimized": false,
+                 "input_shape": [64, 64], "output_shape": [64, 64],
+                 "steps": 1, "file": "x.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.find_forward("cdf53", "ns_conv", false).unwrap().name, "x");
+        assert!(m.find_forward("cdf53", "ns_conv", true).is_none());
+    }
+}

@@ -1,0 +1,285 @@
+//! Coordinator end-to-end: routing, batching, tiled parallel path, and
+//! coefficient equality across backends.
+
+use dwt_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Request};
+use dwt_accel::coordinator::metrics::Backend;
+use dwt_accel::dwt::{Engine, Image};
+use dwt_accel::polyphase::schemes::Scheme;
+use dwt_accel::polyphase::wavelets::Wavelet;
+
+fn native_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifacts_dir: None,
+        workers: 4,
+        batch: BatchPolicy::default(),
+        tile: 256,
+        tiled_threshold: 512 * 512,
+    }
+}
+
+fn artifacts_available() -> bool {
+    dwt_accel::runtime::default_artifacts_dir()
+        .join("manifest.json")
+        .exists()
+}
+
+#[test]
+fn native_route_small_image() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(64, 64, 50);
+    let resp = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "cdf53".into(),
+            scheme: Scheme::NsLifting,
+            inverse: false,
+            levels: 1,
+        })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::Native);
+    let expect = Engine::new(Scheme::NsLifting, Wavelet::cdf53()).forward(&img);
+    assert!(resp.image.max_abs_diff(&expect) < 1e-4);
+}
+
+#[test]
+fn tiled_route_large_image_matches_monolithic() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(1024, 512, 51);
+    let resp = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "cdf97".into(),
+            scheme: Scheme::SepLifting,
+            inverse: false,
+            levels: 1,
+        })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::NativeTiled);
+    let expect = Engine::new(Scheme::SepLifting, Wavelet::cdf97()).forward(&img);
+    assert!(resp.image.max_abs_diff(&expect) < 1e-3);
+}
+
+#[test]
+fn forward_then_inverse_roundtrip_via_coordinator() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(128, 128, 52);
+    let fwd = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "dd137".into(),
+            scheme: Scheme::NsConv,
+            inverse: false,
+            levels: 1,
+        })
+        .unwrap();
+    let rec = coord
+        .transform(Request {
+            image: fwd.image,
+            wavelet: "dd137".into(),
+            scheme: Scheme::NsConv,
+            inverse: true,
+            levels: 1,
+        })
+        .unwrap();
+    assert!(rec.image.max_abs_diff(&img) < 1e-2);
+}
+
+#[test]
+fn unknown_wavelet_is_an_error() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let err = coord.transform(Request {
+        image: Image::synthetic(16, 16, 53),
+        wavelet: "db4".into(),
+        scheme: Scheme::SepLifting,
+        inverse: false,
+        levels: 1,
+    });
+    assert!(err.is_err());
+}
+
+#[test]
+fn concurrent_submissions_all_complete() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(64, 64, 54);
+    let handles: Vec<_> = (0..32)
+        .map(|i| {
+            coord.submit(Request {
+                image: img.clone(),
+                wavelet: ["cdf53", "cdf97", "dd137"][i % 3].into(),
+                scheme: Scheme::ALL[i % 6],
+                inverse: false,
+                levels: 1,
+            })
+        })
+        .collect();
+    for h in handles {
+        h.recv().unwrap().unwrap();
+    }
+    assert_eq!(coord.metrics.summary().requests, 32);
+}
+
+#[test]
+fn pjrt_route_used_at_serve_size_and_batches_form() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let coord = Coordinator::new(CoordinatorConfig {
+        artifacts_dir: Some(dwt_accel::runtime::default_artifacts_dir()),
+        workers: 2,
+        batch: BatchPolicy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(20),
+        },
+        tile: 256,
+        tiled_threshold: usize::MAX,
+    })
+    .unwrap();
+    assert!(coord.pjrt_available());
+    let img = Image::synthetic(256, 256, 55);
+    // ns_polyconv has a batched artifact: 16 concurrent -> >= 2 batches
+    let handles: Vec<_> = (0..16)
+        .map(|_| {
+            coord.submit(Request {
+                image: img.clone(),
+                wavelet: "cdf97".into(),
+                scheme: Scheme::NsPolyconv,
+                inverse: false,
+                levels: 1,
+            })
+        })
+        .collect();
+    let expect = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97()).forward(&img);
+    for h in handles {
+        let resp = h.recv().unwrap().unwrap();
+        assert_eq!(resp.backend, Backend::Pjrt);
+        assert!(resp.image.max_abs_diff(&expect) < 5e-2);
+    }
+    let s = coord.metrics.summary();
+    assert!(s.batches >= 2, "expected batching, got {}", s.batches);
+}
+
+#[test]
+fn pjrt_coefficients_match_native_for_every_scheme() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let coord = Coordinator::new(CoordinatorConfig::default()).unwrap();
+    let img = Image::synthetic(256, 256, 56);
+    for s in Scheme::ALL {
+        let resp = coord
+            .transform(Request {
+                image: img.clone(),
+                wavelet: "cdf53".into(),
+                scheme: s,
+                inverse: false,
+                levels: 1,
+            })
+            .unwrap();
+        let expect = Engine::new(s, Wavelet::cdf53()).forward(&img);
+        assert!(
+            resp.image.max_abs_diff(&expect) < 5e-2,
+            "{} diverges",
+            s.name()
+        );
+    }
+}
+
+#[test]
+fn multilevel_request_roundtrip() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(128, 128, 57);
+    let fwd = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "cdf97".into(),
+            scheme: Scheme::NsPolyconv,
+            inverse: false,
+            levels: 3,
+        })
+        .unwrap();
+    // the packed pyramid equals the engine-level multilevel
+    let engine = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97());
+    let expect = dwt_accel::dwt::multilevel::forward(&engine, &img, 3);
+    assert!(fwd.image.max_abs_diff(&expect) < 1e-4);
+    let rec = coord
+        .transform(Request {
+            image: fwd.image,
+            wavelet: "cdf97".into(),
+            scheme: Scheme::NsPolyconv,
+            inverse: true,
+            levels: 3,
+        })
+        .unwrap();
+    assert!(rec.image.max_abs_diff(&img) < 5e-2);
+}
+
+#[test]
+fn haar_served_natively() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(64, 64, 58);
+    let resp = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "haar".into(),
+            scheme: Scheme::NsConv,
+            inverse: false,
+            levels: 1,
+        })
+        .unwrap();
+    let expect = Engine::new(Scheme::NsConv, Wavelet::haar()).forward(&img);
+    assert!(resp.image.max_abs_diff(&expect) < 1e-3);
+}
+
+#[test]
+fn bad_artifacts_dir_falls_back_to_native() {
+    // failure injection: nonexistent artifact directory must disable the
+    // PJRT path but keep the service fully functional
+    let coord = Coordinator::new(CoordinatorConfig {
+        artifacts_dir: Some(std::path::PathBuf::from("/nonexistent/artifacts")),
+        workers: 1,
+        batch: BatchPolicy::default(),
+        tile: 256,
+        tiled_threshold: usize::MAX,
+    })
+    .unwrap();
+    assert!(!coord.pjrt_available());
+    let img = Image::synthetic(256, 256, 59);
+    let resp = coord
+        .transform(Request {
+            image: img,
+            wavelet: "cdf97".into(),
+            scheme: Scheme::NsPolyconv,
+            inverse: false,
+            levels: 1,
+        })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::Native);
+}
+
+#[test]
+fn corrupt_manifest_falls_back_to_native() {
+    let dir = std::env::temp_dir().join("dwt_accel_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), b"{ not json !!").unwrap();
+    let coord = Coordinator::new(CoordinatorConfig {
+        artifacts_dir: Some(dir),
+        workers: 1,
+        batch: BatchPolicy::default(),
+        tile: 256,
+        tiled_threshold: usize::MAX,
+    })
+    .unwrap();
+    assert!(!coord.pjrt_available());
+    let resp = coord
+        .transform(Request {
+            image: Image::synthetic(32, 32, 60),
+            wavelet: "cdf53".into(),
+            scheme: Scheme::SepLifting,
+            inverse: false,
+            levels: 1,
+        })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::Native);
+}

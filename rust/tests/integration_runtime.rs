@@ -1,0 +1,112 @@
+//! Cross-layer integration: AOT artifacts (Pallas -> JAX -> HLO) executed
+//! by the rust PJRT runtime must agree with the native rust engine —
+//! the strongest end-to-end correctness signal in the repo.
+//!
+//! These tests are skipped (with a note) when `make artifacts` has not
+//! been run.
+
+use dwt_accel::dwt::{multilevel, Engine, Image};
+use dwt_accel::polyphase::schemes::Scheme;
+use dwt_accel::polyphase::wavelets::Wavelet;
+use dwt_accel::runtime::{default_artifacts_dir, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping integration test: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+#[test]
+fn pjrt_forward_matches_native_every_scheme_and_wavelet() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let img = Image::synthetic(256, 256, 101);
+    for w in Wavelet::all() {
+        let native = Engine::new(Scheme::SepLifting, w.clone()).forward(&img);
+        for s in Scheme::ALL {
+            let name = format!("{}_{}_fwd_256x256", w.name, s.name());
+            let out = rt.execute_image(&name, &img).expect(&name);
+            let err = out.max_abs_diff(&native);
+            assert!(
+                err < 5e-2,
+                "{name}: pjrt vs native max err {err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_optimized_variant_matches_plain() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let img = Image::synthetic(256, 256, 102);
+    for w in Wavelet::all() {
+        let plain = rt
+            .execute_image(&format!("{}_ns_polyconv_fwd_256x256", w.name), &img)
+            .unwrap();
+        let opt = rt
+            .execute_image(&format!("{}_ns_polyconv_opt_fwd_256x256", w.name), &img)
+            .unwrap();
+        let err = opt.max_abs_diff(&plain);
+        assert!(err < 2e-2, "{}: optimized diverges ({err})", w.name);
+    }
+}
+
+#[test]
+fn pjrt_roundtrip_through_inverse_artifact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let img = Image::synthetic(256, 256, 103);
+    for w in Wavelet::all() {
+        let fwd = rt
+            .execute_image(&format!("{}_sep_lifting_fwd_256x256", w.name), &img)
+            .unwrap();
+        let rec = rt
+            .execute_image(&format!("{}_sep_lifting_inv_256x256", w.name), &fwd)
+            .unwrap();
+        let err = rec.max_abs_diff(&img);
+        assert!(err < 1e-2, "{}: roundtrip err {err}", w.name);
+    }
+}
+
+#[test]
+fn pjrt_batched_matches_singles() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let name = "cdf97_ns_polyconv_batch8_fwd_256x256";
+    let batch: Vec<Image> = (0..8).map(|i| Image::synthetic(256, 256, 200 + i)).collect();
+    let outs = rt.execute_batch(name, &batch).expect("batched execute");
+    for (i, (img, out)) in batch.iter().zip(&outs).enumerate() {
+        let single = rt
+            .execute_image("cdf97_ns_polyconv_fwd_256x256", img)
+            .unwrap();
+        let err = out.max_abs_diff(&single);
+        assert!(err < 1e-4, "batch element {i}: err {err}");
+    }
+}
+
+#[test]
+fn pjrt_multilevel_matches_native_pyramid() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let img = Image::synthetic(256, 256, 104);
+    let out = rt
+        .execute_image("cdf97_ns_polyconv_ml3_fwd_256x256", &img)
+        .unwrap();
+    let engine = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97());
+    let native = multilevel::forward(&engine, &img, 3);
+    let err = out.max_abs_diff(&native);
+    assert!(err < 5e-2, "multilevel err {err}");
+    // and the AOT inverse restores the image
+    let rec = rt
+        .execute_image("cdf97_ns_polyconv_ml3_inv_256x256", &out)
+        .unwrap();
+    assert!(rec.max_abs_diff(&img) < 1e-2);
+}
+
+#[test]
+fn execute_rejects_wrong_shape() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let img = Image::synthetic(64, 64, 105);
+    assert!(rt
+        .execute_image("cdf53_sep_lifting_fwd_256x256", &img)
+        .is_err());
+}

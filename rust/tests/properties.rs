@@ -1,0 +1,260 @@
+//! Property-based tests (hand-rolled generator — the proptest crate is
+//! not available in the offline build).  Each property runs hundreds of
+//! randomized cases from a seeded xorshift stream, so failures are
+//! reproducible.
+//!
+//! Invariants covered: polynomial ring laws, scheme equality on random
+//! wavelets (not just the paper's three!), perfect reconstruction,
+//! linearity, tiling equivalence, batcher behaviour.
+
+use dwt_accel::coordinator::batcher::{BatchPolicy, Batcher};
+use dwt_accel::coordinator::tiler::{tiled_forward, TileGrid};
+use dwt_accel::dwt::{Engine, Image, Planes};
+use dwt_accel::polyphase::matrix::LiftKind;
+use dwt_accel::polyphase::schemes::{self, Scheme};
+use dwt_accel::polyphase::wavelets::{LiftingPair, Wavelet};
+use dwt_accel::polyphase::{Poly, PolyMatrix};
+
+/// Deterministic xorshift64* PRNG.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+    fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 40) as f64 / (1u64 << 24) as f64
+    }
+    fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as i64
+    }
+    fn coeff(&mut self) -> f64 {
+        // nonzero coefficient in [-2, 2]
+        let c = (self.uniform() - 0.5) * 4.0;
+        if c.abs() < 1e-3 {
+            0.5
+        } else {
+            c
+        }
+    }
+    fn poly(&mut self, max_terms: usize) -> Poly {
+        let mut p = Poly::zero();
+        for _ in 0..self.range(0, max_terms as i64) {
+            let km = self.range(-2, 2) as i32;
+            let kn = self.range(-2, 2) as i32;
+            p.terms.insert((km, kn), self.coeff());
+        }
+        p
+    }
+    /// A random wavelet: 1-2 lifting pairs with 1-3 taps each.
+    fn wavelet(&mut self) -> Wavelet {
+        let n_pairs = self.range(1, 2) as usize;
+        let pairs = (0..n_pairs)
+            .map(|_| {
+                let taps = |rng: &mut Rng| -> Vec<(i32, f64)> {
+                    let n = rng.range(1, 3);
+                    (0..n)
+                        .map(|i| (rng.range(-1, 1) as i32 + (i == 0) as i32, rng.coeff() * 0.5))
+                        .collect()
+                };
+                LiftingPair {
+                    predict: taps(self),
+                    update: taps(self),
+                }
+            })
+            .collect();
+        Wavelet {
+            name: "random",
+            title: "randomized lifting wavelet",
+            pairs,
+            zeta: 1.0 + self.uniform() * 0.5,
+        }
+    }
+}
+
+#[test]
+fn prop_poly_ring_laws() {
+    let mut rng = Rng::new(1);
+    for _ in 0..300 {
+        let a = rng.poly(5);
+        let b = rng.poly(5);
+        let c = rng.poly(5);
+        assert!(a.mul(&b).approx_eq(&b.mul(&a), 1e-9), "commutativity");
+        let lhs = a.mul(&b.add(&c));
+        let rhs = a.mul(&b).add(&a.mul(&c));
+        assert!(lhs.approx_eq(&rhs, 1e-7), "distributivity");
+        assert!(
+            a.mul(&b).transpose().approx_eq(&a.transpose().mul(&b.transpose()), 1e-9),
+            "transpose is a ring homomorphism"
+        );
+        assert_eq!(a.transpose().transpose(), a, "transpose involutive");
+        assert_eq!(a.reverse().reverse(), a, "reverse involutive");
+    }
+}
+
+#[test]
+fn prop_matrix_mul_associative() {
+    let mut rng = Rng::new(2);
+    for _ in 0..60 {
+        let taps = |rng: &mut Rng| vec![(0i32, rng.coeff()), (1, rng.coeff())];
+        let a = PolyMatrix::lift_h(LiftKind::Predict, &taps(&mut rng));
+        let b = PolyMatrix::lift_v(LiftKind::Update, &taps(&mut rng));
+        let c = PolyMatrix::spatial_predict(&taps(&mut rng));
+        let lhs = a.mul(&b).mul(&c);
+        let rhs = a.mul(&b.mul(&c));
+        assert!(lhs.approx_eq(&rhs, 1e-7));
+    }
+}
+
+#[test]
+fn prop_all_schemes_equal_on_random_wavelets() {
+    // The fusion identities hold for ANY lifting wavelet, not just the
+    // paper's three — a stronger statement than the paper makes.
+    let mut rng = Rng::new(3);
+    for case in 0..25 {
+        let w = rng.wavelet();
+        let canon = schemes::total_matrix(&w);
+        for s in Scheme::ALL {
+            let total = PolyMatrix::chain(&schemes::build(s, &w));
+            assert!(
+                total.approx_eq(&canon, 1e-6),
+                "case {case}: {} diverges on random wavelet {:?}",
+                s.name(),
+                w.pairs
+            );
+        }
+        // inverse identity
+        for s in Scheme::ALL {
+            let mut chain = schemes::build(s, &w);
+            chain.extend(schemes::build_inverse(s, &w));
+            assert!(
+                PolyMatrix::chain(&chain).approx_eq(&PolyMatrix::identity(), 1e-6),
+                "case {case}: {} inverse fails",
+                s.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_numeric_roundtrip_random_wavelets() {
+    let mut rng = Rng::new(4);
+    for case in 0..15 {
+        let w = rng.wavelet();
+        let scheme = Scheme::ALL[(rng.next_u64() % 6) as usize];
+        let engine = Engine::new(scheme, w);
+        let img = Image::synthetic(32, 32, rng.next_u64());
+        let rec = engine.inverse(&engine.forward(&img));
+        let err = rec.max_abs_diff(&img);
+        // random coefficients can be badly conditioned; scale tolerance
+        // with the coefficient magnitude of the forward output
+        let fwd_mag = engine
+            .forward(&img)
+            .data
+            .iter()
+            .fold(0.0f32, |a, &b| a.max(b.abs()));
+        let tol = (fwd_mag * 1e-5).max(2e-2);
+        assert!(err < tol, "case {case} ({}): err {err} tol {tol}", engine.scheme.name());
+    }
+}
+
+#[test]
+fn prop_linearity_of_engine() {
+    let mut rng = Rng::new(5);
+    for _ in 0..10 {
+        let w = Wavelet::all()[(rng.next_u64() % 3) as usize].clone();
+        let s = Scheme::ALL[(rng.next_u64() % 6) as usize];
+        let engine = Engine::new(s, w);
+        let x = Image::synthetic(16, 16, rng.next_u64());
+        let y = Image::synthetic(16, 16, rng.next_u64());
+        let a = 1.0 + rng.uniform() as f32;
+        let mut axy = Image::new(16, 16);
+        for i in 0..x.data.len() {
+            axy.data[i] = a * x.data[i] + y.data[i];
+        }
+        let lhs = engine.forward(&axy);
+        let fx = engine.forward(&x);
+        let fy = engine.forward(&y);
+        for i in 0..lhs.data.len() {
+            let rhs = a * fx.data[i] + fy.data[i];
+            assert!((lhs.data[i] - rhs).abs() < 0.05, "nonlinearity at {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_tiled_equals_monolithic_random_sizes() {
+    let mut rng = Rng::new(6);
+    for case in 0..8 {
+        let w = Wavelet::all()[(rng.next_u64() % 3) as usize].clone();
+        let tiles = [16usize, 32][(rng.next_u64() % 2) as usize];
+        let (tw, th) = (
+            tiles * rng.range(2, 4) as usize,
+            tiles * rng.range(2, 4) as usize,
+        );
+        let engine = Engine::new(Scheme::SepLifting, w);
+        let img = Image::synthetic(tw, th, rng.next_u64());
+        let mono = engine.forward(&img);
+        let tiled = tiled_forward(&engine, &img, tiles);
+        assert!(
+            tiled.max_abs_diff(&mono) < 1e-3,
+            "case {case}: {tw}x{th} tile {tiles}"
+        );
+    }
+}
+
+#[test]
+fn prop_split_merge_roundtrip_random() {
+    let mut rng = Rng::new(7);
+    for _ in 0..50 {
+        let w = 2 * rng.range(1, 40) as usize;
+        let h = 2 * rng.range(1, 40) as usize;
+        let img = Image::synthetic(w, h, rng.next_u64());
+        assert_eq!(Planes::split(&img).merge(), img);
+        let packed = Planes::split(&img).to_packed();
+        assert_eq!(Planes::from_packed(&packed).to_packed(), packed);
+    }
+}
+
+#[test]
+fn prop_batcher_never_exceeds_max_and_preserves_order() {
+    let mut rng = Rng::new(8);
+    for _ in 0..100 {
+        let max_batch = rng.range(1, 16) as usize;
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_secs(0),
+        });
+        let n = rng.range(0, 64) as usize;
+        for i in 0..n {
+            b.push(i);
+        }
+        let mut seen = Vec::new();
+        while !b.is_empty() {
+            let batch = b.take_batch();
+            assert!(!batch.is_empty() && batch.len() <= max_batch);
+            seen.extend(batch);
+        }
+        assert_eq!(seen, (0..n).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn prop_halo_suffices_for_every_random_wavelet() {
+    // TileGrid::halo_for must bound the true reach of the total matrix
+    let mut rng = Rng::new(9);
+    for _ in 0..40 {
+        let w = rng.wavelet();
+        let halo = TileGrid::halo_for(&w);
+        let (t, b, l, r) = schemes::total_matrix(&w).halo();
+        let reach = t.max(b).max(l).max(r) as usize;
+        assert!(halo >= 2 * reach, "halo {halo} < 2x reach {reach}");
+        assert!(halo % 2 == 0);
+    }
+}
