@@ -1,13 +1,22 @@
 //! Bench target: native engine micro-benchmarks — the L3 hot path.
-//! Used by the §Perf iteration log in EXPERIMENTS.md: per-scheme
-//! transform wallclock, the specialized lifting fast path vs the
-//! generic evaluator, tiled vs monolithic, and memcpy roofline.
+//! Per-scheme planned (KernelPlan) vs legacy (apply_chain) execution,
+//! the lifting kernel library vs the generic evaluator, tiled vs
+//! monolithic, and the memcpy roofline.  Emits `BENCH_native.json` so
+//! future PRs can track the planned-vs-legacy speedup trajectory.
 
-use dwt_accel::benchutil::{bench, default_budget, gbs, Table};
+use dwt_accel::benchutil::{bench, default_budget, gbs, Stats, Table};
 use dwt_accel::coordinator::tiler;
-use dwt_accel::dwt::{apply, lifting, Engine, Image, Planes};
+use dwt_accel::dwt::{apply, lifting, Engine, Image, PlanVariant, Planes};
 use dwt_accel::polyphase::schemes::{self, Scheme};
 use dwt_accel::polyphase::wavelets::Wavelet;
+
+struct SchemeRecord {
+    wavelet: &'static str,
+    scheme: &'static str,
+    planned_ms: f64,
+    legacy_ms: f64,
+    macs_per_pixel: f64,
+}
 
 fn main() {
     let side = 1024usize;
@@ -28,13 +37,14 @@ fn main() {
         5,
         2000,
     );
+    let memcpy_gbs = gbs(bytes, s.median);
     println!(
         "memcpy roofline:            {:>8.2} GB/s ({:.3} ms)",
-        gbs(bytes, s.median),
+        memcpy_gbs,
         s.median_ms()
     );
 
-    // specialized lifting fast path vs generic matrix evaluator
+    // lifting kernel library vs generic matrix evaluator
     let w = Wavelet::cdf97();
     let planes0 = Planes::split(&img);
     let s_fast = bench(
@@ -68,14 +78,17 @@ fn main() {
         s_generic.median.as_secs_f64() / s_fast.median.as_secs_f64()
     );
 
-    // per-scheme, per-wavelet forward
-    println!();
-    let t = Table::new(&[7, 13, 10, 10, 9]);
-    t.header(&["wavelet", "scheme", "ms", "GB/s", "MACs/pel"]);
+    // planned (KernelPlan) vs legacy (apply_chain) per scheme/wavelet:
+    // the seed's non-SepLifting execution path was exactly this legacy
+    // chain, so `speedup` tracks what the plan layer bought
+    println!("\n--- planned (KernelPlan) vs legacy (apply_chain) forward ---\n");
+    let t = Table::new(&[7, 13, 10, 10, 8, 9]);
+    t.header(&["wavelet", "scheme", "plan ms", "legacy ms", "speedup", "MACs/pel"]);
+    let mut records: Vec<SchemeRecord> = Vec::new();
     for w in Wavelet::all() {
         for scheme in Scheme::ALL {
             let engine = Engine::new(scheme, w.clone());
-            let st = bench(
+            let s_plan: Stats = bench(
                 || {
                     std::hint::black_box(engine.forward(std::hint::black_box(&img)));
                 },
@@ -83,13 +96,52 @@ fn main() {
                 3,
                 200,
             );
+            // the seed executed SepLifting through the hand-scheduled
+            // fast path, everything else through apply_chain — bench
+            // the true seed baseline per scheme so the recorded
+            // speedup tracks what the plan layer actually bought
+            let legacy_steps = schemes::build(scheme, &w);
+            let s_legacy: Stats = if scheme == Scheme::SepLifting {
+                bench(
+                    || {
+                        let mut p = Planes::split(std::hint::black_box(&img));
+                        lifting::forward_in_place(&w, &mut p);
+                        std::hint::black_box(p.to_packed());
+                    },
+                    default_budget(),
+                    3,
+                    200,
+                )
+            } else {
+                bench(
+                    || {
+                        let planes = apply::apply_chain(
+                            &legacy_steps,
+                            &Planes::split(std::hint::black_box(&img)),
+                        );
+                        std::hint::black_box(planes.to_packed());
+                    },
+                    default_budget(),
+                    3,
+                    200,
+                )
+            };
+            let speedup = s_legacy.median.as_secs_f64() / s_plan.median.as_secs_f64();
             t.row(&[
                 w.name.into(),
                 scheme.name().into(),
-                format!("{:.2}", st.median_ms()),
-                format!("{:.3}", gbs(bytes, st.median)),
+                format!("{:.2}", s_plan.median_ms()),
+                format!("{:.2}", s_legacy.median_ms()),
+                format!("x{:.2}", speedup),
                 format!("{:.1}", engine.macs_per_pixel()),
             ]);
+            records.push(SchemeRecord {
+                wavelet: w.name,
+                scheme: scheme.name(),
+                planned_ms: s_plan.median_ms(),
+                legacy_ms: s_legacy.median_ms(),
+                macs_per_pixel: engine.macs_per_pixel(),
+            });
         }
     }
 
@@ -117,4 +169,50 @@ fn main() {
         s_tiled.median_ms(),
         s_tiled.median.as_secs_f64() / s_mono.median.as_secs_f64()
     );
+
+    // barrier/term structure of the executed plans (cdf97)
+    println!("\nplan structure (cdf97): scheme, barriers, table ops/quad, executed terms/quad");
+    for scheme in Scheme::ALL {
+        let e = Engine::new(scheme, Wavelet::cdf97());
+        let p = e.plan(PlanVariant::Optimized);
+        println!(
+            "  {:<13} barriers={:<2} ops={:<4} exec={:<4}",
+            scheme.name(),
+            p.n_barriers(),
+            p.total_ops(),
+            p.exec_ops()
+        );
+    }
+
+    let path = "BENCH_native.json";
+    match std::fs::write(path, to_json(side, memcpy_gbs, &records)) {
+        Ok(()) => println!("\nwrote {path} ({} scheme records)", records.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}
+
+/// Hand-rolled JSON (no serde in the offline build).
+fn to_json(side: usize, memcpy_gbs: f64, records: &[SchemeRecord]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"native_engine\",\n");
+    out.push_str(&format!("  \"side\": {side},\n"));
+    out.push_str(&format!("  \"memcpy_gbs\": {memcpy_gbs:.3},\n"));
+    out.push_str("  \"schemes\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        let speedup = r.legacy_ms / r.planned_ms;
+        out.push_str(&format!(
+            "    {{\"wavelet\": \"{}\", \"scheme\": \"{}\", \"planned_ms\": {:.4}, \
+             \"legacy_ms\": {:.4}, \"speedup\": {:.3}, \"macs_per_pixel\": {:.2}}}{}\n",
+            r.wavelet,
+            r.scheme,
+            r.planned_ms,
+            r.legacy_ms,
+            speedup,
+            r.macs_per_pixel,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
 }

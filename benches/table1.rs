@@ -27,8 +27,9 @@ fn main() {
             3,
             200,
         );
-        // ops per output quadruple -> total kop for the image
-        let kops = row.plain as f64 * (img.width * img.height) as f64 / 4.0 / 1e3;
+        // MACs/pixel of the plan the engine executes (agrees with the
+        // optimized column by construction) -> total kop for the image
+        let kops = engine.macs_per_pixel() * (img.width * img.height) as f64 / 1e3;
         t.row(&[
             row.wavelet.clone(),
             row.scheme.name().into(),

@@ -5,7 +5,7 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{Backend, Metrics};
 use super::tiler::TileGrid;
 use super::worker::WorkerPool;
-use crate::dwt::{Engine, Image};
+use crate::dwt::{Boundary, Engine, Image};
 use crate::polyphase::schemes::Scheme;
 use crate::polyphase::wavelets::Wavelet;
 use crate::runtime::Runtime;
@@ -92,7 +92,9 @@ pub struct Coordinator {
     /// manifest index: (wavelet, scheme) -> (single entry, batched entry)
     artifact_index: HashMap<(String, String), (String, Option<String>)>,
     pool: WorkerPool,
-    engines: Mutex<HashMap<(Scheme, &'static str), Arc<Engine>>>,
+    /// Compiled-plan cache: engines (each holding its forward / inverse
+    /// / optimized `KernelPlan`s) keyed by (scheme, wavelet, boundary).
+    engines: Mutex<HashMap<(Scheme, &'static str, Boundary), Arc<Engine>>>,
 }
 
 impl Coordinator {
@@ -162,14 +164,39 @@ impl Coordinator {
         self.exec_tx.is_some()
     }
 
-    fn engine(&self, scheme: Scheme, wavelet: &Wavelet) -> Arc<Engine> {
-        let key = (scheme, wavelet.name);
+    fn engine(&self, scheme: Scheme, wavelet: &Wavelet, boundary: Boundary) -> Arc<Engine> {
+        let key = (scheme, wavelet.name, boundary);
         if let Some(e) = self.engines.lock().unwrap().get(&key) {
             return e.clone();
         }
-        let e = Arc::new(Engine::new(scheme, wavelet.clone()));
+        let e = Arc::new(Engine::with_boundary(scheme, wavelet.clone(), boundary));
         self.engines.lock().unwrap().insert(key, e.clone());
         e
+    }
+
+    /// Reject geometry the polyphase engine cannot represent, before
+    /// any work is scheduled (a 33x32 request must be an `Err`, not a
+    /// panic deep inside `Planes::split` on a worker thread).
+    fn validate(request: &Request) -> Result<()> {
+        let (w, h) = (request.image.width, request.image.height);
+        if w == 0 || h == 0 || w % 2 != 0 || h % 2 != 0 {
+            return Err(anyhow!(
+                "image sides must be even and nonzero, got {w}x{h}"
+            ));
+        }
+        let levels = request.levels.max(1);
+        if levels > 1 {
+            if levels >= usize::BITS as usize {
+                return Err(anyhow!("levels {levels} out of range"));
+            }
+            let div = 1usize << levels;
+            if w % div != 0 || h % div != 0 {
+                return Err(anyhow!(
+                    "image {w}x{h} not divisible by 2^{levels} for a {levels}-level pyramid"
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// Submit a request; returns a handle to await the response on.
@@ -183,6 +210,10 @@ impl Coordinator {
                 return handle;
             }
         };
+        if let Err(e) = Self::validate(&request) {
+            let _ = respond.send(Err(e));
+            return handle;
+        }
         // route 1: PJRT artifact (forward, serve size, single level)
         if !request.inverse && request.levels <= 1 {
             if let (Some(tx), Some((sh, sw))) = (&self.exec_tx, self.serve_size) {
@@ -219,8 +250,10 @@ impl Coordinator {
         handle
     }
 
+    /// The native fallback paths: whole-image or tiled, both executing
+    /// the engine's cached compiled plans directly.
     fn native_async(&self, wavelet: Wavelet, request: Request, respond: Respond, start: Instant) {
-        let engine = self.engine(request.scheme, &wavelet);
+        let engine = self.engine(request.scheme, &wavelet, Boundary::Periodic);
         let metrics = self.metrics.clone();
         let tile = self.cfg.tile;
         let use_tiled = !request.inverse

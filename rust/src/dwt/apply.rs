@@ -1,8 +1,115 @@
-//! Generic polyphase-matrix step evaluator with periodic indexing —
-//! the numeric twin of `ref.apply_step` in the Python oracle.
+//! The plan's stencil executor, plus the legacy generic step evaluator.
+//!
+//! [`run_stencil`] executes one fused [`Stencil`] kernel of a
+//! [`crate::dwt::plan::KernelPlan`] into a caller-provided buffer
+//! (double-buffering: no per-step allocation), with either periodic or
+//! whole-sample symmetric indexing.
+//!
+//! [`apply_step`]/[`apply_chain`] are the original matrix-walking
+//! evaluator — the numeric twin of `ref.apply_step` in the Python
+//! oracle — retained as the reference/legacy path the benches compare
+//! the compiled plans against.
 
+use super::lifting::{Axis, Boundary};
+use super::plan::{fold_sym, plane_is_odd, Stencil};
 use super::planes::Planes;
 use crate::polyphase::{Poly, PolyMatrix};
+
+/// Execute one fused stencil kernel: `out` is fully overwritten.
+pub fn run_stencil(st: &Stencil, inp: &Planes, out: &mut Planes, boundary: Boundary) {
+    debug_assert!(inp.w2 == out.w2 && inp.h2 == out.h2);
+    match boundary {
+        Boundary::Periodic => run_stencil_periodic(st, inp, out),
+        Boundary::Symmetric => run_stencil_symmetric(st, inp, out),
+    }
+}
+
+/// Periodic fused stencil: row-blocked accumulation (every term of an
+/// output row is applied while the row is hot in L1), shifts resolved
+/// once per plane.
+///
+/// Deliberately mirrors [`apply_step`]'s indexing rather than sharing
+/// code with it: `apply_step` is the independent reference the
+/// plan-vs-legacy equivalence tests compare against, so the two bodies
+/// must stay in numerical lockstep but not in implementation.
+fn run_stencil_periodic(st: &Stencil, inp: &Planes, out: &mut Planes) {
+    let (w2, h2) = (inp.w2, inp.h2);
+    for i in 0..4 {
+        // resolve the plan's raw offsets against this plane size
+        let terms: Vec<(usize, usize, usize, f32)> = st.rows[i]
+            .iter()
+            .map(|&(j, km, kn, c)| {
+                (
+                    j,
+                    km.rem_euclid(w2 as i32) as usize,
+                    kn.rem_euclid(h2 as i32) as usize,
+                    c,
+                )
+            })
+            .collect();
+        let plane = &mut out.p[i];
+        plane.fill(0.0);
+        for y in 0..h2 {
+            let dst = &mut plane[y * w2..(y + 1) * w2];
+            for &(j, shift_col, shift_row, c) in &terms {
+                let sy = (y + shift_row) % h2;
+                let src = &inp.p[j][sy * w2..(sy + 1) * w2];
+                if shift_col == 0 {
+                    for x in 0..w2 {
+                        dst[x] += c * src[x];
+                    }
+                } else {
+                    let head = w2 - shift_col;
+                    let (s_hi, s_lo) = (&src[shift_col..], &src[..shift_col]);
+                    for x in 0..head {
+                        dst[x] += c * s_hi[x];
+                    }
+                    for x in head..w2 {
+                        dst[x] += c * s_lo[x - head];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Symmetric fused stencil: every read is folded per the source plane's
+/// parity (whole-sample symmetric extension of the interleaved signal).
+/// Fold indices are tabulated once per term — O(terms * (w + h)) fold
+/// evaluations — and accumulation is row-blocked like the periodic
+/// executor, so each output row takes all terms while hot in L1.
+fn run_stencil_symmetric(st: &Stencil, inp: &Planes, out: &mut Planes) {
+    let (w2, h2) = (inp.w2, inp.h2);
+    for i in 0..4 {
+        // (src plane, x fold table, y fold table, coeff) per term
+        let terms: Vec<(usize, Vec<usize>, Vec<usize>, f32)> = st.rows[i]
+            .iter()
+            .map(|&(j, km, kn, c)| {
+                let hodd = plane_is_odd(j, Axis::Horizontal);
+                let vodd = plane_is_odd(j, Axis::Vertical);
+                let xi = (0..w2)
+                    .map(|x| fold_sym(x as i64 + km as i64, w2 as i64, hodd))
+                    .collect();
+                let yi = (0..h2)
+                    .map(|y| fold_sym(y as i64 + kn as i64, h2 as i64, vodd))
+                    .collect();
+                (j, xi, yi, c)
+            })
+            .collect();
+        let plane = &mut out.p[i];
+        plane.fill(0.0);
+        for y in 0..h2 {
+            let drow = &mut plane[y * w2..(y + 1) * w2];
+            for (j, xi, yi, c) in &terms {
+                let sy = yi[y];
+                let srow = &inp.p[*j][sy * w2..(sy + 1) * w2];
+                for x in 0..w2 {
+                    drow[x] += *c * srow[xi[x]];
+                }
+            }
+        }
+    }
+}
 
 /// `out += c * shift(inp, km, kn)` with periodic wrap on the plane.
 fn accumulate_shifted(

@@ -1,41 +1,98 @@
-//! The scheme engine: run any (scheme, wavelet) pair forward/inverse on
-//! an image, through either the generic matrix evaluator or the
-//! specialized lifting fast path.
+//! The scheme engine: compile any (scheme, wavelet, boundary)
+//! combination to [`KernelPlan`]s once, then run forward / inverse /
+//! optimized transforms through the single plan executor.  No
+//! per-scheme special cases remain: separable lifting, the
+//! non-separable schemes, and the section-5 optimized groupings all
+//! execute the same IR.
 
-use super::apply::apply_chain;
-use super::lifting;
+use super::lifting::Boundary;
+use super::plan::KernelPlan;
 use super::planes::{Image, Planes};
 use crate::polyphase::schemes::{self, Scheme};
 use crate::polyphase::wavelets::Wavelet;
 use crate::polyphase::PolyMatrix;
 
-/// Cached step matrices for one (scheme, wavelet) combination.
+/// Which of the engine's cached plans to inspect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanVariant {
+    /// Textbook step chain of the scheme (the seed `apply_chain`
+    /// structure), compiled.
+    Forward,
+    /// Inverse step chain, compiled.
+    Inverse,
+    /// What [`Engine::forward`] runs: the section-5 optimized
+    /// groupings on periodic boundaries; on symmetric boundaries this
+    /// is the plain plan (the `P0 + P1` split is not fold-exact there).
+    Optimized,
+}
+
+/// Cached step matrices and compiled plans for one
+/// (scheme, wavelet, boundary) combination.
 #[derive(Debug, Clone)]
 pub struct Engine {
     pub scheme: Scheme,
     pub wavelet: Wavelet,
+    boundary: Boundary,
     forward_steps: Vec<PolyMatrix>,
-    inverse_steps: Vec<PolyMatrix>,
-    optimized_groups: Vec<Vec<PolyMatrix>>,
+    forward_plan: KernelPlan,
+    inverse_plan: KernelPlan,
+    optimized_plan: KernelPlan,
 }
 
 impl Engine {
     pub fn new(scheme: Scheme, wavelet: Wavelet) -> Self {
+        Self::with_boundary(scheme, wavelet, Boundary::Periodic)
+    }
+
+    /// Compile the engine's plans with explicit boundary handling.
+    pub fn with_boundary(scheme: Scheme, wavelet: Wavelet, boundary: Boundary) -> Self {
         let forward_steps = schemes::build(scheme, &wavelet);
         let inverse_steps = schemes::build_inverse(scheme, &wavelet);
         let optimized_groups = schemes::build_optimized(scheme, &wavelet);
+        let forward_plan = KernelPlan::from_steps(&forward_steps, boundary);
+        let inverse_plan = KernelPlan::from_steps(&inverse_steps, boundary);
+        let optimized_plan = match boundary {
+            Boundary::Periodic => KernelPlan::compile(&optimized_groups, boundary),
+            // the §5 P0+P1 split assumes shift-invariance: its sub-steps
+            // are not WS-symmetric filters, so under the symmetric
+            // extension only the full-step chain is fold-exact — the
+            // optimized variant degrades to the plain plan rather than
+            // caching a border-wrong program
+            Boundary::Symmetric => forward_plan.clone(),
+        };
         Self {
             scheme,
             wavelet,
+            boundary,
             forward_steps,
-            inverse_steps,
-            optimized_groups,
+            forward_plan,
+            inverse_plan,
+            optimized_plan,
         }
+    }
+
+    /// Boundary handling every plan of this engine was compiled with.
+    pub fn boundary(&self) -> Boundary {
+        self.boundary
     }
 
     /// Number of barrier-separated steps (Table 1 "steps" column).
     pub fn n_steps(&self) -> usize {
         self.forward_steps.len()
+    }
+
+    /// The scheme's textbook step matrices (legacy/reference path).
+    pub fn forward_steps(&self) -> &[PolyMatrix] {
+        &self.forward_steps
+    }
+
+    /// One of the engine's cached compiled plans.
+    pub fn plan(&self, variant: PlanVariant) -> &KernelPlan {
+        match variant {
+            PlanVariant::Forward => &self.forward_plan,
+            PlanVariant::Inverse => &self.inverse_plan,
+            PlanVariant::Optimized => &self.optimized_plan,
+        }
     }
 
     /// Forward transform -> packed quadrant image `[[LL, HL], [LH, HH]]`.
@@ -44,26 +101,30 @@ impl Engine {
     }
 
     /// Forward transform -> polyphase planes (LL, HL, LH, HH).
+    ///
+    /// Executes the optimized plan: on periodic boundaries the
+    /// section-5 groupings (identical coefficients, fewer evaluated
+    /// terms); on symmetric boundaries the fold-exact full-step chain
+    /// (see [`Engine::with_boundary`]).
     pub fn forward_planes(&self, img: &Image) -> Planes {
-        // the lifting fast path is numerically identical; use it for the
-        // separable lifting scheme (the hot path), generic otherwise
-        if self.scheme == Scheme::SepLifting {
-            let mut planes = Planes::split(img);
-            lifting::forward_in_place(&self.wavelet, &mut planes);
-            return planes;
-        }
-        apply_chain(&self.forward_steps, &Planes::split(img))
+        let mut planes = Planes::split(img);
+        self.optimized_plan.execute(&mut planes);
+        planes
     }
 
     /// Forward transform using the section-5 optimized structures
-    /// (identical outputs, different sub-step grouping).
+    /// (the same plan [`Engine::forward`] executes on periodic
+    /// boundaries; kept as an explicit entry point for the benches and
+    /// the cost-model cross-checks).
     pub fn forward_optimized(&self, img: &Image) -> Planes {
+        self.forward_planes(img)
+    }
+
+    /// Forward transform through the textbook (non-optimized) step
+    /// chain — the seed execution structure, compiled.
+    pub fn forward_plain(&self, img: &Image) -> Planes {
         let mut planes = Planes::split(img);
-        for group in &self.optimized_groups {
-            for m in group {
-                planes = super::apply::apply_step(m, &planes);
-            }
-        }
+        self.forward_plan.execute(&mut planes);
         planes
     }
 
@@ -74,19 +135,26 @@ impl Engine {
 
     /// Inverse transform from subband planes.
     pub fn inverse_planes(&self, planes: &Planes) -> Image {
-        if self.scheme == Scheme::SepLifting {
-            let mut p = planes.clone();
-            lifting::inverse_in_place(&self.wavelet, &mut p);
-            return p.merge();
-        }
-        apply_chain(&self.inverse_steps, planes).merge()
+        let mut p = planes.clone();
+        self.inverse_plan.execute(&mut p);
+        p.merge()
     }
 
     /// Arithmetic cost of one full image transform in multiply-accumulate
-    /// operations per input pixel (plain counting mode / 4 components).
+    /// operations per input pixel (4 components per quadruple), for the
+    /// plan [`Engine::forward`] actually executes.  On periodic
+    /// boundaries that is the optimized-structure count, which agrees
+    /// with `opcount::count(scheme, wavelet, Mode::Optimized)` (asserted
+    /// in tests and reproduced by `benches/table1.rs`); on symmetric
+    /// boundaries the executed plan is the plain chain, so the plain
+    /// count is reported.
     pub fn macs_per_pixel(&self) -> f64 {
-        let ops: usize = self.forward_steps.iter().map(|m| m.n_ops()).sum();
-        ops as f64 / 4.0
+        self.optimized_plan.macs_per_pixel()
+    }
+
+    /// Cost of the textbook step chain (the seed's counting).
+    pub fn macs_per_pixel_plain(&self) -> f64 {
+        self.forward_plan.macs_per_pixel()
     }
 }
 
@@ -140,5 +208,137 @@ mod tests {
         let conv = Engine::new(Scheme::SepConv, w.clone()).macs_per_pixel();
         let nsconv = Engine::new(Scheme::NsConv, w).macs_per_pixel();
         assert!(lifting < conv && conv < nsconv);
+    }
+
+    #[test]
+    fn plain_plan_matches_legacy_apply_chain() {
+        // the compiled textbook chain is the seed evaluator, verbatim
+        for w in Wavelet::all() {
+            let img = Image::synthetic(32, 32, 40);
+            for s in Scheme::ALL {
+                let e = Engine::new(s, w.clone());
+                let legacy = crate::dwt::apply::apply_chain(
+                    e.forward_steps(),
+                    &Planes::split(&img),
+                );
+                let planned = e.forward_plain(&img);
+                let err = planned.max_abs_diff(&legacy);
+                assert!(err < 1e-2, "{} {}: err {}", w.name, s.name(), err);
+            }
+        }
+    }
+
+    #[test]
+    fn sep_lifting_plan_matches_hand_scheduled_fast_path() {
+        for w in Wavelet::all() {
+            let img = Image::synthetic(32, 48, 41);
+            let mut planes = Planes::split(&img);
+            crate::dwt::lifting::forward_in_place(&w, &mut planes);
+            let got = Engine::new(Scheme::SepLifting, w.clone()).forward_planes(&img);
+            let err = got.max_abs_diff(&planes);
+            assert!(err < 1e-3, "{}: plan vs fast path err {}", w.name, err);
+        }
+    }
+
+    #[test]
+    fn macs_agree_with_opcount_optimized_mode() {
+        use crate::polyphase::opcount::{count, Mode};
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                let e = Engine::new(s, w.clone());
+                let plan_macs = e.macs_per_pixel();
+                let table_macs = count(s, &w, Mode::Optimized) as f64 / 4.0;
+                assert_eq!(
+                    plan_macs, table_macs,
+                    "{} {}: plan {} vs table {}",
+                    w.name,
+                    s.name(),
+                    plan_macs,
+                    table_macs
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod boundary_tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_roundtrip_every_scheme() {
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                let e = Engine::with_boundary(s, w.clone(), Boundary::Symmetric);
+                let img = Image::synthetic(32, 48, 62);
+                let rec = e.inverse(&e.forward(&img));
+                let err = rec.max_abs_diff(&img);
+                assert!(
+                    err < 2e-2,
+                    "{} {}: symmetric roundtrip err {}",
+                    w.name,
+                    s.name(),
+                    err
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_all_schemes_equal_sep_lifting_golden() {
+        // the WS-symmetric extension commutes with the (symmetric)
+        // lifting filters, so the fused non-separable plans must agree
+        // with the separable-lifting reference at every pixel — borders
+        // included
+        for w in Wavelet::all() {
+            let img = Image::synthetic(32, 48, 63);
+            let golden =
+                Engine::with_boundary(Scheme::SepLifting, w.clone(), Boundary::Symmetric)
+                    .forward_planes(&img);
+            for s in Scheme::ALL {
+                let e = Engine::with_boundary(s, w.clone(), Boundary::Symmetric);
+                let got = e.forward_planes(&img);
+                let err = got.max_abs_diff(&golden);
+                assert!(err < 2e-2, "{} {}: symmetric err {}", w.name, s.name(), err);
+                let plain = e.forward_plain(&img);
+                let err = plain.max_abs_diff(&golden);
+                assert!(
+                    err < 2e-2,
+                    "{} {}: symmetric plain-chain err {}",
+                    w.name,
+                    s.name(),
+                    err
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_plan_matches_hand_scheduled_lifting() {
+        for w in Wavelet::all() {
+            let img = Image::synthetic(48, 32, 64);
+            let mut reference = Planes::split(&img);
+            crate::dwt::lifting::forward_in_place_b(&w, &mut reference, Boundary::Symmetric);
+            let got = Engine::with_boundary(Scheme::SepLifting, w.clone(), Boundary::Symmetric)
+                .forward_planes(&img);
+            let err = got.max_abs_diff(&reference);
+            assert!(err < 1e-3, "{}: err {}", w.name, err);
+        }
+    }
+
+    #[test]
+    fn symmetric_differs_from_periodic_at_borders() {
+        let img = Image::synthetic(32, 32, 65);
+        let w = Wavelet::cdf97();
+        for s in Scheme::ALL {
+            let per = Engine::new(s, w.clone()).forward_planes(&img);
+            let sym = Engine::with_boundary(s, w.clone(), Boundary::Symmetric)
+                .forward_planes(&img);
+            assert!(
+                per.max_abs_diff(&sym) > 1e-3,
+                "{}: symmetric should differ from periodic",
+                s.name()
+            );
+        }
     }
 }

@@ -1,11 +1,11 @@
-//! Hand-optimized separable-lifting fast path — the native engine's hot
-//! loop.  Operates in place on the four polyphase planes with periodic
-//! boundary handling, one 1-D lifting step at a time.
-//!
-//! This is the baseline implementation the coordinator uses when no AOT
-//! artifact matches a request, and the subject of the §Perf iteration
-//! log in EXPERIMENTS.md.
+//! The in-place 1-D lifting kernel library — the native engine's hot
+//! loop.  [`lift_axis_b`] is the kernel every [`crate::dwt::plan`]
+//! `Kernel::Lift` dispatches into; [`forward_in_place`] /
+//! [`inverse_in_place`] remain as the hand-scheduled separable-lifting
+//! reference (numerically identical to the compiled plan, asserted by
+//! tests) and the subject of the §Perf iteration log in EXPERIMENTS.md.
 
+use super::plan::fold_sym;
 use super::planes::Planes;
 use crate::polyphase::wavelets::Wavelet;
 
@@ -18,42 +18,29 @@ pub enum Axis {
     Vertical,
 }
 
-/// Boundary handling for the lifting fast path.
+/// Boundary handling, threaded through every compiled [`crate::dwt::plan::KernelPlan`].
 ///
 /// `Periodic` is the repo-wide default (exactly matches the polyphase
 /// algebra, the Pallas kernels, and the AOT artifacts).  `Symmetric` is
-/// the JPEG 2000 whole-sample symmetric extension — an engine extension
-/// the paper's JPEG 2000 use-case needs; it is only available through
-/// the lifting fast path because non-separable fusion identities assume
-/// shift-invariance (periodicity).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+/// the JPEG 2000 whole-sample symmetric extension the paper's JPEG 2000
+/// use-case needs; the plan layer folds every kernel read per source
+/// plane parity, so it is available to all six schemes (the wavelets'
+/// lifting filters are WS-symmetric, which keeps the fused non-separable
+/// identities valid under the folded extension).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Boundary {
     #[default]
     Periodic,
     Symmetric,
 }
 
-/// Index folding on a polyphase component plane of length `n`, for the
-/// whole-sample symmetric extension of the *interleaved* signal.
-///
-/// Derivation (signal length 2n, x[-i] = x[i], x[2n-1+i] = x[2n-1-i]):
-/// even component: e[-k] = e[k],     e[n-1+k] = e[n-k]
-/// odd  component: o[-k] = o[k-1],   o[n-1+k] = o[n-1-k]
-#[inline]
-fn fold_sym(idx: i64, n: i64, src_is_odd: bool) -> usize {
-    let mut i = idx;
-    // at most two folds are ever needed for |k| <= 2 and n >= 2
-    for _ in 0..4 {
-        if i < 0 {
-            i = if src_is_odd { -i - 1 } else { -i };
-        } else if i >= n {
-            i = if src_is_odd { 2 * n - 2 - i } else { 2 * n - 1 - i };
-        } else {
-            break;
-        }
-    }
-    i.clamp(0, n - 1) as usize
-}
+// The whole-sample symmetric index fold is `plan::fold_sym` (imported
+// above) — one shared implementation for the lift kernels and the
+// stencil executor, so the two paths cannot drift at borders.
+//
+// Derivation (signal length 2n, x[-i] = x[i], x[2n-1+i] = x[2n-1-i]):
+// even component: e[-k] = e[k],     e[n-1+k] = e[n-k]
+// odd  component: o[-k] = o[k-1],   o[n-1+k] = o[n-1-k]
 
 /// `dst[i] += sum_k c_k src[i + k]` along `axis`, periodic, in place.
 ///

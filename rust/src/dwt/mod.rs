@@ -1,12 +1,19 @@
-//! Native (pure-rust) DWT engine: every scheme of the paper executed
-//! numerically on polyphase component planes.
+//! Native (pure-rust) DWT engine: every scheme of the paper compiled to
+//! a [`plan::KernelPlan`] and executed on polyphase component planes.
 //!
-//! Two execution paths:
-//! * [`apply`] — a generic evaluator that runs *any* scheme by literally
-//!   applying its polyphase-matrix steps with periodic indexing (the
-//!   semantics shared with the Pallas kernels and the pure-jnp oracle).
-//! * [`lifting`] — a hand-optimized separable-lifting fast path (the L3
-//!   hot loop used by the coordinator fallback and the benches).
+//! Layering (lower -> schedule -> execute):
+//! * [`plan`] — the `KernelPlan` IR: a scheme's `PolyMatrix` step chain
+//!   is lowered into fused stencil kernels, in-place lifting updates,
+//!   and scale kernels, with barrier structure and per-step cost/halo
+//!   metadata preserved.  One plan drives the engine, the gpusim cost
+//!   model, and the coordinator.
+//! * [`lifting`] — the in-place 1-D lifting kernel library the plan
+//!   dispatches into (plus the hand-scheduled separable reference).
+//! * [`apply`] — the fused-stencil executor for plan kernels, plus the
+//!   legacy matrix-walking evaluator (the semantics shared with the
+//!   Pallas kernels and the pure-jnp oracle) kept as reference.
+//! * [`engine`] — caches compiled forward/inverse/optimized plans per
+//!   (scheme, wavelet, boundary).
 //!
 //! All paths compute identical coefficients; the test suite enforces it.
 
@@ -14,7 +21,10 @@ pub mod apply;
 pub mod engine;
 pub mod lifting;
 pub mod multilevel;
+pub mod plan;
 pub mod planes;
 
-pub use engine::Engine;
+pub use engine::{Engine, PlanVariant};
+pub use lifting::{Axis, Boundary};
+pub use plan::KernelPlan;
 pub use planes::{Image, Planes};

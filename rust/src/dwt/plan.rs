@@ -1,0 +1,655 @@
+//! The `KernelPlan` IR: every scheme's step chain compiled into one
+//! executable program of fused stencil kernels and in-place lifting
+//! updates — the single execution path shared by the numeric engine,
+//! the gpusim cost model, and the coordinator.
+//!
+//! Pipeline: **lower** (this module: `PolyMatrix` steps -> kernels) ->
+//! **schedule** (barrier grouping is preserved from the scheme
+//! structure) -> **execute** ([`KernelPlan::execute`], dispatching into
+//! the [`lifting`] kernel library for in-place updates and the
+//! [`apply`] stencil executor for fused convolution bodies).
+//!
+//! Lowering detects three shapes:
+//! * pure diagonal constants -> [`Kernel::Scale`] (not counted as ops,
+//!   matching the paper's counting rule);
+//! * unipotent (unit-diagonal) matrices whose updates can run in place —
+//!   separable lifting steps, and the non-separable spatial
+//!   predict/update `T_P = T_P^V T_P^H` / `S_U = S_U^V S_U^H`, which
+//!   become four 1-D [`lifting::lift_axis_b`] calls each (this is where
+//!   the section-5 arithmetic saving is realized: the fused `P P*`
+//!   cross term is never materialized);
+//! * everything else -> a fused [`Stencil`] with per-output-plane term
+//!   lists, executed double-buffered (one reusable scratch buffer
+//!   instead of a fresh 4-plane allocation per barrier step).
+//!
+//! A constant diagonal is factored off (`M = D L` or `M = L D`) so that
+//! scaled lifting steps — the `zeta`-merged last/first steps of CDF 9/7
+//! and Haar chains — still take the in-place path.
+//!
+//! [`Boundary`] is threaded through the whole plan: periodic indexing
+//! reproduces the polyphase algebra exactly; whole-sample symmetric
+//! extension folds every read per source-plane parity (the JPEG 2000
+//! convention), for *all* schemes rather than only separable lifting.
+//! Caveat: symmetric folding is exact for the full-step chains (every
+//! step matrix is a WS-symmetric filter), but *not* for the section-5
+//! `P0 + P1` split groupings of the convolution schemes — the split
+//! sub-steps are not symmetric about the component grid's half-integer
+//! centers, so their folded intermediates diverge at borders.  The
+//! engine therefore executes the plain plan when the boundary is
+//! symmetric (verified against the separable-lifting reference).
+
+use super::apply;
+use super::lifting::{self, Axis, Boundary};
+use super::planes::Planes;
+use crate::polyphase::{Poly, PolyMatrix};
+
+/// 1-D taps `(offset, coeff)` along one axis.
+pub type Taps = Vec<(i32, f64)>;
+
+/// One executable kernel of a plan.
+#[derive(Debug, Clone)]
+pub enum Kernel {
+    /// In-place `planes[dst] += taps(planes[src])` along `axis`
+    /// (dispatched to [`lifting::lift_axis_b`]).
+    Lift {
+        dst: usize,
+        src: usize,
+        axis: Axis,
+        taps: Taps,
+    },
+    /// Fused out-of-place stencil, double-buffered through the scratch
+    /// planes (dispatched to [`apply::run_stencil`]).
+    Stencil(Stencil),
+    /// In-place per-plane constant scaling.
+    Scale { factors: [f32; 4] },
+}
+
+/// A fused stencil: per output plane, the flattened term list
+/// `(src_plane, km, kn, coeff)` meaning
+/// `out[i][n, m] += c * in[j][n + kn, m + km]`.
+#[derive(Debug, Clone)]
+pub struct Stencil {
+    pub rows: [Vec<(usize, i32, i32, f32)>; 4],
+}
+
+/// One barrier-separated step of a plan: the kernels that run between
+/// two barriers, plus the cost/halo metadata derived from the source
+/// matrices at lowering time (the paper's counting rules).
+#[derive(Debug, Clone)]
+pub struct PlanStep {
+    pub kernels: Vec<Kernel>,
+    /// Term count of the source matrices, scale steps excluded —
+    /// the paper's operation-counting rule (`opcount` derives from
+    /// this, so engine, cost model and Table 1 agree by construction).
+    pub ops: usize,
+    /// Like `ops` with identical embedded 1-D copies counted once
+    /// (the SIMD "vectorized copies" mode).
+    pub ops_vec: usize,
+    /// Combined (top, bottom, left, right) halo of the step — the
+    /// per-side sum over the group's composed sub-step matrices.
+    pub halo: (i32, i32, i32, i32),
+}
+
+/// A compiled, executable transform program.
+#[derive(Debug, Clone)]
+pub struct KernelPlan {
+    pub boundary: Boundary,
+    pub steps: Vec<PlanStep>,
+}
+
+impl KernelPlan {
+    /// Compile a barrier-separated chain (one matrix per barrier).
+    pub fn from_steps(steps: &[PolyMatrix], boundary: Boundary) -> Self {
+        let groups: Vec<Vec<PolyMatrix>> = steps.iter().map(|m| vec![m.clone()]).collect();
+        Self::compile(&groups, boundary)
+    }
+
+    /// Compile barrier-separated groups of barrier-free sub-steps
+    /// (the section-5 optimized structures).
+    pub fn compile(groups: &[Vec<PolyMatrix>], boundary: Boundary) -> Self {
+        let steps = groups.iter().map(|g| lower_group(g)).collect();
+        Self { boundary, steps }
+    }
+
+    /// Number of barrier-separated steps (Table 1 "steps" column).
+    pub fn n_barriers(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Total operation count per output quadruple, paper counting.
+    pub fn total_ops(&self) -> usize {
+        self.steps.iter().map(|s| s.ops).sum()
+    }
+
+    /// Total operation count in the vectorized-copies mode.
+    pub fn total_ops_vec(&self) -> usize {
+        self.steps.iter().map(|s| s.ops_vec).sum()
+    }
+
+    /// Multiply-accumulates per input pixel (4 pixels per quadruple).
+    pub fn macs_per_pixel(&self) -> f64 {
+        self.total_ops() as f64 / 4.0
+    }
+
+    /// Terms the executor actually evaluates per output quadruple.
+    /// In-place lifting beats the matrix term count here (fused cross
+    /// terms are never materialized); stencils include their diagonal
+    /// copy-through terms.
+    pub fn exec_ops(&self) -> usize {
+        self.steps
+            .iter()
+            .flat_map(|s| s.kernels.iter())
+            .map(|k| match k {
+                Kernel::Lift { taps, .. } => taps.len(),
+                Kernel::Stencil(st) => st.rows.iter().map(Vec::len).sum(),
+                Kernel::Scale { .. } => 0,
+            })
+            .sum()
+    }
+
+    /// True when execution needs the double-buffer scratch planes.
+    pub fn needs_scratch(&self) -> bool {
+        self.steps
+            .iter()
+            .flat_map(|s| s.kernels.iter())
+            .any(|k| matches!(k, Kernel::Stencil(_)))
+    }
+
+    /// Execute the plan in place on the polyphase planes.
+    pub fn execute(&self, planes: &mut Planes) {
+        let mut scratch: Option<Planes> = None;
+        self.execute_with(planes, &mut scratch);
+    }
+
+    /// [`KernelPlan::execute`] with a caller-owned scratch slot, so
+    /// repeated transforms reuse one double-buffer allocation.
+    pub fn execute_with(&self, planes: &mut Planes, scratch: &mut Option<Planes>) {
+        for step in &self.steps {
+            for kernel in &step.kernels {
+                match kernel {
+                    Kernel::Lift {
+                        dst,
+                        src,
+                        axis,
+                        taps,
+                    } => {
+                        let (w2, h2) = (planes.w2, planes.h2);
+                        let src_odd = plane_is_odd(*src, *axis);
+                        let (d, s) = two_planes(&mut planes.p, *dst, *src);
+                        lifting::lift_axis_b(d, s, w2, h2, taps, *axis, self.boundary, src_odd);
+                    }
+                    Kernel::Scale { factors } => {
+                        for (c, &f) in factors.iter().enumerate() {
+                            if (f - 1.0).abs() > 1e-12 {
+                                for v in planes.p[c].iter_mut() {
+                                    *v *= f;
+                                }
+                            }
+                        }
+                    }
+                    Kernel::Stencil(st) => {
+                        // (re)allocate when absent or retained from a
+                        // differently-sized transform
+                        let fits = matches!(scratch.as_ref(),
+                            Some(s) if s.w2 == planes.w2 && s.h2 == planes.h2);
+                        if !fits {
+                            *scratch = Some(Planes::new(planes.w2, planes.h2));
+                        }
+                        let out = scratch.as_mut().expect("scratch just filled");
+                        apply::run_stencil(st, planes, out, self.boundary);
+                        std::mem::swap(planes, out);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Out-of-place convenience wrapper.
+    pub fn run(&self, planes: &Planes) -> Planes {
+        let mut p = planes.clone();
+        self.execute(&mut p);
+        p
+    }
+}
+
+/// Parity of a polyphase plane along an axis: planes `[ee, oe, eo, oo]`
+/// are horizontally odd for indices 1 and 3, vertically odd for 2 and 3.
+/// This selects the symmetric-extension fold variant of the source.
+pub fn plane_is_odd(plane: usize, axis: Axis) -> bool {
+    match axis {
+        Axis::Horizontal => plane == 1 || plane == 3,
+        Axis::Vertical => plane == 2 || plane == 3,
+    }
+}
+
+/// Whole-sample symmetric index fold on a component plane of length `n`
+/// (`odd` selects the odd-component variant); loops until in range, so
+/// it is valid for any reach.  The single shared implementation for
+/// both the lift kernels and the stencil executor (derivation in
+/// `lifting.rs`).
+pub fn fold_sym(mut i: i64, n: i64, odd: bool) -> usize {
+    debug_assert!(n >= 1);
+    loop {
+        if i < 0 {
+            i = if odd { -i - 1 } else { -i };
+        } else if i >= n {
+            i = if odd { 2 * n - 2 - i } else { 2 * n - 1 - i };
+        } else {
+            return i as usize;
+        }
+        if n == 1 {
+            // a length-1 plane folds everything onto its only sample
+            return 0;
+        }
+    }
+}
+
+fn two_planes(p: &mut [Vec<f32>; 4], dst: usize, src: usize) -> (&mut [f32], &[f32]) {
+    debug_assert_ne!(dst, src);
+    if dst < src {
+        let (a, b) = p.split_at_mut(src);
+        (a[dst].as_mut_slice(), b[0].as_slice())
+    } else {
+        let (a, b) = p.split_at_mut(dst);
+        (b[0].as_mut_slice(), a[src].as_slice())
+    }
+}
+
+// ---------------------------------------------------------------- lowering
+
+fn mat_ops(m: &PolyMatrix, vec_copies: bool) -> usize {
+    if m.is_scale() {
+        return 0; // scaling is not counted by the paper's rule
+    }
+    if vec_copies {
+        m.n_ops_vec()
+    } else {
+        m.n_ops()
+    }
+}
+
+fn lower_group(group: &[PolyMatrix]) -> PlanStep {
+    let mut kernels = Vec::new();
+    let mut ops = 0;
+    let mut ops_vec = 0;
+    let mut halo = (0, 0, 0, 0);
+    for m in group {
+        ops += mat_ops(m, false);
+        ops_vec += mat_ops(m, true);
+        // sub-steps within a barrier group compose sequentially, so
+        // the group's reach is the per-side *sum* of the members'
+        // halos (exact for a single-matrix group)
+        let h = m.halo();
+        halo.0 += h.0;
+        halo.1 += h.1;
+        halo.2 += h.2;
+        halo.3 += h.3;
+        lower_matrix(m, &mut kernels);
+    }
+    PlanStep {
+        kernels,
+        ops,
+        ops_vec,
+        halo,
+    }
+}
+
+const TOL: f64 = 1e-12;
+
+fn lower_matrix(m: &PolyMatrix, out: &mut Vec<Kernel>) {
+    if m.approx_eq(&PolyMatrix::identity(), TOL) {
+        return; // no-op sub-step (e.g. a vanished P1 split)
+    }
+    if m.is_scale() {
+        out.push(Kernel::Scale {
+            factors: diag_factors(m),
+        });
+        return;
+    }
+    if let Some(d) = diag_constants(m) {
+        if d.iter().all(|&c| (c - 1.0).abs() <= TOL) {
+            if let Some(ks) = lower_unipotent(m) {
+                out.extend(ks);
+                return;
+            }
+        } else if d.iter().all(|&c| c.abs() > TOL) {
+            // factor the constant diagonal off: M = D L (scale last) …
+            if let Some(ks) = lower_unipotent(&unscale_rows(m, &d)) {
+                out.extend(ks);
+                out.push(Kernel::Scale {
+                    factors: d.map(|c| c as f32),
+                });
+                return;
+            }
+            // … or M = L D (scale first; inverse chains put it there)
+            if let Some(ks) = lower_unipotent(&unscale_cols(m, &d)) {
+                out.push(Kernel::Scale {
+                    factors: d.map(|c| c as f32),
+                });
+                out.extend(ks);
+                return;
+            }
+        }
+    }
+    out.push(Kernel::Stencil(stencil_of(m)));
+}
+
+/// The diagonal as constants, when every diagonal entry is a single
+/// lag-0 term.
+fn diag_constants(m: &PolyMatrix) -> Option<[f64; 4]> {
+    let mut d = [0.0f64; 4];
+    for (i, slot) in d.iter_mut().enumerate() {
+        let p = &m.m[i][i];
+        if p.n_terms() != 1 {
+            return None;
+        }
+        let (&k, &c) = p.terms.iter().next().expect("one term");
+        if k != (0, 0) {
+            return None;
+        }
+        *slot = c;
+    }
+    Some(d)
+}
+
+fn diag_factors(m: &PolyMatrix) -> [f32; 4] {
+    std::array::from_fn(|i| m.m[i][i].terms.get(&(0, 0)).copied().unwrap_or(0.0) as f32)
+}
+
+fn unscale_rows(m: &PolyMatrix, d: &[f64; 4]) -> PolyMatrix {
+    let mut out = m.clone();
+    for i in 0..4 {
+        for j in 0..4 {
+            out.m[i][j] = m.m[i][j].scale(1.0 / d[i]);
+        }
+    }
+    out
+}
+
+fn unscale_cols(m: &PolyMatrix, d: &[f64; 4]) -> PolyMatrix {
+    let mut out = m.clone();
+    for i in 0..4 {
+        for j in 0..4 {
+            out.m[i][j] = m.m[i][j].scale(1.0 / d[j]);
+        }
+    }
+    out
+}
+
+/// Single-axis tap extraction: `Some((axis, taps))` when the polynomial
+/// is purely horizontal or purely vertical (constants count as
+/// horizontal).
+fn taps_of(p: &Poly) -> Option<(Axis, Taps)> {
+    if p.terms.keys().all(|&(_, kn)| kn == 0) {
+        let taps = p.terms.iter().map(|(&(km, _), &c)| (km, c)).collect();
+        return Some((Axis::Horizontal, taps));
+    }
+    if p.terms.keys().all(|&(km, _)| km == 0) {
+        let taps = p.terms.iter().map(|(&(_, kn), &c)| (kn, c)).collect();
+        return Some((Axis::Vertical, taps));
+    }
+    None
+}
+
+/// Factor a unit-diagonal matrix into in-place lifting updates, or
+/// `None` when it has to stay a fused stencil.
+fn lower_unipotent(m: &PolyMatrix) -> Option<Vec<Kernel>> {
+    if let Some(ks) = match_spatial(m) {
+        return Some(ks);
+    }
+    let mut entries: Vec<(usize, usize)> = Vec::new();
+    for i in 0..4 {
+        for j in 0..4 {
+            if i != j && !m.m[i][j].is_zero() {
+                entries.push((i, j));
+            }
+        }
+    }
+    if entries.is_empty() {
+        return Some(Vec::new());
+    }
+    // independent updates: no plane is both written and read, so each
+    // `dst += g(src)` sees only original values and order is free
+    let disjoint = entries
+        .iter()
+        .all(|&(i, _)| entries.iter().all(|&(_, j)| i != j));
+    if !disjoint {
+        return None;
+    }
+    let mut ks = Vec::with_capacity(entries.len());
+    for (i, j) in entries {
+        let (axis, taps) = taps_of(&m.m[i][j])?;
+        ks.push(Kernel::Lift {
+            dst: i,
+            src: j,
+            axis,
+            taps,
+        });
+    }
+    Some(ks)
+}
+
+/// Detect the fused non-separable spatial predict `T_P = T_P^V T_P^H`
+/// and update `S_U = S_U^V S_U^H` shapes and emit their exact in-place
+/// 1-D factorizations (the order reproduces the separable sequence, so
+/// later lifts deliberately read already-updated planes).
+fn match_spatial(m: &PolyMatrix) -> Option<Vec<Kernel>> {
+    let z = |i: usize, j: usize| m.m[i][j].is_zero();
+    // predict shape: column 0 feeds rows 1..3, plus row 3 from 1 and 2
+    if z(0, 1)
+        && z(0, 2)
+        && z(0, 3)
+        && z(1, 2)
+        && z(1, 3)
+        && z(2, 1)
+        && z(2, 3)
+        && !m.m[1][0].is_zero()
+    {
+        let p = &m.m[1][0];
+        let pt = p.transpose();
+        if m.m[2][0].approx_eq(&pt, TOL)
+            && m.m[3][1].approx_eq(&pt, TOL)
+            && m.m[3][2].approx_eq(p, TOL)
+            && m.m[3][0].approx_eq(&p.mul(&pt), TOL)
+        {
+            if let Some((Axis::Horizontal, taps)) = taps_of(p) {
+                return Some(vec![
+                    lift(1, 0, Axis::Horizontal, &taps),
+                    lift(3, 2, Axis::Horizontal, &taps),
+                    lift(2, 0, Axis::Vertical, &taps),
+                    lift(3, 1, Axis::Vertical, &taps),
+                ]);
+            }
+        }
+    }
+    // update shape: column 3 feeds rows 0..2, plus row 0 from 1 and 2
+    if z(1, 0)
+        && z(2, 0)
+        && z(3, 0)
+        && z(3, 1)
+        && z(3, 2)
+        && z(1, 2)
+        && z(2, 1)
+        && !m.m[0][1].is_zero()
+    {
+        let u = &m.m[0][1];
+        let ut = u.transpose();
+        if m.m[0][2].approx_eq(&ut, TOL)
+            && m.m[1][3].approx_eq(&ut, TOL)
+            && m.m[2][3].approx_eq(u, TOL)
+            && m.m[0][3].approx_eq(&u.mul(&ut), TOL)
+        {
+            if let Some((Axis::Horizontal, taps)) = taps_of(u) {
+                return Some(vec![
+                    lift(0, 1, Axis::Horizontal, &taps),
+                    lift(2, 3, Axis::Horizontal, &taps),
+                    lift(0, 2, Axis::Vertical, &taps),
+                    lift(1, 3, Axis::Vertical, &taps),
+                ]);
+            }
+        }
+    }
+    None
+}
+
+fn lift(dst: usize, src: usize, axis: Axis, taps: &[(i32, f64)]) -> Kernel {
+    Kernel::Lift {
+        dst,
+        src,
+        axis,
+        taps: taps.to_vec(),
+    }
+}
+
+fn stencil_of(m: &PolyMatrix) -> Stencil {
+    let rows = std::array::from_fn(|i| {
+        let mut terms = Vec::new();
+        for j in 0..4 {
+            for (&(km, kn), &c) in &m.m[i][j].terms {
+                terms.push((j, km, kn, c as f32));
+            }
+        }
+        terms
+    });
+    Stencil { rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dwt::apply::apply_chain;
+    use crate::dwt::planes::Image;
+    use crate::polyphase::schemes::{self, Scheme};
+    use crate::polyphase::wavelets::Wavelet;
+
+    fn count_stencils(plan: &KernelPlan) -> usize {
+        plan.steps
+            .iter()
+            .flat_map(|s| s.kernels.iter())
+            .filter(|k| matches!(k, Kernel::Stencil(_)))
+            .count()
+    }
+
+    #[test]
+    fn lifting_schemes_lower_fully_to_lift_kernels() {
+        for w in Wavelet::all() {
+            for s in [Scheme::SepLifting, Scheme::NsLifting] {
+                let fwd = KernelPlan::from_steps(&schemes::build(s, &w), Boundary::Periodic);
+                assert_eq!(count_stencils(&fwd), 0, "{} {} forward", w.name, s.name());
+                let inv =
+                    KernelPlan::from_steps(&schemes::build_inverse(s, &w), Boundary::Periodic);
+                assert_eq!(count_stencils(&inv), 0, "{} {} inverse", w.name, s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn plan_matches_generic_apply_chain() {
+        let img = Image::synthetic(32, 48, 21);
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                let steps = schemes::build(s, &w);
+                let planes0 = Planes::split(&img);
+                let legacy = apply_chain(&steps, &planes0);
+                let planned = KernelPlan::from_steps(&steps, Boundary::Periodic).run(&planes0);
+                let err = planned.max_abs_diff(&legacy);
+                assert!(err < 1e-2, "{} {}: plan vs legacy err {}", w.name, s.name(), err);
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_plan_preserves_barriers_and_matches_plain() {
+        let img = Image::synthetic(32, 32, 22);
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                let groups = schemes::build_optimized(s, &w);
+                let plan = KernelPlan::compile(&groups, Boundary::Periodic);
+                assert_eq!(plan.n_barriers(), schemes::n_steps(s, &w), "{}", s.name());
+                let planes0 = Planes::split(&img);
+                let got = plan.run(&planes0);
+                let want = KernelPlan::from_steps(&schemes::build(s, &w), Boundary::Periodic)
+                    .run(&planes0);
+                let err = got.max_abs_diff(&want);
+                assert!(err < 2e-2, "{} {}: optimized err {}", w.name, s.name(), err);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_roundtrips_every_scheme() {
+        let img = Image::synthetic(32, 32, 23);
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                let fwd = KernelPlan::from_steps(&schemes::build(s, &w), Boundary::Periodic);
+                let inv =
+                    KernelPlan::from_steps(&schemes::build_inverse(s, &w), Boundary::Periodic);
+                let rec = inv.run(&fwd.run(&Planes::split(&img))).merge();
+                let err = rec.max_abs_diff(&img);
+                assert!(err < 2e-2, "{} {}: roundtrip err {}", w.name, s.name(), err);
+            }
+        }
+    }
+
+    #[test]
+    fn scale_steps_cost_nothing_but_still_execute() {
+        let w = Wavelet::cdf97();
+        let groups = schemes::build_optimized(Scheme::SepLifting, &w);
+        let plan = KernelPlan::compile(&groups, Boundary::Periodic);
+        // zeta scaling must be present as a Scale kernel...
+        let scales = plan
+            .steps
+            .iter()
+            .flat_map(|s| s.kernels.iter())
+            .filter(|k| matches!(k, Kernel::Scale { .. }))
+            .count();
+        assert!(scales >= 1);
+        // ...but contribute no operations
+        assert_eq!(
+            plan.total_ops(),
+            crate::polyphase::opcount::count(
+                Scheme::SepLifting,
+                &w,
+                crate::polyphase::opcount::Mode::Optimized
+            )
+        );
+    }
+
+    #[test]
+    fn in_place_lifting_executes_fewer_terms_than_matrix_count() {
+        // the fused spatial predict's P·P* cross term is never evaluated
+        let w = Wavelet::cdf97();
+        let plan = KernelPlan::from_steps(
+            &schemes::build(Scheme::NsLifting, &w),
+            Boundary::Periodic,
+        );
+        assert!(plan.exec_ops() < plan.total_ops());
+    }
+
+    #[test]
+    fn fold_sym_handles_deep_reach() {
+        // even fold, n = 4: mirror at -0.5 and n-0.5 with period 2n-1=7
+        assert_eq!(fold_sym(0, 4, false), 0);
+        assert_eq!(fold_sym(-1, 4, false), 1);
+        assert_eq!(fold_sym(4, 4, false), 3);
+        assert_eq!(fold_sym(9, 4, false), 2);
+        assert_eq!(fold_sym(-6, 4, false), 1);
+        // odd fold
+        assert_eq!(fold_sym(-1, 4, true), 0);
+        assert_eq!(fold_sym(4, 4, true), 2);
+        // degenerate length-1 plane terminates
+        assert_eq!(fold_sym(5, 1, false), 0);
+        assert_eq!(fold_sym(-3, 1, true), 0);
+    }
+
+    #[test]
+    fn two_planes_split_both_directions() {
+        let mut p: [Vec<f32>; 4] = std::array::from_fn(|i| vec![i as f32]);
+        {
+            let (d, s) = two_planes(&mut p, 1, 3);
+            assert_eq!((d[0], s[0]), (1.0, 3.0));
+        }
+        let (d, s) = two_planes(&mut p, 2, 0);
+        assert_eq!((d[0], s[0]), (2.0, 0.0));
+    }
+}

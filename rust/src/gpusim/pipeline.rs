@@ -1,7 +1,13 @@
 //! Per-scheme, per-step workload description fed to the cost model:
 //! memory traffic, arithmetic ops, launch counts, for both the OpenCL
 //! (on-chip exchange) and pixel-shader (off-chip exchange) pipelines.
+//!
+//! Per-step op distribution and halo traffic are read off the same
+//! compiled [`KernelPlan`] the native engine executes — the cost model
+//! no longer re-derives "what does a step cost" from the raw matrices.
 
+use crate::dwt::lifting::Boundary;
+use crate::dwt::plan::KernelPlan;
 use crate::polyphase::opcount::{self, Mode};
 use crate::polyphase::schemes::{self, Scheme};
 use crate::polyphase::wavelets::Wavelet;
@@ -68,18 +74,20 @@ pub fn platform_ops(scheme: Scheme, w: &Wavelet, pipeline: PipelineKind) -> f64 
     opcount::count(scheme, w, mode) as f64
 }
 
-/// Build the per-step workload of a scheme on a pipeline.
+/// Build the per-step workload of a scheme on a pipeline, from the
+/// compiled plan of the scheme's barrier chain.
 pub fn scheme_load(scheme: Scheme, w: &Wavelet, pipeline: PipelineKind) -> SchemeLoad {
-    let step_mats = schemes::build(scheme, w);
-    let n_steps = step_mats.len();
+    let plan = KernelPlan::from_steps(&schemes::build(scheme, w), Boundary::Periodic);
+    let n_steps = plan.n_barriers();
     let total_ops = platform_ops(scheme, w, pipeline);
-    // distribute ops across steps proportionally to each step's raw count
-    let raw: Vec<f64> = step_mats.iter().map(|m| m.n_ops().max(1) as f64).collect();
+    // distribute ops across steps proportionally to each step's plan count
+    let raw: Vec<f64> = plan.steps.iter().map(|s| s.ops.max(1) as f64).collect();
     let raw_sum: f64 = raw.iter().sum();
-    let steps = step_mats
+    let steps = plan
+        .steps
         .iter()
         .zip(&raw)
-        .map(|(mat, r)| {
+        .map(|(step, r)| {
             let ops = total_ops * r / raw_sum;
             let bytes = match pipeline {
                 // every render pass: read 4 B/pel (texture cache absorbs
@@ -87,7 +95,7 @@ pub fn scheme_load(scheme: Scheme, w: &Wavelet, pipeline: PipelineKind) -> Schem
                 PipelineKind::Shaders => 8.0,
                 // one kernel per barrier: halo-inflated read + write
                 PipelineKind::OpenCl => {
-                    let (t, b, l, r_) = mat.halo();
+                    let (t, b, l, r_) = step.halo;
                     let gy = GROUP_SIDE as f64 + (t + b) as f64;
                     let gx = GROUP_SIDE as f64 + (l + r_) as f64;
                     let halo_factor = (gx * gy) / (GROUP_SIDE * GROUP_SIDE) as f64;
@@ -160,6 +168,44 @@ mod tests {
         let total = |l: &SchemeLoad| -> f64 { l.steps.iter().map(|s| s.bytes_per_pixel).sum() };
         assert_eq!(total(&sep), 8.0 * 8.0); // 8 steps
         assert_eq!(total(&ns), 8.0); // 1 step
+    }
+
+    #[test]
+    fn step_loads_derive_from_the_engine_plan_and_match_opcount() {
+        // cross-layer invariant: the workload fed to the cost model, the
+        // plan the engine executes, and the Table-1 counting must all be
+        // views of the same compiled object
+        use crate::dwt::{Engine, PlanVariant};
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                let plan = KernelPlan::from_steps(&schemes::build(s, &w), Boundary::Periodic);
+                let load = scheme_load(s, &w, PipelineKind::OpenCl);
+                assert_eq!(load.n_steps(), plan.n_barriers(), "{} {}", w.name, s.name());
+                // plain counting: plan totals == opcount (unscaled chain)
+                let unscaled = Wavelet {
+                    zeta: 1.0,
+                    ..w.clone()
+                };
+                let plain_plan =
+                    KernelPlan::from_steps(&schemes::build(s, &unscaled), Boundary::Periodic);
+                assert_eq!(
+                    plain_plan.total_ops(),
+                    opcount::count(s, &w, Mode::Plain),
+                    "{} {} plain",
+                    w.name,
+                    s.name()
+                );
+                // optimized counting: the engine's executed plan == opcount
+                let engine = Engine::new(s, w.clone());
+                assert_eq!(
+                    engine.plan(PlanVariant::Optimized).total_ops(),
+                    opcount::count(s, &w, Mode::Optimized),
+                    "{} {} optimized",
+                    w.name,
+                    s.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,18 @@
 //! convolution/polyconvolution/lifting) are implemented symbolically in
 //! [`polyphase`], numerically in [`dwt`], and cost-modelled in
 //! [`gpusim`]; all compute identical coefficients (enforced by tests).
+//!
+//! Execution is organized around the [`dwt::plan`] `KernelPlan` IR
+//! (lower -> schedule -> execute): every scheme's `PolyMatrix` step
+//! chain is compiled once into fused stencil kernels, in-place lifting
+//! updates, and scale kernels, with `Boundary::{Periodic, Symmetric}`
+//! threaded through the whole plan.  The numeric engine executes plans,
+//! the gpusim cost model meters the same plans' per-step ops and halo
+//! traffic, `polyphase::opcount` reads Table 1 off them, and the
+//! coordinator caches them per (scheme, wavelet, boundary) — one
+//! compiled object, four consumers, no parallel re-derivations.  New
+//! backends (SIMD, rayon tiles, GPU) slot in as additional plan
+//! *executors* rather than hand-written per-scheme paths.
 
 pub mod benchutil;
 pub mod coordinator;
@@ -24,6 +36,6 @@ pub mod image;
 pub mod polyphase;
 pub mod runtime;
 
-pub use dwt::{Image, Planes};
+pub use dwt::{Boundary, Image, KernelPlan, Planes};
 pub use polyphase::wavelets::Wavelet;
 pub use polyphase::Scheme;

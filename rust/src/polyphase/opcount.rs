@@ -5,10 +5,19 @@
 //! published cells are matched exactly and the remaining cells provably
 //! lie inside the `[min(optimized, optimized_vec), plain]` bracket
 //! (asserted by the test suite and reported by `dwt-accel table1`).
+//!
+//! Since the `KernelPlan` refactor, the counts are read off the same
+//! compiled plan the engine executes and the gpusim pipeline meters
+//! (`crate::dwt::plan`): lowering records each barrier step's term
+//! count under the paper's rule, so Table 1, `Engine::macs_per_pixel`,
+//! and the cost model cannot drift apart.  The published integers in
+//! [`PAPER_TABLE1`] stay the independent anchor.
+
+use crate::dwt::lifting::Boundary;
+use crate::dwt::plan::KernelPlan;
 
 use super::schemes::{self, Scheme};
 use super::wavelets::Wavelet;
-use super::PolyMatrix;
 
 /// Counting mode for [`count`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,18 +43,9 @@ impl Mode {
     }
 }
 
-fn mat_ops(m: &PolyMatrix, vec_copies: bool) -> usize {
-    if m.is_scale() {
-        return 0; // scaling is not counted by the paper's rule
-    }
-    if vec_copies {
-        m.n_ops_vec()
-    } else {
-        m.n_ops()
-    }
-}
-
-/// Operation count of a scheme under the given counting mode.
+/// Operation count of a scheme under the given counting mode, read off
+/// the compiled [`KernelPlan`] for that structure (the same lowering
+/// the engine executes).
 pub fn count(scheme: Scheme, w: &Wavelet, mode: Mode) -> usize {
     match mode {
         Mode::Plain => {
@@ -53,18 +53,16 @@ pub fn count(scheme: Scheme, w: &Wavelet, mode: Mode) -> usize {
                 zeta: 1.0,
                 ..w.clone()
             };
-            schemes::build(scheme, &unscaled)
-                .iter()
-                .map(|m| mat_ops(m, false))
-                .sum()
+            KernelPlan::from_steps(&schemes::build(scheme, &unscaled), Boundary::Periodic)
+                .total_ops()
         }
-        Mode::Optimized | Mode::OptimizedVec => {
-            let vec = mode == Mode::OptimizedVec;
-            schemes::build_optimized(scheme, w)
-                .iter()
-                .flatten()
-                .map(|m| mat_ops(m, vec))
-                .sum()
+        Mode::Optimized => {
+            KernelPlan::compile(&schemes::build_optimized(scheme, w), Boundary::Periodic)
+                .total_ops()
+        }
+        Mode::OptimizedVec => {
+            KernelPlan::compile(&schemes::build_optimized(scheme, w), Boundary::Periodic)
+                .total_ops_vec()
         }
     }
 }

@@ -6,149 +6,211 @@
 //! interchange format (jax >= 0.5 emits 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects in proto form; the text parser reassigns
 //! ids).
+//!
+//! The PJRT client depends on the `xla` bindings, which need the
+//! xla_extension shared library at build time.  That is gated behind
+//! the `pjrt` cargo feature (add the `xla` crate to `[dependencies]`
+//! when enabling it); the default build ships a stub whose
+//! [`Runtime::new`] always errors, which the coordinator treats as
+//! "PJRT path disabled" and serves everything through the native
+//! `KernelPlan` engine.
 
 pub mod json;
 pub mod manifest;
 
 pub use manifest::{Entry, Manifest};
 
-use crate::dwt::Image;
-use anyhow::{anyhow, Result};
-use std::collections::HashMap;
-use std::path::Path;
-use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
+mod client {
+    use super::Manifest;
+    use crate::dwt::Image;
+    use anyhow::{anyhow, Result};
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::Path;
 
-/// A PJRT CPU client plus a cache of compiled executables keyed by
-/// artifact name.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    executables: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and read the artifact manifest.
-    pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let manifest = Manifest::load(artifacts_dir)?;
-        Ok(Self {
-            client,
-            manifest,
-            executables: RefCell::new(HashMap::new()),
-        })
+    /// A PJRT CPU client plus a cache of compiled executables keyed by
+    /// artifact name.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        executables: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) the executable for an entry.
-    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.executables.borrow().get(name) {
-            return Ok(e.clone());
+    impl Runtime {
+        /// Create a CPU PJRT client and read the artifact manifest.
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+            let manifest = Manifest::load(artifacts_dir)?;
+            Ok(Self {
+                client,
+                manifest,
+                executables: RefCell::new(HashMap::new()),
+            })
         }
-        let entry = self
-            .manifest
-            .find(name)
-            .ok_or_else(|| anyhow!("no artifact named {name}"))?;
-        let path = entry
-            .file
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 path"))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let exe = std::rc::Rc::new(exe);
-        self.executables
-            .borrow_mut()
-            .insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
 
-    /// Execute an entry on a raw f32 buffer of the entry's input shape.
-    /// Artifacts are lowered with `return_tuple=True`, so the output is
-    /// a 1-tuple; returns the flattened result buffer.
-    pub fn execute_raw(&self, name: &str, input: &[f32], shape: &[usize]) -> Result<Vec<f32>> {
-        let exe = self.executable(name)?;
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let result = exe
-            .execute::<xla::Literal>(&[lit])
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e:?}"))?;
-        let tuple = out.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        tuple.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
-    }
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    /// Run a single-image entry (forward/inverse/multilevel).
-    pub fn execute_image(&self, name: &str, img: &Image) -> Result<Image> {
-        let entry = self
-            .manifest
-            .find(name)
-            .ok_or_else(|| anyhow!("no artifact named {name}"))?;
-        let expect = [entry.input_shape[0], entry.input_shape[1]];
-        if [img.height, img.width] != expect {
-            return Err(anyhow!(
-                "{name} expects {}x{} (HxW), got {}x{}",
-                expect[0],
-                expect[1],
-                img.height,
-                img.width
-            ));
-        }
-        let out = self.execute_raw(name, &img.data, &entry.input_shape)?;
-        Ok(Image::from_data(img.width, img.height, out))
-    }
-
-    /// Run a batched entry on a stack of same-shape images.
-    pub fn execute_batch(&self, name: &str, batch: &[Image]) -> Result<Vec<Image>> {
-        let entry = self
-            .manifest
-            .find(name)
-            .ok_or_else(|| anyhow!("no artifact named {name}"))?
-            .clone();
-        if entry.input_shape.len() != 3 {
-            return Err(anyhow!("{name} is not a batched entry"));
-        }
-        let (b, h, w) = (
-            entry.input_shape[0],
-            entry.input_shape[1],
-            entry.input_shape[2],
-        );
-        if batch.len() != b {
-            return Err(anyhow!("{name} expects batch {b}, got {}", batch.len()));
-        }
-        let mut flat = Vec::with_capacity(b * h * w);
-        for img in batch {
-            if img.height != h || img.width != w {
-                return Err(anyhow!("batch image shape mismatch"));
+        /// Compile (or fetch from cache) the executable for an entry.
+        pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+            if let Some(e) = self.executables.borrow().get(name) {
+                return Ok(e.clone());
             }
-            flat.extend_from_slice(&img.data);
+            let entry = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+            let path = entry
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            let exe = std::rc::Rc::new(exe);
+            self.executables
+                .borrow_mut()
+                .insert(name.to_string(), exe.clone());
+            Ok(exe)
         }
-        let out = self.execute_raw(name, &flat, &entry.input_shape)?;
-        Ok(out
-            .chunks_exact(h * w)
-            .map(|c| Image::from_data(w, h, c.to_vec()))
-            .collect())
-    }
 
-    /// Names of all available artifacts.
-    pub fn artifact_names(&self) -> Vec<String> {
-        self.manifest
-            .entries
-            .iter()
-            .map(|e| e.name.clone())
-            .collect()
+        /// Execute an entry on a raw f32 buffer of the entry's input shape.
+        /// Artifacts are lowered with `return_tuple=True`, so the output is
+        /// a 1-tuple; returns the flattened result buffer.
+        pub fn execute_raw(&self, name: &str, input: &[f32], shape: &[usize]) -> Result<Vec<f32>> {
+            let exe = self.executable(name)?;
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(input)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            let result = exe
+                .execute::<xla::Literal>(&[lit])
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch: {e:?}"))?;
+            let tuple = out.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            tuple.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        }
+
+        /// Run a single-image entry (forward/inverse/multilevel).
+        pub fn execute_image(&self, name: &str, img: &Image) -> Result<Image> {
+            let entry = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+            let expect = [entry.input_shape[0], entry.input_shape[1]];
+            if [img.height, img.width] != expect {
+                return Err(anyhow!(
+                    "{name} expects {}x{} (HxW), got {}x{}",
+                    expect[0],
+                    expect[1],
+                    img.height,
+                    img.width
+                ));
+            }
+            let out = self.execute_raw(name, &img.data, &entry.input_shape)?;
+            Ok(Image::from_data(img.width, img.height, out))
+        }
+
+        /// Run a batched entry on a stack of same-shape images.
+        pub fn execute_batch(&self, name: &str, batch: &[Image]) -> Result<Vec<Image>> {
+            let entry = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("no artifact named {name}"))?
+                .clone();
+            if entry.input_shape.len() != 3 {
+                return Err(anyhow!("{name} is not a batched entry"));
+            }
+            let (b, h, w) = (
+                entry.input_shape[0],
+                entry.input_shape[1],
+                entry.input_shape[2],
+            );
+            if batch.len() != b {
+                return Err(anyhow!("{name} expects batch {b}, got {}", batch.len()));
+            }
+            let mut flat = Vec::with_capacity(b * h * w);
+            for img in batch {
+                if img.height != h || img.width != w {
+                    return Err(anyhow!("batch image shape mismatch"));
+                }
+                flat.extend_from_slice(&img.data);
+            }
+            let out = self.execute_raw(name, &flat, &entry.input_shape)?;
+            Ok(out
+                .chunks_exact(h * w)
+                .map(|c| Image::from_data(w, h, c.to_vec()))
+                .collect())
+        }
+
+        /// Names of all available artifacts.
+        pub fn artifact_names(&self) -> Vec<String> {
+            self.manifest
+                .entries
+                .iter()
+                .map(|e| e.name.clone())
+                .collect()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod client {
+    use super::Manifest;
+    use crate::dwt::Image;
+    use anyhow::{anyhow, Result};
+    use std::path::Path;
+
+    /// Stub runtime compiled when the `pjrt` feature is off: creation
+    /// always fails, so the coordinator falls back to the native
+    /// `KernelPlan` engine (the same code path as a missing artifact
+    /// directory).
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn new(_artifacts_dir: &Path) -> Result<Self> {
+            Err(anyhow!(
+                "built without the `pjrt` feature; AOT artifact execution unavailable"
+            ))
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn execute_raw(&self, name: &str, _input: &[f32], _shape: &[usize]) -> Result<Vec<f32>> {
+            Err(anyhow!("pjrt disabled: cannot execute {name}"))
+        }
+
+        pub fn execute_image(&self, name: &str, _img: &Image) -> Result<Image> {
+            Err(anyhow!("pjrt disabled: cannot execute {name}"))
+        }
+
+        pub fn execute_batch(&self, name: &str, _batch: &[Image]) -> Result<Vec<Image>> {
+            Err(anyhow!("pjrt disabled: cannot execute {name}"))
+        }
+
+        pub fn artifact_names(&self) -> Vec<String> {
+            self.manifest
+                .entries
+                .iter()
+                .map(|e| e.name.clone())
+                .collect()
+        }
+    }
+}
+
+pub use client::Runtime;
 
 /// Locate the artifacts directory: `$DWT_ACCEL_ARTIFACTS` or
 /// `<crate root>/artifacts`.

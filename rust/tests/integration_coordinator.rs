@@ -85,6 +85,60 @@ fn forward_then_inverse_roundtrip_via_coordinator() {
 }
 
 #[test]
+fn odd_dimension_request_is_an_error_not_a_panic() {
+    // regression: a 33x32 request used to panic inside Planes::split on
+    // a worker thread; it must surface as a proper Err from the service
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let err = coord.transform(Request {
+        image: Image::synthetic(33, 32, 90),
+        wavelet: "cdf53".into(),
+        scheme: Scheme::SepLifting,
+        inverse: false,
+        levels: 1,
+    });
+    assert!(err.is_err(), "odd width must be rejected");
+    let err = coord.transform(Request {
+        image: Image::synthetic(32, 33, 90),
+        wavelet: "cdf97".into(),
+        scheme: Scheme::NsConv,
+        inverse: true,
+        levels: 1,
+    });
+    assert!(err.is_err(), "odd height must be rejected");
+    // the service stays healthy afterwards
+    let ok = coord.transform(Request {
+        image: Image::synthetic(32, 32, 91),
+        wavelet: "cdf53".into(),
+        scheme: Scheme::SepLifting,
+        inverse: false,
+        levels: 1,
+    });
+    assert!(ok.is_ok());
+}
+
+#[test]
+fn indivisible_multilevel_request_is_an_error() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    // 36 is even but not divisible by 2^3
+    let err = coord.transform(Request {
+        image: Image::synthetic(36, 36, 92),
+        wavelet: "cdf53".into(),
+        scheme: Scheme::SepLifting,
+        inverse: false,
+        levels: 3,
+    });
+    assert!(err.is_err());
+    let ok = coord.transform(Request {
+        image: Image::synthetic(40, 40, 92),
+        wavelet: "cdf53".into(),
+        scheme: Scheme::SepLifting,
+        inverse: false,
+        levels: 3,
+    });
+    assert!(ok.is_ok());
+}
+
+#[test]
 fn unknown_wavelet_is_an_error() {
     let coord = Coordinator::new(native_cfg()).unwrap();
     let err = coord.transform(Request {
