@@ -14,8 +14,8 @@ fn native_cfg() -> CoordinatorConfig {
         artifacts_dir: None,
         workers: 2,
         batch: BatchPolicy::default(),
-        tile: 256,
-        tiled_threshold: usize::MAX,
+        parallel_threshold: usize::MAX,
+        threads: 0,
     }
 }
 
@@ -32,8 +32,7 @@ fn main() {
                     image: tiny.clone(),
                     wavelet: "cdf53".into(),
                     scheme: Scheme::SepLifting,
-                    inverse: false,
-                    levels: 1,
+                    ..Request::default()
                 })
                 .unwrap();
         },
@@ -58,8 +57,7 @@ fn main() {
                         image: img.clone(),
                         wavelet: "cdf97".into(),
                         scheme,
-                        inverse: false,
-                        levels: 1,
+                        ..Request::default()
                     })
                     .unwrap();
             },
@@ -95,8 +93,7 @@ fn main() {
                     image: img.clone(),
                     wavelet: "cdf97".into(),
                     scheme: Scheme::NsPolyconv,
-                    inverse: false,
-                    levels: 1,
+                    ..Request::default()
                 })
                 .unwrap();
             let t0 = Instant::now();
@@ -106,8 +103,7 @@ fn main() {
                         image: img.clone(),
                         wavelet: "cdf97".into(),
                         scheme: Scheme::NsPolyconv,
-                        inverse: false,
-                        levels: 1,
+                        ..Request::default()
                     })
                 })
                 .collect();

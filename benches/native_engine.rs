@@ -1,29 +1,57 @@
 //! Bench target: native engine micro-benchmarks — the L3 hot path.
-//! Per-scheme planned (KernelPlan) vs legacy (apply_chain) execution,
-//! the lifting kernel library vs the generic evaluator, tiled vs
-//! monolithic, and the memcpy roofline.  Emits `BENCH_native.json` so
-//! future PRs can track the planned-vs-legacy speedup trajectory.
+//! Per-scheme scalar (KernelPlan) vs band-parallel (ParallelExecutor)
+//! vs legacy (apply_chain) execution, the lifting kernel library vs the
+//! generic evaluator, and the memcpy roofline; plus a large-image
+//! (2048^2) scalar-vs-parallel section.  Emits `BENCH_native.json` so
+//! future PRs can track both the planned-vs-legacy and the
+//! parallel-vs-scalar speedup trajectories.
+//!
+//! Flags: `--quick` caps the per-case budget for CI smoke runs.
+//! `PALLAS_THREADS` pins the parallel executor's thread count.
 
 use dwt_accel::benchutil::{bench, default_budget, gbs, Stats, Table};
 use dwt_accel::coordinator::tiler;
+use dwt_accel::dwt::executor::{default_threads, ParallelExecutor, ScalarExecutor};
 use dwt_accel::dwt::{apply, lifting, Engine, Image, PlanVariant, Planes};
+use dwt_accel::gpusim::band_halo_bytes;
 use dwt_accel::polyphase::schemes::{self, Scheme};
 use dwt_accel::polyphase::wavelets::Wavelet;
+use std::time::Duration;
 
 struct SchemeRecord {
     wavelet: &'static str,
     scheme: &'static str,
     planned_ms: f64,
+    parallel_ms: f64,
     legacy_ms: f64,
     macs_per_pixel: f64,
 }
 
+struct LargeRecord {
+    side: usize,
+    scheme: &'static str,
+    scalar_ms: f64,
+    parallel_ms: f64,
+}
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = if quick {
+        Duration::from_millis(40)
+    } else {
+        default_budget()
+    };
+    let threads = default_threads();
+    let parallel = ParallelExecutor::with_threads(threads);
+
     let side = 1024usize;
     let img = Image::synthetic(side, side, 5);
     let bytes = side * side * 4;
 
-    println!("\n=== native engine, {side}x{side} f32 ===\n");
+    println!(
+        "\n=== native engine, {side}x{side} f32, {threads} threads{} ===\n",
+        if quick { ", --quick" } else { "" }
+    );
 
     // roofline anchor: plane copy
     let src = img.data.clone();
@@ -33,7 +61,7 @@ fn main() {
             dst.copy_from_slice(std::hint::black_box(&src));
             std::hint::black_box(&mut dst);
         },
-        default_budget(),
+        budget,
         5,
         2000,
     );
@@ -53,7 +81,7 @@ fn main() {
             lifting::forward_in_place(&w, &mut p);
             std::hint::black_box(&p);
         },
-        default_budget(),
+        budget,
         3,
         500,
     );
@@ -62,7 +90,7 @@ fn main() {
         || {
             std::hint::black_box(apply::apply_chain(&steps, std::hint::black_box(&planes0)));
         },
-        default_budget(),
+        budget,
         3,
         500,
     );
@@ -78,12 +106,15 @@ fn main() {
         s_generic.median.as_secs_f64() / s_fast.median.as_secs_f64()
     );
 
-    // planned (KernelPlan) vs legacy (apply_chain) per scheme/wavelet:
-    // the seed's non-SepLifting execution path was exactly this legacy
-    // chain, so `speedup` tracks what the plan layer bought
-    println!("\n--- planned (KernelPlan) vs legacy (apply_chain) forward ---\n");
-    let t = Table::new(&[7, 13, 10, 10, 8, 9]);
-    t.header(&["wavelet", "scheme", "plan ms", "legacy ms", "speedup", "MACs/pel"]);
+    // scalar (KernelPlan) vs band-parallel vs legacy (apply_chain) per
+    // scheme/wavelet: the seed's non-SepLifting execution path was
+    // exactly this legacy chain, so `speedup` tracks what the plan
+    // layer bought and `par` what the executor layer adds on top
+    println!("\n--- scalar vs parallel (x{threads}) vs legacy forward ---\n");
+    let t = Table::new(&[7, 13, 10, 10, 10, 8, 8, 9]);
+    t.header(&[
+        "wavelet", "scheme", "plan ms", "par ms", "legacy ms", "x leg", "x par", "MACs/pel",
+    ]);
     let mut records: Vec<SchemeRecord> = Vec::new();
     for w in Wavelet::all() {
         for scheme in Scheme::ALL {
@@ -92,7 +123,17 @@ fn main() {
                 || {
                     std::hint::black_box(engine.forward(std::hint::black_box(&img)));
                 },
-                default_budget(),
+                budget,
+                3,
+                200,
+            );
+            let s_par: Stats = bench(
+                || {
+                    std::hint::black_box(
+                        engine.forward_with(std::hint::black_box(&img), &parallel),
+                    );
+                },
+                budget,
                 3,
                 200,
             );
@@ -108,7 +149,7 @@ fn main() {
                         lifting::forward_in_place(&w, &mut p);
                         std::hint::black_box(p.to_packed());
                     },
-                    default_budget(),
+                    budget,
                     3,
                     200,
                 )
@@ -121,37 +162,90 @@ fn main() {
                         );
                         std::hint::black_box(planes.to_packed());
                     },
-                    default_budget(),
+                    budget,
                     3,
                     200,
                 )
             };
             let speedup = s_legacy.median.as_secs_f64() / s_plan.median.as_secs_f64();
+            let par_speedup = s_plan.median.as_secs_f64() / s_par.median.as_secs_f64();
             t.row(&[
                 w.name.into(),
                 scheme.name().into(),
                 format!("{:.2}", s_plan.median_ms()),
+                format!("{:.2}", s_par.median_ms()),
                 format!("{:.2}", s_legacy.median_ms()),
                 format!("x{:.2}", speedup),
+                format!("x{:.2}", par_speedup),
                 format!("{:.1}", engine.macs_per_pixel()),
             ]);
             records.push(SchemeRecord {
                 wavelet: w.name,
                 scheme: scheme.name(),
                 planned_ms: s_plan.median_ms(),
+                parallel_ms: s_par.median_ms(),
                 legacy_ms: s_legacy.median_ms(),
                 macs_per_pixel: engine.macs_per_pixel(),
             });
         }
     }
 
-    // tiled vs monolithic (the coordinator's large-image path)
+    // large-image section: where band parallelism must pay off
+    println!("\n--- 2048x2048: scalar vs parallel (x{threads}) ---\n");
+    let big = Image::synthetic(2048, 2048, 6);
+    let scalar = ScalarExecutor;
+    let mut larges: Vec<LargeRecord> = Vec::new();
+    for (wname, scheme) in [
+        ("cdf97", Scheme::SepLifting),
+        ("cdf97", Scheme::NsLifting),
+        ("cdf53", Scheme::NsConv),
+    ] {
+        let engine = Engine::new(scheme, Wavelet::by_name(wname).expect("wavelet"));
+        // sanity: backends bit-exact before we time them
+        let a = engine.forward_with(&big, &scalar);
+        let b = engine.forward_with(&big, &parallel);
+        assert_eq!(a.max_abs_diff(&b), 0.0, "parallel != scalar");
+        let s_scalar = bench(
+            || {
+                std::hint::black_box(engine.forward_with(std::hint::black_box(&big), &scalar));
+            },
+            budget,
+            3,
+            50,
+        );
+        let s_par = bench(
+            || {
+                std::hint::black_box(engine.forward_with(std::hint::black_box(&big), &parallel));
+            },
+            budget,
+            3,
+            50,
+        );
+        let plan = engine.plan(PlanVariant::Optimized);
+        println!(
+            "{} {:<13} scalar {:>7.2} ms   parallel {:>7.2} ms   x{:.2}   halo {:.1} KiB",
+            wname,
+            scheme.name(),
+            s_scalar.median_ms(),
+            s_par.median_ms(),
+            s_scalar.median.as_secs_f64() / s_par.median.as_secs_f64(),
+            band_halo_bytes(plan, 1024, threads) as f64 / 1024.0
+        );
+        larges.push(LargeRecord {
+            side: 2048,
+            scheme: scheme.name(),
+            scalar_ms: s_scalar.median_ms(),
+            parallel_ms: s_par.median_ms(),
+        });
+    }
+
+    // tiled compatibility layer vs monolithic
     let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
     let s_mono = bench(
         || {
             std::hint::black_box(engine.forward(std::hint::black_box(&img)));
         },
-        default_budget(),
+        budget,
         3,
         200,
     );
@@ -159,15 +253,15 @@ fn main() {
         || {
             std::hint::black_box(tiler::tiled_forward(&engine, std::hint::black_box(&img), 256));
         },
-        default_budget(),
+        budget,
         3,
         200,
     );
     println!(
-        "\nmonolithic sep_lifting:     {:.3} ms;  tiled(256): {:.3} ms (halo overhead x{:.2})",
+        "\nmonolithic sep_lifting:     {:.3} ms;  tiled-compat(256): {:.3} ms (x{:.2})",
         s_mono.median_ms(),
         s_tiled.median_ms(),
-        s_tiled.median.as_secs_f64() / s_mono.median.as_secs_f64()
+        s_mono.median.as_secs_f64() / s_tiled.median.as_secs_f64()
     );
 
     // barrier/term structure of the executed plans (cdf97)
@@ -185,32 +279,59 @@ fn main() {
     }
 
     let path = "BENCH_native.json";
-    match std::fs::write(path, to_json(side, memcpy_gbs, &records)) {
+    match std::fs::write(path, to_json(side, threads, quick, memcpy_gbs, &records, &larges)) {
         Ok(()) => println!("\nwrote {path} ({} scheme records)", records.len()),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 }
 
 /// Hand-rolled JSON (no serde in the offline build).
-fn to_json(side: usize, memcpy_gbs: f64, records: &[SchemeRecord]) -> String {
+fn to_json(
+    side: usize,
+    threads: usize,
+    quick: bool,
+    memcpy_gbs: f64,
+    records: &[SchemeRecord],
+    larges: &[LargeRecord],
+) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"native_engine\",\n");
     out.push_str(&format!("  \"side\": {side},\n"));
+    out.push_str(&format!("  \"threads\": {threads},\n"));
+    out.push_str(&format!("  \"quick\": {quick},\n"));
     out.push_str(&format!("  \"memcpy_gbs\": {memcpy_gbs:.3},\n"));
     out.push_str("  \"schemes\": [\n");
     for (i, r) in records.iter().enumerate() {
         let speedup = r.legacy_ms / r.planned_ms;
+        let par_speedup = r.planned_ms / r.parallel_ms;
         out.push_str(&format!(
             "    {{\"wavelet\": \"{}\", \"scheme\": \"{}\", \"planned_ms\": {:.4}, \
-             \"legacy_ms\": {:.4}, \"speedup\": {:.3}, \"macs_per_pixel\": {:.2}}}{}\n",
+             \"parallel_ms\": {:.4}, \"legacy_ms\": {:.4}, \"speedup\": {:.3}, \
+             \"parallel_speedup\": {:.3}, \"macs_per_pixel\": {:.2}}}{}\n",
             r.wavelet,
             r.scheme,
             r.planned_ms,
+            r.parallel_ms,
             r.legacy_ms,
             speedup,
+            par_speedup,
             r.macs_per_pixel,
             if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"large\": [\n");
+    for (i, r) in larges.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"side\": {}, \"scheme\": \"{}\", \"scalar_ms\": {:.4}, \
+             \"parallel_ms\": {:.4}, \"parallel_speedup\": {:.3}}}{}\n",
+            r.side,
+            r.scheme,
+            r.scalar_ms,
+            r.parallel_ms,
+            r.scalar_ms / r.parallel_ms,
+            if i + 1 == larges.len() { "" } else { "," }
         ));
     }
     out.push_str("  ]\n}\n");

@@ -19,8 +19,7 @@ fn main() -> anyhow::Result<()> {
         image: img.clone(),
         wavelet: "cdf97".into(),
         scheme: Scheme::NsPolyconv,
-        inverse: false,
-        levels: 1,
+        ..Request::default()
     })?;
     println!(
         "forward via {} in {:.2} ms",

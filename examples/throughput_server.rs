@@ -3,9 +3,9 @@
 //! Spins up the coordinator (PJRT executor + dynamic batcher + native
 //! worker pool), generates a mixed request stream from several client
 //! threads — serve-size images routed to the AOT Pallas/XLA artifacts,
-//! large images to the tiled native path — and reports throughput and
-//! latency percentiles per scheme.  Results are recorded in
-//! EXPERIMENTS.md (E2E row).
+//! large images to the band-parallel native executor — and reports
+//! throughput and latency percentiles per scheme.  Results are recorded
+//! in EXPERIMENTS.md (E2E row).
 //!
 //!     cargo run --release --example throughput_server
 //!     DWT_E2E_REQUESTS=512 cargo run --release --example throughput_server
@@ -50,8 +50,7 @@ fn main() -> anyhow::Result<()> {
                     image: img.clone(),
                     wavelet: "cdf97".into(),
                     scheme,
-                    inverse: false,
-                    levels: 1,
+                    ..Request::default()
                 })
             })
             .collect();
@@ -73,7 +72,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // -- phase 2: mixed multi-client stream (batching + tiled path) --
+    // -- phase 2: mixed multi-client stream (batching + parallel path) --
     println!("\nmixed stream: 4 client threads, serve-size + 1024x1024 images");
     let t0 = Instant::now();
     let mut joins = Vec::new();
@@ -96,8 +95,7 @@ fn main() -> anyhow::Result<()> {
                         image: img,
                         wavelet: ["cdf97", "cdf53", "dd137"][i % 3].into(),
                         scheme,
-                        inverse: false,
-                        levels: 1,
+                        ..Request::default()
                     })
                 })
                 .collect();

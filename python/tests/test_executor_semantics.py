@@ -1,0 +1,482 @@
+"""Band-parallel executor semantics, validated against the oracle.
+
+Mirrors PR 2's Rust `dwt::executor` in numpy: the KernelPlan lowering
+(`rust/src/dwt/plan.rs`), the scalar executor, and the band-parallel
+executor with its phase partitioner (`rust/src/dwt/executor.rs`), then
+asserts
+
+* the lowering reproduces direct matrix-chain application,
+* banded execution with phase barriers equals scalar execution
+  EXACTLY (same dtype, same per-element op order) for every scheme,
+  wavelet, boundary, and awkward band split,
+* the phase-cut rule is load-bearing (a no-cut variant diverges on the
+  fused spatial lifts),
+* the plan-derived overlap-save halo (`TileGrid::halo_for` fix)
+  reproduces the monolithic transform, with a zero halo for Haar.
+
+The Rust test suite asserts the same invariants on the real
+implementation; this file guards the *algorithm* from a second,
+independent implementation so the two cannot drift silently.
+"""
+
+import numpy as np
+import pytest
+
+from compile import polyalg as pa
+from compile import schemes
+from compile import wavelets as wv
+
+TOL = 1e-12
+WAVELET_NAMES = sorted(wv.WAVELETS)
+
+# ------------------------------------------------------------- lowering
+
+
+def p_approx_eq(a, b, tol=TOL):
+    keys = set(a) | set(b)
+    return all(abs(a.get(k, 0.0) - b.get(k, 0.0)) <= tol for k in keys)
+
+
+def m_approx_eq(a, b, tol=TOL):
+    return all(p_approx_eq(a[i][j], b[i][j], tol) for i in range(4) for j in range(4))
+
+
+def is_scale(m):
+    for i in range(4):
+        for j in range(4):
+            p = m[i][j]
+            if i != j and not pa.p_is_zero(p):
+                return False
+            if i == j and (len(p) > 1 or any(k != (0, 0) for k in p)):
+                return False
+    return True
+
+
+def diag_constants(m):
+    d = []
+    for i in range(4):
+        p = m[i][i]
+        if len(p) != 1 or (0, 0) not in p:
+            return None
+        d.append(p[(0, 0)])
+    return d
+
+
+def taps_of(p):
+    if all(kn == 0 for (_, kn) in p):
+        return ("h", sorted((km, c) for (km, _), c in p.items()))
+    if all(km == 0 for (km, _) in p):
+        return ("v", sorted((kn, c) for (_, kn), c in p.items()))
+    return None
+
+
+def lift(dst, src, axis, taps):
+    return ("lift", dst, src, axis, list(taps))
+
+
+def match_spatial(m):
+    z = lambda i, j: pa.p_is_zero(m[i][j])
+    if (z(0, 1) and z(0, 2) and z(0, 3) and z(1, 2) and z(1, 3) and z(2, 1)
+            and z(2, 3) and not pa.p_is_zero(m[1][0])):
+        p = m[1][0]
+        pt = pa.p_transpose(p)
+        if (p_approx_eq(m[2][0], pt) and p_approx_eq(m[3][1], pt)
+                and p_approx_eq(m[3][2], p)
+                and p_approx_eq(m[3][0], pa.p_mul(p, pt))):
+            t = taps_of(p)
+            if t and t[0] == "h":
+                taps = t[1]
+                return [lift(1, 0, "h", taps), lift(3, 2, "h", taps),
+                        lift(2, 0, "v", taps), lift(3, 1, "v", taps)]
+    if (z(1, 0) and z(2, 0) and z(3, 0) and z(3, 1) and z(3, 2) and z(1, 2)
+            and z(2, 1) and not pa.p_is_zero(m[0][1])):
+        u = m[0][1]
+        ut = pa.p_transpose(u)
+        if (p_approx_eq(m[0][2], ut) and p_approx_eq(m[1][3], ut)
+                and p_approx_eq(m[2][3], u)
+                and p_approx_eq(m[0][3], pa.p_mul(u, ut))):
+            t = taps_of(u)
+            if t and t[0] == "h":
+                taps = t[1]
+                return [lift(0, 1, "h", taps), lift(2, 3, "h", taps),
+                        lift(0, 2, "v", taps), lift(1, 3, "v", taps)]
+    return None
+
+
+def lower_unipotent(m):
+    ks = match_spatial(m)
+    if ks is not None:
+        return ks
+    entries = [(i, j) for i in range(4) for j in range(4)
+               if i != j and not pa.p_is_zero(m[i][j])]
+    if not entries:
+        return []
+    if {i for i, _ in entries} & {j for _, j in entries}:
+        return None
+    out = []
+    for i, j in entries:
+        t = taps_of(m[i][j])
+        if t is None:
+            return None
+        out.append(lift(i, j, t[0], t[1]))
+    return out
+
+
+def stencil_of(m):
+    rows = []
+    for i in range(4):
+        terms = []
+        for j in range(4):
+            for (km, kn), c in sorted(m[i][j].items()):
+                terms.append((j, km, kn, c))
+        rows.append(terms)
+    return ("stencil", rows)
+
+
+def lower_matrix(m, out):
+    if m_approx_eq(m, pa.m_identity(4)):
+        return
+    if is_scale(m):
+        out.append(("scale", [m[i][i].get((0, 0), 0.0) for i in range(4)]))
+        return
+    d = diag_constants(m)
+    if d is not None:
+        if all(abs(c - 1.0) <= TOL for c in d):
+            ks = lower_unipotent(m)
+            if ks is not None:
+                out.extend(ks)
+                return
+        elif all(abs(c) > TOL for c in d):
+            rows = [[pa.p_scale(m[i][j], 1.0 / d[i]) for j in range(4)] for i in range(4)]
+            ks = lower_unipotent(rows)
+            if ks is not None:
+                out.extend(ks)
+                out.append(("scale", list(d)))
+                return
+            cols = [[pa.p_scale(m[i][j], 1.0 / d[j]) for j in range(4)] for i in range(4)]
+            ks = lower_unipotent(cols)
+            if ks is not None:
+                out.append(("scale", list(d)))
+                out.extend(ks)
+                return
+    out.append(stencil_of(m))
+
+
+def compile_plan(steps):
+    plan = []
+    for m in steps:
+        ks = []
+        lower_matrix(m, ks)
+        plan.append(ks)
+    return plan
+
+
+# ------------------------------------------------------------ execution
+
+
+def fold_sym(i, n, odd):
+    while True:
+        if i < 0:
+            i = (-i - 1) if odd else -i
+        elif i >= n:
+            i = (2 * n - 2 - i) if odd else (2 * n - 1 - i)
+        else:
+            return i
+        if n == 1:
+            return 0
+
+
+def plane_is_odd(plane, axis):
+    return plane in ((1, 3) if axis == "h" else (2, 3))
+
+
+def fold(i, n, boundary, odd):
+    return i % n if boundary == "periodic" else fold_sym(i, n, odd)
+
+
+def split(img):
+    return [img[0::2, 0::2].copy(), img[0::2, 1::2].copy(),
+            img[1::2, 0::2].copy(), img[1::2, 1::2].copy()]
+
+
+def apply_lift(dst, src, axis, taps, boundary, src_odd):
+    h2, w2 = dst.shape
+    acc = np.zeros_like(dst)
+    if axis == "h":
+        for k, c in taps:
+            idx = [fold(x + k, w2, boundary, src_odd) for x in range(w2)]
+            acc += c * src[:, idx]
+    else:
+        for k, c in taps:
+            idx = [fold(y + k, h2, boundary, src_odd) for y in range(h2)]
+            acc += c * src[idx, :]
+    dst += acc
+
+
+def apply_stencil(rows, planes, boundary):
+    h2, w2 = planes[0].shape
+    out = []
+    for i in range(4):
+        o = np.zeros_like(planes[0])
+        for (j, km, kn, c) in rows[i]:
+            xi = [fold(x + km, w2, boundary, plane_is_odd(j, "h")) for x in range(w2)]
+            yi = [fold(y + kn, h2, boundary, plane_is_odd(j, "v")) for y in range(h2)]
+            o += c * planes[j][np.ix_(yi, xi)]
+        out.append(o)
+    return out
+
+
+def exec_scalar(plan, planes, boundary):
+    planes = [p.copy() for p in planes]
+    for group in plan:
+        for k in group:
+            if k[0] == "lift":
+                _, dst, src, axis, taps = k
+                apply_lift(planes[dst], planes[src], axis, taps, boundary,
+                           plane_is_odd(src, axis))
+            elif k[0] == "scale":
+                for c, f in enumerate(k[1]):
+                    if abs(f - 1.0) > 1e-12:
+                        planes[c] *= f
+            else:
+                planes = apply_stencil(k[1], planes, boundary)
+    return planes
+
+
+def written_planes(k):
+    if k[0] == "lift":
+        return 1 << k[1]
+    if k[0] == "scale":
+        m = 0
+        for c, f in enumerate(k[1]):
+            if abs(f - 1.0) > 1e-12:
+                m |= 1 << c
+        return m
+    return 0b1111
+
+
+def vread_planes(k):
+    if k[0] == "lift" and k[3] == "v":
+        return 1 << k[2]
+    return 0b1111 if k[0] == "stencil" else 0
+
+
+def phases(kernels, cut_rule=True):
+    out, start, written, vread = [], 0, 0, 0
+    for i, k in enumerate(kernels):
+        if k[0] == "stencil":
+            if start < i:
+                out.append(("inplace", kernels[start:i]))
+            out.append(("stencil", k[1]))
+            start, written, vread = i + 1, 0, 0
+            continue
+        w, vr = written_planes(k), vread_planes(k)
+        if cut_rule and ((vr & written) or (w & vread)):
+            out.append(("inplace", kernels[start:i]))
+            start, written, vread = i, 0, 0
+        written |= w
+        vread |= vr
+    if start < len(kernels):
+        out.append(("inplace", kernels[start:]))
+    return out
+
+
+def band_ranges(h2, n):
+    n = max(1, min(n, max(h2, 1)))
+    base, rem = divmod(h2, n)
+    out, y = [], 0
+    for b in range(n):
+        rows = base + (1 if b < rem else 0)
+        out.append((y, y + rows))
+        y += rows
+    return out
+
+
+def exec_banded(plan, planes, boundary, threads, cut_rule=True):
+    """The Rust ParallelExecutor's memory model: per phase, every
+    cross-band (vertical) read is served by the phase-start state of a
+    plane no band writes; each band mutates only its own rows."""
+    planes = [p.copy() for p in planes]
+    h2, w2 = planes[0].shape
+    bands = band_ranges(h2, threads)
+    if len(bands) <= 1:
+        return exec_scalar(plan, planes, boundary)
+    for group in plan:
+        for ph in phases(group, cut_rule):
+            if ph[0] == "stencil":
+                planes = apply_stencil(ph[1], planes, boundary)
+                continue
+            kernels = ph[1]
+            written = 0
+            for k in kernels:
+                written |= written_planes(k)
+            snapshot = [p.copy() for p in planes]
+            updates = []
+            for (y0, y1) in bands:
+                work = {i: planes[i][y0:y1, :].copy()
+                        for i in range(4) if written & (1 << i)}
+                for k in kernels:
+                    if k[0] == "lift":
+                        _, dst, src, axis, taps = k
+                        src_odd = plane_is_odd(src, axis)
+                        acc = np.zeros_like(work[dst])
+                        if axis == "h":
+                            srows = (work[src] if (written >> src) & 1
+                                     else snapshot[src][y0:y1, :])
+                            for kk, c in taps:
+                                idx = [fold(x + kk, w2, boundary, src_odd)
+                                       for x in range(w2)]
+                                acc += c * srows[:, idx]
+                        else:
+                            assert not ((written >> src) & 1), \
+                                "race: vertical read of a written plane"
+                            for kk, c in taps:
+                                idx = [fold(y + kk, h2, boundary, src_odd)
+                                       for y in range(y0, y1)]
+                                acc += c * snapshot[src][idx, :]
+                        work[dst] += acc
+                    elif k[0] == "scale":
+                        for c, f in enumerate(k[1]):
+                            if abs(f - 1.0) > 1e-12:
+                                work[c] *= f
+                updates.append((y0, y1, work))
+            for (y0, y1, work) in updates:
+                for i, chunk in work.items():
+                    planes[i][y0:y1, :] = chunk
+    return planes
+
+
+def apply_chain(steps, planes):
+    planes = [p.copy() for p in planes]
+    for m in steps:
+        rows = []
+        for i in range(4):
+            terms = []
+            for j in range(4):
+                for (km, kn), c in sorted(m[i][j].items()):
+                    terms.append((j, km, kn, c))
+            rows.append(terms)
+        planes = apply_stencil(rows, planes, "periodic")
+    return planes
+
+
+def img_of(w, h, seed):
+    return np.random.RandomState(seed).rand(h, w) * 255.0
+
+
+# --------------------------------------------------------------- tests
+
+
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+@pytest.mark.parametrize("scheme", schemes.SCHEMES)
+def test_lowering_matches_matrix_chain(wname, scheme):
+    w = wv.get(wname)
+    steps = schemes.build(scheme, w)
+    plan = compile_plan(steps)
+    p0 = split(img_of(32, 48, 1))
+    a = exec_scalar(plan, p0, "periodic")
+    b = apply_chain(steps, p0)
+    err = max(np.abs(x - y).max() for x, y in zip(a, b))
+    assert err < 1e-8
+    if scheme in ("sep_lifting", "ns_lifting"):
+        kinds = {k[0] for g in plan for k in g}
+        assert "stencil" not in kinds, "lifting scheme must lower in place"
+
+
+@pytest.mark.parametrize("size", [(64, 64), (256, 96), (96, 70), (64, 2)])
+@pytest.mark.parametrize("boundary", ["periodic", "symmetric"])
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+def test_banded_equals_scalar_exactly(wname, boundary, size):
+    w = wv.get(wname)
+    W, H = size
+    p0 = split(img_of(W, H, 2))
+    for scheme in schemes.SCHEMES:
+        for chain in (schemes.build(scheme, w), schemes.build_inverse(scheme, w)):
+            plan = compile_plan(chain)
+            a = exec_scalar(plan, p0, boundary)
+            b = exec_banded(plan, p0, boundary, 4)
+            assert all(np.array_equal(x, y) for x, y in zip(a, b)), \
+                f"{wname} {scheme} {boundary} {W}x{H}"
+
+
+@pytest.mark.parametrize("boundary", ["periodic", "symmetric"])
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+def test_banded_equals_scalar_on_fused_groups(wname, boundary):
+    """Stress the phase partitioner beyond per-step groups: fuse the
+    ENTIRE kernel program of each scheme into one barrier group (more
+    packing than any section-5 optimized grouping produces) and demand
+    banded execution still equals scalar exactly.  Scalar semantics are
+    group-agnostic, so the fused plan is a valid reference; the banded
+    path must find every needed cut on its own."""
+    w = wv.get(wname)
+    p0 = split(img_of(96, 70, 5))
+    for scheme in schemes.SCHEMES:
+        plan = compile_plan(schemes.build(scheme, w))
+        fused = [[k for group in plan for k in group]]
+        a = exec_scalar(fused, p0, boundary)
+        b = exec_banded(fused, p0, boundary, 4)
+        assert all(np.array_equal(x, y) for x, y in zip(a, b)), \
+            f"{wname} {scheme} {boundary} fused"
+        # and the fused program computes what the grouped one does
+        c = exec_scalar(plan, p0, boundary)
+        assert all(np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_phase_cut_rule_is_load_bearing():
+    w = wv.get("cdf97")
+    plan = compile_plan(schemes.build("ns_lifting", w))
+    p0 = split(img_of(64, 64, 3))
+    a = exec_scalar(plan, p0, "periodic")
+    try:
+        b = exec_banded(plan, p0, "periodic", 4, cut_rule=False)
+        diverged = not all(np.array_equal(x, y) for x, y in zip(a, b))
+    except AssertionError:
+        diverged = True
+    assert diverged, "removing the cut rule must break banded execution"
+    # the spatial predict partitions as [H, H, V] + [V]
+    ph = phases(plan[0])
+    assert [len(p[1]) for p in ph if p[0] == "inplace"] == [3, 1]
+
+
+def _plan_halo(steps):
+    tot = [0, 0, 0, 0]
+    for m in steps:
+        h = [0, 0, 0, 0]
+        for i in range(4):
+            for j in range(4):
+                for (km, kn) in m[i][j]:
+                    h[0] = max(h[0], -kn)
+                    h[1] = max(h[1], kn)
+                    h[2] = max(h[2], -km)
+                    h[3] = max(h[3], km)
+        for q in range(4):
+            tot[q] += h[q]
+    return 2 * max(tot)  # component samples -> image pixels
+
+
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+def test_plan_halo_suffices_for_overlap_save(wname):
+    w = wv.get(wname)
+    for scheme in schemes.SCHEMES:
+        steps = schemes.build(scheme, w)
+        plan = compile_plan(steps)
+        halo = _plan_halo(steps)
+        if wname == "haar":
+            assert halo == 0, "haar lifts entirely at lag zero"
+        W = H = 64
+        tile = 32
+        img = img_of(W, H, 4)
+        mono = exec_scalar(plan, split(img), "periodic")
+        out = [np.zeros((H // 2, W // 2)) for _ in range(4)]
+        h2, t2 = halo // 2, tile // 2
+        for ty in range(H // tile):
+            for tx in range(W // tile):
+                side = tile + 2 * halo
+                ys = [(ty * tile - halo + y) % H for y in range(side)]
+                xs = [(tx * tile - halo + x) % W for x in range(side)]
+                tp = exec_scalar(plan, split(img[np.ix_(ys, xs)]), "periodic")
+                for c in range(4):
+                    out[c][ty * t2:(ty + 1) * t2, tx * t2:(tx + 1) * t2] = \
+                        tp[c][h2:h2 + t2, h2:h2 + t2]
+        err = max(np.abs(a - b).max() for a, b in zip(out, mono))
+        assert err < 1e-8, f"{wname} {scheme}: halo {halo} err {err}"

@@ -9,10 +9,14 @@ use std::time::Duration;
 pub enum Backend {
     /// AOT artifact on the PJRT executor thread (possibly batched).
     Pjrt,
-    /// Native engine, whole image.
+    /// Native engine, scalar plan executor, whole image.
     Native,
-    /// Native engine, tiled across the worker pool.
-    NativeTiled,
+    /// Native engine, band-parallel plan executor (replaces the old
+    /// crop-and-stitch tiled path; bit-exact with `Native`).  Labels
+    /// the *routing decision*: the executor may still run a scalar
+    /// pass internally when the geometry yields a single band (1-row
+    /// planes, 1-thread pools).
+    NativeParallel,
 }
 
 impl Backend {
@@ -20,7 +24,7 @@ impl Backend {
         match self {
             Backend::Pjrt => "pjrt",
             Backend::Native => "native",
-            Backend::NativeTiled => "native-tiled",
+            Backend::NativeParallel => "native-parallel",
         }
     }
 }
@@ -106,7 +110,7 @@ impl Metrics {
             per_backend: [
                 ("pjrt", g.per_backend[0]),
                 ("native", g.per_backend[1]),
-                ("native-tiled", g.per_backend[2]),
+                ("native-parallel", g.per_backend[2]),
             ],
         }
     }

@@ -1,5 +1,5 @@
-//! Layer-3 coordinator: request routing, dynamic batching, tiled
-//! parallel execution, and metrics for the transform service.
+//! Layer-3 coordinator: request routing, dynamic batching, per-request
+//! plan-executor selection, and metrics for the transform service.
 //!
 //! Topology (all std threads; the PJRT client is `Rc`-based and lives
 //! confined to one executor thread):
@@ -9,15 +9,19 @@
 //!                │  serve-size + artifact?        │ otherwise
 //!                ▼                                ▼
 //!        executor thread (PJRT)           native worker pool
-//!        dynamic batcher over             whole-image or tiled
-//!        AOT executables                  lifting engine
+//!        dynamic batcher over             compiled KernelPlans via a
+//!        AOT executables                  scalar or band-parallel
+//!                │                        PlanExecutor (by size)
 //!                └──────────► respond (oneshot channel) ◄──┘
 //! ```
 //!
 //! The router prefers the AOT Pallas/XLA path for shapes that match a
-//! compiled artifact and falls back to the native engine elsewhere —
-//! large images are split into halo'd tiles processed in parallel
-//! (overlap-save; identical coefficients to the monolithic transform).
+//! compiled artifact (periodic boundary only) and falls back to the
+//! native engine elsewhere.  Large images run on the shared
+//! band-parallel executor — horizontal bands with halo-synchronized
+//! barriers, bit-exact with the scalar path — instead of the old
+//! crop-and-stitch tile fan-out ([`tiler`] keeps the overlap-save
+//! reference for distribution-style backends).
 
 pub mod batcher;
 pub mod metrics;

@@ -1,10 +1,11 @@
 //! The coordinator service: routing, the PJRT executor thread with
-//! dynamic batching, and the native fallback paths.
+//! dynamic batching, and the native fallback paths (scalar or
+//! band-parallel plan executor, picked per request).
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{Backend, Metrics};
-use super::tiler::TileGrid;
 use super::worker::WorkerPool;
+use crate::dwt::executor::{default_threads, ParallelExecutor};
 use crate::dwt::{Boundary, Engine, Image};
 use crate::polyphase::schemes::Scheme;
 use crate::polyphase::wavelets::Wavelet;
@@ -13,7 +14,7 @@ use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// A transform request.
@@ -28,6 +29,11 @@ pub struct Request {
     /// run on the native engine (or the matching AOT multilevel
     /// artifact when one exists at the serve size).
     pub levels: usize,
+    /// Boundary handling (default [`Boundary::Periodic`]).  Symmetric
+    /// requests are served by the native engines — the AOT artifacts
+    /// encode periodic polyphase algebra only — through the same
+    /// per-(scheme, wavelet, boundary) compiled-plan cache.
+    pub boundary: Boundary,
 }
 
 /// A completed transform.
@@ -47,10 +53,14 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Dynamic batching policy for the PJRT executor.
     pub batch: BatchPolicy,
-    /// Tile side for the tiled-parallel native path.
-    pub tile: usize,
-    /// Image pixel count at/above which the tiled path is used.
-    pub tiled_threshold: usize,
+    /// Image pixel count at/above which single-level native requests
+    /// run on the band-parallel plan executor instead of the scalar one.
+    pub parallel_threshold: usize,
+    /// Band-parallel executor thread count; `0` resolves through
+    /// [`default_threads`] (the `PALLAS_THREADS` env override, else the
+    /// machine's parallelism) — CI and benches pin this for
+    /// deterministic runs.
+    pub threads: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -62,8 +72,8 @@ impl Default for CoordinatorConfig {
                 .unwrap_or(4)
                 .min(8),
             batch: BatchPolicy::default(),
-            tile: 256,
-            tiled_threshold: 1024 * 1024,
+            parallel_threshold: 1024 * 1024,
+            threads: 0,
         }
     }
 }
@@ -92,6 +102,11 @@ pub struct Coordinator {
     /// manifest index: (wavelet, scheme) -> (single entry, batched entry)
     artifact_index: HashMap<(String, String), (String, Option<String>)>,
     pool: WorkerPool,
+    /// The band-parallel plan executor shared by every large request —
+    /// one persistent band pool for the whole service, spawned lazily
+    /// so configs that never cross `parallel_threshold` never pay for
+    /// idle threads.
+    parallel: OnceLock<Arc<ParallelExecutor>>,
     /// Compiled-plan cache: engines (each holding its forward / inverse
     /// / optimized `KernelPlan`s) keyed by (scheme, wavelet, boundary).
     engines: Mutex<HashMap<(Scheme, &'static str, Boundary), Arc<Engine>>>,
@@ -155,6 +170,7 @@ impl Coordinator {
             serve_size,
             artifact_index,
             pool,
+            parallel: OnceLock::new(),
             engines: Mutex::new(HashMap::new()),
         })
     }
@@ -162,6 +178,20 @@ impl Coordinator {
     /// True when the AOT/PJRT path is live.
     pub fn pjrt_available(&self) -> bool {
         self.exec_tx.is_some()
+    }
+
+    /// The shared band-parallel executor, spawned on first use.
+    fn parallel_executor(&self) -> Arc<ParallelExecutor> {
+        self.parallel
+            .get_or_init(|| {
+                let threads = if self.cfg.threads == 0 {
+                    default_threads()
+                } else {
+                    self.cfg.threads
+                };
+                Arc::new(ParallelExecutor::with_threads(threads))
+            })
+            .clone()
     }
 
     fn engine(&self, scheme: Scheme, wavelet: &Wavelet, boundary: Boundary) -> Arc<Engine> {
@@ -214,8 +244,9 @@ impl Coordinator {
             let _ = respond.send(Err(e));
             return handle;
         }
-        // route 1: PJRT artifact (forward, serve size, single level)
-        if !request.inverse && request.levels <= 1 {
+        // route 1: PJRT artifact (forward, serve size, single level,
+        // periodic — the AOT artifacts bake in periodic algebra)
+        if !request.inverse && request.levels <= 1 && request.boundary == Boundary::Periodic {
             if let (Some(tx), Some((sh, sw))) = (&self.exec_tx, self.serve_size) {
                 if request.image.height == sh && request.image.width == sw {
                     if let Some((single, batched)) = self
@@ -250,78 +281,46 @@ impl Coordinator {
         handle
     }
 
-    /// The native fallback paths: whole-image or tiled, both executing
-    /// the engine's cached compiled plans directly.
+    /// The native fallback paths.  Every request executes the engine's
+    /// cached compiled plans; what varies is the *executor*: single-level
+    /// requests at/above `parallel_threshold` pixels run on the shared
+    /// band-parallel executor (bit-exact with scalar, so routing is
+    /// invisible to clients), everything else on the scalar path.  The
+    /// old crop-and-stitch tile fan-out is gone — band execution needs
+    /// no halo'd copies and no stitching.
     fn native_async(&self, wavelet: Wavelet, request: Request, respond: Respond, start: Instant) {
-        let engine = self.engine(request.scheme, &wavelet, Boundary::Periodic);
+        let engine = self.engine(request.scheme, &wavelet, request.boundary);
         let metrics = self.metrics.clone();
-        let tile = self.cfg.tile;
-        let use_tiled = !request.inverse
-            && request.levels <= 1
-            && request.image.width * request.image.height >= self.cfg.tiled_threshold
-            && request.image.width % tile == 0
-            && request.image.height % tile == 0;
-        if use_tiled {
-            // orchestrate tiles on a dedicated thread, fan out to the pool
-            let halo = TileGrid::halo_for(&engine.wavelet);
-            let n_workers = self.pool.size;
-            let img = request.image;
-            std::thread::spawn(move || {
-                let grid = TileGrid::new(img.width, img.height, tile, halo);
-                let out = Arc::new(Mutex::new(Image::new(img.width, img.height)));
-                let img = Arc::new(img);
-                let grid = Arc::new(grid);
-                // shard tiles across n_workers jobs run on plain threads
-                let mut shards: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_workers];
-                for ty in 0..grid.tiles_y {
-                    for tx in 0..grid.tiles_x {
-                        shards[(ty * grid.tiles_x + tx) % n_workers].push((tx, ty));
-                    }
-                }
-                let mut joins = Vec::new();
-                for shard in shards {
-                    let (img, grid, out, engine) =
-                        (img.clone(), grid.clone(), out.clone(), engine.clone());
-                    joins.push(std::thread::spawn(move || {
-                        for (tx_, ty) in shard {
-                            let t = grid.extract(&img, tx_, ty);
-                            let packed = engine.forward(&t);
-                            let mut o = out.lock().unwrap();
-                            grid.stitch_packed(&mut o, &packed, tx_, ty);
-                        }
-                    }));
-                }
-                for j in joins {
-                    let _ = j.join();
-                }
-                let result = Arc::try_unwrap(out)
-                    .map(|m| m.into_inner().unwrap())
-                    .unwrap_or_else(|a| a.lock().unwrap().clone());
-                let latency = start.elapsed();
-                metrics.record(latency, result.data.len() * 4, Backend::NativeTiled);
-                let _ = respond.send(Ok(Response {
-                    image: result,
-                    backend: Backend::NativeTiled,
-                    latency,
-                }));
-            });
-            return;
-        }
+        let use_parallel = request.levels <= 1
+            && request.image.width * request.image.height >= self.cfg.parallel_threshold;
+        let parallel = use_parallel.then(|| self.parallel_executor());
         let inverse = request.inverse;
         let levels = request.levels.max(1);
         let img = request.image;
         self.pool.submit(move || {
-            let result = match (inverse, levels) {
-                (false, 1) => engine.forward(&img),
-                (true, 1) => engine.inverse(&img),
-                (false, l) => crate::dwt::multilevel::forward(&engine, &img, l),
-                (true, l) => crate::dwt::multilevel::inverse(&engine, &img, l),
+            let (result, backend) = match (&parallel, inverse, levels) {
+                (Some(px), false, 1) => {
+                    (engine.forward_with(&img, px.as_ref()), Backend::NativeParallel)
+                }
+                (Some(px), true, 1) => {
+                    (engine.inverse_with(&img, px.as_ref()), Backend::NativeParallel)
+                }
+                (None, false, 1) => (engine.forward(&img), Backend::Native),
+                (None, true, 1) => (engine.inverse(&img), Backend::Native),
+                (_, false, l) => (
+                    crate::dwt::multilevel::forward(&engine, &img, l),
+                    Backend::Native,
+                ),
+                (_, true, l) => (
+                    crate::dwt::multilevel::inverse(&engine, &img, l),
+                    Backend::Native,
+                ),
             };
             let latency = start.elapsed();
-            metrics.record(latency, result.data.len() * 4, Backend::Native);
+            metrics.record(latency, result.data.len() * 4, backend);
             let _ = respond.send(Ok(Response {
                 image: result,
-                backend: Backend::Native,
+                backend,
                 latency,
             }));
         });
@@ -343,6 +342,7 @@ impl Default for Request {
             scheme: Scheme::SepLifting,
             inverse: false,
             levels: 1,
+            boundary: Boundary::Periodic,
         }
     }
 }

@@ -2,11 +2,20 @@
 //! independent transforms stitch back into exactly the monolithic
 //! transform (periodic boundary semantics).
 //!
+//! Status: the coordinator no longer routes through this crop-and-stitch
+//! path — large requests run on the band-parallel
+//! [`crate::dwt::ParallelExecutor`], which needs no halo'd copies and is
+//! bit-exact with the scalar engine.  [`TileGrid`] remains the
+//! overlap-save *reference* (the distribution scheme a multi-node or
+//! GPU-tile backend would use, and the oracle its tests compare
+//! against), and [`tiled_forward`] is a thin compatibility layer over
+//! the parallel executor.
+//!
 //! Parity note: tile origins are even, so the polyphase phase of every
 //! tile matches the full image, and the halo is even as well so the
 //! component planes of the halo'd tile align.
 
-use crate::dwt::Image;
+use crate::dwt::{Image, KernelPlan, ParallelExecutor};
 
 /// A tiling plan for one image.
 #[derive(Debug, Clone)]
@@ -87,44 +96,48 @@ impl TileGrid {
         }
     }
 
-    /// Halo wide enough for one forward level of any scheme of `w`:
-    /// the total polyphase matrix reach (in component samples) times 2
-    /// (image pixels per component sample), rounded up to even, plus a
-    /// safety row.
-    pub fn halo_for(w: &crate::polyphase::wavelets::Wavelet) -> usize {
-        let total = crate::polyphase::schemes::total_matrix(w);
-        let (t, b, l, r) = total.halo();
-        let reach = t.max(b).max(l).max(r) as usize;
-        ((reach + 1) * 2 + 1).next_multiple_of(2)
+    /// Halo wide enough for one forward pass of the *compiled* plan:
+    /// the plan's total reach (per-side sum of the barrier steps'
+    /// halos, in component samples) times 2 (image pixels per component
+    /// sample).  Reading the reach off the plan instead of the wavelet
+    /// means an optimized grouping — or a scheme/wavelet with no reach
+    /// at all (Haar lifts entirely at lag zero) — no longer over-fetches
+    /// a wavelet-level worst case.
+    pub fn halo_for(plan: &KernelPlan) -> usize {
+        let (t, b, l, r) = plan.total_halo();
+        let reach = t.max(b).max(l).max(r).max(0) as usize;
+        reach * 2 // component samples -> image pixels; always even
     }
 }
 
-/// Convenience: full tiled forward transform with the native engine
-/// (single-threaded reference; the coordinator parallelizes the loop).
-pub fn tiled_forward(
-    engine: &crate::dwt::Engine,
-    img: &Image,
-    tile: usize,
-) -> Image {
-    let halo = TileGrid::halo_for(&engine.wavelet);
-    let grid = TileGrid::new(img.width, img.height, tile, halo);
-    let mut out = Image::new(img.width, img.height);
-    for ty in 0..grid.tiles_y {
-        for tx in 0..grid.tiles_x {
-            let t = grid.extract(img, tx, ty);
-            let packed = engine.forward(&t);
-            grid.stitch_packed(&mut out, &packed, tx, ty);
-        }
-    }
-    out
+/// Compatibility layer for the pre-executor API: a "tiled" forward
+/// transform is now one band-parallel execution of the engine's plan
+/// (bit-exact with both the monolithic transform and the old
+/// crop-and-stitch output).  The tile size no longer influences the
+/// decomposition — bands come from a process-wide pool spawned once,
+/// so callers (and benches) looping over this function don't pay a
+/// thread spawn/teardown per call.  The pool lives for the process and
+/// is distinct from a coordinator's executor; when idle its threads
+/// just park on a channel, so the duplication costs stacks, not CPU.
+/// New code should prefer `Engine::forward_with` with an executor it
+/// owns.
+pub fn tiled_forward(engine: &crate::dwt::Engine, img: &Image, _tile: usize) -> Image {
+    use std::sync::OnceLock;
+    static EXEC: OnceLock<ParallelExecutor> = OnceLock::new();
+    let exec = EXEC.get_or_init(ParallelExecutor::new);
+    engine.forward_with(img, exec)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dwt::Engine;
+    use crate::dwt::{Engine, PlanVariant};
     use crate::polyphase::schemes::Scheme;
     use crate::polyphase::wavelets::Wavelet;
+
+    fn plan_halo(engine: &Engine) -> usize {
+        TileGrid::halo_for(engine.plan(PlanVariant::Optimized))
+    }
 
     #[test]
     fn extract_interior_and_wrap() {
@@ -151,11 +164,12 @@ mod tests {
     }
 
     #[test]
-    fn tiled_equals_monolithic_nonseparable() {
+    fn overlap_save_grid_equals_monolithic_nonseparable() {
+        // the overlap-save reference itself, with the plan-derived halo
         let engine = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97());
         let img = Image::synthetic(64, 32, 32);
         let mono = engine.forward(&img);
-        let halo = TileGrid::halo_for(&engine.wavelet);
+        let halo = plan_halo(&engine);
         let grid = TileGrid::new(64, 32, 16, halo);
         let mut out = Image::new(64, 32);
         for ty in 0..grid.tiles_y {
@@ -169,11 +183,48 @@ mod tests {
     }
 
     #[test]
-    fn halo_for_is_even_and_positive() {
-        for w in Wavelet::all() {
-            let h = TileGrid::halo_for(&w);
-            assert!(h >= 4 && h % 2 == 0, "{}: halo {}", w.name, h);
+    fn overlap_save_grid_equals_monolithic_all_schemes() {
+        let img = Image::synthetic(64, 64, 33);
+        for w in Wavelet::paper_set() {
+            for s in Scheme::ALL {
+                let engine = Engine::new(s, w.clone());
+                let mono = engine.forward(&img);
+                let halo = plan_halo(&engine);
+                let grid = TileGrid::new(64, 64, 32, halo);
+                let mut out = Image::new(64, 64);
+                for ty in 0..grid.tiles_y {
+                    for tx in 0..grid.tiles_x {
+                        let t = grid.extract(&img, tx, ty);
+                        let packed = engine.forward(&t);
+                        grid.stitch_packed(&mut out, &packed, tx, ty);
+                    }
+                }
+                let err = out.max_abs_diff(&mono);
+                assert!(err < 1e-2, "{} {}: overlap-save err {err}", w.name, s.name());
+            }
         }
+    }
+
+    #[test]
+    fn plan_halo_is_even_and_tight() {
+        // plan-derived halos: even everywhere, positive where the
+        // wavelet actually reaches, and exactly zero for Haar (every
+        // lift is at lag zero) — the old wavelet-level bound
+        // over-fetched a >= 4-pixel apron there
+        for w in Wavelet::all() {
+            let engine = Engine::new(Scheme::SepLifting, w.clone());
+            let h = plan_halo(&engine);
+            assert!(h % 2 == 0, "{}: halo {} odd", w.name, h);
+            if w.name == "haar" {
+                assert_eq!(h, 0, "haar needs no halo");
+            } else {
+                assert!(h >= 2, "{}: halo {}", w.name, h);
+            }
+        }
+        // deeper-reach wavelet => wider halo
+        let h53 = plan_halo(&Engine::new(Scheme::SepLifting, Wavelet::cdf53()));
+        let h97 = plan_halo(&Engine::new(Scheme::SepLifting, Wavelet::cdf97()));
+        assert!(h97 > h53);
     }
 
     #[test]

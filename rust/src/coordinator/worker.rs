@@ -1,5 +1,9 @@
-//! Native worker pool: a fixed set of threads running closures — used
-//! for whole-image native transforms and for the tiled parallel path.
+//! Native worker pool: a fixed set of threads running closures — one
+//! request per job.  *Intra*-request parallelism is not this pool's
+//! job: large requests hand their plan to the coordinator's shared
+//! [`crate::dwt::ParallelExecutor`], whose band pool subdivides the
+//! image inside the single worker job (requests stay concurrent across
+//! workers; pixels go parallel across bands).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};

@@ -18,9 +18,34 @@ use crate::polyphase::{Poly, PolyMatrix};
 /// Execute one fused stencil kernel: `out` is fully overwritten.
 pub fn run_stencil(st: &Stencil, inp: &Planes, out: &mut Planes, boundary: Boundary) {
     debug_assert!(inp.w2 == out.w2 && inp.h2 == out.h2);
+    let h2 = inp.h2;
+    let [o0, o1, o2, o3] = &mut out.p;
+    let mut rows: [&mut [f32]; 4] = [
+        o0.as_mut_slice(),
+        o1.as_mut_slice(),
+        o2.as_mut_slice(),
+        o3.as_mut_slice(),
+    ];
+    run_stencil_rows(st, inp, &mut rows, 0, h2, boundary);
+}
+
+/// [`run_stencil`] restricted to output rows `y0..y1`: `out[i]` is the
+/// band of plane `i` covering exactly those rows (`(y1 - y0) * w2`
+/// samples).  Reads still range over the whole input planes — the
+/// vertical shifts of a fused stencil are the halo a band-parallel
+/// executor owes this kernel.  The full-plane [`run_stencil`] delegates
+/// here, so banded and monolithic execution are bit-exact.
+pub fn run_stencil_rows(
+    st: &Stencil,
+    inp: &Planes,
+    out: &mut [&mut [f32]; 4],
+    y0: usize,
+    y1: usize,
+    boundary: Boundary,
+) {
     match boundary {
-        Boundary::Periodic => run_stencil_periodic(st, inp, out),
-        Boundary::Symmetric => run_stencil_symmetric(st, inp, out),
+        Boundary::Periodic => run_stencil_periodic(st, inp, out, y0, y1),
+        Boundary::Symmetric => run_stencil_symmetric(st, inp, out, y0, y1),
     }
 }
 
@@ -32,7 +57,13 @@ pub fn run_stencil(st: &Stencil, inp: &Planes, out: &mut Planes, boundary: Bound
 /// code with it: `apply_step` is the independent reference the
 /// plan-vs-legacy equivalence tests compare against, so the two bodies
 /// must stay in numerical lockstep but not in implementation.
-fn run_stencil_periodic(st: &Stencil, inp: &Planes, out: &mut Planes) {
+fn run_stencil_periodic(
+    st: &Stencil,
+    inp: &Planes,
+    out: &mut [&mut [f32]; 4],
+    y0: usize,
+    y1: usize,
+) {
     let (w2, h2) = (inp.w2, inp.h2);
     for i in 0..4 {
         // resolve the plan's raw offsets against this plane size
@@ -47,10 +78,11 @@ fn run_stencil_periodic(st: &Stencil, inp: &Planes, out: &mut Planes) {
                 )
             })
             .collect();
-        let plane = &mut out.p[i];
+        let plane = &mut *out[i];
         plane.fill(0.0);
-        for y in 0..h2 {
-            let dst = &mut plane[y * w2..(y + 1) * w2];
+        for y in y0..y1 {
+            let dst_row = (y - y0) * w2;
+            let dst = &mut plane[dst_row..dst_row + w2];
             for &(j, shift_col, shift_row, c) in &terms {
                 let sy = (y + shift_row) % h2;
                 let src = &inp.p[j][sy * w2..(sy + 1) * w2];
@@ -78,10 +110,16 @@ fn run_stencil_periodic(st: &Stencil, inp: &Planes, out: &mut Planes) {
 /// Fold indices are tabulated once per term — O(terms * (w + h)) fold
 /// evaluations — and accumulation is row-blocked like the periodic
 /// executor, so each output row takes all terms while hot in L1.
-fn run_stencil_symmetric(st: &Stencil, inp: &Planes, out: &mut Planes) {
+fn run_stencil_symmetric(
+    st: &Stencil,
+    inp: &Planes,
+    out: &mut [&mut [f32]; 4],
+    y0: usize,
+    y1: usize,
+) {
     let (w2, h2) = (inp.w2, inp.h2);
     for i in 0..4 {
-        // (src plane, x fold table, y fold table, coeff) per term
+        // (src plane, x fold table, y fold table per band row, coeff)
         let terms: Vec<(usize, Vec<usize>, Vec<usize>, f32)> = st.rows[i]
             .iter()
             .map(|&(j, km, kn, c)| {
@@ -90,18 +128,19 @@ fn run_stencil_symmetric(st: &Stencil, inp: &Planes, out: &mut Planes) {
                 let xi = (0..w2)
                     .map(|x| fold_sym(x as i64 + km as i64, w2 as i64, hodd))
                     .collect();
-                let yi = (0..h2)
+                let yi = (y0..y1)
                     .map(|y| fold_sym(y as i64 + kn as i64, h2 as i64, vodd))
                     .collect();
                 (j, xi, yi, c)
             })
             .collect();
-        let plane = &mut out.p[i];
+        let plane = &mut *out[i];
         plane.fill(0.0);
-        for y in 0..h2 {
-            let drow = &mut plane[y * w2..(y + 1) * w2];
+        for y in y0..y1 {
+            let dst_row = (y - y0) * w2;
+            let drow = &mut plane[dst_row..dst_row + w2];
             for (j, xi, yi, c) in &terms {
-                let sy = yi[y];
+                let sy = yi[y - y0];
                 let srow = &inp.p[*j][sy * w2..(sy + 1) * w2];
                 for x in 0..w2 {
                     drow[x] += *c * srow[xi[x]];

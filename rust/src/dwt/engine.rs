@@ -1,10 +1,12 @@
 //! The scheme engine: compile any (scheme, wavelet, boundary)
 //! combination to [`KernelPlan`]s once, then run forward / inverse /
-//! optimized transforms through the single plan executor.  No
-//! per-scheme special cases remain: separable lifting, the
-//! non-separable schemes, and the section-5 optimized groupings all
-//! execute the same IR.
+//! optimized transforms through a plan executor.  No per-scheme
+//! special cases remain: separable lifting, the non-separable schemes,
+//! and the section-5 optimized groupings all execute the same IR — and
+//! the `*_with` methods accept any [`PlanExecutor`] backend (scalar,
+//! band-parallel, future SIMD/GPU) for the same compiled plans.
 
+use super::executor::{PlanExecutor, ScalarExecutor};
 use super::lifting::Boundary;
 use super::plan::KernelPlan;
 use super::planes::{Image, Planes};
@@ -97,7 +99,12 @@ impl Engine {
 
     /// Forward transform -> packed quadrant image `[[LL, HL], [LH, HH]]`.
     pub fn forward(&self, img: &Image) -> Image {
-        self.forward_planes(img).to_packed()
+        self.forward_with(img, &ScalarExecutor)
+    }
+
+    /// [`Engine::forward`] through an explicit executor backend.
+    pub fn forward_with(&self, img: &Image, exec: &dyn PlanExecutor) -> Image {
+        self.forward_planes_with(img, exec).to_packed()
     }
 
     /// Forward transform -> polyphase planes (LL, HL, LH, HH).
@@ -107,8 +114,14 @@ impl Engine {
     /// terms); on symmetric boundaries the fold-exact full-step chain
     /// (see [`Engine::with_boundary`]).
     pub fn forward_planes(&self, img: &Image) -> Planes {
+        self.forward_planes_with(img, &ScalarExecutor)
+    }
+
+    /// [`Engine::forward_planes`] through an explicit executor backend
+    /// (same compiled plan; bit-exact across backends by contract).
+    pub fn forward_planes_with(&self, img: &Image, exec: &dyn PlanExecutor) -> Planes {
         let mut planes = Planes::split(img);
-        self.optimized_plan.execute(&mut planes);
+        exec.execute(&self.optimized_plan, &mut planes);
         planes
     }
 
@@ -130,13 +143,23 @@ impl Engine {
 
     /// Inverse transform from packed quadrants.
     pub fn inverse(&self, packed: &Image) -> Image {
-        self.inverse_planes(&Planes::from_packed(packed))
+        self.inverse_with(packed, &ScalarExecutor)
+    }
+
+    /// [`Engine::inverse`] through an explicit executor backend.
+    pub fn inverse_with(&self, packed: &Image, exec: &dyn PlanExecutor) -> Image {
+        self.inverse_planes_with(&Planes::from_packed(packed), exec)
     }
 
     /// Inverse transform from subband planes.
     pub fn inverse_planes(&self, planes: &Planes) -> Image {
+        self.inverse_planes_with(planes, &ScalarExecutor)
+    }
+
+    /// [`Engine::inverse_planes`] through an explicit executor backend.
+    pub fn inverse_planes_with(&self, planes: &Planes, exec: &dyn PlanExecutor) -> Image {
         let mut p = planes.clone();
-        self.inverse_plan.execute(&mut p);
+        exec.execute(&self.inverse_plan, &mut p);
         p.merge()
     }
 
@@ -237,6 +260,37 @@ mod tests {
             let got = Engine::new(Scheme::SepLifting, w.clone()).forward_planes(&img);
             let err = got.max_abs_diff(&planes);
             assert!(err < 1e-3, "{}: plan vs fast path err {}", w.name, err);
+        }
+    }
+
+    #[test]
+    fn executor_backends_agree_through_the_engine() {
+        use crate::dwt::executor::ParallelExecutor;
+        let par = ParallelExecutor::with_threads(4);
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                for boundary in [Boundary::Periodic, Boundary::Symmetric] {
+                    let e = Engine::with_boundary(s, w.clone(), boundary);
+                    let img = Image::synthetic(64, 48, 42);
+                    let fwd = e.forward(&img);
+                    assert_eq!(
+                        fwd,
+                        e.forward_with(&img, &par),
+                        "{} {} {:?} forward",
+                        w.name,
+                        s.name(),
+                        boundary
+                    );
+                    assert_eq!(
+                        e.inverse(&fwd),
+                        e.inverse_with(&fwd, &par),
+                        "{} {} {:?} inverse",
+                        w.name,
+                        s.name(),
+                        boundary
+                    );
+                }
+            }
         }
     }
 

@@ -1,0 +1,718 @@
+//! Plan executor backends: *how* a compiled [`KernelPlan`] runs.
+//!
+//! The IR split the question "what does a scheme compute" (lowering,
+//! in `plan.rs`) from "how is it executed".  This module owns the
+//! second half behind the [`PlanExecutor`] trait:
+//!
+//! * [`ScalarExecutor`] — the single-threaded reference path
+//!   ([`KernelPlan::execute_with`] verbatim).
+//! * [`ParallelExecutor`] — the CPU analogue of the paper's work-group
+//!   scheme: each polyphase plane is split into horizontal bands, one
+//!   per thread of a persistent [`BandPool`]; the kernels of a barrier
+//!   group run band-parallel, and the executor synchronizes (the
+//!   shared-memory equivalent of a halo exchange) exactly where a
+//!   kernel's *vertical* stencil reach would cross a band edge into
+//!   rows another band is still writing.  Horizontal kernels are
+//!   row-local and never require an exchange — the reason bands are
+//!   horizontal.
+//!
+//! Both executors drive the same row-range kernel bodies
+//! ([`lifting::lift_rows_h`] / [`lifting::lift_rows_v`] /
+//! [`apply::run_stencil_rows`]), so their outputs are bit-exact — not
+//! merely close — for every scheme and both boundary modes (asserted
+//! by the tests below).
+//!
+//! A new backend (SIMD, GPU dispatch, ...) implements [`PlanExecutor`]
+//! and slots into [`crate::dwt::Engine`] and the coordinator without
+//! touching any per-scheme code.
+
+use super::apply;
+use super::lifting::{self, Axis, Boundary};
+use super::plan::{ensure_scratch, plane_is_odd, Kernel, KernelPlan, Stencil};
+use super::planes::Planes;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A backend that can execute compiled plans.
+pub trait PlanExecutor: Send + Sync {
+    /// Short stable identifier ("scalar", "parallel", ...) for logs,
+    /// metrics, and bench records.
+    fn name(&self) -> &'static str;
+
+    /// Execute `plan` in place on `planes`, reusing `scratch` as the
+    /// double buffer for stencil steps.  A caller that transforms
+    /// repeatedly can hold the slot across calls to amortize the
+    /// allocation; [`crate::dwt::Engine`]'s convenience methods use a
+    /// throwaway slot per transform.
+    fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>);
+
+    /// [`PlanExecutor::execute_with`] with a throwaway scratch slot.
+    fn execute(&self, plan: &KernelPlan, planes: &mut Planes) {
+        let mut scratch = None;
+        self.execute_with(plan, planes, &mut scratch);
+    }
+
+    /// Out-of-place convenience wrapper.
+    fn run(&self, plan: &KernelPlan, planes: &Planes) -> Planes {
+        let mut p = planes.clone();
+        self.execute(plan, &mut p);
+        p
+    }
+}
+
+/// The single-threaded reference backend: [`KernelPlan::execute_with`]
+/// moved behind the trait.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarExecutor;
+
+impl PlanExecutor for ScalarExecutor {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>) {
+        plan.execute_with(planes, scratch);
+    }
+}
+
+/// Thread-count resolution for the parallel backend and the
+/// coordinator: the `PALLAS_THREADS` environment override when set to a
+/// positive integer (CI and benches pin this for determinism),
+/// otherwise the machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("PALLAS_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+}
+
+// ------------------------------------------------------------ band pool
+
+type PoolJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent fixed-size thread pool with *scoped* fan-out: jobs may
+/// borrow the caller's stack because [`BandPool::scope_run`] blocks
+/// until every job has finished (or panicked) before returning.
+pub struct BandPool {
+    tx: Option<Sender<PoolJob>>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl BandPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<PoolJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<PoolJob>>> = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("dwt-band-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn band worker")
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            handles,
+            size,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run borrowed jobs to completion on the pool.  The jobs may
+    /// capture non-`'static` references: this call does not return
+    /// until every job has signalled completion, so the borrows outlive
+    /// all use on the workers.  Panics in a job are caught on the
+    /// worker (keeping the pool alive) and resumed here with their
+    /// original payload once every job has finished.
+    #[allow(clippy::type_complexity)]
+    pub fn scope_run(&self, jobs: Vec<Box<dyn FnOnce() + Send + '_>>) {
+        let n = jobs.len();
+        let (done_tx, done_rx) = channel::<std::thread::Result<()>>();
+        let tx = self.tx.as_ref().expect("band pool shut down");
+        for job in jobs {
+            // SAFETY: the loop below blocks until all `n` completions
+            // arrive, so every borrow captured by `job` strictly
+            // outlives its execution on the worker thread.
+            let job = unsafe { erase_job_lifetime(job) };
+            let done = done_tx.clone();
+            tx.send(Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(job));
+                let _ = done.send(result);
+            }))
+            .expect("band pool closed");
+        }
+        let mut payload = None;
+        for _ in 0..n {
+            if let Err(p) = done_rx.recv().expect("band worker died") {
+                payload.get_or_insert(p);
+            }
+        }
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+#[allow(clippy::needless_lifetimes)]
+unsafe fn erase_job_lifetime<'a>(
+    job: Box<dyn FnOnce() + Send + 'a>,
+) -> Box<dyn FnOnce() + Send + 'static> {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(job)
+}
+
+impl Drop for BandPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// --------------------------------------------------- phase partitioning
+
+/// One barrier-free slice of a step's kernel list.
+enum Phase<'p> {
+    /// In-place kernels (lifts, scales) every band runs over its own
+    /// rows with no synchronization in between.
+    InPlace(&'p [Kernel]),
+    /// A fused stencil: reads all planes with 2-D reach, writes the
+    /// double buffer — always its own phase, followed by the swap.
+    Stencil(&'p Stencil),
+}
+
+/// Bitmask of planes a kernel writes.
+fn written_planes(k: &Kernel) -> u8 {
+    match k {
+        Kernel::Lift { dst, .. } => 1 << *dst,
+        Kernel::Scale { factors } => {
+            let mut m = 0;
+            for (c, &f) in factors.iter().enumerate() {
+                // same skip condition as the scalar executor
+                if (f - 1.0).abs() > 1e-12 {
+                    m |= 1 << c;
+                }
+            }
+            m
+        }
+        Kernel::Stencil(_) => 0b1111,
+    }
+}
+
+/// Bitmask of planes a kernel reads with *vertical* reach — the reads
+/// that cross band edges and therefore need the source plane globally
+/// consistent (no writer in the same phase).
+fn vread_planes(k: &Kernel) -> u8 {
+    match k {
+        Kernel::Lift {
+            src,
+            axis: Axis::Vertical,
+            ..
+        } => 1 << *src,
+        Kernel::Lift { .. } | Kernel::Scale { .. } => 0,
+        Kernel::Stencil(_) => 0b1111,
+    }
+}
+
+/// Split a barrier group's kernel list into band-parallel phases.
+///
+/// A phase is safe when no band can observe another band's rows in a
+/// half-written state: every plane read with vertical reach must have
+/// no writer in the phase (in either order — bands drift apart, so a
+/// later writer races an earlier reader just the same).  Horizontal
+/// kernels are row-local and never force a cut.  The cut points are
+/// the executor's halo exchanges: between phases, each band's next
+/// vertical read is guaranteed to see its neighbours' finished rows.
+fn phases(kernels: &[Kernel]) -> Vec<Phase<'_>> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    let mut written = 0u8;
+    let mut vread = 0u8;
+    for (i, k) in kernels.iter().enumerate() {
+        if let Kernel::Stencil(st) = k {
+            if start < i {
+                out.push(Phase::InPlace(&kernels[start..i]));
+            }
+            out.push(Phase::Stencil(st));
+            start = i + 1;
+            written = 0;
+            vread = 0;
+            continue;
+        }
+        let w = written_planes(k);
+        let vr = vread_planes(k);
+        if (vr & written) != 0 || (w & vread) != 0 {
+            out.push(Phase::InPlace(&kernels[start..i]));
+            start = i;
+            written = 0;
+            vread = 0;
+        }
+        written |= w;
+        vread |= vr;
+    }
+    if start < kernels.len() {
+        out.push(Phase::InPlace(&kernels[start..]));
+    }
+    out
+}
+
+/// Split `h2` rows into at most `n` contiguous non-empty bands.
+pub fn band_ranges(h2: usize, n: usize) -> Vec<Range<usize>> {
+    let n = n.clamp(1, h2.max(1));
+    let base = h2 / n;
+    let rem = h2 % n;
+    let mut out = Vec::with_capacity(n);
+    let mut y = 0;
+    for b in 0..n {
+        let rows = base + usize::from(b < rem);
+        out.push(y..y + rows);
+        y += rows;
+    }
+    debug_assert_eq!(y, h2);
+    out
+}
+
+// ----------------------------------------------------- parallel backend
+
+/// Band-parallel plan executor: horizontal bands on a persistent
+/// thread pool, phase barriers as halo exchanges (module docs).
+pub struct ParallelExecutor {
+    pool: BandPool,
+}
+
+impl ParallelExecutor {
+    /// Pool sized by [`default_threads`] (`PALLAS_THREADS` override).
+    pub fn new() -> Self {
+        Self::with_threads(default_threads())
+    }
+
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            pool: BandPool::new(threads),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Run one in-place phase band-parallel.  Planes some kernel of the
+    /// phase writes are handed to each band as its private row chunk;
+    /// the rest stay whole and read-only (the phase rule guarantees
+    /// every vertically-read plane is in the second set).
+    fn run_inplace_phase(
+        &self,
+        kernels: &[Kernel],
+        planes: &mut Planes,
+        bands: &[Range<usize>],
+        boundary: Boundary,
+    ) {
+        let (w2, h2) = (planes.w2, planes.h2);
+        let mut written = 0u8;
+        for k in kernels {
+            written |= written_planes(k);
+        }
+        let [p0, p1, p2, p3] = &mut planes.p;
+        let mut shared: [Option<&[f32]>; 4] = [None; 4];
+        let mut banded: [Vec<&mut [f32]>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+        for (i, p) in [p0, p1, p2, p3].into_iter().enumerate() {
+            if written & (1 << i) != 0 {
+                banded[i] = split_bands(p.as_mut_slice(), bands, w2);
+            } else {
+                shared[i] = Some(p.as_slice());
+            }
+        }
+        let mut iters = banded.map(Vec::into_iter);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bands.len());
+        for range in bands.iter().cloned() {
+            let mine: [Option<&mut [f32]>; 4] = std::array::from_fn(|i| iters[i].next());
+            jobs.push(Box::new(move || {
+                run_band_kernels(kernels, mine, shared, range, w2, h2, boundary);
+            }));
+        }
+        self.pool.scope_run(jobs);
+    }
+
+    /// Run one stencil phase band-parallel into the scratch planes
+    /// (the caller swaps afterwards).
+    fn run_stencil_phase(
+        &self,
+        st: &Stencil,
+        inp: &Planes,
+        out: &mut Planes,
+        bands: &[Range<usize>],
+        boundary: Boundary,
+    ) {
+        let w2 = inp.w2;
+        let [o0, o1, o2, o3] = &mut out.p;
+        let mut b0 = split_bands(o0.as_mut_slice(), bands, w2).into_iter();
+        let mut b1 = split_bands(o1.as_mut_slice(), bands, w2).into_iter();
+        let mut b2 = split_bands(o2.as_mut_slice(), bands, w2).into_iter();
+        let mut b3 = split_bands(o3.as_mut_slice(), bands, w2).into_iter();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bands.len());
+        for range in bands.iter().cloned() {
+            let chunk = [
+                b0.next().expect("one chunk per band"),
+                b1.next().expect("one chunk per band"),
+                b2.next().expect("one chunk per band"),
+                b3.next().expect("one chunk per band"),
+            ];
+            jobs.push(Box::new(move || {
+                let mut chunk = chunk;
+                apply::run_stencil_rows(st, inp, &mut chunk, range.start, range.end, boundary);
+            }));
+        }
+        self.pool.scope_run(jobs);
+    }
+}
+
+impl Default for ParallelExecutor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlanExecutor for ParallelExecutor {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>) {
+        let bands = band_ranges(planes.h2, self.pool.size());
+        if bands.len() <= 1 {
+            // too short to band (or a 1-thread pool): scalar path
+            plan.execute_with(planes, scratch);
+            return;
+        }
+        for step in &plan.steps {
+            for phase in phases(&step.kernels) {
+                match phase {
+                    Phase::InPlace(ks) => {
+                        self.run_inplace_phase(ks, planes, &bands, plan.boundary)
+                    }
+                    Phase::Stencil(st) => {
+                        let out = ensure_scratch(planes, scratch);
+                        self.run_stencil_phase(st, planes, out, &bands, plan.boundary);
+                        std::mem::swap(planes, out);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Cut one plane into per-band mutable row chunks.
+fn split_bands<'a>(mut p: &'a mut [f32], bands: &[Range<usize>], w2: usize) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(bands.len());
+    for b in bands {
+        let (head, tail) = p.split_at_mut((b.end - b.start) * w2);
+        out.push(head);
+        p = tail;
+    }
+    debug_assert!(p.is_empty());
+    out
+}
+
+/// Execute one band's share of an in-place phase: the kernels in plan
+/// order, each restricted to rows `rows` — horizontal kernels read the
+/// band's own rows, vertical kernels read the whole (phase-shared)
+/// source plane.
+fn run_band_kernels(
+    kernels: &[Kernel],
+    mut mine: [Option<&mut [f32]>; 4],
+    shared: [Option<&[f32]>; 4],
+    rows: Range<usize>,
+    w2: usize,
+    h2: usize,
+    boundary: Boundary,
+) {
+    let n_rows = rows.end - rows.start;
+    for k in kernels {
+        match k {
+            Kernel::Lift {
+                dst,
+                src,
+                axis,
+                taps,
+            } => {
+                let src_odd = plane_is_odd(*src, *axis);
+                match axis {
+                    Axis::Horizontal => {
+                        if let Some(full) = shared[*src] {
+                            let srows = &full[rows.start * w2..rows.end * w2];
+                            let d = mine[*dst].as_deref_mut().expect("written plane is banded");
+                            lifting::lift_rows_h(d, srows, w2, n_rows, taps, boundary, src_odd);
+                        } else {
+                            let (d, s) = two_chunks(&mut mine, *dst, *src);
+                            lifting::lift_rows_h(d, s, w2, n_rows, taps, boundary, src_odd);
+                        }
+                    }
+                    Axis::Vertical => {
+                        let s = shared[*src].expect("vertical source is phase-shared");
+                        let d = mine[*dst].as_deref_mut().expect("written plane is banded");
+                        lifting::lift_rows_v(
+                            d, s, w2, h2, rows.start, rows.end, taps, boundary, src_odd,
+                        );
+                    }
+                }
+            }
+            Kernel::Scale { factors } => {
+                for (c, &f) in factors.iter().enumerate() {
+                    if (f - 1.0).abs() > 1e-12 {
+                        let d = mine[c].as_deref_mut().expect("scaled plane is banded");
+                        for v in d.iter_mut() {
+                            *v *= f;
+                        }
+                    }
+                }
+            }
+            Kernel::Stencil(_) => unreachable!("stencils run in their own phase"),
+        }
+    }
+}
+
+/// Borrow two distinct band chunks at once: `dst` mutably, `src` shared.
+fn two_chunks<'a>(
+    m: &'a mut [Option<&mut [f32]>; 4],
+    dst: usize,
+    src: usize,
+) -> (&'a mut [f32], &'a [f32]) {
+    debug_assert_ne!(dst, src);
+    if dst < src {
+        let (a, b) = m.split_at_mut(src);
+        (
+            a[dst].as_deref_mut().expect("dst chunk"),
+            b[0].as_deref().expect("src chunk"),
+        )
+    } else {
+        let (a, b) = m.split_at_mut(dst);
+        (
+            b[0].as_deref_mut().expect("dst chunk"),
+            a[src].as_deref().expect("src chunk"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dwt::planes::Image;
+    use crate::polyphase::schemes::{self, Scheme};
+    use crate::polyphase::wavelets::Wavelet;
+
+    fn bit_equal(a: &Planes, b: &Planes) -> bool {
+        a.w2 == b.w2
+            && a.h2 == b.h2
+            && (0..4).all(|c| {
+                a.p[c]
+                    .iter()
+                    .zip(&b.p[c])
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+            })
+    }
+
+    #[test]
+    fn band_ranges_cover_and_are_nonempty() {
+        for (h2, n) in [(32, 4), (35, 4), (7, 16), (1, 8), (48, 1), (5, 5)] {
+            let bands = band_ranges(h2, n);
+            assert!(bands.len() <= n.max(1));
+            assert!(bands.iter().all(|b| b.end > b.start));
+            assert_eq!(bands.first().unwrap().start, 0);
+            assert_eq!(bands.last().unwrap().end, h2);
+            for w in bands.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn phases_cut_exactly_on_vertical_dependencies() {
+        // the fused spatial predict lowers to [H, H, V, V] where the
+        // last vertical lift reads a plane the first horizontal one
+        // wrote: expect exactly one cut before it
+        let w = Wavelet::cdf97();
+        let plan =
+            KernelPlan::from_steps(&schemes::build(Scheme::NsLifting, &w), Boundary::Periodic);
+        let step = &plan.steps[0];
+        assert_eq!(step.kernels.len(), 4);
+        let ph = phases(&step.kernels);
+        assert_eq!(ph.len(), 2);
+        match (&ph[0], &ph[1]) {
+            (Phase::InPlace(a), Phase::InPlace(b)) => {
+                assert_eq!(a.len(), 3);
+                assert_eq!(b.len(), 1);
+            }
+            _ => panic!("expected two in-place phases"),
+        }
+    }
+
+    #[test]
+    fn parallel_is_bit_exact_with_scalar_all_schemes_and_boundaries() {
+        let par = ParallelExecutor::with_threads(4);
+        let scalar = ScalarExecutor;
+        // sizes chosen so bands divide unevenly (h2 = 32, 48, 35)
+        for (w, h) in [(64, 64), (256, 96), (96, 70)] {
+            let img = Image::synthetic(w, h, 70);
+            let planes0 = Planes::split(&img);
+            for wav in Wavelet::all() {
+                for s in Scheme::ALL {
+                    for boundary in [Boundary::Periodic, Boundary::Symmetric] {
+                        let fwd = KernelPlan::from_steps(&schemes::build(s, &wav), boundary);
+                        let a = scalar.run(&fwd, &planes0);
+                        let b = par.run(&fwd, &planes0);
+                        assert!(
+                            bit_equal(&a, &b),
+                            "{} {} {:?} {}x{}: parallel != scalar",
+                            wav.name,
+                            s.name(),
+                            boundary,
+                            w,
+                            h
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_is_bit_exact_on_optimized_groupings() {
+        let par = ParallelExecutor::with_threads(3);
+        let scalar = ScalarExecutor;
+        let img = Image::synthetic(64, 48, 71);
+        let planes0 = Planes::split(&img);
+        for wav in Wavelet::all() {
+            for s in Scheme::ALL {
+                let plan = KernelPlan::compile(&schemes::build_optimized(s, &wav),
+                                               Boundary::Periodic);
+                let a = scalar.run(&plan, &planes0);
+                let b = par.run(&plan, &planes0);
+                assert!(bit_equal(&a, &b), "{} {} optimized", wav.name, s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_inverse_roundtrips() {
+        let par = ParallelExecutor::with_threads(4);
+        let img = Image::synthetic(64, 64, 72);
+        for wav in Wavelet::all() {
+            for s in Scheme::ALL {
+                let fwd = KernelPlan::from_steps(&schemes::build(s, &wav), Boundary::Periodic);
+                let inv =
+                    KernelPlan::from_steps(&schemes::build_inverse(s, &wav), Boundary::Periodic);
+                let rec = par.run(&inv, &par.run(&fwd, &Planes::split(&img))).merge();
+                let err = rec.max_abs_diff(&img);
+                assert!(err < 2e-2, "{} {}: roundtrip err {}", wav.name, s.name(), err);
+            }
+        }
+    }
+
+    #[test]
+    fn one_band_tall_plane_degrades_to_scalar_without_panicking() {
+        // h2 = 1: nothing to band — must fall through to the scalar
+        // path and still be correct
+        let par = ParallelExecutor::with_threads(8);
+        let scalar = ScalarExecutor;
+        let img = Image::synthetic(64, 2, 73);
+        let planes0 = Planes::split(&img);
+        for wav in Wavelet::all() {
+            for s in Scheme::ALL {
+                let fwd = KernelPlan::from_steps(&schemes::build(s, &wav), Boundary::Periodic);
+                assert!(
+                    bit_equal(&scalar.run(&fwd, &planes0), &par.run(&fwd, &planes0)),
+                    "{} {}",
+                    wav.name,
+                    s.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_bands_than_rows_still_exact() {
+        let par = ParallelExecutor::with_threads(16);
+        let scalar = ScalarExecutor;
+        let img = Image::synthetic(32, 12, 74); // h2 = 6 < 16 threads
+        let planes0 = Planes::split(&img);
+        let wav = Wavelet::cdf97();
+        for s in Scheme::ALL {
+            for boundary in [Boundary::Periodic, Boundary::Symmetric] {
+                let fwd = KernelPlan::from_steps(&schemes::build(s, &wav), boundary);
+                assert!(
+                    bit_equal(&scalar.run(&fwd, &planes0), &par.run(&fwd, &planes0)),
+                    "{} {:?}",
+                    s.name(),
+                    boundary
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_is_reused_across_calls() {
+        let par = ParallelExecutor::with_threads(2);
+        let wav = Wavelet::cdf97();
+        let plan = KernelPlan::from_steps(&schemes::build(Scheme::NsConv, &wav),
+                                          Boundary::Periodic);
+        let img = Image::synthetic(32, 32, 75);
+        let mut scratch = None;
+        let mut a = Planes::split(&img);
+        par.execute_with(&plan, &mut a, &mut scratch);
+        assert!(scratch.is_some());
+        // second call with retained scratch must still be exact
+        let mut b = Planes::split(&img);
+        par.execute_with(&plan, &mut b, &mut scratch);
+        assert!(bit_equal(&a, &b));
+    }
+
+    #[test]
+    fn band_pool_survives_a_panicking_job() {
+        let pool = BandPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_run(vec![Box::new(|| panic!("boom")) as Box<dyn FnOnce() + Send>]);
+        }));
+        assert!(result.is_err());
+        // the pool must still run jobs afterwards
+        let flag = std::sync::atomic::AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| {
+                flag.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            }),
+            Box::new(|| {
+                flag.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            }),
+        ];
+        pool.scope_run(jobs);
+        assert_eq!(flag.load(std::sync::atomic::Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn executor_names_are_stable() {
+        assert_eq!(ScalarExecutor.name(), "scalar");
+        assert_eq!(ParallelExecutor::with_threads(1).name(), "parallel");
+    }
+}

@@ -42,6 +42,19 @@ pub enum Boundary {
 // even component: e[-k] = e[k],     e[n-1+k] = e[n-k]
 // odd  component: o[-k] = o[k-1],   o[n-1+k] = o[n-1-k]
 
+/// One-dimensional index fold for the lifting kernels: periodic wrap or
+/// whole-sample symmetric reflection (per the source component's
+/// parity).  The stencil executor tabulates its folds through
+/// [`fold_sym`] / `rem_euclid` directly, so the shared single source of
+/// truth for symmetric reflection is `fold_sym`, not this wrapper.
+#[inline]
+pub fn fold_1d(i: i64, n: i64, boundary: Boundary, odd: bool) -> usize {
+    match boundary {
+        Boundary::Periodic => i.rem_euclid(n) as usize,
+        Boundary::Symmetric => fold_sym(i, n, odd),
+    }
+}
+
 /// `dst[i] += sum_k c_k src[i + k]` along `axis`, periodic, in place.
 ///
 /// The tap offsets of all three wavelets are tiny (|k| <= 2), so the
@@ -61,6 +74,11 @@ pub fn lift_axis(
 /// [`lift_axis`] with explicit boundary handling.  `src_is_odd` selects
 /// the symmetric fold variant (predict steps read the even component,
 /// update steps the odd one); ignored for periodic boundaries.
+///
+/// Delegates to the row-range kernels [`lift_rows_h`] / [`lift_rows_v`]
+/// over the full plane — the band-parallel executor calls the same
+/// row-range bodies per band, so banded and monolithic execution are
+/// bit-exact by construction.
 #[allow(clippy::too_many_arguments)]
 pub fn lift_axis_b(
     dst: &mut [f32],
@@ -72,113 +90,141 @@ pub fn lift_axis_b(
     boundary: Boundary,
     src_is_odd: bool,
 ) {
-    let fold = move |i: i64, n: i64| -> usize {
-        match boundary {
-            Boundary::Periodic => i.rem_euclid(n) as usize,
-            Boundary::Symmetric => fold_sym(i, n, src_is_odd),
-        }
-    };
     match axis {
-        Axis::Horizontal => {
-            let max_reach = taps.iter().map(|&(k, _)| k.unsigned_abs() as usize).max().unwrap_or(0);
-            if w2 <= 2 * max_reach {
-                // degenerate small plane: plain modular path
-                for y in 0..h2 {
-                    let row = y * w2;
-                    for x in 0..w2 {
-                        let mut acc = 0.0f32;
-                        for &(k, c) in taps {
-                            let xx = fold(x as i64 + k as i64, w2 as i64);
-                            acc += c as f32 * src[row + xx];
-                        }
-                        dst[row + x] += acc;
-                    }
+        Axis::Horizontal => lift_rows_h(dst, src, w2, h2, taps, boundary, src_is_odd),
+        Axis::Vertical => lift_rows_v(dst, src, w2, h2, 0, h2, taps, boundary, src_is_odd),
+    }
+}
+
+/// Horizontal lifting over `rows` rows: `dst` and `src` are slices of
+/// the *same* row range of their planes (`rows * w2` samples each).
+/// Horizontal steps are row-local, so a band hands in just its own rows.
+#[allow(clippy::too_many_arguments)]
+pub fn lift_rows_h(
+    dst: &mut [f32],
+    src: &[f32],
+    w2: usize,
+    rows: usize,
+    taps: &[(i32, f64)],
+    boundary: Boundary,
+    src_is_odd: bool,
+) {
+    let fold = move |i: i64, n: i64| -> usize { fold_1d(i, n, boundary, src_is_odd) };
+    let max_reach = taps.iter().map(|&(k, _)| k.unsigned_abs() as usize).max().unwrap_or(0);
+    if w2 <= 2 * max_reach {
+        // degenerate small plane: plain modular path
+        for y in 0..rows {
+            let row = y * w2;
+            for x in 0..w2 {
+                let mut acc = 0.0f32;
+                for &(k, c) in taps {
+                    let xx = fold(x as i64 + k as i64, w2 as i64);
+                    acc += c as f32 * src[row + xx];
                 }
-                return;
+                dst[row + x] += acc;
             }
-            // symmetric 2-tap steps (all CDF wavelets) get a fused
-            // single-pass kernel: d[x] += c * (s[x+k0] + s[x+k1])
-            let sym2 = match taps {
-                [(k0, c0), (k1, c1)] if (c0 - c1).abs() < 1e-15 => Some((*k0, *k1, *c0 as f32)),
-                _ => None,
-            };
-            for y in 0..h2 {
-                let row = y * w2;
-                let s = &src[row..row + w2];
-                let d = &mut dst[row..row + w2];
-                // prologue + epilogue with wrap
-                for x in (0..max_reach).chain(w2 - max_reach..w2) {
-                    let mut acc = 0.0f32;
-                    for &(k, c) in taps {
-                        let xx = fold(x as i64 + k as i64, w2 as i64);
-                        acc += c as f32 * s[xx];
-                    }
-                    d[x] += acc;
-                }
-                // interior: no wrap possible; per-tap unit-stride sweeps
-                // auto-vectorize (the per-pixel tap loop does not)
-                let (lo, hi) = (max_reach, w2 - max_reach);
-                if let Some((k0, k1, c)) = sym2 {
-                    let o0 = (lo as i64 + k0 as i64) as usize;
-                    let o1 = (lo as i64 + k1 as i64) as usize;
-                    let n = hi - lo;
-                    let (s0, s1) = (&s[o0..o0 + n], &s[o1..o1 + n]);
-                    let dd = &mut d[lo..hi];
-                    for i in 0..n {
-                        dd[i] += c * (s0[i] + s1[i]);
-                    }
-                } else {
-                    for &(k, c) in taps {
-                        let off = (lo as i64 + k as i64) as usize;
-                        let n = hi - lo;
-                        let sv = &s[off..off + n];
-                        let dd = &mut d[lo..hi];
-                        let cf = c as f32;
-                        for i in 0..n {
-                            dd[i] += cf * sv[i];
-                        }
-                    }
+        }
+        return;
+    }
+    // symmetric 2-tap steps (all CDF wavelets) get a fused
+    // single-pass kernel: d[x] += c * (s[x+k0] + s[x+k1])
+    let sym2 = match taps {
+        [(k0, c0), (k1, c1)] if (c0 - c1).abs() < 1e-15 => Some((*k0, *k1, *c0 as f32)),
+        _ => None,
+    };
+    for y in 0..rows {
+        let row = y * w2;
+        let s = &src[row..row + w2];
+        let d = &mut dst[row..row + w2];
+        // prologue + epilogue with wrap
+        for x in (0..max_reach).chain(w2 - max_reach..w2) {
+            let mut acc = 0.0f32;
+            for &(k, c) in taps {
+                let xx = fold(x as i64 + k as i64, w2 as i64);
+                acc += c as f32 * s[xx];
+            }
+            d[x] += acc;
+        }
+        // interior: no wrap possible; per-tap unit-stride sweeps
+        // auto-vectorize (the per-pixel tap loop does not)
+        let (lo, hi) = (max_reach, w2 - max_reach);
+        if let Some((k0, k1, c)) = sym2 {
+            let o0 = (lo as i64 + k0 as i64) as usize;
+            let o1 = (lo as i64 + k1 as i64) as usize;
+            let n = hi - lo;
+            let (s0, s1) = (&s[o0..o0 + n], &s[o1..o1 + n]);
+            let dd = &mut d[lo..hi];
+            for i in 0..n {
+                dd[i] += c * (s0[i] + s1[i]);
+            }
+        } else {
+            for &(k, c) in taps {
+                let off = (lo as i64 + k as i64) as usize;
+                let n = hi - lo;
+                let sv = &s[off..off + n];
+                let dd = &mut d[lo..hi];
+                let cf = c as f32;
+                for i in 0..n {
+                    dd[i] += cf * sv[i];
                 }
             }
         }
-        Axis::Vertical => {
-            let max_reach = taps.iter().map(|&(k, _)| k.unsigned_abs() as usize).max().unwrap_or(0);
-            if h2 <= 2 * max_reach {
-                for y in 0..h2 {
-                    for x in 0..w2 {
-                        let mut acc = 0.0f32;
-                        for &(k, c) in taps {
-                            let yy = fold(y as i64 + k as i64, h2 as i64);
-                            acc += c as f32 * src[yy * w2 + x];
-                        }
-                        dst[y * w2 + x] += acc;
-                    }
+    }
+}
+
+/// Vertical lifting restricted to rows `y0..y1`: `dst` holds only that
+/// band (`(y1 - y0) * w2` samples), `src` is the *full* source plane —
+/// a vertical step reaches across band edges, which is exactly the halo
+/// a band-parallel executor must have synchronized before calling this.
+#[allow(clippy::too_many_arguments)]
+pub fn lift_rows_v(
+    dst: &mut [f32],
+    src: &[f32],
+    w2: usize,
+    h2: usize,
+    y0: usize,
+    y1: usize,
+    taps: &[(i32, f64)],
+    boundary: Boundary,
+    src_is_odd: bool,
+) {
+    let fold = move |i: i64, n: i64| -> usize { fold_1d(i, n, boundary, src_is_odd) };
+    let max_reach = taps.iter().map(|&(k, _)| k.unsigned_abs() as usize).max().unwrap_or(0);
+    if h2 <= 2 * max_reach {
+        for y in y0..y1 {
+            let dst_row = (y - y0) * w2;
+            for x in 0..w2 {
+                let mut acc = 0.0f32;
+                for &(k, c) in taps {
+                    let yy = fold(y as i64 + k as i64, h2 as i64);
+                    acc += c as f32 * src[yy * w2 + x];
                 }
-                return;
+                dst[dst_row + x] += acc;
             }
-            // row-major friendly: iterate rows outermost, whole rows of
-            // MACs per tap (unit-stride inner loops)
-            for y in 0..h2 {
-                let wrap = y < max_reach || y >= h2 - max_reach;
-                let dst_row = y * w2;
-                if wrap {
-                    for x in 0..w2 {
-                        let mut acc = 0.0f32;
-                        for &(k, c) in taps {
-                            let yy = fold(y as i64 + k as i64, h2 as i64);
-                            acc += c as f32 * src[yy * w2 + x];
-                        }
-                        dst[dst_row + x] += acc;
-                    }
-                } else {
-                    for &(k, c) in taps {
-                        let src_row = ((y as i64 + k as i64) as usize) * w2;
-                        let cf = c as f32;
-                        let (s, d) = (&src[src_row..src_row + w2], &mut dst[dst_row..dst_row + w2]);
-                        for x in 0..w2 {
-                            d[x] += cf * s[x];
-                        }
-                    }
+        }
+        return;
+    }
+    // row-major friendly: iterate rows outermost, whole rows of
+    // MACs per tap (unit-stride inner loops)
+    for y in y0..y1 {
+        let wrap = y < max_reach || y >= h2 - max_reach;
+        let dst_row = (y - y0) * w2;
+        if wrap {
+            for x in 0..w2 {
+                let mut acc = 0.0f32;
+                for &(k, c) in taps {
+                    let yy = fold(y as i64 + k as i64, h2 as i64);
+                    acc += c as f32 * src[yy * w2 + x];
+                }
+                dst[dst_row + x] += acc;
+            }
+        } else {
+            for &(k, c) in taps {
+                let src_row = ((y as i64 + k as i64) as usize) * w2;
+                let cf = c as f32;
+                let (s, d) = (&src[src_row..src_row + w2], &mut dst[dst_row..dst_row + w2]);
+                for x in 0..w2 {
+                    d[x] += cf * s[x];
                 }
             }
         }

@@ -1,5 +1,6 @@
 //! Native (pure-rust) DWT engine: every scheme of the paper compiled to
-//! a [`plan::KernelPlan`] and executed on polyphase component planes.
+//! a [`plan::KernelPlan`] and executed on polyphase component planes by
+//! a pluggable [`executor::PlanExecutor`] backend.
 //!
 //! Layering (lower -> schedule -> execute):
 //! * [`plan`] — the `KernelPlan` IR: a scheme's `PolyMatrix` step chain
@@ -7,24 +8,35 @@
 //!   and scale kernels, with barrier structure and per-step cost/halo
 //!   metadata preserved.  One plan drives the engine, the gpusim cost
 //!   model, and the coordinator.
+//! * [`executor`] — *how* a plan runs: [`executor::ScalarExecutor`]
+//!   (single-threaded reference) and [`executor::ParallelExecutor`]
+//!   (horizontal bands on a persistent thread pool, synchronizing
+//!   exactly where a kernel's vertical reach crosses a band edge — the
+//!   CPU analogue of the paper's work-group halo exchange).  Backends
+//!   are bit-exact with each other; a new backend implements the trait
+//!   and touches no per-scheme code.
 //! * [`lifting`] — the in-place 1-D lifting kernel library the plan
-//!   dispatches into (plus the hand-scheduled separable reference).
-//! * [`apply`] — the fused-stencil executor for plan kernels, plus the
-//!   legacy matrix-walking evaluator (the semantics shared with the
-//!   Pallas kernels and the pure-jnp oracle) kept as reference.
+//!   dispatches into, as row-range bodies both executors share (plus
+//!   the hand-scheduled separable reference).
+//! * [`apply`] — the fused-stencil executor for plan kernels (also
+//!   row-range), plus the legacy matrix-walking evaluator (the
+//!   semantics shared with the Pallas kernels and the pure-jnp oracle)
+//!   kept as reference.
 //! * [`engine`] — caches compiled forward/inverse/optimized plans per
-//!   (scheme, wavelet, boundary).
+//!   (scheme, wavelet, boundary); `*_with` methods take any executor.
 //!
 //! All paths compute identical coefficients; the test suite enforces it.
 
 pub mod apply;
 pub mod engine;
+pub mod executor;
 pub mod lifting;
 pub mod multilevel;
 pub mod plan;
 pub mod planes;
 
 pub use engine::{Engine, PlanVariant};
+pub use executor::{default_threads, ParallelExecutor, PlanExecutor, ScalarExecutor};
 pub use lifting::{Axis, Boundary};
 pub use plan::KernelPlan;
 pub use planes::{Image, Planes};

@@ -147,6 +147,25 @@ impl KernelPlan {
             .sum()
     }
 
+    /// Combined (top, bottom, left, right) halo of the whole plan, in
+    /// component samples: the per-side sum of the barrier steps' halos.
+    /// Each step's valid region shrinks by that step's reach, so the
+    /// sum bounds the total context one output sample depends on — the
+    /// halo an overlap-save tiler must fetch and the traffic a banded
+    /// executor exchanges.  Derived from the *compiled* plan, so
+    /// optimized groupings report their own (possibly smaller) reach
+    /// instead of a wavelet-level worst case.
+    pub fn total_halo(&self) -> (i32, i32, i32, i32) {
+        let mut h = (0, 0, 0, 0);
+        for s in &self.steps {
+            h.0 += s.halo.0;
+            h.1 += s.halo.1;
+            h.2 += s.halo.2;
+            h.3 += s.halo.3;
+        }
+        h
+    }
+
     /// True when execution needs the double-buffer scratch planes.
     pub fn needs_scratch(&self) -> bool {
         self.steps
@@ -188,14 +207,7 @@ impl KernelPlan {
                         }
                     }
                     Kernel::Stencil(st) => {
-                        // (re)allocate when absent or retained from a
-                        // differently-sized transform
-                        let fits = matches!(scratch.as_ref(),
-                            Some(s) if s.w2 == planes.w2 && s.h2 == planes.h2);
-                        if !fits {
-                            *scratch = Some(Planes::new(planes.w2, planes.h2));
-                        }
-                        let out = scratch.as_mut().expect("scratch just filled");
+                        let out = ensure_scratch(planes, scratch);
                         apply::run_stencil(st, planes, out, self.boundary);
                         std::mem::swap(planes, out);
                     }
@@ -210,6 +222,19 @@ impl KernelPlan {
         self.execute(&mut p);
         p
     }
+}
+
+/// Hand out the double-buffer scratch planes, (re)allocating when the
+/// slot is empty or retained from a differently-sized transform.  The
+/// one fit-or-reallocate policy shared by every executor backend, so
+/// they cannot drift.
+pub fn ensure_scratch<'a>(planes: &Planes, scratch: &'a mut Option<Planes>) -> &'a mut Planes {
+    let fits = matches!(scratch.as_ref(),
+        Some(s) if s.w2 == planes.w2 && s.h2 == planes.h2);
+    if !fits {
+        *scratch = Some(Planes::new(planes.w2, planes.h2));
+    }
+    scratch.as_mut().expect("scratch just filled")
 }
 
 /// Parity of a polyphase plane along an axis: planes `[ee, oe, eo, oo]`

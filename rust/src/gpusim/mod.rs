@@ -16,4 +16,4 @@ pub mod pipeline;
 
 pub use cost::{simulate, SimPoint};
 pub use device::Device;
-pub use pipeline::PipelineKind;
+pub use pipeline::{band_halo_bytes, PipelineKind};

@@ -128,6 +128,35 @@ impl SchemeLoad {
     }
 }
 
+/// Halo traffic of a band-parallel CPU execution of `plan` — the same
+/// accounting the OpenCL work-group model applies per 16x16 group,
+/// restated for the [`crate::dwt::ParallelExecutor`]'s geometry: `bands`
+/// horizontal bands over planes of `w2` component columns, and at every
+/// barrier each band re-reads the top+bottom halo rows its next step's
+/// vertical reach demands from its neighbours (all four planes,
+/// 4 bytes/sample).  Reported from the *compiled* plan, so optimized
+/// groupings and zero-reach wavelets (Haar) meter their own reach
+/// rather than a wavelet-level worst case.
+///
+/// This is the periodic upper bound: under periodic boundaries even the
+/// edge bands read wrapped neighbour rows, so both sides of every band
+/// count; symmetric edge bands fold into themselves and move somewhat
+/// less.  One exchange is charged per barrier step — intra-step phase
+/// barriers (executor-internal) and the plane subsets actually read are
+/// not modelled.
+pub fn band_halo_bytes(plan: &KernelPlan, w2: usize, bands: usize) -> usize {
+    if bands <= 1 {
+        return 0; // one band: nothing crosses an edge
+    }
+    plan.steps
+        .iter()
+        .map(|s| {
+            let (t, b, _, _) = s.halo;
+            (t.max(0) + b.max(0)) as usize * w2 * 4 * 4 * bands
+        })
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +235,52 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn band_halo_traffic_reads_off_the_plan() {
+        let w = Wavelet::cdf53();
+        // one vertical predict lift: halo (top 0, bottom 1) -> one
+        // bottom halo row per band per plane
+        use crate::polyphase::matrix::LiftKind;
+        let step = crate::polyphase::PolyMatrix::lift_v(LiftKind::Predict, &[(0, -0.5), (1, -0.5)]);
+        let plan = KernelPlan::from_steps(std::slice::from_ref(&step), Boundary::Periodic);
+        let w2 = 128;
+        assert_eq!(band_halo_bytes(&plan, w2, 4), w2 * 4 * 4 * 4);
+        // single band or scalar execution exchanges nothing
+        assert_eq!(band_halo_bytes(&plan, w2, 1), 0);
+        // Haar lifts entirely at lag zero: zero halo traffic at any
+        // band count (the executor's bands never exchange)
+        let haar = Wavelet::haar();
+        let hp = KernelPlan::from_steps(
+            &schemes::build(Scheme::SepLifting, &haar),
+            Boundary::Periodic,
+        );
+        assert_eq!(band_halo_bytes(&hp, w2, 8), 0);
+        // traffic is linear in the band count
+        let p53 = KernelPlan::from_steps(&schemes::build(Scheme::SepLifting, &w),
+                                         Boundary::Periodic);
+        let b2 = band_halo_bytes(&p53, w2, 2);
+        assert!(b2 > 0);
+        assert_eq!(band_halo_bytes(&p53, w2, 8), 4 * b2);
+    }
+
+    #[test]
+    fn fused_schemes_cut_barriers_without_inflating_band_halo() {
+        // the paper's parallel argument, restated on CPU bands: fusing
+        // the 8 lifting barriers into one exchange divides the
+        // synchronization *count* by 8, while the total halo bytes are
+        // conserved (vertical reach adds under composition) — fusion
+        // trades per-exchange latency, not bandwidth
+        let w = Wavelet::cdf53();
+        let sep = KernelPlan::from_steps(&schemes::build(Scheme::SepLifting, &w),
+                                         Boundary::Periodic);
+        let ns = KernelPlan::from_steps(&schemes::build(Scheme::NsConv, &w),
+                                        Boundary::Periodic);
+        assert!(ns.n_barriers() < sep.n_barriers());
+        assert!(band_halo_bytes(&ns, 256, 4) <= band_halo_bytes(&sep, 256, 4));
+        assert_eq!(ns.total_halo().0 + ns.total_halo().1,
+                   sep.total_halo().0 + sep.total_halo().1);
     }
 
     #[test]

@@ -20,13 +20,19 @@
 //! (lower -> schedule -> execute): every scheme's `PolyMatrix` step
 //! chain is compiled once into fused stencil kernels, in-place lifting
 //! updates, and scale kernels, with `Boundary::{Periodic, Symmetric}`
-//! threaded through the whole plan.  The numeric engine executes plans,
-//! the gpusim cost model meters the same plans' per-step ops and halo
-//! traffic, `polyphase::opcount` reads Table 1 off them, and the
-//! coordinator caches them per (scheme, wavelet, boundary) — one
-//! compiled object, four consumers, no parallel re-derivations.  New
-//! backends (SIMD, rayon tiles, GPU) slot in as additional plan
-//! *executors* rather than hand-written per-scheme paths.
+//! threaded through the whole plan.  *How* a plan runs is a separate
+//! axis, the [`dwt::executor`] `PlanExecutor` trait: the scalar
+//! reference backend and the band-parallel backend (horizontal bands on
+//! a persistent thread pool, halo-synchronized at barrier phases — the
+//! CPU analogue of the paper's work-group scheme) execute the same
+//! plans bit-exactly, and future SIMD/GPU backends slot in as further
+//! executors rather than hand-written per-scheme paths.  The gpusim
+//! cost model meters the same plans' per-step ops and halo traffic
+//! (including per-band halo bytes for the CPU backend),
+//! `polyphase::opcount` reads Table 1 off them, and the coordinator
+//! caches engines per (scheme, wavelet, boundary) and picks an executor
+//! per request — one compiled object, four consumers, no parallel
+//! re-derivations.
 
 pub mod benchutil;
 pub mod coordinator;
@@ -36,6 +42,6 @@ pub mod image;
 pub mod polyphase;
 pub mod runtime;
 
-pub use dwt::{Boundary, Image, KernelPlan, Planes};
+pub use dwt::{Boundary, Image, KernelPlan, ParallelExecutor, Planes, PlanExecutor, ScalarExecutor};
 pub use polyphase::wavelets::Wavelet;
 pub use polyphase::Scheme;

@@ -9,7 +9,7 @@
 //!   list-artifacts               show the AOT artifact inventory
 
 use dwt_accel::coordinator::{Coordinator, CoordinatorConfig, Request};
-use dwt_accel::dwt::Image;
+use dwt_accel::dwt::{Boundary, Image};
 use dwt_accel::gpusim::{self, Device, PipelineKind};
 use dwt_accel::polyphase::opcount;
 use dwt_accel::polyphase::schemes::Scheme;
@@ -63,6 +63,7 @@ fn usage() {
            simulate --list-devices     Table-2 device profiles\n\
            transform --wavelet W --scheme S [--size N] [--input img.pgm]\n\
                      [--output out.pgm] [--native] [--inverse] [--levels L]\n\
+                     [--boundary periodic|symmetric]\n\
            serve [--requests N] [--wavelet W] [--scheme S]\n\
            list-artifacts              show compiled artifact inventory\n\
            dump-matrices               JSON dump of all scheme matrices\n\
@@ -217,6 +218,11 @@ fn cmd_transform(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         }
     };
     let inverse = flags.contains_key("inverse");
+    let boundary = match flags.get("boundary").map(String::as_str) {
+        None | Some("periodic") => Boundary::Periodic,
+        Some("symmetric") => Boundary::Symmetric,
+        Some(other) => return Err(anyhow::anyhow!("unknown boundary {other}")),
+    };
     let cfg = CoordinatorConfig {
         artifacts_dir: if flags.contains_key("native") {
             None
@@ -238,6 +244,7 @@ fn cmd_transform(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         scheme,
         inverse,
         levels,
+        boundary,
     })?;
     let dt = t0.elapsed();
     let px = img.width * img.height;
@@ -305,8 +312,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 image: img.clone(),
                 wavelet: wavelet.to_string(),
                 scheme,
-                inverse: false,
-                levels: 1,
+                ..Request::default()
             })
         })
         .collect();

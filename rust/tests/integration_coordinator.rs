@@ -1,9 +1,10 @@
-//! Coordinator end-to-end: routing, batching, tiled parallel path, and
-//! coefficient equality across backends.
+//! Coordinator end-to-end: routing, batching, the band-parallel
+//! executor path, request-level boundary selection, and coefficient
+//! equality across backends.
 
 use dwt_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Request};
 use dwt_accel::coordinator::metrics::Backend;
-use dwt_accel::dwt::{Engine, Image};
+use dwt_accel::dwt::{Boundary, Engine, Image};
 use dwt_accel::polyphase::schemes::Scheme;
 use dwt_accel::polyphase::wavelets::Wavelet;
 
@@ -12,8 +13,8 @@ fn native_cfg() -> CoordinatorConfig {
         artifacts_dir: None,
         workers: 4,
         batch: BatchPolicy::default(),
-        tile: 256,
-        tiled_threshold: 512 * 512,
+        parallel_threshold: 512 * 512,
+        threads: 4,
     }
 }
 
@@ -32,8 +33,7 @@ fn native_route_small_image() {
             image: img.clone(),
             wavelet: "cdf53".into(),
             scheme: Scheme::NsLifting,
-            inverse: false,
-            levels: 1,
+            ..Request::default()
         })
         .unwrap();
     assert_eq!(resp.backend, Backend::Native);
@@ -42,7 +42,7 @@ fn native_route_small_image() {
 }
 
 #[test]
-fn tiled_route_large_image_matches_monolithic() {
+fn parallel_route_large_image_matches_monolithic() {
     let coord = Coordinator::new(native_cfg()).unwrap();
     let img = Image::synthetic(1024, 512, 51);
     let resp = coord
@@ -50,13 +50,14 @@ fn tiled_route_large_image_matches_monolithic() {
             image: img.clone(),
             wavelet: "cdf97".into(),
             scheme: Scheme::SepLifting,
-            inverse: false,
-            levels: 1,
+            ..Request::default()
         })
         .unwrap();
-    assert_eq!(resp.backend, Backend::NativeTiled);
+    assert_eq!(resp.backend, Backend::NativeParallel);
+    // the band-parallel executor is bit-exact with the scalar engine —
+    // routing by size is invisible to clients
     let expect = Engine::new(Scheme::SepLifting, Wavelet::cdf97()).forward(&img);
-    assert!(resp.image.max_abs_diff(&expect) < 1e-3);
+    assert_eq!(resp.image.max_abs_diff(&expect), 0.0);
 }
 
 #[test]
@@ -68,8 +69,7 @@ fn forward_then_inverse_roundtrip_via_coordinator() {
             image: img.clone(),
             wavelet: "dd137".into(),
             scheme: Scheme::NsConv,
-            inverse: false,
-            levels: 1,
+            ..Request::default()
         })
         .unwrap();
     let rec = coord
@@ -78,7 +78,7 @@ fn forward_then_inverse_roundtrip_via_coordinator() {
             wavelet: "dd137".into(),
             scheme: Scheme::NsConv,
             inverse: true,
-            levels: 1,
+            ..Request::default()
         })
         .unwrap();
     assert!(rec.image.max_abs_diff(&img) < 1e-2);
@@ -93,8 +93,7 @@ fn odd_dimension_request_is_an_error_not_a_panic() {
         image: Image::synthetic(33, 32, 90),
         wavelet: "cdf53".into(),
         scheme: Scheme::SepLifting,
-        inverse: false,
-        levels: 1,
+        ..Request::default()
     });
     assert!(err.is_err(), "odd width must be rejected");
     let err = coord.transform(Request {
@@ -102,7 +101,7 @@ fn odd_dimension_request_is_an_error_not_a_panic() {
         wavelet: "cdf97".into(),
         scheme: Scheme::NsConv,
         inverse: true,
-        levels: 1,
+        ..Request::default()
     });
     assert!(err.is_err(), "odd height must be rejected");
     // the service stays healthy afterwards
@@ -110,8 +109,7 @@ fn odd_dimension_request_is_an_error_not_a_panic() {
         image: Image::synthetic(32, 32, 91),
         wavelet: "cdf53".into(),
         scheme: Scheme::SepLifting,
-        inverse: false,
-        levels: 1,
+        ..Request::default()
     });
     assert!(ok.is_ok());
 }
@@ -124,16 +122,16 @@ fn indivisible_multilevel_request_is_an_error() {
         image: Image::synthetic(36, 36, 92),
         wavelet: "cdf53".into(),
         scheme: Scheme::SepLifting,
-        inverse: false,
         levels: 3,
+        ..Request::default()
     });
     assert!(err.is_err());
     let ok = coord.transform(Request {
         image: Image::synthetic(40, 40, 92),
         wavelet: "cdf53".into(),
         scheme: Scheme::SepLifting,
-        inverse: false,
         levels: 3,
+        ..Request::default()
     });
     assert!(ok.is_ok());
 }
@@ -145,8 +143,7 @@ fn unknown_wavelet_is_an_error() {
         image: Image::synthetic(16, 16, 53),
         wavelet: "db4".into(),
         scheme: Scheme::SepLifting,
-        inverse: false,
-        levels: 1,
+        ..Request::default()
     });
     assert!(err.is_err());
 }
@@ -161,8 +158,7 @@ fn concurrent_submissions_all_complete() {
                 image: img.clone(),
                 wavelet: ["cdf53", "cdf97", "dd137"][i % 3].into(),
                 scheme: Scheme::ALL[i % 6],
-                inverse: false,
-                levels: 1,
+                ..Request::default()
             })
         })
         .collect();
@@ -185,8 +181,8 @@ fn pjrt_route_used_at_serve_size_and_batches_form() {
             max_batch: 8,
             max_wait: std::time::Duration::from_millis(20),
         },
-        tile: 256,
-        tiled_threshold: usize::MAX,
+        parallel_threshold: usize::MAX,
+        threads: 0,
     })
     .unwrap();
     assert!(coord.pjrt_available());
@@ -198,8 +194,7 @@ fn pjrt_route_used_at_serve_size_and_batches_form() {
                 image: img.clone(),
                 wavelet: "cdf97".into(),
                 scheme: Scheme::NsPolyconv,
-                inverse: false,
-                levels: 1,
+                ..Request::default()
             })
         })
         .collect();
@@ -227,8 +222,7 @@ fn pjrt_coefficients_match_native_for_every_scheme() {
                 image: img.clone(),
                 wavelet: "cdf53".into(),
                 scheme: s,
-                inverse: false,
-                levels: 1,
+                ..Request::default()
             })
             .unwrap();
         let expect = Engine::new(s, Wavelet::cdf53()).forward(&img);
@@ -249,8 +243,8 @@ fn multilevel_request_roundtrip() {
             image: img.clone(),
             wavelet: "cdf97".into(),
             scheme: Scheme::NsPolyconv,
-            inverse: false,
             levels: 3,
+            ..Request::default()
         })
         .unwrap();
     // the packed pyramid equals the engine-level multilevel
@@ -264,6 +258,7 @@ fn multilevel_request_roundtrip() {
             scheme: Scheme::NsPolyconv,
             inverse: true,
             levels: 3,
+            ..Request::default()
         })
         .unwrap();
     assert!(rec.image.max_abs_diff(&img) < 5e-2);
@@ -278,8 +273,7 @@ fn haar_served_natively() {
             image: img.clone(),
             wavelet: "haar".into(),
             scheme: Scheme::NsConv,
-            inverse: false,
-            levels: 1,
+            ..Request::default()
         })
         .unwrap();
     let expect = Engine::new(Scheme::NsConv, Wavelet::haar()).forward(&img);
@@ -294,8 +288,8 @@ fn bad_artifacts_dir_falls_back_to_native() {
         artifacts_dir: Some(std::path::PathBuf::from("/nonexistent/artifacts")),
         workers: 1,
         batch: BatchPolicy::default(),
-        tile: 256,
-        tiled_threshold: usize::MAX,
+        parallel_threshold: usize::MAX,
+        threads: 0,
     })
     .unwrap();
     assert!(!coord.pjrt_available());
@@ -305,8 +299,7 @@ fn bad_artifacts_dir_falls_back_to_native() {
             image: img,
             wavelet: "cdf97".into(),
             scheme: Scheme::NsPolyconv,
-            inverse: false,
-            levels: 1,
+            ..Request::default()
         })
         .unwrap();
     assert_eq!(resp.backend, Backend::Native);
@@ -321,8 +314,8 @@ fn corrupt_manifest_falls_back_to_native() {
         artifacts_dir: Some(dir),
         workers: 1,
         batch: BatchPolicy::default(),
-        tile: 256,
-        tiled_threshold: usize::MAX,
+        parallel_threshold: usize::MAX,
+        threads: 0,
     })
     .unwrap();
     assert!(!coord.pjrt_available());
@@ -331,9 +324,115 @@ fn corrupt_manifest_falls_back_to_native() {
             image: Image::synthetic(32, 32, 60),
             wavelet: "cdf53".into(),
             scheme: Scheme::SepLifting,
-            inverse: false,
-            levels: 1,
+            ..Request::default()
         })
         .unwrap();
     assert_eq!(resp.backend, Backend::Native);
+}
+
+#[test]
+fn symmetric_boundary_request_served_and_cached() {
+    // request-level boundary selection: the engine cache hands back a
+    // symmetric-compiled plan, and the coefficients match an engine
+    // built with the same boundary
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(64, 64, 93);
+    for s in [Scheme::SepLifting, Scheme::NsConv, Scheme::NsLifting] {
+        let resp = coord
+            .transform(Request {
+                image: img.clone(),
+                wavelet: "cdf97".into(),
+                scheme: s,
+                boundary: Boundary::Symmetric,
+                ..Request::default()
+            })
+            .unwrap();
+        let expect = Engine::with_boundary(s, Wavelet::cdf97(), Boundary::Symmetric)
+            .forward(&img);
+        assert_eq!(resp.image.max_abs_diff(&expect), 0.0, "{}", s.name());
+        // ... and differs from the periodic default at the borders
+        let periodic = coord
+            .transform(Request {
+                image: img.clone(),
+                wavelet: "cdf97".into(),
+                scheme: s,
+                ..Request::default()
+            })
+            .unwrap();
+        assert!(
+            resp.image.max_abs_diff(&periodic.image) > 1e-3,
+            "{}: symmetric result should differ from periodic",
+            s.name()
+        );
+    }
+}
+
+#[test]
+fn symmetric_boundary_rides_the_parallel_route_bit_exactly() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(1024, 512, 94);
+    let resp = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "cdf53".into(),
+            scheme: Scheme::NsConv,
+            boundary: Boundary::Symmetric,
+            ..Request::default()
+        })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::NativeParallel);
+    let expect = Engine::with_boundary(Scheme::NsConv, Wavelet::cdf53(), Boundary::Symmetric)
+        .forward(&img);
+    assert_eq!(resp.image.max_abs_diff(&expect), 0.0);
+}
+
+#[test]
+fn inverse_requests_use_the_parallel_route_too() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(1024, 512, 95);
+    let fwd = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "cdf97".into(),
+            scheme: Scheme::NsPolyconv,
+            ..Request::default()
+        })
+        .unwrap();
+    let rec = coord
+        .transform(Request {
+            image: fwd.image,
+            wavelet: "cdf97".into(),
+            scheme: Scheme::NsPolyconv,
+            inverse: true,
+            ..Request::default()
+        })
+        .unwrap();
+    assert_eq!(rec.backend, Backend::NativeParallel);
+    assert!(rec.image.max_abs_diff(&img) < 5e-2);
+}
+
+#[test]
+fn deterministic_thread_count_is_respected() {
+    // threads: 1 degrades the parallel route to the scalar path inside
+    // the same executor — still served, still exact
+    let coord = Coordinator::new(CoordinatorConfig {
+        artifacts_dir: None,
+        workers: 2,
+        batch: BatchPolicy::default(),
+        parallel_threshold: 0, // every request takes the parallel route
+        threads: 1,
+    })
+    .unwrap();
+    let img = Image::synthetic(64, 64, 96);
+    let resp = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "cdf53".into(),
+            scheme: Scheme::SepLifting,
+            ..Request::default()
+        })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::NativeParallel);
+    let expect = Engine::new(Scheme::SepLifting, Wavelet::cdf53()).forward(&img);
+    assert_eq!(resp.image.max_abs_diff(&expect), 0.0);
 }

@@ -247,14 +247,49 @@ fn prop_batcher_never_exceeds_max_and_preserves_order() {
 
 #[test]
 fn prop_halo_suffices_for_every_random_wavelet() {
-    // TileGrid::halo_for must bound the true reach of the total matrix
+    // the plan-derived TileGrid::halo_for must still bound the true
+    // reach of the total matrix (per-side sums over the compiled steps
+    // dominate the composed support), for every scheme's plan
+    use dwt_accel::dwt::{Boundary, KernelPlan};
     let mut rng = Rng::new(9);
     for _ in 0..40 {
         let w = rng.wavelet();
-        let halo = TileGrid::halo_for(&w);
         let (t, b, l, r) = schemes::total_matrix(&w).halo();
         let reach = t.max(b).max(l).max(r) as usize;
-        assert!(halo >= 2 * reach, "halo {halo} < 2x reach {reach}");
-        assert!(halo % 2 == 0);
+        for s in Scheme::ALL {
+            let plan = KernelPlan::from_steps(&schemes::build(s, &w), Boundary::Periodic);
+            let halo = TileGrid::halo_for(&plan);
+            assert!(
+                halo >= 2 * reach,
+                "{}: halo {halo} < 2x reach {reach}",
+                s.name()
+            );
+            assert!(halo % 2 == 0);
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_executor_bit_exact_on_random_wavelets() {
+    // the band-parallel backend must agree with the scalar backend to
+    // the last bit for arbitrary lifting wavelets and geometries, not
+    // just the paper's three
+    use dwt_accel::dwt::ParallelExecutor;
+    let mut rng = Rng::new(10);
+    let par = ParallelExecutor::with_threads(4);
+    for case in 0..12 {
+        let w = rng.wavelet();
+        let s = Scheme::ALL[(rng.next_u64() % 6) as usize];
+        let engine = Engine::new(s, w);
+        let (iw, ih) = (2 * rng.range(4, 40) as usize, 2 * rng.range(4, 40) as usize);
+        let img = Image::synthetic(iw, ih, rng.next_u64());
+        let scalar = engine.forward(&img);
+        let parallel = engine.forward_with(&img, &par);
+        assert_eq!(
+            scalar, parallel,
+            "case {case}: {}x{} {}",
+            iw, ih,
+            engine.scheme.name()
+        );
     }
 }
