@@ -1,15 +1,18 @@
 //! Bench target: native engine micro-benchmarks — the L3 hot path.
 //! Per-scheme scalar (KernelPlan) vs band-parallel (ParallelExecutor)
 //! vs legacy (apply_chain) execution, the lifting kernel library vs the
-//! generic evaluator, and the memcpy roofline; plus a large-image
-//! (2048^2) scalar-vs-parallel section.  Emits `BENCH_native.json` so
-//! future PRs can track both the planned-vs-legacy and the
-//! parallel-vs-scalar speedup trajectories.
+//! generic evaluator, and the memcpy roofline; a large-image (2048^2)
+//! scalar-vs-parallel section; and a multilevel section (L in {3, 5}
+//! at 1024^2) comparing the pyramid-native strided in-place path
+//! (scalar and band-parallel) against the pre-PR-3 crop/paste
+//! composition.  Emits `BENCH_native.json` (schema v3) so future PRs
+//! can track the planned-vs-legacy, parallel-vs-scalar, and pyramid
+//! speedup trajectories.
 //!
 //! Flags: `--quick` caps the per-case budget for CI smoke runs.
 //! `PALLAS_THREADS` pins the parallel executor's thread count.
 
-use dwt_accel::benchutil::{bench, default_budget, gbs, Stats, Table};
+use dwt_accel::benchutil::{bench, crop_paste_pyramid_forward, default_budget, gbs, Stats, Table};
 use dwt_accel::coordinator::tiler;
 use dwt_accel::dwt::executor::{default_threads, ParallelExecutor, ScalarExecutor};
 use dwt_accel::dwt::{apply, lifting, Engine, Image, PlanVariant, Planes};
@@ -32,6 +35,16 @@ struct LargeRecord {
     scheme: &'static str,
     scalar_ms: f64,
     parallel_ms: f64,
+}
+
+struct PyramidRecord {
+    side: usize,
+    levels: usize,
+    wavelet: &'static str,
+    scheme: &'static str,
+    scalar_ms: f64,
+    parallel_ms: f64,
+    legacy_ms: f64,
 }
 
 fn main() {
@@ -239,6 +252,85 @@ fn main() {
         });
     }
 
+    // multilevel (Mallat) section: the pyramid-native in-place path
+    // (scalar and band-parallel strided level views) vs the legacy
+    // crop/paste composition at L in {3, 5}
+    println!("\n--- multilevel pyramid, {side}x{side} (scalar vs parallel x{threads} vs crop/paste) ---\n");
+    let tp = Table::new(&[7, 13, 3, 10, 10, 10, 8, 8]);
+    tp.header(&[
+        "wavelet", "scheme", "L", "scalar ms", "par ms", "legacy ms", "x leg", "x par",
+    ]);
+    let mut pyramids: Vec<PyramidRecord> = Vec::new();
+    for levels in [3usize, 5] {
+        for (wname, scheme) in [("cdf97", Scheme::SepLifting), ("cdf53", Scheme::NsConv)] {
+            let engine = Engine::new(scheme, Wavelet::by_name(wname).expect("wavelet"));
+            // sanity: all three produce the same packed pyramid
+            let a = engine.forward_multi_with(&img, levels, &scalar).expect("geometry");
+            let b = engine.forward_multi_with(&img, levels, &parallel).expect("geometry");
+            assert_eq!(a.max_abs_diff(&b), 0.0, "pyramid parallel != scalar");
+            assert_eq!(
+                a.max_abs_diff(&crop_paste_pyramid_forward(&engine, &img, levels)),
+                0.0,
+                "pyramid != crop/paste reference"
+            );
+            let s_scalar = bench(
+                || {
+                    std::hint::black_box(
+                        engine
+                            .forward_multi_with(std::hint::black_box(&img), levels, &scalar)
+                            .expect("geometry"),
+                    );
+                },
+                budget,
+                3,
+                100,
+            );
+            let s_par = bench(
+                || {
+                    std::hint::black_box(
+                        engine
+                            .forward_multi_with(std::hint::black_box(&img), levels, &parallel)
+                            .expect("geometry"),
+                    );
+                },
+                budget,
+                3,
+                100,
+            );
+            let s_legacy = bench(
+                || {
+                    std::hint::black_box(crop_paste_pyramid_forward(
+                        &engine,
+                        std::hint::black_box(&img),
+                        levels,
+                    ));
+                },
+                budget,
+                3,
+                100,
+            );
+            tp.row(&[
+                wname.into(),
+                scheme.name().into(),
+                format!("{levels}"),
+                format!("{:.2}", s_scalar.median_ms()),
+                format!("{:.2}", s_par.median_ms()),
+                format!("{:.2}", s_legacy.median_ms()),
+                format!("x{:.2}", s_legacy.median.as_secs_f64() / s_scalar.median.as_secs_f64()),
+                format!("x{:.2}", s_scalar.median.as_secs_f64() / s_par.median.as_secs_f64()),
+            ]);
+            pyramids.push(PyramidRecord {
+                side,
+                levels,
+                wavelet: wname,
+                scheme: scheme.name(),
+                scalar_ms: s_scalar.median_ms(),
+                parallel_ms: s_par.median_ms(),
+                legacy_ms: s_legacy.median_ms(),
+            });
+        }
+    }
+
     // tiled compatibility layer vs monolithic
     let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
     let s_mono = bench(
@@ -279,13 +371,21 @@ fn main() {
     }
 
     let path = "BENCH_native.json";
-    match std::fs::write(path, to_json(side, threads, quick, memcpy_gbs, &records, &larges)) {
-        Ok(()) => println!("\nwrote {path} ({} scheme records)", records.len()),
+    match std::fs::write(
+        path,
+        to_json(side, threads, quick, memcpy_gbs, &records, &larges, &pyramids),
+    ) {
+        Ok(()) => println!(
+            "\nwrote {path} ({} scheme records, {} pyramid records)",
+            records.len(),
+            pyramids.len()
+        ),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 }
 
 /// Hand-rolled JSON (no serde in the offline build).
+#[allow(clippy::too_many_arguments)]
 fn to_json(
     side: usize,
     threads: usize,
@@ -293,10 +393,12 @@ fn to_json(
     memcpy_gbs: f64,
     records: &[SchemeRecord],
     larges: &[LargeRecord],
+    pyramids: &[PyramidRecord],
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"native_engine\",\n");
+    out.push_str("  \"schema\": 3,\n");
     out.push_str(&format!("  \"side\": {side},\n"));
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"quick\": {quick},\n"));
@@ -332,6 +434,25 @@ fn to_json(
             r.parallel_ms,
             r.scalar_ms / r.parallel_ms,
             if i + 1 == larges.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"pyramid\": [\n");
+    for (i, r) in pyramids.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"side\": {}, \"levels\": {}, \"wavelet\": \"{}\", \"scheme\": \"{}\", \
+             \"scalar_ms\": {:.4}, \"parallel_ms\": {:.4}, \"legacy_ms\": {:.4}, \
+             \"parallel_speedup\": {:.3}, \"vs_legacy\": {:.3}}}{}\n",
+            r.side,
+            r.levels,
+            r.wavelet,
+            r.scheme,
+            r.scalar_ms,
+            r.parallel_ms,
+            r.legacy_ms,
+            r.scalar_ms / r.parallel_ms,
+            r.legacy_ms / r.scalar_ms,
+            if i + 1 == pyramids.len() { "" } else { "," }
         ));
     }
     out.push_str("  ]\n}\n");

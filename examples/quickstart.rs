@@ -41,6 +41,25 @@ fn main() -> anyhow::Result<()> {
     let psnr = rec.psnr(&img);
     println!("inverse PSNR vs original: {psnr:.1} dB");
     assert!(psnr > 80.0, "reconstruction failed");
+
+    // 5. a deep Mallat pyramid through the same request path: levels > 1
+    //    lowers to a PyramidPlan and executes in place on strided level
+    //    views (band-parallel above the coordinator's size threshold)
+    let pyr = coord.transform(Request {
+        image: img.clone(),
+        wavelet: "cdf97".into(),
+        scheme: Scheme::NsPolyconv,
+        levels: 4,
+        ..Request::default()
+    })?;
+    println!(
+        "4-level pyramid via {} in {:.2} ms",
+        pyr.backend.name(),
+        pyr.latency.as_secs_f64() * 1e3
+    );
+    let rec4 = engine.inverse_multi(&pyr.image, 4)?;
+    println!("4-level inverse PSNR: {:.1} dB", rec4.psnr(&img));
+    assert!(rec4.psnr(&img) > 80.0, "pyramid reconstruction failed");
     println!("quickstart OK");
     Ok(())
 }

@@ -72,8 +72,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // -- phase 2: mixed multi-client stream (batching + parallel path) --
-    println!("\nmixed stream: 4 client threads, serve-size + 1024x1024 images");
+    // -- phase 2: mixed multi-client stream (batching + parallel path +
+    //    deep pyramids riding the band-parallel executor) --
+    println!("\nmixed stream: 4 client threads, serve-size + 1024x1024 images (some 3-level pyramids)");
     let t0 = Instant::now();
     let mut joins = Vec::new();
     for c in 0..4u64 {
@@ -85,16 +86,21 @@ fn main() -> anyhow::Result<()> {
             let per_client = 24;
             let handles: Vec<_> = (0..per_client)
                 .map(|i| {
-                    let (img, scheme) = if i % 6 == 5 {
-                        (large.clone(), Scheme::SepLifting)
+                    // every sixth request is a large image; half of
+                    // those are 3-level Mallat pyramids (levels > 1
+                    // requests execute pyramid-native on the
+                    // band-parallel executor)
+                    let (img, scheme, levels) = if i % 6 == 5 {
+                        (large.clone(), Scheme::SepLifting, if i % 12 == 11 { 3 } else { 1 })
                     } else {
-                        (small.clone(), [Scheme::NsPolyconv, Scheme::NsConv][i % 2])
+                        (small.clone(), [Scheme::NsPolyconv, Scheme::NsConv][i % 2], 1)
                     };
                     bytes += img.data.len() * 4;
                     coord.submit(Request {
                         image: img,
                         wavelet: ["cdf97", "cdf53", "dd137"][i % 3].into(),
                         scheme,
+                        levels,
                         ..Request::default()
                     })
                 })
@@ -127,6 +133,10 @@ fn main() -> anyhow::Result<()> {
         s.p99_us as f64 / 1e3
     );
     println!("backends: {:?}", s.per_backend);
+    println!(
+        "pyramids: {} requests (deepest L={})",
+        s.pyramid_requests, s.max_levels
+    );
     println!("\nthroughput_server OK");
     Ok(())
 }

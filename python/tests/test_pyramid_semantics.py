@@ -1,0 +1,299 @@
+"""Pyramid-native multi-level execution, validated against the oracle.
+
+Mirrors PR 3's Rust `dwt::pyramid` in numpy: an L-level Mallat
+transform runs **in place on strided views** of one four-plane
+workspace — level l re-scopes the top-left corner of the same buffers,
+the LL plane is polyphase-deinterleaved within the workspace between
+levels (the in-place gather/scatter whose traversal-order safety the
+Rust implementation relies on), and finished detail subbands stream
+straight into the packed output.  numpy array views are genuinely
+strided, so `exec_scalar`/`exec_banded` from the PR-2 twin run on them
+exactly the way the Rust row-range kernels run on `(stride, w, h)`
+views.
+
+Asserted here, for all 6 schemes x {periodic, symmetric} x L in
+{1, 2, 3}:
+
+* packed-layout equivalence: the strided in-place pyramid reproduces
+  the crop/paste reference (the pre-PR-3 `dwt::multilevel`) EXACTLY;
+* banded (band-parallel) pyramid execution equals the scalar pyramid
+  exactly at every level, bands re-partitioned per level;
+* the in-place deinterleave/interleave pair is an exact involution and
+  matches an ordinary polyphase split of the region;
+* inverse pyramids reconstruct the input through the same strided
+  in-place path.
+
+The Rust test suite asserts the same invariants on the real
+implementation; this file guards the *algorithm* from a second,
+independent implementation so the two cannot drift silently.
+"""
+
+import numpy as np
+import pytest
+
+from compile import schemes
+from compile import wavelets as wv
+
+import test_executor_semantics as ex
+
+WAVELET_NAMES = sorted(wv.WAVELETS)
+BOUNDARIES = ["periodic", "symmetric"]
+LEVELS = [1, 2, 3]
+
+
+# ------------------------------------------------------- shared helpers
+
+
+def to_packed(planes):
+    return np.block([[planes[0], planes[1]], [planes[2], planes[3]]])
+
+
+def from_packed(packed):
+    h2, w2 = packed.shape[0] // 2, packed.shape[1] // 2
+    return [packed[:h2, :w2].copy(), packed[:h2, w2:].copy(),
+            packed[h2:, :w2].copy(), packed[h2:, w2:].copy()]
+
+
+def exec_inplace(plan, views, boundary, threads):
+    """Run a compiled plan on (possibly strided) numpy views, mutating
+    them in place — the twin of `PlanExecutor::execute_with` on a
+    pyramid level view."""
+    if threads > 1:
+        result = ex.exec_banded(plan, views, boundary, threads)
+    else:
+        result = ex.exec_scalar(plan, views, boundary)
+    for c in range(4):
+        views[c][:, :] = result[c]
+
+
+def deinterleave_level(ws, w, h):
+    """In-place polyphase deinterleave of the `2h x 2w` region of
+    `ws[0]` into the `h x w` corners of all four workspace planes —
+    the numpy statement of `pyramid::deinterleave_level` (numpy needs
+    a row buffer where Rust's traversal-order argument needs none)."""
+    region = ws[0][:2 * h, :2 * w].copy()
+    ws[1][:h, :w] = region[0::2, 1::2]
+    ws[2][:h, :w] = region[1::2, 0::2]
+    ws[3][:h, :w] = region[1::2, 1::2]
+    ws[0][:h, :w] = region[0::2, 0::2]
+
+
+def interleave_level(ws, w, h):
+    """Exact inverse of `deinterleave_level`."""
+    region = np.empty((2 * h, 2 * w), dtype=ws[0].dtype)
+    region[0::2, 0::2] = ws[0][:h, :w]
+    region[0::2, 1::2] = ws[1][:h, :w]
+    region[1::2, 0::2] = ws[2][:h, :w]
+    region[1::2, 1::2] = ws[3][:h, :w]
+    ws[0][:2 * h, :2 * w] = region
+
+
+# --------------------------------------------------- pyramid executions
+
+
+def pyramid_forward_strided(plan, img, levels, boundary, threads=1):
+    """The PR-3 path: one workspace, strided level views, in-place
+    deinterleave, details evacuated into the packed output per level."""
+    H, W = img.shape
+    out = np.zeros_like(img)
+    ws = [np.ascontiguousarray(q) for q in ex.split(img)]
+    for l in range(levels):
+        w, h = W >> (l + 1), H >> (l + 1)
+        if l > 0:
+            deinterleave_level(ws, w, h)
+        views = [ws[c][:h, :w] for c in range(4)]
+        exec_inplace(plan, views, boundary, threads)
+        out[0:h, w:2 * w] = views[1]
+        out[h:2 * h, 0:w] = views[2]
+        out[h:2 * h, w:2 * w] = views[3]
+    wl, hl = W >> levels, H >> levels
+    out[:hl, :wl] = ws[0][:hl, :wl]
+    return out
+
+
+def pyramid_inverse_strided(inv_plan, packed, levels, boundary, threads=1):
+    H, W = packed.shape
+    ws = [np.zeros((H // 2, W // 2), dtype=packed.dtype) for _ in range(4)]
+    wl, hl = W >> levels, H >> levels
+    ws[0][:hl, :wl] = packed[:hl, :wl]
+    for l in reversed(range(levels)):
+        w, h = W >> (l + 1), H >> (l + 1)
+        ws[1][:h, :w] = packed[0:h, w:2 * w]
+        ws[2][:h, :w] = packed[h:2 * h, 0:w]
+        ws[3][:h, :w] = packed[h:2 * h, w:2 * w]
+        views = [ws[c][:h, :w] for c in range(4)]
+        exec_inplace(inv_plan, views, boundary, threads)
+        if l > 0:
+            interleave_level(ws, w, h)
+    img = np.empty((H, W), dtype=packed.dtype)
+    img[0::2, 0::2] = ws[0]
+    img[0::2, 1::2] = ws[1]
+    img[1::2, 0::2] = ws[2]
+    img[1::2, 1::2] = ws[3]
+    return img
+
+
+def pyramid_forward_reference(plan, img, levels, boundary):
+    """The pre-PR-3 crop/paste pyramid (the packed-layout oracle)."""
+    out = img.copy()
+    H, W = img.shape
+    for l in range(levels):
+        w, h = W >> l, H >> l
+        sub = out[:h, :w].copy()
+        planes = ex.exec_scalar(plan, ex.split(sub), boundary)
+        out[:h, :w] = to_packed(planes)
+    return out
+
+
+def pyramid_inverse_reference(inv_plan, packed, levels, boundary):
+    out = packed.copy()
+    H, W = packed.shape
+    for l in reversed(range(levels)):
+        w, h = W >> l, H >> l
+        planes = ex.exec_scalar(inv_plan, from_packed(out[:h, :w]), boundary)
+        rec = np.empty((h, w), dtype=packed.dtype)
+        rec[0::2, 0::2] = planes[0]
+        rec[0::2, 1::2] = planes[1]
+        rec[1::2, 0::2] = planes[2]
+        rec[1::2, 1::2] = planes[3]
+        out[:h, :w] = rec
+    return out
+
+
+# --------------------------------------------------------------- tests
+
+
+def test_deinterleave_interleave_restore_the_ll_region():
+    img = ex.img_of(32, 24, 11)
+    ws = [np.ascontiguousarray(q) for q in ex.split(img)]
+    ref = [w.copy() for w in ws]
+    deinterleave_level(ws, 8, 6)
+    # the corners equal an ordinary polyphase split of the region
+    region = ref[0][:12, :16]
+    assert np.array_equal(ws[0][:6, :8], region[0::2, 0::2])
+    assert np.array_equal(ws[1][:6, :8], region[0::2, 1::2])
+    assert np.array_equal(ws[2][:6, :8], region[1::2, 0::2])
+    assert np.array_equal(ws[3][:6, :8], region[1::2, 1::2])
+    interleave_level(ws, 8, 6)
+    # p[0] — the only plane whose data is still live at this point of a
+    # pyramid run (details were evacuated before the deinterleave) — is
+    # restored exactly; the p[1..3] corners are scratch by design
+    assert np.array_equal(ws[0], ref[0])
+    for c in range(1, 4):
+        assert np.array_equal(ws[c][6:, :], ref[c][6:, :])
+        assert np.array_equal(ws[c][:, 8:], ref[c][:, 8:])
+
+
+@pytest.mark.parametrize("levels", LEVELS)
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+def test_strided_pyramid_equals_crop_paste_reference(wname, boundary, levels):
+    w = wv.get(wname)
+    img = ex.img_of(64, 48, 21)
+    for scheme in schemes.SCHEMES:
+        plan = ex.compile_plan(schemes.build(scheme, w))
+        got = pyramid_forward_strided(plan, img, levels, boundary)
+        want = pyramid_forward_reference(plan, img, levels, boundary)
+        assert np.array_equal(got, want), f"{wname} {scheme} {boundary} L={levels}"
+
+
+@pytest.mark.parametrize("levels", [2, 3])
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+def test_banded_pyramid_equals_scalar_pyramid(wname, boundary, levels):
+    """Bands re-partition per level; the banded pyramid must still be
+    exactly the scalar pyramid (the routing-invisibility contract the
+    coordinator relies on for levels >= 2 requests)."""
+    w = wv.get(wname)
+    img = ex.img_of(64, 48, 22)
+    for scheme in schemes.SCHEMES:
+        plan = ex.compile_plan(schemes.build(scheme, w))
+        a = pyramid_forward_strided(plan, img, levels, boundary, threads=1)
+        b = pyramid_forward_strided(plan, img, levels, boundary, threads=4)
+        assert np.array_equal(a, b), f"{wname} {scheme} {boundary} L={levels}"
+
+
+@pytest.mark.parametrize("levels", LEVELS)
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+def test_inverse_pyramid_reconstructs(wname, boundary, levels):
+    w = wv.get(wname)
+    img = ex.img_of(64, 48, 23)
+    for scheme in schemes.SCHEMES:
+        fwd = ex.compile_plan(schemes.build(scheme, w))
+        inv = ex.compile_plan(schemes.build_inverse(scheme, w))
+        packed = pyramid_forward_strided(fwd, img, levels, boundary, threads=4)
+        # the strided inverse equals the crop/paste inverse oracle...
+        a = pyramid_inverse_strided(inv, packed, levels, boundary, threads=4)
+        b = pyramid_inverse_reference(inv, packed, levels, boundary)
+        assert np.array_equal(a, b), f"{wname} {scheme} {boundary} L={levels}"
+        # ...and reconstructs the input
+        err = np.abs(a - img).max()
+        assert err < 1e-8, f"{wname} {scheme} {boundary} L={levels}: err {err}"
+
+
+def test_rust_traversal_order_is_in_place_safe():
+    """The Rust `deinterleave_level`/`interleave_level` run with NO row
+    buffer — safety rests on traversal order (ascending rows for the
+    gather, descending rows / descending columns for the scatter).
+    Emulate the exact element-by-element Rust loops on flat buffers and
+    check them against the buffered numpy versions."""
+    rng = np.random.RandomState(7)
+    s = 16  # stride (level-0 plane width)
+    rows = 12
+    for (w, h) in [(8, 6), (4, 3), (1, 1), (8, 1), (1, 6)]:
+        p = [rng.rand(rows * s) for _ in range(4)]
+        ws = [q.reshape(rows, s).copy() for q in p]
+        deinterleave_level(ws, w, h)
+        q = [q.copy() for q in p]
+        p0, p1, p2, p3 = q
+        for y in range(h):  # ascending — the Rust loop order
+            even, odd, dst = 2 * y * s, (2 * y + 1) * s, y * s
+            for x in range(w):
+                p1[dst + x] = p0[even + 2 * x + 1]
+            for x in range(w):
+                p2[dst + x] = p0[odd + 2 * x]
+                p3[dst + x] = p0[odd + 2 * x + 1]
+            for x in range(w):  # ee compacts within p0 itself
+                p0[dst + x] = p0[even + 2 * x]
+        for c in range(4):
+            assert np.array_equal(q[c].reshape(rows, s)[:h, :w], ws[c][:h, :w]), \
+                f"deinterleave {w}x{h} plane {c}"
+        # scatter back (descending), starting from the gather's output
+        for y in reversed(range(h)):
+            even, odd, src = 2 * y * s, (2 * y + 1) * s, y * s
+            for x in range(w):
+                p0[odd + 2 * x] = p2[src + x]
+                p0[odd + 2 * x + 1] = p3[src + x]
+            for x in reversed(range(w)):
+                p0[even + 2 * x + 1] = p1[src + x]
+                p0[even + 2 * x] = p0[src + x]
+        assert np.array_equal(p0.reshape(rows, s)[:2 * h, :2 * w],
+                              p[0].reshape(rows, s)[:2 * h, :2 * w]), \
+            f"interleave {w}x{h} did not restore the region"
+
+
+def test_mixed_scalar_parallel_levels_stay_exact():
+    """The coordinator's per-level fall-back: deep (small) levels run
+    scalar while level 0 runs banded — the mix must equal both pure
+    paths exactly."""
+    w = wv.get("cdf97")
+    img = ex.img_of(64, 64, 24)
+    for scheme in ("sep_lifting", "ns_conv"):
+        plan = ex.compile_plan(schemes.build(scheme, w))
+        pure = pyramid_forward_strided(plan, img, 3, "periodic", threads=1)
+        H, W = img.shape
+        out = np.zeros_like(img)
+        ws = [np.ascontiguousarray(q) for q in ex.split(img)]
+        for l in range(3):
+            wl, hl = W >> (l + 1), H >> (l + 1)
+            if l > 0:
+                deinterleave_level(ws, wl, hl)
+            views = [ws[c][:hl, :wl] for c in range(4)]
+            # level 0 banded, deeper levels scalar (below threshold)
+            exec_inplace(plan, views, "periodic", 4 if l == 0 else 1)
+            out[0:hl, wl:2 * wl] = views[1]
+            out[hl:2 * hl, 0:wl] = views[2]
+            out[hl:2 * hl, wl:2 * wl] = views[3]
+        out[:H >> 3, :W >> 3] = ws[0][:H >> 3, :W >> 3]
+        assert np.array_equal(out, pure), scheme

@@ -1,8 +1,36 @@
-//! Bench-harness substrate: timing, robust statistics, and table
-//! printing for the `cargo bench` targets (no external bench crate is
-//! available in the offline build — this is the project's criterion).
+//! Bench-harness substrate: timing, robust statistics, table printing
+//! for the `cargo bench` targets (no external bench crate is available
+//! in the offline build — this is the project's criterion), and
+//! retired reference implementations kept as bench/test baselines.
 
+use crate::dwt::{Engine, Image};
 use std::time::{Duration, Instant};
+
+/// The pre-PR-3 `dwt::multilevel` pyramid: crop the LL region, run the
+/// single-level engine, paste the packed result back — two full-region
+/// clones per level.  The library path no longer clones at all
+/// (`dwt::pyramid`); this survives only as the baseline the multilevel
+/// bench times and the packed-layout oracle the pyramid unit tests
+/// compare against, shared here so the two cannot drift.
+pub fn crop_paste_pyramid_forward(engine: &Engine, img: &Image, levels: usize) -> Image {
+    let mut out = img.clone();
+    let (mut w, mut h) = (img.width, img.height);
+    for _ in 0..levels {
+        let mut sub = Image::new(w, h);
+        for y in 0..h {
+            sub.data[y * w..(y + 1) * w]
+                .copy_from_slice(&out.data[y * out.width..y * out.width + w]);
+        }
+        let packed = engine.forward(&sub);
+        for y in 0..h {
+            out.data[y * out.width..y * out.width + w]
+                .copy_from_slice(&packed.data[y * w..(y + 1) * w]);
+        }
+        w /= 2;
+        h /= 2;
+    }
+    out
+}
 
 /// Robust summary of one benchmark case.
 #[derive(Debug, Clone)]

@@ -37,6 +37,8 @@ struct Inner {
     batches: u64,
     batched_requests: u64,
     per_backend: [u64; 3],
+    pyramid_requests: u64,
+    max_levels: usize,
 }
 
 /// Aggregated service metrics (thread-safe).
@@ -57,6 +59,10 @@ pub struct Summary {
     pub p99_us: u64,
     pub max_us: u64,
     pub per_backend: [(&'static str, u64); 3],
+    /// Requests served as multi-level (levels >= 2) Mallat pyramids.
+    pub pyramid_requests: u64,
+    /// Deepest pyramid served so far (1 when only single-level).
+    pub max_levels: usize,
 }
 
 impl Metrics {
@@ -65,6 +71,18 @@ impl Metrics {
     }
 
     pub fn record(&self, latency: Duration, bytes: usize, backend: Backend) {
+        self.record_leveled(latency, bytes, backend, 1);
+    }
+
+    /// [`Metrics::record`] with the Mallat depth the request was served
+    /// at — one critical section for the whole request record.
+    pub fn record_leveled(
+        &self,
+        latency: Duration,
+        bytes: usize,
+        backend: Backend,
+        levels: usize,
+    ) {
         let mut g = self.inner.lock().unwrap();
         // bounded reservoir: keep the most recent 1M samples
         if g.latencies_us.len() >= 1_000_000 {
@@ -75,6 +93,10 @@ impl Metrics {
         g.requests += 1;
         let idx = backend as usize;
         g.per_backend[idx] += 1;
+        if levels >= 2 {
+            g.pyramid_requests += 1;
+        }
+        g.max_levels = g.max_levels.max(levels.max(1));
     }
 
     pub fn record_batch(&self, batch_size: usize) {
@@ -112,6 +134,8 @@ impl Metrics {
                 ("native", g.per_backend[1]),
                 ("native-parallel", g.per_backend[2]),
             ],
+            pyramid_requests: g.pyramid_requests,
+            max_levels: g.max_levels.max(1),
         }
     }
 }
@@ -148,5 +172,21 @@ mod tests {
         let s = Metrics::new().summary();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99_us, 0);
+        assert_eq!(s.pyramid_requests, 0);
+        assert_eq!(s.max_levels, 1);
+    }
+
+    #[test]
+    fn pyramid_depth_accounting() {
+        let m = Metrics::new();
+        let lat = Duration::from_micros(10);
+        m.record(lat, 64, Backend::Native); // single-level: not a pyramid
+        m.record_leveled(lat, 64, Backend::NativeParallel, 3);
+        m.record_leveled(lat, 64, Backend::NativeParallel, 5);
+        m.record_leveled(lat, 64, Backend::Native, 2);
+        let s = m.summary();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.pyramid_requests, 3);
+        assert_eq!(s.max_levels, 5);
     }
 }

@@ -5,7 +5,7 @@
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{Backend, Metrics};
 use super::worker::WorkerPool;
-use crate::dwt::executor::{default_threads, ParallelExecutor};
+use crate::dwt::executor::{default_threads, ParallelExecutor, PlanExecutor, ScalarExecutor};
 use crate::dwt::{Boundary, Engine, Image};
 use crate::polyphase::schemes::Scheme;
 use crate::polyphase::wavelets::Wavelet;
@@ -25,9 +25,12 @@ pub struct Request {
     pub scheme: Scheme,
     /// Inverse transform (packed quadrants in, image out).
     pub inverse: bool,
-    /// Mallat pyramid depth (1 = single level).  Multi-level requests
-    /// run on the native engine (or the matching AOT multilevel
-    /// artifact when one exists at the serve size).
+    /// Mallat pyramid depth (1 = single level).  Validated against the
+    /// image geometry before any work is scheduled; multi-level
+    /// requests lower to a `PyramidPlan` and run on the per-request
+    /// executor choice (band-parallel at/above `parallel_threshold`,
+    /// scalar below, bit-exact either way).  The PJRT artifact route
+    /// serves `levels == 1` only.
     pub levels: usize,
     /// Boundary handling (default [`Boundary::Periodic`]).  Symmetric
     /// requests are served by the native engines — the AOT artifacts
@@ -282,47 +285,62 @@ impl Coordinator {
     }
 
     /// The native fallback paths.  Every request executes the engine's
-    /// cached compiled plans; what varies is the *executor*: single-level
-    /// requests at/above `parallel_threshold` pixels run on the shared
-    /// band-parallel executor (bit-exact with scalar, so routing is
-    /// invisible to clients), everything else on the scalar path.  The
-    /// old crop-and-stitch tile fan-out is gone — band execution needs
-    /// no halo'd copies and no stitching.
+    /// cached compiled plans; what varies is the *executor*: requests
+    /// at/above `parallel_threshold` pixels — single-level and
+    /// multi-level alike — run on the shared band-parallel executor
+    /// (bit-exact with scalar, so routing is invisible to clients),
+    /// everything else on the scalar path.  Multi-level requests lower
+    /// to a `PyramidPlan` and execute in place on strided level views;
+    /// levels that shrink under `parallel_threshold` gracefully fall
+    /// back to the scalar path inside the same run (the plan's
+    /// `scalar_below`).  The old crop-and-stitch tile fan-out is gone —
+    /// band execution needs no halo'd copies and no stitching.
     fn native_async(&self, wavelet: Wavelet, request: Request, respond: Respond, start: Instant) {
         let engine = self.engine(request.scheme, &wavelet, request.boundary);
         let metrics = self.metrics.clone();
-        let use_parallel = request.levels <= 1
-            && request.image.width * request.image.height >= self.cfg.parallel_threshold;
+        let threshold = self.cfg.parallel_threshold;
+        let use_parallel = request.image.width * request.image.height >= threshold;
         let parallel = use_parallel.then(|| self.parallel_executor());
         let inverse = request.inverse;
         let levels = request.levels.max(1);
         let img = request.image;
         self.pool.submit(move || {
-            let (result, backend) = match (&parallel, inverse, levels) {
-                (Some(px), false, 1) => {
-                    (engine.forward_with(&img, px.as_ref()), Backend::NativeParallel)
-                }
-                (Some(px), true, 1) => {
-                    (engine.inverse_with(&img, px.as_ref()), Backend::NativeParallel)
-                }
-                (None, false, 1) => (engine.forward(&img), Backend::Native),
-                (None, true, 1) => (engine.inverse(&img), Backend::Native),
-                (_, false, l) => (
-                    crate::dwt::multilevel::forward(&engine, &img, l),
-                    Backend::Native,
-                ),
-                (_, true, l) => (
-                    crate::dwt::multilevel::inverse(&engine, &img, l),
-                    Backend::Native,
-                ),
+            let backend = if parallel.is_some() {
+                Backend::NativeParallel
+            } else {
+                Backend::Native
             };
-            let latency = start.elapsed();
-            metrics.record(latency, result.data.len() * 4, backend);
-            let _ = respond.send(Ok(Response {
-                image: result,
-                backend,
-                latency,
-            }));
+            let exec: &dyn PlanExecutor = match &parallel {
+                Some(px) => px.as_ref(),
+                None => &ScalarExecutor,
+            };
+            let result = if levels <= 1 {
+                if inverse {
+                    Ok(engine.inverse_with(&img, exec))
+                } else {
+                    Ok(engine.forward_with(&img, exec))
+                }
+            } else {
+                engine
+                    .pyramid_plan(img.width, img.height, levels, inverse)
+                    .map(|pyr| exec.run_pyramid(&pyr.with_scalar_below(threshold), &img))
+            };
+            match result {
+                Ok(result) => {
+                    let latency = start.elapsed();
+                    metrics.record_leveled(latency, result.data.len() * 4, backend, levels);
+                    let _ = respond.send(Ok(Response {
+                        image: result,
+                        backend,
+                        latency,
+                    }));
+                }
+                // geometry is validated in submit(); this is a guard
+                // against drift between validate() and PyramidPlan
+                Err(e) => {
+                    let _ = respond.send(Err(e));
+                }
+            }
         });
     }
 

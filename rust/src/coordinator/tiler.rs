@@ -108,6 +108,22 @@ impl TileGrid {
         let reach = t.max(b).max(l).max(r).max(0) as usize;
         reach * 2 // component samples -> image pixels; always even
     }
+
+    /// Halo wide enough for an L-level Mallat pyramid of the plan: the
+    /// per-level reach [`TileGrid::halo_for`] acts on a grid that
+    /// coarsens by 2 each level, so one level-`l` pixel of context
+    /// costs `2^l` level-0 pixels — the per-level geometric series
+    /// `sum_{l<L} halo * 2^l = halo * (2^L - 1)`.  This is the context
+    /// an overlap-save distribution of a deep pyramid must fetch per
+    /// tile (and why tiling deep pyramids is traffic-expensive compared
+    /// to the band-parallel in-place path).
+    pub fn halo_for_levels(plan: &KernelPlan, levels: usize) -> usize {
+        // clamp below the shift width (a usize-sized image is long
+        // exhausted by then) and saturate the product instead of
+        // wrapping on absurd depths
+        let levels = levels.clamp(1, usize::BITS as usize - 1) as u32;
+        Self::halo_for(plan).saturating_mul((1usize << levels) - 1)
+    }
 }
 
 /// Compatibility layer for the pre-executor API: a "tiled" forward
@@ -231,5 +247,23 @@ mod tests {
     #[should_panic(expected = "must divide")]
     fn rejects_nondividing_tile() {
         let _ = TileGrid::new(48, 48, 32, 4);
+    }
+
+    #[test]
+    fn multilevel_halo_follows_the_geometric_series() {
+        let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
+        let plan = engine.plan(PlanVariant::Optimized);
+        let h1 = TileGrid::halo_for_levels(plan, 1);
+        assert_eq!(h1, TileGrid::halo_for(plan));
+        // halo(L) = halo * (2^L - 1): each deeper level doubles the
+        // pixel cost of its context
+        assert_eq!(TileGrid::halo_for_levels(plan, 3), h1 * 7);
+        assert_eq!(TileGrid::halo_for_levels(plan, 5), h1 * 31);
+        // Haar reaches nothing at any depth
+        let haar = Engine::new(Scheme::SepLifting, Wavelet::haar());
+        assert_eq!(
+            TileGrid::halo_for_levels(haar.plan(PlanVariant::Optimized), 5),
+            0
+        );
     }
 }

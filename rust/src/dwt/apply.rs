@@ -17,7 +17,7 @@ use crate::polyphase::{Poly, PolyMatrix};
 
 /// Execute one fused stencil kernel: `out` is fully overwritten.
 pub fn run_stencil(st: &Stencil, inp: &Planes, out: &mut Planes, boundary: Boundary) {
-    debug_assert!(inp.w2 == out.w2 && inp.h2 == out.h2);
+    debug_assert!(inp.w2 == out.w2 && inp.h2 == out.h2 && inp.stride == out.stride);
     let h2 = inp.h2;
     let [o0, o1, o2, o3] = &mut out.p;
     let mut rows: [&mut [f32]; 4] = [
@@ -30,11 +30,13 @@ pub fn run_stencil(st: &Stencil, inp: &Planes, out: &mut Planes, boundary: Bound
 }
 
 /// [`run_stencil`] restricted to output rows `y0..y1`: `out[i]` is the
-/// band of plane `i` covering exactly those rows (`(y1 - y0) * w2`
-/// samples).  Reads still range over the whole input planes — the
-/// vertical shifts of a fused stencil are the halo a band-parallel
-/// executor owes this kernel.  The full-plane [`run_stencil`] delegates
-/// here, so banded and monolithic execution are bit-exact.
+/// band of plane `i` covering exactly those rows (`(y1 - y0) * stride`
+/// samples, laid out at the *input's* row stride — `inp.stride == w2`
+/// for plain planes, the level-0 stride for pyramid level views).
+/// Reads still range over the whole input planes — the vertical shifts
+/// of a fused stencil are the halo a band-parallel executor owes this
+/// kernel.  The full-plane [`run_stencil`] delegates here, so banded
+/// and monolithic execution are bit-exact.
 pub fn run_stencil_rows(
     st: &Stencil,
     inp: &Planes,
@@ -64,7 +66,7 @@ fn run_stencil_periodic(
     y0: usize,
     y1: usize,
 ) {
-    let (w2, h2) = (inp.w2, inp.h2);
+    let (w2, h2, stride) = (inp.w2, inp.h2, inp.stride);
     for i in 0..4 {
         // resolve the plan's raw offsets against this plane size
         let terms: Vec<(usize, usize, usize, f32)> = st.rows[i]
@@ -79,13 +81,16 @@ fn run_stencil_periodic(
             })
             .collect();
         let plane = &mut *out[i];
-        plane.fill(0.0);
         for y in y0..y1 {
-            let dst_row = (y - y0) * w2;
+            let dst_row = (y - y0) * stride;
             let dst = &mut plane[dst_row..dst_row + w2];
+            // zero only the active span: a pyramid level view's buffer
+            // keeps level-0 geometry, and deep levels must not pay a
+            // full-buffer memset per stencil step
+            dst.fill(0.0);
             for &(j, shift_col, shift_row, c) in &terms {
                 let sy = (y + shift_row) % h2;
-                let src = &inp.p[j][sy * w2..(sy + 1) * w2];
+                let src = &inp.p[j][sy * stride..sy * stride + w2];
                 if shift_col == 0 {
                     for x in 0..w2 {
                         dst[x] += c * src[x];
@@ -117,7 +122,7 @@ fn run_stencil_symmetric(
     y0: usize,
     y1: usize,
 ) {
-    let (w2, h2) = (inp.w2, inp.h2);
+    let (w2, h2, stride) = (inp.w2, inp.h2, inp.stride);
     for i in 0..4 {
         // (src plane, x fold table, y fold table per band row, coeff)
         let terms: Vec<(usize, Vec<usize>, Vec<usize>, f32)> = st.rows[i]
@@ -135,13 +140,13 @@ fn run_stencil_symmetric(
             })
             .collect();
         let plane = &mut *out[i];
-        plane.fill(0.0);
         for y in y0..y1 {
-            let dst_row = (y - y0) * w2;
+            let dst_row = (y - y0) * stride;
             let drow = &mut plane[dst_row..dst_row + w2];
+            drow.fill(0.0);
             for (j, xi, yi, c) in &terms {
                 let sy = yi[y - y0];
-                let srow = &inp.p[*j][sy * w2..(sy + 1) * w2];
+                let srow = &inp.p[*j][sy * stride..sy * stride + w2];
                 for x in 0..w2 {
                     drow[x] += *c * srow[xi[x]];
                 }
@@ -200,6 +205,7 @@ pub fn apply_poly(p: &Poly, inp: &[f32], w2: usize, h2: usize) -> Vec<f32> {
 /// terms — sweeping the whole plane once per term thrashes the cache).
 pub fn apply_step(mat: &PolyMatrix, planes: &Planes) -> Planes {
     let (w2, h2) = (planes.w2, planes.h2);
+    let sin = planes.stride;
     let mut out = Planes::new(w2, h2);
     for i in 0..4 {
         // flatten the row's polynomials into a (j, km, kn, c) term list
@@ -216,7 +222,7 @@ pub fn apply_step(mat: &PolyMatrix, planes: &Planes) -> Planes {
             let dst = &mut acc_plane[y * w2..(y + 1) * w2];
             for &(j, shift_col, shift_row, c) in &terms {
                 let sy = (y + shift_row) % h2;
-                let src = &planes.p[j][sy * w2..(sy + 1) * w2];
+                let src = &planes.p[j][sy * sin..sy * sin + w2];
                 if shift_col == 0 {
                     for x in 0..w2 {
                         dst[x] += c * src[x];

@@ -10,6 +10,8 @@ use super::executor::{PlanExecutor, ScalarExecutor};
 use super::lifting::Boundary;
 use super::plan::KernelPlan;
 use super::planes::{Image, Planes};
+use super::pyramid::PyramidPlan;
+use anyhow::Result;
 use crate::polyphase::schemes::{self, Scheme};
 use crate::polyphase::wavelets::Wavelet;
 use crate::polyphase::PolyMatrix;
@@ -161,6 +163,59 @@ impl Engine {
         let mut p = planes.clone();
         exec.execute(&self.inverse_plan, &mut p);
         p.merge()
+    }
+
+    /// Lower an L-level Mallat request onto this engine's cached plans:
+    /// the forward direction runs the optimized plan per level, the
+    /// inverse direction the inverse plan.  Errors on geometry the
+    /// pyramid cannot represent (sides not divisible by `2^levels`).
+    pub fn pyramid_plan(
+        &self,
+        width: usize,
+        height: usize,
+        levels: usize,
+        inverse: bool,
+    ) -> Result<PyramidPlan<'_>> {
+        if inverse {
+            PyramidPlan::inverse(&self.inverse_plan, width, height, levels)
+        } else {
+            PyramidPlan::forward(&self.optimized_plan, width, height, levels)
+        }
+    }
+
+    /// Forward L-level Mallat pyramid -> packed layout, scalar backend.
+    /// Executes in place on strided views of one workspace — no
+    /// per-level crops, clones, or pastes (see [`crate::dwt::pyramid`]).
+    pub fn forward_multi(&self, img: &Image, levels: usize) -> Result<Image> {
+        self.forward_multi_with(img, levels, &ScalarExecutor)
+    }
+
+    /// [`Engine::forward_multi`] through an explicit executor backend
+    /// (bands re-partitioned per level; bit-exact across backends).
+    pub fn forward_multi_with(
+        &self,
+        img: &Image,
+        levels: usize,
+        exec: &dyn PlanExecutor,
+    ) -> Result<Image> {
+        let pyr = self.pyramid_plan(img.width, img.height, levels, false)?;
+        Ok(exec.run_pyramid(&pyr, img))
+    }
+
+    /// Inverse of [`Engine::forward_multi`].
+    pub fn inverse_multi(&self, packed: &Image, levels: usize) -> Result<Image> {
+        self.inverse_multi_with(packed, levels, &ScalarExecutor)
+    }
+
+    /// [`Engine::inverse_multi`] through an explicit executor backend.
+    pub fn inverse_multi_with(
+        &self,
+        packed: &Image,
+        levels: usize,
+        exec: &dyn PlanExecutor,
+    ) -> Result<Image> {
+        let pyr = self.pyramid_plan(packed.width, packed.height, levels, true)?;
+        Ok(exec.run_pyramid(&pyr, packed))
     }
 
     /// Arithmetic cost of one full image transform in multiply-accumulate

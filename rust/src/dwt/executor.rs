@@ -29,7 +29,8 @@
 use super::apply;
 use super::lifting::{self, Axis, Boundary};
 use super::plan::{ensure_scratch, plane_is_odd, Kernel, KernelPlan, Stencil};
-use super::planes::Planes;
+use super::planes::{Image, Planes};
+use super::pyramid::{self, PyramidPlan};
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -60,6 +61,18 @@ pub trait PlanExecutor: Send + Sync {
         let mut p = planes.clone();
         self.execute(plan, &mut p);
         p
+    }
+
+    /// Execute a multi-level [`PyramidPlan`] through this backend:
+    /// every level runs `execute_with` on a strided view of the shared
+    /// workspace (bands are re-partitioned per level inside the
+    /// backend), with levels under the plan's `scalar_below` threshold
+    /// gracefully falling back to the plain scalar path.  Forward plans
+    /// map image -> packed pyramid, inverse plans packed pyramid ->
+    /// image.  The default covers every backend; override only to
+    /// specialize the inter-level deinterleave/pack steps.
+    fn run_pyramid(&self, pyr: &PyramidPlan, img: &Image) -> Image {
+        pyramid::run(self, pyr, img)
     }
 }
 
@@ -330,7 +343,7 @@ impl ParallelExecutor {
         bands: &[Range<usize>],
         boundary: Boundary,
     ) {
-        let (w2, h2) = (planes.w2, planes.h2);
+        let (stride, w2, h2) = (planes.stride, planes.w2, planes.h2);
         let mut written = 0u8;
         for k in kernels {
             written |= written_planes(k);
@@ -340,7 +353,7 @@ impl ParallelExecutor {
         let mut banded: [Vec<&mut [f32]>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
         for (i, p) in [p0, p1, p2, p3].into_iter().enumerate() {
             if written & (1 << i) != 0 {
-                banded[i] = split_bands(p.as_mut_slice(), bands, w2);
+                banded[i] = split_bands(p.as_mut_slice(), bands, stride);
             } else {
                 shared[i] = Some(p.as_slice());
             }
@@ -350,7 +363,7 @@ impl ParallelExecutor {
         for range in bands.iter().cloned() {
             let mine: [Option<&mut [f32]>; 4] = std::array::from_fn(|i| iters[i].next());
             jobs.push(Box::new(move || {
-                run_band_kernels(kernels, mine, shared, range, w2, h2, boundary);
+                run_band_kernels(kernels, mine, shared, range, stride, w2, h2, boundary);
             }));
         }
         self.pool.scope_run(jobs);
@@ -366,12 +379,12 @@ impl ParallelExecutor {
         bands: &[Range<usize>],
         boundary: Boundary,
     ) {
-        let w2 = inp.w2;
+        let stride = inp.stride;
         let [o0, o1, o2, o3] = &mut out.p;
-        let mut b0 = split_bands(o0.as_mut_slice(), bands, w2).into_iter();
-        let mut b1 = split_bands(o1.as_mut_slice(), bands, w2).into_iter();
-        let mut b2 = split_bands(o2.as_mut_slice(), bands, w2).into_iter();
-        let mut b3 = split_bands(o3.as_mut_slice(), bands, w2).into_iter();
+        let mut b0 = split_bands(o0.as_mut_slice(), bands, stride).into_iter();
+        let mut b1 = split_bands(o1.as_mut_slice(), bands, stride).into_iter();
+        let mut b2 = split_bands(o2.as_mut_slice(), bands, stride).into_iter();
+        let mut b3 = split_bands(o3.as_mut_slice(), bands, stride).into_iter();
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bands.len());
         for range in bands.iter().cloned() {
             let chunk = [
@@ -424,15 +437,20 @@ impl PlanExecutor for ParallelExecutor {
     }
 }
 
-/// Cut one plane into per-band mutable row chunks.
-fn split_bands<'a>(mut p: &'a mut [f32], bands: &[Range<usize>], w2: usize) -> Vec<&'a mut [f32]> {
+/// Cut one plane into per-band mutable row chunks (`stride` samples per
+/// row).  A pyramid level view's buffer extends past the active region;
+/// the tail after the last band simply stays unsplit.
+fn split_bands<'a>(
+    mut p: &'a mut [f32],
+    bands: &[Range<usize>],
+    stride: usize,
+) -> Vec<&'a mut [f32]> {
     let mut out = Vec::with_capacity(bands.len());
     for b in bands {
-        let (head, tail) = p.split_at_mut((b.end - b.start) * w2);
+        let (head, tail) = p.split_at_mut((b.end - b.start) * stride);
         out.push(head);
         p = tail;
     }
-    debug_assert!(p.is_empty());
     out
 }
 
@@ -440,11 +458,13 @@ fn split_bands<'a>(mut p: &'a mut [f32], bands: &[Range<usize>], w2: usize) -> V
 /// order, each restricted to rows `rows` — horizontal kernels read the
 /// band's own rows, vertical kernels read the whole (phase-shared)
 /// source plane.
+#[allow(clippy::too_many_arguments)]
 fn run_band_kernels(
     kernels: &[Kernel],
     mut mine: [Option<&mut [f32]>; 4],
     shared: [Option<&[f32]>; 4],
     rows: Range<usize>,
+    stride: usize,
     w2: usize,
     h2: usize,
     boundary: Boundary,
@@ -462,19 +482,21 @@ fn run_band_kernels(
                 match axis {
                     Axis::Horizontal => {
                         if let Some(full) = shared[*src] {
-                            let srows = &full[rows.start * w2..rows.end * w2];
+                            let srows = &full[rows.start * stride..rows.end * stride];
                             let d = mine[*dst].as_deref_mut().expect("written plane is banded");
-                            lifting::lift_rows_h(d, srows, w2, n_rows, taps, boundary, src_odd);
+                            lifting::lift_rows_h(d, srows, stride, w2, n_rows, taps, boundary,
+                                                 src_odd);
                         } else {
                             let (d, s) = two_chunks(&mut mine, *dst, *src);
-                            lifting::lift_rows_h(d, s, w2, n_rows, taps, boundary, src_odd);
+                            lifting::lift_rows_h(d, s, stride, w2, n_rows, taps, boundary,
+                                                 src_odd);
                         }
                     }
                     Axis::Vertical => {
                         let s = shared[*src].expect("vertical source is phase-shared");
                         let d = mine[*dst].as_deref_mut().expect("written plane is banded");
                         lifting::lift_rows_v(
-                            d, s, w2, h2, rows.start, rows.end, taps, boundary, src_odd,
+                            d, s, stride, w2, h2, rows.start, rows.end, taps, boundary, src_odd,
                         );
                     }
                 }
@@ -483,8 +505,10 @@ fn run_band_kernels(
                 for (c, &f) in factors.iter().enumerate() {
                     if (f - 1.0).abs() > 1e-12 {
                         let d = mine[c].as_deref_mut().expect("scaled plane is banded");
-                        for v in d.iter_mut() {
-                            *v *= f;
+                        for r in 0..n_rows {
+                            for v in &mut d[r * stride..r * stride + w2] {
+                                *v *= f;
+                            }
                         }
                     }
                 }

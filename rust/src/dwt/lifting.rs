@@ -68,12 +68,15 @@ pub fn lift_axis(
     taps: &[(i32, f64)],
     axis: Axis,
 ) {
-    lift_axis_b(dst, src, w2, h2, taps, axis, Boundary::Periodic, false)
+    lift_axis_b(dst, src, w2, w2, h2, taps, axis, Boundary::Periodic, false)
 }
 
 /// [`lift_axis`] with explicit boundary handling.  `src_is_odd` selects
 /// the symmetric fold variant (predict steps read the even component,
 /// update steps the odd one); ignored for periodic boundaries.
+///
+/// `stride` is the row stride of both planes (`stride == w2` for plain
+/// contiguous planes; a pyramid level view keeps the level-0 stride).
 ///
 /// Delegates to the row-range kernels [`lift_rows_h`] / [`lift_rows_v`]
 /// over the full plane — the band-parallel executor calls the same
@@ -83,6 +86,7 @@ pub fn lift_axis(
 pub fn lift_axis_b(
     dst: &mut [f32],
     src: &[f32],
+    stride: usize,
     w2: usize,
     h2: usize,
     taps: &[(i32, f64)],
@@ -91,18 +95,20 @@ pub fn lift_axis_b(
     src_is_odd: bool,
 ) {
     match axis {
-        Axis::Horizontal => lift_rows_h(dst, src, w2, h2, taps, boundary, src_is_odd),
-        Axis::Vertical => lift_rows_v(dst, src, w2, h2, 0, h2, taps, boundary, src_is_odd),
+        Axis::Horizontal => lift_rows_h(dst, src, stride, w2, h2, taps, boundary, src_is_odd),
+        Axis::Vertical => lift_rows_v(dst, src, stride, w2, h2, 0, h2, taps, boundary, src_is_odd),
     }
 }
 
 /// Horizontal lifting over `rows` rows: `dst` and `src` are slices of
-/// the *same* row range of their planes (`rows * w2` samples each).
+/// the *same* row range of their planes (row `r` of the range starting
+/// at sample `r * stride`, the first `w2` samples of it active).
 /// Horizontal steps are row-local, so a band hands in just its own rows.
 #[allow(clippy::too_many_arguments)]
 pub fn lift_rows_h(
     dst: &mut [f32],
     src: &[f32],
+    stride: usize,
     w2: usize,
     rows: usize,
     taps: &[(i32, f64)],
@@ -114,7 +120,7 @@ pub fn lift_rows_h(
     if w2 <= 2 * max_reach {
         // degenerate small plane: plain modular path
         for y in 0..rows {
-            let row = y * w2;
+            let row = y * stride;
             for x in 0..w2 {
                 let mut acc = 0.0f32;
                 for &(k, c) in taps {
@@ -133,7 +139,7 @@ pub fn lift_rows_h(
         _ => None,
     };
     for y in 0..rows {
-        let row = y * w2;
+        let row = y * stride;
         let s = &src[row..row + w2];
         let d = &mut dst[row..row + w2];
         // prologue + epilogue with wrap
@@ -173,13 +179,15 @@ pub fn lift_rows_h(
 }
 
 /// Vertical lifting restricted to rows `y0..y1`: `dst` holds only that
-/// band (`(y1 - y0) * w2` samples), `src` is the *full* source plane —
-/// a vertical step reaches across band edges, which is exactly the halo
-/// a band-parallel executor must have synchronized before calling this.
+/// band (`(y1 - y0) * stride` samples), `src` is the *full* source
+/// plane — a vertical step reaches across band edges, which is exactly
+/// the halo a band-parallel executor must have synchronized before
+/// calling this.
 #[allow(clippy::too_many_arguments)]
 pub fn lift_rows_v(
     dst: &mut [f32],
     src: &[f32],
+    stride: usize,
     w2: usize,
     h2: usize,
     y0: usize,
@@ -192,12 +200,12 @@ pub fn lift_rows_v(
     let max_reach = taps.iter().map(|&(k, _)| k.unsigned_abs() as usize).max().unwrap_or(0);
     if h2 <= 2 * max_reach {
         for y in y0..y1 {
-            let dst_row = (y - y0) * w2;
+            let dst_row = (y - y0) * stride;
             for x in 0..w2 {
                 let mut acc = 0.0f32;
                 for &(k, c) in taps {
                     let yy = fold(y as i64 + k as i64, h2 as i64);
-                    acc += c as f32 * src[yy * w2 + x];
+                    acc += c as f32 * src[yy * stride + x];
                 }
                 dst[dst_row + x] += acc;
             }
@@ -208,19 +216,19 @@ pub fn lift_rows_v(
     // MACs per tap (unit-stride inner loops)
     for y in y0..y1 {
         let wrap = y < max_reach || y >= h2 - max_reach;
-        let dst_row = (y - y0) * w2;
+        let dst_row = (y - y0) * stride;
         if wrap {
             for x in 0..w2 {
                 let mut acc = 0.0f32;
                 for &(k, c) in taps {
                     let yy = fold(y as i64 + k as i64, h2 as i64);
-                    acc += c as f32 * src[yy * w2 + x];
+                    acc += c as f32 * src[yy * stride + x];
                 }
                 dst[dst_row + x] += acc;
             }
         } else {
             for &(k, c) in taps {
-                let src_row = ((y as i64 + k as i64) as usize) * w2;
+                let src_row = ((y as i64 + k as i64) as usize) * stride;
                 let cf = c as f32;
                 let (s, d) = (&src[src_row..src_row + w2], &mut dst[dst_row..dst_row + w2]);
                 for x in 0..w2 {
@@ -238,43 +246,43 @@ pub fn forward_in_place(w: &Wavelet, planes: &mut Planes) {
 
 /// [`forward_in_place`] with explicit boundary handling.
 pub fn forward_in_place_b(w: &Wavelet, planes: &mut Planes, boundary: Boundary) {
-    let (w2, h2) = (planes.w2, planes.h2);
+    let (s, w2, h2) = (planes.stride, planes.w2, planes.h2);
     for pr in &w.pairs {
         // horizontal predict: oe += P(ee), oo += P(eo)
         {
             let (a, b) = planes.p.split_at_mut(1);
-            lift_axis_b(&mut b[0], &a[0], w2, h2, &pr.predict, Axis::Horizontal, boundary, false);
+            lift_axis_b(&mut b[0], &a[0], s, w2, h2, &pr.predict, Axis::Horizontal, boundary, false);
         }
         {
             let (a, b) = planes.p.split_at_mut(3);
-            lift_axis_b(&mut b[0], &a[2], w2, h2, &pr.predict, Axis::Horizontal, boundary, false);
+            lift_axis_b(&mut b[0], &a[2], s, w2, h2, &pr.predict, Axis::Horizontal, boundary, false);
         }
         // vertical predict: eo += P*(ee), oo += P*(oe)
         {
             let (a, b) = planes.p.split_at_mut(2);
-            lift_axis_b(&mut b[0], &a[0], w2, h2, &pr.predict, Axis::Vertical, boundary, false);
+            lift_axis_b(&mut b[0], &a[0], s, w2, h2, &pr.predict, Axis::Vertical, boundary, false);
         }
         {
             let (a, b) = planes.p.split_at_mut(3);
-            lift_axis_b(&mut b[0], &a[1], w2, h2, &pr.predict, Axis::Vertical, boundary, false);
+            lift_axis_b(&mut b[0], &a[1], s, w2, h2, &pr.predict, Axis::Vertical, boundary, false);
         }
         // horizontal update: ee += U(oe), eo += U(oo)
         {
             let (a, b) = planes.p.split_at_mut(1);
-            lift_axis_b(&mut a[0], &b[0], w2, h2, &pr.update, Axis::Horizontal, boundary, true);
+            lift_axis_b(&mut a[0], &b[0], s, w2, h2, &pr.update, Axis::Horizontal, boundary, true);
         }
         {
             let (a, b) = planes.p.split_at_mut(3);
-            lift_axis_b(&mut a[2], &b[0], w2, h2, &pr.update, Axis::Horizontal, boundary, true);
+            lift_axis_b(&mut a[2], &b[0], s, w2, h2, &pr.update, Axis::Horizontal, boundary, true);
         }
         // vertical update: ee += U*(eo), oe += U*(oo)
         {
             let (a, b) = planes.p.split_at_mut(2);
-            lift_axis_b(&mut a[0], &b[0], w2, h2, &pr.update, Axis::Vertical, boundary, true);
+            lift_axis_b(&mut a[0], &b[0], s, w2, h2, &pr.update, Axis::Vertical, boundary, true);
         }
         {
             let (a, b) = planes.p.split_at_mut(3);
-            lift_axis_b(&mut a[1], &b[0], w2, h2, &pr.update, Axis::Vertical, boundary, true);
+            lift_axis_b(&mut a[1], &b[0], s, w2, h2, &pr.update, Axis::Vertical, boundary, true);
         }
     }
     if w.zeta != 1.0 {
@@ -295,7 +303,7 @@ pub fn inverse_in_place(w: &Wavelet, planes: &mut Planes) {
 
 /// Exact inverse of [`forward_in_place_b`] (same boundary mode).
 pub fn inverse_in_place_b(w: &Wavelet, planes: &mut Planes, boundary: Boundary) {
-    let (w2, h2) = (planes.w2, planes.h2);
+    let (s, w2, h2) = (planes.stride, planes.w2, planes.h2);
     if w.zeta != 1.0 {
         let z2 = (w.zeta * w.zeta) as f32;
         for v in planes.p[0].iter_mut() {
@@ -314,38 +322,38 @@ pub fn inverse_in_place_b(w: &Wavelet, planes: &mut Planes, boundary: Boundary) 
         // undo vertical update
         {
             let (a, b) = planes.p.split_at_mut(3);
-            lift_axis_b(&mut a[1], &b[0], w2, h2, &nu, Axis::Vertical, boundary, true);
+            lift_axis_b(&mut a[1], &b[0], s, w2, h2, &nu, Axis::Vertical, boundary, true);
         }
         {
             let (a, b) = planes.p.split_at_mut(2);
-            lift_axis_b(&mut a[0], &b[0], w2, h2, &nu, Axis::Vertical, boundary, true);
+            lift_axis_b(&mut a[0], &b[0], s, w2, h2, &nu, Axis::Vertical, boundary, true);
         }
         // undo horizontal update
         {
             let (a, b) = planes.p.split_at_mut(3);
-            lift_axis_b(&mut a[2], &b[0], w2, h2, &nu, Axis::Horizontal, boundary, true);
+            lift_axis_b(&mut a[2], &b[0], s, w2, h2, &nu, Axis::Horizontal, boundary, true);
         }
         {
             let (a, b) = planes.p.split_at_mut(1);
-            lift_axis_b(&mut a[0], &b[0], w2, h2, &nu, Axis::Horizontal, boundary, true);
+            lift_axis_b(&mut a[0], &b[0], s, w2, h2, &nu, Axis::Horizontal, boundary, true);
         }
         // undo vertical predict
         {
             let (a, b) = planes.p.split_at_mut(3);
-            lift_axis_b(&mut b[0], &a[1], w2, h2, &np, Axis::Vertical, boundary, false);
+            lift_axis_b(&mut b[0], &a[1], s, w2, h2, &np, Axis::Vertical, boundary, false);
         }
         {
             let (a, b) = planes.p.split_at_mut(2);
-            lift_axis_b(&mut b[0], &a[0], w2, h2, &np, Axis::Vertical, boundary, false);
+            lift_axis_b(&mut b[0], &a[0], s, w2, h2, &np, Axis::Vertical, boundary, false);
         }
         // undo horizontal predict
         {
             let (a, b) = planes.p.split_at_mut(3);
-            lift_axis_b(&mut b[0], &a[2], w2, h2, &np, Axis::Horizontal, boundary, false);
+            lift_axis_b(&mut b[0], &a[2], s, w2, h2, &np, Axis::Horizontal, boundary, false);
         }
         {
             let (a, b) = planes.p.split_at_mut(1);
-            lift_axis_b(&mut b[0], &a[0], w2, h2, &np, Axis::Horizontal, boundary, false);
+            lift_axis_b(&mut b[0], &a[0], s, w2, h2, &np, Axis::Horizontal, boundary, false);
         }
     }
 }
@@ -491,9 +499,9 @@ mod boundary_tests {
         let odd: Vec<f32> = (0..n / 2).map(|k| sig[2 * k + 1]).collect();
         let mut e2 = even.clone();
         let mut o2 = odd.clone();
-        lift_axis_b(&mut o2, &e2, n / 2, 1, &pr.predict, Axis::Horizontal,
+        lift_axis_b(&mut o2, &e2, n / 2, n / 2, 1, &pr.predict, Axis::Horizontal,
                     Boundary::Symmetric, false);
-        lift_axis_b(&mut e2, &o2, n / 2, 1, &pr.update, Axis::Horizontal,
+        lift_axis_b(&mut e2, &o2, n / 2, n / 2, 1, &pr.update, Axis::Horizontal,
                     Boundary::Symmetric, true);
         for k in 0..n / 2 {
             assert!((o2[k] - d[k]).abs() < 1e-4, "d[{k}]: {} vs {}", o2[k], d[k]);

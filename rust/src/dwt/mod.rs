@@ -24,6 +24,13 @@
 //!   kept as reference.
 //! * [`engine`] — caches compiled forward/inverse/optimized plans per
 //!   (scheme, wavelet, boundary); `*_with` methods take any executor.
+//! * [`pyramid`] — multi-level (Mallat) transforms as first-class
+//!   plans: a [`PyramidPlan`] sweeps the compiled plan over the
+//!   shrinking level geometry, executing in place on strided views of
+//!   one workspace through any executor
+//!   ([`PlanExecutor::run_pyramid`]), with in-place polyphase
+//!   deinterleave between levels and details streamed straight into
+//!   the packed output.
 //!
 //! All paths compute identical coefficients; the test suite enforces it.
 
@@ -34,9 +41,11 @@ pub mod lifting;
 pub mod multilevel;
 pub mod plan;
 pub mod planes;
+pub mod pyramid;
 
 pub use engine::{Engine, PlanVariant};
 pub use executor::{default_threads, ParallelExecutor, PlanExecutor, ScalarExecutor};
 pub use lifting::{Axis, Boundary};
 pub use plan::KernelPlan;
 pub use planes::{Image, Planes};
+pub use pyramid::PyramidPlan;

@@ -1,39 +1,42 @@
-//! Multi-level (Mallat) pyramid composition on top of the scheme engine.
+//! Multi-level (Mallat) pyramid composition — compatibility shim.
+//!
+//! Since PR 3 the pyramid is a first-class citizen of the plan/executor
+//! stack: an L-level request lowers to a
+//! [`crate::dwt::pyramid::PyramidPlan`] and executes **in place** on
+//! strided views of one workspace through any
+//! [`crate::dwt::PlanExecutor`] — zero per-level clones, no
+//! crop/paste round-trips (this module used to clone the full image
+//! twice per level and hardwire the scalar engine).  The original
+//! `forward`/`inverse` signatures are preserved here as thin delegates
+//! to [`Engine::forward_multi`] / [`Engine::inverse_multi`]; new code
+//! should call those (or the `*_multi_with` executor variants)
+//! directly.
 
 use super::engine::Engine;
 use super::planes::Image;
 
 /// Forward L-level pyramid: the LL quadrant is recursively transformed
 /// in place, yielding the canonical JPEG-2000 packed layout.
+///
+/// Panics on geometry the pyramid cannot represent (sides not
+/// divisible by `2^levels`); use [`Engine::forward_multi`] for a
+/// `Result`.
 pub fn forward(engine: &Engine, img: &Image, levels: usize) -> Image {
-    assert!(levels >= 1, "levels must be >= 1");
-    assert!(
-        img.width % (1 << levels) == 0 && img.height % (1 << levels) == 0,
-        "image sides must be divisible by 2^levels"
-    );
-    let mut out = img.clone();
-    let (mut w, mut h) = (img.width, img.height);
-    for _ in 0..levels {
-        let sub = crop(&out, w, h);
-        let packed = engine.forward(&sub);
-        paste(&mut out, &packed, w, h);
-        w /= 2;
-        h /= 2;
-    }
-    out
+    engine
+        .forward_multi(img, levels)
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Inverse of [`forward`].
 pub fn inverse(engine: &Engine, packed: &Image, levels: usize) -> Image {
-    let mut out = packed.clone();
-    for lvl in (0..levels).rev() {
-        let w = packed.width >> lvl;
-        let h = packed.height >> lvl;
-        let sub = crop(&out, w, h);
-        let rec = engine.inverse(&sub);
-        paste(&mut out, &rec, w, h);
+    if levels == 0 {
+        // the pre-PR-3 loop ran zero iterations here; preserve the
+        // identity behaviour of the old signature
+        return packed.clone();
     }
-    out
+    engine
+        .inverse_multi(packed, levels)
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Per-level subband views of a packed pyramid: `(level, [LL-only at the
@@ -58,22 +61,6 @@ pub fn subband_energies(packed: &Image, levels: usize) -> Vec<[f64; 3]> {
         out.push(e);
     }
     out
-}
-
-fn crop(img: &Image, w: usize, h: usize) -> Image {
-    let mut out = Image::new(w, h);
-    for y in 0..h {
-        out.data[y * w..(y + 1) * w]
-            .copy_from_slice(&img.data[y * img.width..y * img.width + w]);
-    }
-    out
-}
-
-fn paste(dst: &mut Image, src: &Image, w: usize, h: usize) {
-    for y in 0..h {
-        let dst_row = y * dst.width;
-        dst.data[dst_row..dst_row + w].copy_from_slice(&src.data[y * w..(y + 1) * w]);
-    }
 }
 
 #[cfg(test)]
@@ -112,6 +99,15 @@ mod tests {
         for e3 in energies {
             assert!(e3.iter().sum::<f64>() > 0.0);
         }
+    }
+
+    #[test]
+    fn inverse_zero_levels_is_identity() {
+        // the pre-PR-3 inverse loop ran zero iterations at levels=0;
+        // the shim preserves that identity behaviour
+        let e = Engine::new(Scheme::SepLifting, Wavelet::cdf53());
+        let img = Image::synthetic(16, 16, 16);
+        assert_eq!(inverse(&e, &img, 0), img);
     }
 
     #[test]

@@ -192,16 +192,20 @@ impl KernelPlan {
                         axis,
                         taps,
                     } => {
-                        let (w2, h2) = (planes.w2, planes.h2);
+                        let (st, w2, h2) = (planes.stride, planes.w2, planes.h2);
                         let src_odd = plane_is_odd(*src, *axis);
                         let (d, s) = two_planes(&mut planes.p, *dst, *src);
-                        lifting::lift_axis_b(d, s, w2, h2, taps, *axis, self.boundary, src_odd);
+                        lifting::lift_axis_b(d, s, st, w2, h2, taps, *axis, self.boundary,
+                                             src_odd);
                     }
                     Kernel::Scale { factors } => {
+                        let (st, w2, h2) = (planes.stride, planes.w2, planes.h2);
                         for (c, &f) in factors.iter().enumerate() {
                             if (f - 1.0).abs() > 1e-12 {
-                                for v in planes.p[c].iter_mut() {
-                                    *v *= f;
+                                for y in 0..h2 {
+                                    for v in &mut planes.p[c][y * st..y * st + w2] {
+                                        *v *= f;
+                                    }
                                 }
                             }
                         }
@@ -225,16 +229,26 @@ impl KernelPlan {
 }
 
 /// Hand out the double-buffer scratch planes, (re)allocating when the
-/// slot is empty or retained from a differently-sized transform.  The
-/// one fit-or-reallocate policy shared by every executor backend, so
-/// they cannot drift.
+/// slot is empty or retained from an incompatible transform.  The one
+/// fit-or-reallocate policy shared by every executor backend, so they
+/// cannot drift.
+///
+/// Compatibility is judged on *buffer* geometry (stride, enough rows),
+/// not the active region: a pyramid run swaps live planes and scratch
+/// at every stencil step, and a later level must still be able to
+/// re-scope the region — so the scratch mirrors the live buffers'
+/// length ([`Planes::new_like`]) and only its active dims are updated.
 pub fn ensure_scratch<'a>(planes: &Planes, scratch: &'a mut Option<Planes>) -> &'a mut Planes {
     let fits = matches!(scratch.as_ref(),
-        Some(s) if s.w2 == planes.w2 && s.h2 == planes.h2);
+        Some(s) if s.stride == planes.stride
+            && (0..4).all(|c| s.p[c].len() >= planes.h2 * planes.stride));
     if !fits {
-        *scratch = Some(Planes::new(planes.w2, planes.h2));
+        *scratch = Some(Planes::new_like(planes));
     }
-    scratch.as_mut().expect("scratch just filled")
+    let s = scratch.as_mut().expect("scratch just filled");
+    s.w2 = planes.w2;
+    s.h2 = planes.h2;
+    s
 }
 
 /// Parity of a polyphase plane along an axis: planes `[ee, oe, eo, oo]`

@@ -92,12 +92,41 @@ impl Image {
 
 /// The four polyphase component planes `[ee, oe, eo, oo]`, each of shape
 /// `(h2, w2)`; first parity letter = horizontal axis.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Row `y` of a plane starts at sample `y * stride`; only the first
+/// `w2` samples of a row belong to the active region.  A plain plane
+/// has `stride == w2` (every constructor below produces that); a
+/// pyramid level view keeps the level-0 stride while shrinking
+/// `w2`/`h2`, so level `l` of a Mallat transform executes in place on
+/// the top-left corner of the same buffers (`crate::dwt::pyramid`).
+/// Samples in the `w2..stride` gap of a row are dead storage: kernels
+/// never read them and nothing downstream observes them — including
+/// `PartialEq`, which compares active regions only.
+#[derive(Debug, Clone)]
 pub struct Planes {
     pub w2: usize,
     pub h2: usize,
+    /// Row stride of the backing buffers in samples (`>= w2`).
+    pub stride: usize,
     /// `[ee, oe, eo, oo]` — after a transform: `[LL, HL, LH, HH]`.
     pub p: [Vec<f32>; 4],
+}
+
+impl PartialEq for Planes {
+    /// Active-region equality: stride and gap/tail samples are storage
+    /// details, not data — a pyramid level view equals a plain
+    /// container holding the same region (consistent with
+    /// [`Planes::max_abs_diff`], which also ignores dead storage).
+    fn eq(&self, other: &Self) -> bool {
+        self.w2 == other.w2
+            && self.h2 == other.h2
+            && (0..4).all(|c| {
+                (0..self.h2).all(|y| {
+                    self.p[c][y * self.stride..y * self.stride + self.w2]
+                        == other.p[c][y * other.stride..y * other.stride + other.w2]
+                })
+            })
+    }
 }
 
 impl Planes {
@@ -105,8 +134,40 @@ impl Planes {
         Self {
             w2,
             h2,
+            stride: w2,
             p: std::array::from_fn(|_| vec![0.0; w2 * h2]),
         }
+    }
+
+    /// A planes container shaped like `other`: same stride and active
+    /// region, and buffers at least as long.  The double-buffer scratch
+    /// for level views must keep the *buffer* geometry, not just the
+    /// active dims, so a later (larger) pyramid level can still grow
+    /// the region after a `mem::swap` with the scratch.
+    pub fn new_like(other: &Planes) -> Self {
+        Self {
+            w2: other.w2,
+            h2: other.h2,
+            stride: other.stride,
+            p: std::array::from_fn(|c| vec![0.0; other.p[c].len()]),
+        }
+    }
+
+    /// Re-scope the active region to the `w2 x h2` top-left corner,
+    /// keeping the stride and the backing buffers.  The pyramid runner
+    /// steps through its levels with this — no reallocation, no copy.
+    pub fn set_region(&mut self, w2: usize, h2: usize) {
+        assert!(
+            w2 >= 1 && w2 <= self.stride,
+            "region width {w2} outside stride {}",
+            self.stride
+        );
+        assert!(
+            self.p.iter().all(|p| h2 * self.stride <= p.len()),
+            "region height {h2} exceeds the backing buffers"
+        );
+        self.w2 = w2;
+        self.h2 = h2;
     }
 
     /// Polyphase split of an even-sized image.
@@ -139,13 +200,14 @@ impl Planes {
         out
     }
 
-    /// Interleaving merge (exact inverse of [`Planes::split`]).
+    /// Interleaving merge of the active region (exact inverse of
+    /// [`Planes::split`] for plain planes).
     pub fn merge(&self) -> Image {
-        let (w2, h2) = (self.w2, self.h2);
+        let (w2, h2, s) = (self.w2, self.h2, self.stride);
         let w = w2 * 2;
         let mut img = Image::new(w, h2 * 2);
         for y in 0..h2 {
-            let r = y * w2..(y + 1) * w2;
+            let r = y * s..y * s + w2;
             let (ee, oe, eo, oo) = (
                 &self.p[0][r.clone()],
                 &self.p[1][r.clone()],
@@ -166,11 +228,11 @@ impl Planes {
     /// Pack subbands in the canonical quadrant layout
     /// `[[LL, HL], [LH, HH]]` (the layout the AOT artifacts emit).
     pub fn to_packed(&self) -> Image {
-        let (w2, h2) = (self.w2, self.h2);
+        let (w2, h2, s) = (self.w2, self.h2, self.stride);
         let w = w2 * 2;
         let mut img = Image::new(w, h2 * 2);
         for y in 0..h2 {
-            let r = y * w2..(y + 1) * w2;
+            let r = y * s..y * s + w2;
             img.data[y * w..y * w + w2].copy_from_slice(&self.p[0][r.clone()]);
             img.data[y * w + w2..(y + 1) * w].copy_from_slice(&self.p[1][r.clone()]);
             let by = y + h2;
@@ -197,10 +259,15 @@ impl Planes {
     }
 
     pub fn max_abs_diff(&self, other: &Planes) -> f32 {
+        debug_assert!(self.w2 == other.w2 && self.h2 == other.h2);
         let mut worst = 0.0f32;
         for c in 0..4 {
-            for (a, b) in self.p[c].iter().zip(&other.p[c]) {
-                worst = worst.max((a - b).abs());
+            for y in 0..self.h2 {
+                let a = &self.p[c][y * self.stride..y * self.stride + self.w2];
+                let b = &other.p[c][y * other.stride..y * other.stride + other.w2];
+                for (x, y) in a.iter().zip(b) {
+                    worst = worst.max((x - y).abs());
+                }
             }
         }
         worst

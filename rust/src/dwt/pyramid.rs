@@ -1,0 +1,542 @@
+//! Pyramid-native multi-level (Mallat) transforms: an L-level request
+//! lowers to a [`PyramidPlan`] — the engine's compiled [`KernelPlan`]
+//! swept over the shrinking level geometry, plus the polyphase
+//! deinterleave/pack steps between levels — and executes through *any*
+//! [`PlanExecutor`] via [`PlanExecutor::run_pyramid`].
+//!
+//! The execution is in place on strided plane views: one `Planes`
+//! workspace is allocated per run, and level `l` re-scopes its active
+//! region to the top-left `w/2^(l+1) x h/2^(l+1)` corner of the same
+//! buffers ([`Planes::set_region`]), keeping the level-0 row stride.
+//! Between levels the LL plane is polyphase-deinterleaved *within the
+//! workspace* ([`deinterleave_level`] / [`interleave_level`] below —
+//! the classic in-place polyphase gather/scatter, safe by traversal
+//! order), and finished detail subbands stream straight into the packed
+//! output.  There are no per-level `crop`/`paste` round-trips and no
+//! full-image intermediate clones — the pre-PR-3 `dwt::multilevel`
+//! cloned the image twice per level and hardwired the scalar engine.
+//!
+//! Band parallelism composes per level: the executor re-partitions its
+//! bands for every level's geometry (that happens naturally inside
+//! `execute_with`), and [`PyramidPlan::scalar_below`] drops levels too
+//! small to amortize a fan-out onto the plain scalar path.  Scalar and
+//! band-parallel pyramid execution are bit-exact, level by level, for
+//! the same reason single-level execution is: both drive the same
+//! row-range kernel bodies.
+
+use super::executor::PlanExecutor;
+use super::plan::KernelPlan;
+use super::planes::{Image, Planes};
+use anyhow::{ensure, Result};
+
+/// Geometry of one pyramid level: the level transforms the top-left
+/// `2*w2 x 2*h2` region of the packed buffer on planes of `w2 x h2`
+/// component samples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LevelGeom {
+    pub level: usize,
+    /// Plane width at this level (`image_w >> (level + 1)`).
+    pub w2: usize,
+    /// Plane height at this level (`image_h >> (level + 1)`).
+    pub h2: usize,
+}
+
+impl LevelGeom {
+    /// Pixel count of the region this level transforms.
+    pub fn pixels(&self) -> usize {
+        4 * self.w2 * self.h2
+    }
+}
+
+/// A compiled L-level Mallat transform: per-level [`KernelPlan`]
+/// executions (the plan is geometry-free, so one compiled plan serves
+/// every level) with their deinterleave/pack steps and barrier-group
+/// metadata, runnable by any [`PlanExecutor`].
+#[derive(Debug, Clone)]
+pub struct PyramidPlan<'p> {
+    plan: &'p KernelPlan,
+    levels: Vec<LevelGeom>,
+    width: usize,
+    height: usize,
+    inverse: bool,
+    /// Region pixel count below which a level executes on the plain
+    /// scalar path even under a parallel executor — deep levels shrink
+    /// geometrically and a thread fan-out quickly costs more than the
+    /// work.  `0` (the default) never falls back; the coordinator sets
+    /// its `parallel_threshold` here.  Has no effect on the computed
+    /// coefficients: executors are bit-exact with each other.
+    pub scalar_below: usize,
+}
+
+impl<'p> PyramidPlan<'p> {
+    /// Lower an L-level forward request onto `plan` (the engine's
+    /// forward/optimized plan).  Errors on geometry the pyramid cannot
+    /// represent.
+    pub fn forward(plan: &'p KernelPlan, width: usize, height: usize, levels: usize) -> Result<Self> {
+        Self::new(plan, width, height, levels, false)
+    }
+
+    /// Lower an L-level inverse request onto `plan` (the engine's
+    /// inverse plan).
+    pub fn inverse(plan: &'p KernelPlan, width: usize, height: usize, levels: usize) -> Result<Self> {
+        Self::new(plan, width, height, levels, true)
+    }
+
+    fn new(
+        plan: &'p KernelPlan,
+        width: usize,
+        height: usize,
+        levels: usize,
+        inverse: bool,
+    ) -> Result<Self> {
+        ensure!(levels >= 1, "levels must be >= 1, got {levels}");
+        ensure!(
+            levels < usize::BITS as usize,
+            "levels {levels} out of range"
+        );
+        let div = 1usize << levels;
+        ensure!(
+            width > 0 && height > 0 && width % div == 0 && height % div == 0,
+            "image sides must be divisible by 2^levels for a {levels}-level pyramid \
+             (got {width}x{height})"
+        );
+        let levels = (0..levels)
+            .map(|l| LevelGeom {
+                level: l,
+                w2: width >> (l + 1),
+                h2: height >> (l + 1),
+            })
+            .collect();
+        Ok(Self {
+            plan,
+            levels,
+            width,
+            height,
+            inverse,
+            scalar_below: 0,
+        })
+    }
+
+    /// Builder-style override of [`PyramidPlan::scalar_below`].
+    pub fn with_scalar_below(mut self, pixels: usize) -> Self {
+        self.scalar_below = pixels;
+        self
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Per-level geometry, shallowest first.
+    pub fn levels(&self) -> &[LevelGeom] {
+        &self.levels
+    }
+
+    pub fn plan(&self) -> &KernelPlan {
+        self.plan
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn is_inverse(&self) -> bool {
+        self.inverse
+    }
+
+    /// Barrier-separated steps across the whole pyramid: every level
+    /// runs the full barrier chain of the single-level plan.
+    pub fn n_barriers(&self) -> usize {
+        self.levels.len() * self.plan.n_barriers()
+    }
+
+    /// Multiply-accumulates per level-0 input pixel for the whole
+    /// pyramid: the single-level cost times the geometric work series
+    /// `sum_{l<L} 4^-l` — the same accounting the gpusim cost model
+    /// applies per level.
+    pub fn macs_per_pixel(&self) -> f64 {
+        self.plan.macs_per_pixel() * work_series(self.n_levels())
+    }
+
+    /// True when the given level should run on the plain scalar path
+    /// under this plan's [`PyramidPlan::scalar_below`] threshold.
+    pub fn level_runs_scalar(&self, lv: &LevelGeom) -> bool {
+        self.scalar_below > 0 && lv.pixels() < self.scalar_below
+    }
+}
+
+/// Geometric work series of an L-level pyramid, `sum_{l<L} 4^-l`
+/// (approaches 4/3): the total per-pixel work of a pyramid relative to
+/// its level-0 transform.
+pub fn work_series(levels: usize) -> f64 {
+    (0..levels).map(|l| 0.25f64.powi(l as i32)).sum()
+}
+
+/// Execute a pyramid plan through an executor.  Forward plans take the
+/// input image and return the packed pyramid; inverse plans take the
+/// packed pyramid and return the reconstructed image.
+pub fn run<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, img: &Image) -> Image {
+    assert!(
+        img.width == pyr.width && img.height == pyr.height,
+        "pyramid compiled for {}x{}, got {}x{}",
+        pyr.width,
+        pyr.height,
+        img.width,
+        img.height
+    );
+    if pyr.inverse {
+        run_inverse(exec, pyr, img)
+    } else {
+        run_forward(exec, pyr, img)
+    }
+}
+
+/// One level's plan execution: through `exec`, unless the level is
+/// below the scalar fall-back threshold.
+fn level_exec<E: PlanExecutor + ?Sized>(
+    exec: &E,
+    pyr: &PyramidPlan,
+    lv: &LevelGeom,
+    ws: &mut Planes,
+    scratch: &mut Option<Planes>,
+) {
+    if pyr.level_runs_scalar(lv) {
+        pyr.plan.execute_with(ws, scratch);
+    } else {
+        exec.execute_with(pyr.plan, ws, scratch);
+    }
+}
+
+fn run_forward<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, img: &Image) -> Image {
+    let mut out = Image::new(pyr.width, pyr.height);
+    // the one workspace of the whole run; levels > 0 re-scope its
+    // region and deinterleave within it
+    let mut ws = Planes::split(img);
+    let mut scratch: Option<Planes> = None;
+    for lv in pyr.levels() {
+        if lv.level > 0 {
+            deinterleave_level(&mut ws, lv.w2, lv.h2);
+        }
+        ws.set_region(lv.w2, lv.h2);
+        level_exec(exec, pyr, lv, &mut ws, &mut scratch);
+        evacuate_details(&ws, &mut out);
+    }
+    store_ll(&ws, &mut out);
+    out
+}
+
+fn run_inverse<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, packed: &Image) -> Image {
+    let (w2, h2) = (pyr.width / 2, pyr.height / 2);
+    let mut ws = Planes::new(w2, h2);
+    let mut scratch: Option<Planes> = None;
+    let deepest = *pyr.levels().last().expect("levels >= 1");
+    ws.set_region(deepest.w2, deepest.h2);
+    load_ll(&mut ws, packed);
+    for lv in pyr.levels().iter().rev() {
+        ws.set_region(lv.w2, lv.h2);
+        load_details(&mut ws, packed);
+        level_exec(exec, pyr, lv, &mut ws, &mut scratch);
+        if lv.level > 0 {
+            // the reconstructed region becomes the next level's LL
+            interleave_level(&mut ws, lv.w2, lv.h2);
+        }
+    }
+    // level 0 reconstructed the full polyphase components
+    ws.merge()
+}
+
+// ------------------------------------------------- inter-level steps
+//
+// All of these are strided row copies or in-place permutations on the
+// workspace; none allocates.
+
+/// In-place polyphase deinterleave of the current LL: the `2w x 2h`
+/// top-left region of `p[0]` splits into the `w x h` corners of all
+/// four planes.  The `ee` component compacts within `p[0]` itself;
+/// ascending traversal makes that safe — output row `y` reads region
+/// rows `2y`/`2y+1`, which lie at or below every row written so far,
+/// and within row 0 the write index never passes the read index.
+fn deinterleave_level(ws: &mut Planes, w: usize, h: usize) {
+    let s = ws.stride;
+    let [p0, p1, p2, p3] = &mut ws.p;
+    for y in 0..h {
+        let even = 2 * y * s;
+        let odd = (2 * y + 1) * s;
+        let dst = y * s;
+        // odd-column / odd-row components first: they read rows the ee
+        // compaction below may overwrite at this or a later step
+        for x in 0..w {
+            p1[dst + x] = p0[even + 2 * x + 1];
+        }
+        for x in 0..w {
+            p2[dst + x] = p0[odd + 2 * x];
+            p3[dst + x] = p0[odd + 2 * x + 1];
+        }
+        for x in 0..w {
+            p0[dst + x] = p0[even + 2 * x];
+        }
+    }
+}
+
+/// Exact inverse of [`deinterleave_level`]: the four `w x h` corners
+/// interleave back into the `2w x 2h` region of `p[0]`.  Descending
+/// traversal (rows outer, columns inner) keeps every not-yet-read `ee`
+/// corner sample ahead of the write frontier.
+fn interleave_level(ws: &mut Planes, w: usize, h: usize) {
+    let s = ws.stride;
+    let [p0, p1, p2, p3] = &mut ws.p;
+    for y in (0..h).rev() {
+        let even = 2 * y * s;
+        let odd = (2 * y + 1) * s;
+        let src = y * s;
+        for x in 0..w {
+            p0[odd + 2 * x] = p2[src + x];
+            p0[odd + 2 * x + 1] = p3[src + x];
+        }
+        for x in (0..w).rev() {
+            p0[even + 2 * x + 1] = p1[src + x];
+            p0[even + 2 * x] = p0[src + x];
+        }
+    }
+}
+
+/// Stream the finished detail subbands of the current level into their
+/// packed-layout quadrants (`HL` right of `LL`, `LH` below, `HH`
+/// diagonal) — after this the workspace corners are free for the next
+/// level.
+fn evacuate_details(ws: &Planes, out: &mut Image) {
+    let (w, h, s) = (ws.w2, ws.h2, ws.stride);
+    let ow = out.width;
+    for y in 0..h {
+        let src = y * s..y * s + w;
+        out.data[y * ow + w..y * ow + 2 * w].copy_from_slice(&ws.p[1][src.clone()]);
+        let by = (y + h) * ow;
+        out.data[by..by + w].copy_from_slice(&ws.p[2][src.clone()]);
+        out.data[by + w..by + 2 * w].copy_from_slice(&ws.p[3][src]);
+    }
+}
+
+/// Store the deepest level's LL corner into the packed output.
+fn store_ll(ws: &Planes, out: &mut Image) {
+    let (w, h, s) = (ws.w2, ws.h2, ws.stride);
+    let ow = out.width;
+    for y in 0..h {
+        out.data[y * ow..y * ow + w].copy_from_slice(&ws.p[0][y * s..y * s + w]);
+    }
+}
+
+/// Load the deepest level's LL quadrant from the packed input.
+fn load_ll(ws: &mut Planes, packed: &Image) {
+    let (w, h, s) = (ws.w2, ws.h2, ws.stride);
+    let pw = packed.width;
+    for y in 0..h {
+        ws.p[0][y * s..y * s + w].copy_from_slice(&packed.data[y * pw..y * pw + w]);
+    }
+}
+
+/// Load the current level's detail quadrants from the packed input into
+/// the workspace corners.
+fn load_details(ws: &mut Planes, packed: &Image) {
+    let (w, h, s) = (ws.w2, ws.h2, ws.stride);
+    let pw = packed.width;
+    for y in 0..h {
+        let dst = y * s..y * s + w;
+        ws.p[1][dst.clone()].copy_from_slice(&packed.data[y * pw + w..y * pw + 2 * w]);
+        let by = (y + h) * pw;
+        ws.p[2][dst.clone()].copy_from_slice(&packed.data[by..by + w]);
+        ws.p[3][dst].copy_from_slice(&packed.data[by + w..by + 2 * w]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dwt::executor::{ParallelExecutor, ScalarExecutor};
+    use crate::dwt::lifting::Boundary;
+    use crate::dwt::Engine;
+    use crate::polyphase::schemes::Scheme;
+    use crate::polyphase::wavelets::Wavelet;
+
+    // the pre-PR-3 crop/paste pyramid — the packed-layout reference the
+    // in-place path must reproduce bit for bit (one shared
+    // implementation with the multilevel bench)
+    use crate::benchutil::crop_paste_pyramid_forward as reference_forward;
+
+    #[test]
+    fn deinterleave_interleave_roundtrip_in_place() {
+        let img = Image::synthetic(32, 24, 80);
+        let mut ws = Planes::split(&img); // planes 16x12, stride 16
+        let reference = ws.clone();
+        deinterleave_level(&mut ws, 8, 6);
+        interleave_level(&mut ws, 8, 6);
+        // p[0] — the only plane whose data is live across the pair in a
+        // pyramid run (details are evacuated before the deinterleave) —
+        // must be restored exactly; the p[1..3] corners are scratch
+        assert_eq!(ws.p[0], reference.p[0]);
+        for c in 1..4 {
+            for y in 0..12 {
+                let (a, b) = (&ws.p[c][y * 16..(y + 1) * 16], &reference.p[c][y * 16..(y + 1) * 16]);
+                if y < 6 {
+                    assert_eq!(&a[8..], &b[8..], "plane {c} row {y} outside corner");
+                } else {
+                    assert_eq!(a, b, "plane {c} row {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deinterleave_matches_split_of_the_region() {
+        let img = Image::synthetic(16, 16, 81);
+        let mut ws = Planes::split(&img); // planes 8x8
+        // the 8x8 region of p[0], as an image, split the ordinary way
+        let mut region = Image::new(8, 8);
+        region.data.copy_from_slice(&ws.p[0][..64]);
+        let expect = Planes::split(&region);
+        deinterleave_level(&mut ws, 4, 4);
+        for c in 0..4 {
+            for y in 0..4 {
+                assert_eq!(
+                    &ws.p[c][y * 8..y * 8 + 4],
+                    &expect.p[c][y * 4..(y + 1) * 4],
+                    "plane {c} row {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_pyramid_is_bit_exact_with_crop_paste_reference() {
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                for boundary in [Boundary::Periodic, Boundary::Symmetric] {
+                    let e = Engine::with_boundary(s, w.clone(), boundary);
+                    let img = Image::synthetic(64, 48, 82);
+                    for levels in 1..=3 {
+                        let got = e.forward_multi(&img, levels).unwrap();
+                        let want = reference_forward(&e, &img, levels);
+                        assert_eq!(
+                            got.max_abs_diff(&want),
+                            0.0,
+                            "{} {} {:?} L={levels}",
+                            w.name,
+                            s.name(),
+                            boundary
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_and_parallel_pyramids_are_bit_exact_at_every_level() {
+        let par = ParallelExecutor::with_threads(4);
+        let scalar = ScalarExecutor;
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                for boundary in [Boundary::Periodic, Boundary::Symmetric] {
+                    let e = Engine::with_boundary(s, w.clone(), boundary);
+                    let img = Image::synthetic(96, 64, 83);
+                    for levels in [1, 2, 3, 4] {
+                        let a = e.forward_multi_with(&img, levels, &scalar).unwrap();
+                        let b = e.forward_multi_with(&img, levels, &par).unwrap();
+                        assert_eq!(
+                            a.max_abs_diff(&b),
+                            0.0,
+                            "{} {} {:?} L={levels} forward",
+                            w.name,
+                            s.name(),
+                            boundary
+                        );
+                        let ia = e.inverse_multi_with(&a, levels, &scalar).unwrap();
+                        let ib = e.inverse_multi_with(&a, levels, &par).unwrap();
+                        assert_eq!(
+                            ia.max_abs_diff(&ib),
+                            0.0,
+                            "{} {} {:?} L={levels} inverse",
+                            w.name,
+                            s.name(),
+                            boundary
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pyramid_roundtrips_every_scheme() {
+        let par = ParallelExecutor::with_threads(3);
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                let e = Engine::new(s, w.clone());
+                let img = Image::synthetic(64, 64, 84);
+                let packed = e.forward_multi_with(&img, 3, &par).unwrap();
+                let rec = e.inverse_multi_with(&packed, 3, &par).unwrap();
+                let err = rec.max_abs_diff(&img);
+                assert!(err < 5e-2, "{} {}: roundtrip err {err}", w.name, s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn non_divisible_geometry_is_an_error() {
+        let e = Engine::new(Scheme::SepLifting, Wavelet::cdf53());
+        let img = Image::synthetic(48, 48, 85);
+        // 48 = 16 * 3: divisible by 2^4 at most
+        assert!(e.forward_multi(&img, 4).is_ok());
+        let err = e.forward_multi(&img, 5);
+        assert!(err.is_err(), "48x48 at L=5 must be rejected");
+        assert!(format!("{}", err.unwrap_err()).contains("divisible"));
+        assert!(e.inverse_multi(&img, 5).is_err());
+        assert!(e.forward_multi(&img, 0).is_err(), "0 levels rejected");
+    }
+
+    #[test]
+    fn scalar_below_threshold_keeps_results_bit_exact() {
+        let par = ParallelExecutor::with_threads(4);
+        let e = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97());
+        let img = Image::synthetic(64, 64, 86);
+        let plain = e.forward_multi_with(&img, 3, &par).unwrap();
+        // force the deep levels onto the scalar fall-back path
+        let pyr = e
+            .pyramid_plan(img.width, img.height, 3, false)
+            .unwrap()
+            .with_scalar_below(64 * 64);
+        let mixed = par.run_pyramid(&pyr, &img);
+        assert_eq!(plain.max_abs_diff(&mixed), 0.0);
+        // and the threshold's level split is what we think it is
+        assert!(!pyr.level_runs_scalar(&pyr.levels()[0]));
+        assert!(pyr.level_runs_scalar(&pyr.levels()[1]));
+    }
+
+    #[test]
+    fn work_series_and_barrier_metadata() {
+        assert!((work_series(1) - 1.0).abs() < 1e-12);
+        assert!((work_series(3) - (1.0 + 0.25 + 0.0625)).abs() < 1e-12);
+        let e = Engine::new(Scheme::NsConv, Wavelet::cdf97());
+        let pyr = e.pyramid_plan(256, 256, 3, false).unwrap();
+        assert_eq!(pyr.n_barriers(), 3 * e.plan(crate::dwt::PlanVariant::Optimized).n_barriers());
+        assert!(pyr.macs_per_pixel() > e.macs_per_pixel());
+        assert!(pyr.macs_per_pixel() < e.macs_per_pixel() * 4.0 / 3.0 + 1e-9);
+        let dims: Vec<_> = pyr.levels().iter().map(|l| (l.w2, l.h2)).collect();
+        assert_eq!(dims, vec![(128, 128), (64, 64), (32, 32)]);
+    }
+
+    #[test]
+    fn single_level_pyramid_equals_single_level_engine() {
+        for s in Scheme::ALL {
+            let e = Engine::new(s, Wavelet::cdf97());
+            let img = Image::synthetic(32, 48, 87);
+            let a = e.forward_multi(&img, 1).unwrap();
+            assert_eq!(a.max_abs_diff(&e.forward(&img)), 0.0, "{}", s.name());
+            let r = e.inverse_multi(&a, 1).unwrap();
+            assert_eq!(r.max_abs_diff(&e.inverse(&a)), 0.0, "{}", s.name());
+        }
+    }
+}

@@ -104,6 +104,36 @@ pub fn predict(
     }
 }
 
+/// Predict an L-level Mallat pyramid: each level is a full
+/// kernel-launch sequence of its own over a quarter of the previous
+/// level's pixels, so time sums the per-level geometric series
+/// `sum_{l<L} T(pixels / 4^l)` — bounded by ~4/3 of the single-level
+/// time on the bandwidth-bound asymptote, but launch overhead and the
+/// low-resolution transient are charged per level, which is exactly
+/// why deep pyramids hurt small images more than large ones.
+/// Throughput stays normalized to the level-0 bytes (the paper's
+/// y-axis convention).
+pub fn predict_pyramid(
+    device: &Device,
+    pipeline: PipelineKind,
+    scheme: Scheme,
+    w: &Wavelet,
+    pixels: usize,
+    levels: usize,
+) -> SimPoint {
+    // depth beyond ~32 levels has exhausted any usize-sized image
+    let levels = levels.clamp(1, usize::BITS as usize / 2 - 1);
+    let time_ms: f64 = (0..levels)
+        .map(|l| predict(device, pipeline, scheme, w, (pixels >> (2 * l)).max(1)).time_ms)
+        .sum();
+    let gbs = pixels as f64 * 4.0 / (time_ms * 1e-3) / 1e9;
+    SimPoint {
+        pixels,
+        time_ms,
+        gbs,
+    }
+}
+
 /// The resolution sweep used by the figures (64^2 .. 8192^2).
 pub fn default_sizes() -> Vec<usize> {
     (6..=13).map(|p| (1usize << p) * (1usize << p)).collect()
@@ -204,6 +234,33 @@ mod tests {
         let small = pts.first().unwrap().gbs;
         let large = pts.last().unwrap().gbs;
         assert!(large > 1.5 * small, "no transient: {small} vs {large}");
+    }
+
+    #[test]
+    fn pyramid_cost_sums_the_geometric_series() {
+        let w = Wavelet::cdf97();
+        let px = 2048 * 2048;
+        for (dev, pipe) in [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)] {
+            let single = predict(&dev, pipe, Scheme::NsConv, &w, px);
+            let l1 = predict_pyramid(&dev, pipe, Scheme::NsConv, &w, px, 1);
+            assert!((l1.time_ms - single.time_ms).abs() < 1e-12, "L=1 == single");
+            // strictly increasing in depth, but bounded well below 2x:
+            // the levels shrink geometrically
+            let mut prev = l1.time_ms;
+            for levels in 2..=5 {
+                let p = predict_pyramid(&dev, pipe, Scheme::NsConv, &w, px, levels);
+                assert!(p.time_ms > prev, "deeper pyramid must cost more");
+                assert!(
+                    p.time_ms < 2.0 * single.time_ms,
+                    "L={levels}: {} vs single {}",
+                    p.time_ms,
+                    single.time_ms
+                );
+                prev = p.time_ms;
+            }
+            // throughput is normalized to level-0 bytes: deeper == lower
+            assert!(predict_pyramid(&dev, pipe, Scheme::NsConv, &w, px, 3).gbs < single.gbs);
+        }
     }
 
     #[test]

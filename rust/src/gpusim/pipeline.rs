@@ -157,6 +157,31 @@ pub fn band_halo_bytes(plan: &KernelPlan, w2: usize, bands: usize) -> usize {
         .sum()
 }
 
+/// [`band_halo_bytes`] summed over the levels of an L-level Mallat
+/// pyramid on `w2 x h2` level-0 planes: level `l` re-partitions its
+/// bands over planes of `w2 >> l` columns and `h2 >> l` rows (the
+/// band count clamps to the rows available, exactly as the executor's
+/// `band_ranges` does), so per-level traffic follows a geometric
+/// series in `2^-l` — while the *exchange count* grows linearly with
+/// depth.  Deep pyramids are therefore latency-dominated, not
+/// bandwidth-dominated: the paper's barrier-count argument, restated
+/// across levels.
+pub fn pyramid_band_halo_bytes(
+    plan: &KernelPlan,
+    w2: usize,
+    h2: usize,
+    bands: usize,
+    levels: usize,
+) -> usize {
+    (0..levels.max(1))
+        .map(|l| {
+            let lw2 = (w2 >> l).max(1);
+            let lh2 = (h2 >> l).max(1);
+            band_halo_bytes(plan, lw2, bands.clamp(1, lh2))
+        })
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,6 +306,28 @@ mod tests {
         assert!(band_halo_bytes(&ns, 256, 4) <= band_halo_bytes(&sep, 256, 4));
         assert_eq!(ns.total_halo().0 + ns.total_halo().1,
                    sep.total_halo().0 + sep.total_halo().1);
+    }
+
+    #[test]
+    fn pyramid_band_halo_sums_the_level_series() {
+        let w = Wavelet::cdf53();
+        let plan = KernelPlan::from_steps(&schemes::build(Scheme::SepLifting, &w),
+                                          Boundary::Periodic);
+        let single = band_halo_bytes(&plan, 512, 4);
+        assert_eq!(pyramid_band_halo_bytes(&plan, 512, 512, 4, 1), single);
+        // levels halve the width: 512 + 256 + 128 columns of halo rows
+        assert_eq!(
+            pyramid_band_halo_bytes(&plan, 512, 512, 4, 3),
+            single + single / 2 + single / 4
+        );
+        // a deep pyramid clamps its band count to the shrunken planes:
+        // once a level has a single row per band nothing is exchanged,
+        // so depth saturates instead of going negative or panicking
+        let deep = pyramid_band_halo_bytes(&plan, 512, 512, 4, 9);
+        let deeper = pyramid_band_halo_bytes(&plan, 512, 512, 4, 10);
+        assert_eq!(deep, deeper, "exhausted levels add no traffic");
+        // scalar execution still exchanges nothing at any depth
+        assert_eq!(pyramid_band_halo_bytes(&plan, 512, 512, 1, 5), 0);
     }
 
     #[test]

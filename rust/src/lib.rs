@@ -33,6 +33,14 @@
 //! caches engines per (scheme, wavelet, boundary) and picks an executor
 //! per request — one compiled object, four consumers, no parallel
 //! re-derivations.
+//!
+//! Multi-level (Mallat) transforms are pyramid-native
+//! ([`dwt::pyramid`]): an L-level request lowers to a `PyramidPlan`
+//! that sweeps the compiled plan over the shrinking level geometry,
+//! executing in place on strided views of one workspace through any
+//! `PlanExecutor` — no per-level clones, band parallelism
+//! re-partitioned per level, and the cost/halo models sum the
+//! per-level geometric series.
 
 pub mod benchutil;
 pub mod coordinator;
@@ -42,6 +50,9 @@ pub mod image;
 pub mod polyphase;
 pub mod runtime;
 
-pub use dwt::{Boundary, Image, KernelPlan, ParallelExecutor, Planes, PlanExecutor, ScalarExecutor};
+pub use dwt::{
+    Boundary, Image, KernelPlan, ParallelExecutor, Planes, PlanExecutor, PyramidPlan,
+    ScalarExecutor,
+};
 pub use polyphase::wavelets::Wavelet;
 pub use polyphase::Scheme;

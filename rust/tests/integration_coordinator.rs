@@ -265,6 +265,84 @@ fn multilevel_request_roundtrip() {
 }
 
 #[test]
+fn multilevel_request_above_threshold_rides_the_parallel_executor() {
+    // PR-3 acceptance: a levels >= 2 request above parallel_threshold
+    // executes on the band-parallel plan executor (pyramid-native
+    // strided path), bit-exact with the scalar engine result
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(1024, 512, 97);
+    let resp = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "cdf97".into(),
+            scheme: Scheme::SepLifting,
+            levels: 4,
+            ..Request::default()
+        })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::NativeParallel);
+    let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
+    let expect = engine.forward_multi(&img, 4).unwrap();
+    assert_eq!(resp.image.max_abs_diff(&expect), 0.0);
+    // depth is metered
+    let s = coord.metrics.summary();
+    assert_eq!(s.pyramid_requests, 1);
+    assert_eq!(s.max_levels, 4);
+    // ...and the inverse pyramid rides it back, reconstructing the input
+    let rec = coord
+        .transform(Request {
+            image: resp.image,
+            wavelet: "cdf97".into(),
+            scheme: Scheme::SepLifting,
+            levels: 4,
+            inverse: true,
+            ..Request::default()
+        })
+        .unwrap();
+    assert_eq!(rec.backend, Backend::NativeParallel);
+    assert!(rec.image.max_abs_diff(&img) < 1e-1);
+}
+
+#[test]
+fn small_multilevel_request_stays_scalar_and_exact() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(64, 64, 98);
+    let resp = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "cdf53".into(),
+            scheme: Scheme::NsPolyconv,
+            levels: 3,
+            ..Request::default()
+        })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::Native);
+    let engine = Engine::new(Scheme::NsPolyconv, Wavelet::cdf53());
+    let expect = engine.forward_multi(&img, 3).unwrap();
+    assert_eq!(resp.image.max_abs_diff(&expect), 0.0);
+}
+
+#[test]
+fn symmetric_multilevel_rides_the_parallel_route_bit_exactly() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let img = Image::synthetic(1024, 512, 99);
+    let resp = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "cdf53".into(),
+            scheme: Scheme::NsConv,
+            levels: 3,
+            boundary: Boundary::Symmetric,
+            ..Request::default()
+        })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::NativeParallel);
+    let engine = Engine::with_boundary(Scheme::NsConv, Wavelet::cdf53(), Boundary::Symmetric);
+    let expect = engine.forward_multi(&img, 3).unwrap();
+    assert_eq!(resp.image.max_abs_diff(&expect), 0.0);
+}
+
+#[test]
 fn haar_served_natively() {
     let coord = Coordinator::new(native_cfg()).unwrap();
     let img = Image::synthetic(64, 64, 58);
