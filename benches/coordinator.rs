@@ -16,6 +16,7 @@ fn native_cfg() -> CoordinatorConfig {
         batch: BatchPolicy::default(),
         parallel_threshold: usize::MAX,
         threads: 0,
+        simd: dwt_accel::dwt::default_simd(),
     }
 }
 

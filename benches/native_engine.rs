@@ -2,12 +2,13 @@
 //! Per-scheme scalar (KernelPlan) vs band-parallel (ParallelExecutor)
 //! vs legacy (apply_chain) execution, the lifting kernel library vs the
 //! generic evaluator, and the memcpy roofline; a large-image (2048^2)
-//! scalar-vs-parallel section; and a multilevel section (L in {3, 5}
-//! at 1024^2) comparing the pyramid-native strided in-place path
-//! (scalar and band-parallel) against the pre-PR-3 crop/paste
-//! composition.  Emits `BENCH_native.json` (schema v3) so future PRs
-//! can track the planned-vs-legacy, parallel-vs-scalar, and pyramid
-//! speedup trajectories.
+//! scalar-vs-parallel section; a multilevel section (L in {3, 5} at
+//! 1024^2) comparing the pyramid-native strided in-place path (scalar
+//! and band-parallel) against the pre-PR-3 crop/paste composition; and
+//! a simd section (PR 4) timing scalar vs SimdExecutor vs parallel vs
+//! parallel+simd at 1024^2 and 2048^2.  Emits `BENCH_native.json`
+//! (schema v4) so future PRs can track the planned-vs-legacy,
+//! parallel-vs-scalar, pyramid, and simd speedup trajectories.
 //!
 //! Flags: `--quick` caps the per-case budget for CI smoke runs.
 //! `PALLAS_THREADS` pins the parallel executor's thread count.
@@ -15,7 +16,8 @@
 use dwt_accel::benchutil::{bench, crop_paste_pyramid_forward, default_budget, gbs, Stats, Table};
 use dwt_accel::coordinator::tiler;
 use dwt_accel::dwt::executor::{default_threads, ParallelExecutor, ScalarExecutor};
-use dwt_accel::dwt::{apply, lifting, Engine, Image, PlanVariant, Planes};
+use dwt_accel::dwt::simd::SimdExecutor;
+use dwt_accel::dwt::{apply, lifting, Engine, Image, PlanExecutor, PlanVariant, Planes};
 use dwt_accel::gpusim::band_halo_bytes;
 use dwt_accel::polyphase::schemes::{self, Scheme};
 use dwt_accel::polyphase::wavelets::Wavelet;
@@ -45,6 +47,16 @@ struct PyramidRecord {
     scalar_ms: f64,
     parallel_ms: f64,
     legacy_ms: f64,
+}
+
+struct SimdRecord {
+    side: usize,
+    wavelet: &'static str,
+    scheme: &'static str,
+    scalar_ms: f64,
+    simd_ms: f64,
+    parallel_ms: f64,
+    parallel_simd_ms: f64,
 }
 
 fn main() {
@@ -331,6 +343,81 @@ fn main() {
         }
     }
 
+    // simd section (PR 4): the executor grid at two sizes — scalar vs
+    // lane-group interiors (SimdExecutor), and the same pair under band
+    // parallelism (SIMD x threads, the work-group x lane hierarchy)
+    println!("\n--- simd: scalar vs simd vs parallel (x{threads}) vs parallel+simd ---\n");
+    let par_simd = ParallelExecutor::with_threads_vector(threads, true);
+    let simd = SimdExecutor;
+    let ts = Table::new(&[5, 7, 13, 10, 10, 10, 10, 8, 8]);
+    ts.header(&[
+        "side", "wavelet", "scheme", "scalar ms", "simd ms", "par ms", "par+s ms", "x simd",
+        "x par+s",
+    ]);
+    let mut simds: Vec<SimdRecord> = Vec::new();
+    for bside in [1024usize, 2048] {
+        let bimg = Image::synthetic(bside, bside, 7);
+        for (wname, scheme) in [
+            ("cdf97", Scheme::SepLifting),
+            ("cdf97", Scheme::NsLifting),
+            ("cdf53", Scheme::NsConv),
+        ] {
+            let engine = Engine::new(scheme, Wavelet::by_name(wname).expect("wavelet"));
+            // sanity: all four backends bit-exact before timing
+            let a = engine.forward_with(&bimg, &scalar);
+            for exec in [&simd as &dyn PlanExecutor, &parallel, &par_simd] {
+                assert_eq!(
+                    a.max_abs_diff(&engine.forward_with(&bimg, exec)),
+                    0.0,
+                    "{} != scalar",
+                    exec.name()
+                );
+            }
+            let time = |exec: &dyn PlanExecutor| -> Stats {
+                bench(
+                    || {
+                        std::hint::black_box(
+                            engine.forward_with(std::hint::black_box(&bimg), exec),
+                        );
+                    },
+                    budget,
+                    3,
+                    50,
+                )
+            };
+            let s_scalar = time(&scalar);
+            let s_simd = time(&simd);
+            let s_par = time(&parallel);
+            let s_par_simd = time(&par_simd);
+            ts.row(&[
+                format!("{bside}"),
+                wname.into(),
+                scheme.name().into(),
+                format!("{:.2}", s_scalar.median_ms()),
+                format!("{:.2}", s_simd.median_ms()),
+                format!("{:.2}", s_par.median_ms()),
+                format!("{:.2}", s_par_simd.median_ms()),
+                format!(
+                    "x{:.2}",
+                    s_scalar.median.as_secs_f64() / s_simd.median.as_secs_f64()
+                ),
+                format!(
+                    "x{:.2}",
+                    s_par.median.as_secs_f64() / s_par_simd.median.as_secs_f64()
+                ),
+            ]);
+            simds.push(SimdRecord {
+                side: bside,
+                wavelet: wname,
+                scheme: scheme.name(),
+                scalar_ms: s_scalar.median_ms(),
+                simd_ms: s_simd.median_ms(),
+                parallel_ms: s_par.median_ms(),
+                parallel_simd_ms: s_par_simd.median_ms(),
+            });
+        }
+    }
+
     // tiled compatibility layer vs monolithic
     let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
     let s_mono = bench(
@@ -373,12 +460,15 @@ fn main() {
     let path = "BENCH_native.json";
     match std::fs::write(
         path,
-        to_json(side, threads, quick, memcpy_gbs, &records, &larges, &pyramids),
+        to_json(
+            side, threads, quick, memcpy_gbs, &records, &larges, &pyramids, &simds,
+        ),
     ) {
         Ok(()) => println!(
-            "\nwrote {path} ({} scheme records, {} pyramid records)",
+            "\nwrote {path} ({} scheme records, {} pyramid records, {} simd records)",
             records.len(),
-            pyramids.len()
+            pyramids.len(),
+            simds.len()
         ),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
@@ -394,11 +484,12 @@ fn to_json(
     records: &[SchemeRecord],
     larges: &[LargeRecord],
     pyramids: &[PyramidRecord],
+    simds: &[SimdRecord],
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"native_engine\",\n");
-    out.push_str("  \"schema\": 3,\n");
+    out.push_str("  \"schema\": 4,\n");
     out.push_str(&format!("  \"side\": {side},\n"));
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"quick\": {quick},\n"));
@@ -453,6 +544,26 @@ fn to_json(
             r.scalar_ms / r.parallel_ms,
             r.legacy_ms / r.scalar_ms,
             if i + 1 == pyramids.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"simd\": [\n");
+    for (i, r) in simds.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"side\": {}, \"wavelet\": \"{}\", \"scheme\": \"{}\", \
+             \"scalar_ms\": {:.4}, \"simd_ms\": {:.4}, \"parallel_ms\": {:.4}, \
+             \"parallel_simd_ms\": {:.4}, \"simd_speedup\": {:.3}, \
+             \"parallel_simd_speedup\": {:.3}}}{}\n",
+            r.side,
+            r.wavelet,
+            r.scheme,
+            r.scalar_ms,
+            r.simd_ms,
+            r.parallel_ms,
+            r.parallel_simd_ms,
+            r.scalar_ms / r.simd_ms,
+            r.parallel_ms / r.parallel_simd_ms,
+            if i + 1 == simds.len() { "" } else { "," }
         ));
     }
     out.push_str("  ]\n}\n");

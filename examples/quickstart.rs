@@ -4,7 +4,7 @@
 //!     cargo run --release --example quickstart
 
 use dwt_accel::coordinator::{Coordinator, CoordinatorConfig, Request};
-use dwt_accel::dwt::{Engine, Image};
+use dwt_accel::dwt::{Engine, Image, SimdExecutor};
 use dwt_accel::polyphase::schemes::Scheme;
 use dwt_accel::polyphase::wavelets::Wavelet;
 
@@ -13,7 +13,11 @@ fn main() -> anyhow::Result<()> {
     let img = Image::synthetic(256, 256, 1);
 
     // 2. transform through the coordinator (routes to the AOT artifact
-    //    compiled from the Pallas kernels when available)
+    //    compiled from the Pallas kernels when available; native
+    //    requests run vectorized — Backend::NativeSimd below the
+    //    parallel threshold, SIMD-inside-bands above it.  Set
+    //    PALLAS_SIMD=0 to fall back to scalar interiors; the
+    //    coefficients are bit-identical either way.)
     let coord = Coordinator::new(CoordinatorConfig::default())?;
     let resp = coord.transform(Request {
         image: img.clone(),
@@ -28,9 +32,16 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 3. the same transform with the pure-rust engine — identical
-    //    coefficients (the paper's central invariant)
+    //    coefficients (the paper's central invariant).  Any
+    //    PlanExecutor backend runs the same compiled plan; the SIMD
+    //    executor is bit-exact with the scalar default.
     let engine = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97());
     let native = engine.forward(&img);
+    assert_eq!(
+        native.max_abs_diff(&engine.forward_with(&img, &SimdExecutor)),
+        0.0,
+        "simd backend must be bit-exact"
+    );
     println!(
         "pjrt vs native max coefficient difference: {:.2e}",
         resp.image.max_abs_diff(&native)

@@ -1,0 +1,324 @@
+"""SIMD executor semantics, validated against the oracle.
+
+Mirrors PR 4's Rust `dwt::simd` / `dwt::vecn` in numpy: the
+interior/tail seam (`lifting::interior_span`, the stencil's per-term
+`x_interior`), the hoisted tap classification (`lifting::classify_taps`
+— once per kernel at lowering, not per row call), and the lane-group
+interior bodies, all in explicit float32 so per-element IEEE op order
+is the object under test.  Asserts
+
+* the seam executor in float32 reproduces the float64 oracle
+  (`test_executor_semantics.exec_scalar`) for every scheme, wavelet,
+  and boundary — the restructure did not change the algorithm,
+* lane-group (8-wide chunked) interiors equal plain full-span
+  interiors BIT FOR BIT — vectorization is pure issue order, zero
+  numeric drift (the Rust `SimdExecutor == ScalarExecutor` claim),
+* the seam indices are exact: on the interior every fold is the
+  identity, and one column outside it is not,
+* the classification tolerance edge behaves (near-equal taps fuse and
+  are f32-indistinguishable; just-above-tolerance pairs stay generic).
+
+The Rust test suite asserts the same invariants on the real
+implementation; this file guards the *algorithm* from a second,
+independent implementation so the two cannot drift silently (there is
+no Rust toolchain in the authoring container — this is the executable
+check).
+"""
+
+import numpy as np
+import pytest
+
+import test_executor_semantics as ex
+from compile import schemes
+from compile import wavelets as wv
+
+F32 = np.float32
+LANES = 8
+WAVELET_NAMES = sorted(wv.WAVELETS)
+
+
+# ----------------------------------------------------- seam + classing
+
+
+def classify_taps(taps):
+    """Twin of `lifting::classify_taps` (1e-15 f64 tolerance)."""
+    if len(taps) == 2 and abs(taps[0][1] - taps[1][1]) < 1e-15:
+        (k0, c0), (k1, _c1) = taps
+        return ("sym2", k0, k1, F32(c0))
+    return ("generic",)
+
+
+def interior_span(n, reach):
+    """Twin of `lifting::interior_span`."""
+    return (reach, n - reach) if n > 2 * reach else None
+
+
+def x_interior(km, w2):
+    """Twin of the stencil executor's per-term x-interior: the span
+    where the fold is the identity (`xi[x] == x + km`)."""
+    lo = min(max(-km, 0), w2)
+    hi = max(min(w2 - max(km, 0), w2), lo)
+    return lo, hi
+
+
+def reach_of(taps):
+    return max((abs(k) for k, _ in taps), default=0)
+
+
+# ----------------------------------------------- float32 kernel bodies
+#
+# `lanes == 0` is the scalar interior body (one full-span numpy op per
+# tap — the same per-element sequence as the Rust scalar loops);
+# `lanes == LANES` chunks the span into lane groups with a remainder
+# tail, mirroring vecn::axpy/axpy2.  numpy float32 elementwise ops are
+# per-element IEEE, so the two must agree bit for bit — which is
+# exactly the property the Rust vecn layer is built on.
+
+
+def _add_run(d, lo, hi, seg, c, lanes):
+    """d[lo:hi] += c * seg, lane-chunked or full-span (float32)."""
+    if lanes <= 1:
+        d[lo:hi] += c * seg
+        return
+    n = hi - lo
+    full = n - n % lanes
+    for g in range(0, full, lanes):
+        d[lo + g : lo + g + lanes] += c * seg[g : g + lanes]
+    if full < n:
+        d[lo + full : hi] += c * seg[full:]
+
+
+def _add_run2(d, lo, hi, seg0, seg1, c, lanes):
+    """d[lo:hi] += c * (seg0 + seg1) — the fused Sym2 body."""
+    if lanes <= 1:
+        d[lo:hi] += c * (seg0 + seg1)
+        return
+    n = hi - lo
+    full = n - n % lanes
+    for g in range(0, full, lanes):
+        d[lo + g : lo + g + lanes] += c * (seg0[g : g + lanes] + seg1[g : g + lanes])
+    if full < n:
+        d[lo + full : hi] += c * (seg0[full:] + seg1[full:])
+
+
+def lift_rows_h32(dst, src, taps, boundary, src_odd, lanes):
+    """Twin of `lifting::lift_rows_h_ex` on (rows, w2) float32 arrays:
+    scalar folded prologue/epilogue outside the seam, per-tap (or fused
+    Sym2) unit-stride interior sweeps inside it."""
+    rows, w2 = dst.shape
+    reach = reach_of(taps)
+    span = interior_span(w2, reach)
+    if span is None:
+        for y in range(rows):
+            for x in range(w2):
+                acc = F32(0.0)
+                for k, c in taps:
+                    acc = F32(acc + F32(F32(c) * src[y, ex.fold(x + k, w2, boundary, src_odd)]))
+                dst[y, x] = F32(dst[y, x] + acc)
+        return
+    lo, hi = span
+    cls = classify_taps(taps)
+    for y in range(rows):
+        s, d = src[y], dst[y]
+        for x in list(range(lo)) + list(range(hi, w2)):
+            acc = F32(0.0)
+            for k, c in taps:
+                acc = F32(acc + F32(F32(c) * s[ex.fold(x + k, w2, boundary, src_odd)]))
+            d[x] = F32(d[x] + acc)
+        if cls[0] == "sym2":
+            _, k0, k1, c = cls
+            _add_run2(d, lo, hi, s[lo + k0 : hi + k0], s[lo + k1 : hi + k1], c, lanes)
+        else:
+            for k, c in taps:
+                _add_run(d, lo, hi, s[lo + k : hi + k], F32(c), lanes)
+
+
+def lift_rows_v32(dst, src, taps, boundary, src_odd, lanes):
+    """Twin of `lifting::lift_rows_v_ex`: the same per-element op order
+    as the horizontal kernel on transposed planes (interior rows are
+    whole-row per-tap sweeps; fold rows take the scalar path), so it is
+    implemented exactly that way — chunking never changes bits."""
+    lift_rows_h32(dst.T, src.T, taps, boundary, src_odd, lanes)
+
+
+def stencil32(rows_terms, planes, boundary, lanes):
+    """Twin of `apply::run_stencil_rows_ex` in float32: per output row,
+    terms accumulate in order; each term's x-interior is a unit-stride
+    run, its edges are folded scalars."""
+    h2, w2 = planes[0].shape
+    out = []
+    for i in range(4):
+        terms = []
+        for j, km, kn, c in rows_terms[i]:
+            hodd = ex.plane_is_odd(j, "h")
+            vodd = ex.plane_is_odd(j, "v")
+            xi = [ex.fold(x + km, w2, boundary, hodd) for x in range(w2)]
+            yi = [ex.fold(y + kn, h2, boundary, vodd) for y in range(h2)]
+            if boundary == "periodic":
+                # periodic wrap is a rotation: the "interior" is the
+                # pre-wrap run, the tail the wrapped remainder — both
+                # unit-stride (the Rust head/tail split)
+                lo, hi = 0, w2  # handled as two runs below
+                terms.append((j, xi, yi, F32(c), None))
+            else:
+                terms.append((j, xi, yi, F32(c), x_interior(km, w2)))
+        o = np.zeros((h2, w2), dtype=F32)
+        for y in range(h2):
+            drow = o[y]
+            for j, xi, yi, c, span in terms:
+                srow = planes[j][yi[y]]
+                if span is None:
+                    # periodic: xi is a rotation; both segments are runs
+                    shift = xi[0]
+                    head = w2 - shift
+                    _add_run(drow, 0, head, srow[shift:], c, lanes)
+                    _add_run(drow, head, w2, srow[:shift], c, lanes)
+                else:
+                    lo, hi = span
+                    for x in list(range(lo)) + list(range(hi, w2)):
+                        drow[x] = F32(drow[x] + F32(c * srow[xi[x]]))
+                    if lo < hi:
+                        _add_run(drow, lo, hi, srow[xi[lo] : xi[lo] + hi - lo], c, lanes)
+        out.append(o)
+    return out
+
+
+def exec32(plan, planes, boundary, lanes):
+    """Twin of `KernelPlan::execute_opts` in float32."""
+    planes = [p.astype(F32) for p in planes]
+    for group in plan:
+        for k in group:
+            if k[0] == "lift":
+                _, dst, src, axis, taps = k
+                src_odd = ex.plane_is_odd(src, axis)
+                if axis == "h":
+                    lift_rows_h32(planes[dst], planes[src], taps, boundary, src_odd, lanes)
+                else:
+                    lift_rows_v32(planes[dst], planes[src], taps, boundary, src_odd, lanes)
+            elif k[0] == "scale":
+                for c, f in enumerate(k[1]):
+                    if abs(f - 1.0) > 1e-12:
+                        planes[c] *= F32(f)
+            else:
+                planes = stencil32(k[1], planes, boundary, lanes)
+    return planes
+
+
+# --------------------------------------------------------------- tests
+
+
+def split32(img):
+    return [p.astype(F32) for p in ex.split(img)]
+
+
+@pytest.mark.parametrize("boundary", ["periodic", "symmetric"])
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+def test_f32_seam_executor_matches_oracle(wname, boundary):
+    """The seam-structured float32 executor computes the same transform
+    as the float64 oracle — the interior/tail restructure and the
+    stencil run splits changed issue order only, not the algorithm."""
+    w = wv.get(wname)
+    p64 = ex.split(ex.img_of(66, 34, 11))
+    p32 = [p.astype(F32) for p in p64]
+    for scheme in schemes.SCHEMES:
+        plan = ex.compile_plan(schemes.build(scheme, w))
+        want = ex.exec_scalar(plan, p64, boundary)
+        got = exec32(plan, p32, boundary, LANES)
+        err = max(
+            np.abs(a.astype(np.float64) - b).max() for a, b in zip(got, want)
+        )
+        assert err < 5e-2, f"{wname} {scheme} {boundary}: f32 drift {err}"
+
+
+@pytest.mark.parametrize("size", [(34, 24), (66, 34), (34, 2)])
+@pytest.mark.parametrize("boundary", ["periodic", "symmetric"])
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+def test_lane_groups_are_bit_exact_with_scalar(wname, boundary, size):
+    """The SimdExecutor claim, in the twin: lane-group interiors equal
+    plain interiors bit for bit, for every scheme at awkward widths
+    (w2 = 17, 33 — lane remainder 1; h2 = 1 — fully degenerate)."""
+    w = wv.get(wname)
+    W, H = size
+    p32 = split32(ex.img_of(W, H, 12))
+    for scheme in schemes.SCHEMES:
+        for chain in (schemes.build(scheme, w), schemes.build_inverse(scheme, w)):
+            plan = ex.compile_plan(chain)
+            scalar = exec32(plan, p32, boundary, 0)
+            simd = exec32(plan, p32, boundary, LANES)
+            assert all(
+                np.array_equal(a, b) for a, b in zip(scalar, simd)
+            ), f"{wname} {scheme} {boundary} {W}x{H}: lane groups drifted"
+
+
+def test_interior_seam_indices_are_exact():
+    """On the interior every fold is the identity; one step outside it
+    is not — for both the lift seam and the stencil per-term seam."""
+    for n, reach in [(17, 1), (17, 2), (33, 2), (129, 6), (5, 2)]:
+        span = interior_span(n, reach)
+        if span is None:
+            assert n <= 2 * reach
+            continue
+        lo, hi = span
+        for odd in (False, True):
+            for k in range(-reach, reach + 1):
+                for x in range(lo, hi):
+                    assert ex.fold_sym(x + k, n, odd) == x + k
+        if reach > 0:
+            assert ex.fold_sym(lo - 1 - reach, n, False) != lo - 1 - reach
+            assert ex.fold_sym(hi + reach, n, False) != hi + reach
+    for w2 in (7, 17, 33):
+        for km in range(-(w2 + 2), w2 + 3):
+            lo, hi = x_interior(km, w2)
+            assert 0 <= lo <= hi <= w2
+            for odd in (False, True):
+                for x in range(lo, hi):
+                    assert ex.fold_sym(x + km, w2, odd) == x + km
+                if lo > 0:
+                    assert not 0 <= (lo - 1) + km < w2
+                if hi < w2:
+                    assert not 0 <= hi + km < w2
+
+
+def test_tap_classification_edge():
+    """Twin of the hoisted `classify_taps` and its tolerance edge."""
+    # every CDF predict/update pair fuses
+    for wname in WAVELET_NAMES:
+        w = wv.get(wname)
+        for pr in w.pairs:
+            for tapd in (pr.predict, pr.update):
+                taps = sorted(tapd.items())
+                if len(taps) == 2 and abs(taps[0][1] - taps[1][1]) < 1e-15:
+                    assert classify_taps(taps)[0] == "sym2"
+    c0 = 0.4435068520439712
+    assert classify_taps([(0, c0), (1, c0 + 0.4e-15)])[0] == "sym2"
+    assert classify_taps([(0, c0), (1, c0 + 1.1e-15)])[0] == "generic"
+    assert classify_taps([(0, 0.5)])[0] == "generic"
+    assert classify_taps([(-1, 0.25), (0, 0.5), (1, 0.25)])[0] == "generic"
+    # sub-tolerance pairs are f32-indistinguishable: fusing with c0 is
+    # exact in the arithmetic the kernels run
+    assert F32(c0) == F32(c0 + 0.4e-15)
+    # and a fused near-equal lift stays bit-identical across lane modes
+    taps = [(0, c0), (1, c0 + 0.4e-15)]
+    src = (np.arange(33, dtype=F32) * F32(0.71)).reshape(1, 33)
+    a = np.full((1, 33), F32(0.25))
+    b = a.copy()
+    lift_rows_h32(a, src, taps, "periodic", False, 0)
+    lift_rows_h32(b, src, taps, "periodic", False, LANES)
+    assert np.array_equal(a, b)
+
+
+def test_phase_machinery_composes_with_lane_groups():
+    """SIMD under band parallelism: run the banded float64 executor and
+    the lane-grouped float32 executor on the same plan — the float32
+    pair (banded is out of scope here; the Rust side tests it) must
+    still agree with the float64 scalar within f32 precision, i.e. the
+    seam split commutes with the phase cuts."""
+    w = wv.get("cdf97")
+    p64 = ex.split(ex.img_of(64, 48, 13))
+    p32 = [p.astype(F32) for p in p64]
+    plan = ex.compile_plan(schemes.build("ns_lifting", w))
+    fused = [[k for group in plan for k in group]]
+    a = ex.exec_banded(fused, p64, "periodic", 4)
+    b = exec32(fused, p32, "periodic", LANES)
+    err = max(np.abs(x.astype(np.float64) - y).max() for x, y in zip(b, a))
+    assert err < 5e-2

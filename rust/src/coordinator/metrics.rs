@@ -15,8 +15,15 @@ pub enum Backend {
     /// crop-and-stitch tiled path; bit-exact with `Native`).  Labels
     /// the *routing decision*: the executor may still run a scalar
     /// pass internally when the geometry yields a single band (1-row
-    /// planes, 1-thread pools).
+    /// planes, 1-thread pools).  When the service runs with SIMD on
+    /// (the default; `PALLAS_SIMD=0` opts out), the bands issue
+    /// lane-group interiors — still reported as this backend, since
+    /// the routing decision was "parallel".
     NativeParallel,
+    /// Native engine, SIMD plan executor: the sub-`parallel_threshold`
+    /// route when SIMD is enabled — lane-group kernel interiors,
+    /// single-threaded, bit-exact with `Native`.
+    NativeSimd,
 }
 
 impl Backend {
@@ -25,6 +32,7 @@ impl Backend {
             Backend::Pjrt => "pjrt",
             Backend::Native => "native",
             Backend::NativeParallel => "native-parallel",
+            Backend::NativeSimd => "native-simd",
         }
     }
 }
@@ -36,7 +44,7 @@ struct Inner {
     requests: u64,
     batches: u64,
     batched_requests: u64,
-    per_backend: [u64; 3],
+    per_backend: [u64; 4],
     pyramid_requests: u64,
     max_levels: usize,
 }
@@ -58,7 +66,7 @@ pub struct Summary {
     pub p95_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
-    pub per_backend: [(&'static str, u64); 3],
+    pub per_backend: [(&'static str, u64); 4],
     /// Requests served as multi-level (levels >= 2) Mallat pyramids.
     pub pyramid_requests: u64,
     /// Deepest pyramid served so far (1 when only single-level).
@@ -133,6 +141,7 @@ impl Metrics {
                 ("pjrt", g.per_backend[0]),
                 ("native", g.per_backend[1]),
                 ("native-parallel", g.per_backend[2]),
+                ("native-simd", g.per_backend[3]),
             ],
             pyramid_requests: g.pyramid_requests,
             max_levels: g.max_levels.max(1),
@@ -174,6 +183,19 @@ mod tests {
         assert_eq!(s.p99_us, 0);
         assert_eq!(s.pyramid_requests, 0);
         assert_eq!(s.max_levels, 1);
+    }
+
+    #[test]
+    fn simd_backend_accounting() {
+        let m = Metrics::new();
+        let lat = Duration::from_micros(5);
+        m.record(lat, 64, Backend::NativeSimd);
+        m.record(lat, 64, Backend::NativeSimd);
+        m.record(lat, 64, Backend::Native);
+        let s = m.summary();
+        assert_eq!(s.per_backend[3], ("native-simd", 2));
+        assert_eq!(s.per_backend[1], ("native", 1));
+        assert_eq!(Backend::NativeSimd.name(), "native-simd");
     }
 
     #[test]

@@ -6,6 +6,7 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{Backend, Metrics};
 use super::worker::WorkerPool;
 use crate::dwt::executor::{default_threads, ParallelExecutor, PlanExecutor, ScalarExecutor};
+use crate::dwt::simd::{default_simd, SimdExecutor};
 use crate::dwt::{Boundary, Engine, Image};
 use crate::polyphase::schemes::Scheme;
 use crate::polyphase::wavelets::Wavelet;
@@ -64,6 +65,15 @@ pub struct CoordinatorConfig {
     /// machine's parallelism) — CI and benches pin this for
     /// deterministic runs.
     pub threads: usize,
+    /// Vectorized (lane-group) kernel interiors for the native routes:
+    /// sub-threshold requests run on [`SimdExecutor`] (reported as
+    /// [`Backend::NativeSimd`]) and the shared band-parallel executor
+    /// runs SIMD inside its bands.  Defaults through [`default_simd`]
+    /// (`PALLAS_SIMD=0` is the service-wide escape hatch).  Purely a
+    /// performance knob — every executor is bit-exact with scalar, so
+    /// `parallel_threshold` routing is unchanged and clients cannot
+    /// observe the setting in the coefficients.
+    pub simd: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -77,6 +87,7 @@ impl Default for CoordinatorConfig {
             batch: BatchPolicy::default(),
             parallel_threshold: 1024 * 1024,
             threads: 0,
+            simd: default_simd(),
         }
     }
 }
@@ -183,7 +194,8 @@ impl Coordinator {
         self.exec_tx.is_some()
     }
 
-    /// The shared band-parallel executor, spawned on first use.
+    /// The shared band-parallel executor, spawned on first use — with
+    /// SIMD interiors when the service runs vectorized.
     fn parallel_executor(&self) -> Arc<ParallelExecutor> {
         self.parallel
             .get_or_init(|| {
@@ -192,7 +204,7 @@ impl Coordinator {
                 } else {
                     self.cfg.threads
                 };
-                Arc::new(ParallelExecutor::with_threads(threads))
+                Arc::new(ParallelExecutor::with_threads_vector(threads, self.cfg.simd))
             })
             .clone()
     }
@@ -288,8 +300,11 @@ impl Coordinator {
     /// cached compiled plans; what varies is the *executor*: requests
     /// at/above `parallel_threshold` pixels — single-level and
     /// multi-level alike — run on the shared band-parallel executor
-    /// (bit-exact with scalar, so routing is invisible to clients),
-    /// everything else on the scalar path.  Multi-level requests lower
+    /// (with SIMD inside the bands when `cfg.simd`), everything else
+    /// on the SIMD executor (`cfg.simd`, the default) or the scalar
+    /// one.  All three are bit-exact, so routing is invisible to
+    /// clients and the `parallel_threshold` decision is unchanged by
+    /// the SIMD knob.  Multi-level requests lower
     /// to a `PyramidPlan` and execute in place on strided level views;
     /// levels that shrink under `parallel_threshold` gracefully fall
     /// back to the scalar path inside the same run (the plan's
@@ -299,6 +314,7 @@ impl Coordinator {
         let engine = self.engine(request.scheme, &wavelet, request.boundary);
         let metrics = self.metrics.clone();
         let threshold = self.cfg.parallel_threshold;
+        let simd = self.cfg.simd;
         let use_parallel = request.image.width * request.image.height >= threshold;
         let parallel = use_parallel.then(|| self.parallel_executor());
         let inverse = request.inverse;
@@ -307,11 +323,14 @@ impl Coordinator {
         self.pool.submit(move || {
             let backend = if parallel.is_some() {
                 Backend::NativeParallel
+            } else if simd {
+                Backend::NativeSimd
             } else {
                 Backend::Native
             };
             let exec: &dyn PlanExecutor = match &parallel {
                 Some(px) => px.as_ref(),
+                None if simd => &SimdExecutor,
                 None => &ScalarExecutor,
             };
             let result = if levels <= 1 {

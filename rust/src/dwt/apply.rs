@@ -17,6 +17,17 @@ use crate::polyphase::{Poly, PolyMatrix};
 
 /// Execute one fused stencil kernel: `out` is fully overwritten.
 pub fn run_stencil(st: &Stencil, inp: &Planes, out: &mut Planes, boundary: Boundary) {
+    run_stencil_ex(st, inp, out, boundary, false)
+}
+
+/// [`run_stencil`] with the `vector` interior-body switch.
+pub fn run_stencil_ex(
+    st: &Stencil,
+    inp: &Planes,
+    out: &mut Planes,
+    boundary: Boundary,
+    vector: bool,
+) {
     debug_assert!(inp.w2 == out.w2 && inp.h2 == out.h2 && inp.stride == out.stride);
     let h2 = inp.h2;
     let [o0, o1, o2, o3] = &mut out.p;
@@ -26,8 +37,13 @@ pub fn run_stencil(st: &Stencil, inp: &Planes, out: &mut Planes, boundary: Bound
         o2.as_mut_slice(),
         o3.as_mut_slice(),
     ];
-    run_stencil_rows(st, inp, &mut rows, 0, h2, boundary);
+    run_stencil_rows_ex(st, inp, &mut rows, 0, h2, boundary, vector);
 }
+
+// The accumulation statement of both stencil executors is
+// `vecn::axpy_opt` — the shared scalar-vs-lane-group dispatch, so the
+// per-element mul-then-add cannot drift from the lift kernels'.
+use super::vecn::axpy_opt as acc_run;
 
 /// [`run_stencil`] restricted to output rows `y0..y1`: `out[i]` is the
 /// band of plane `i` covering exactly those rows (`(y1 - y0) * stride`
@@ -45,9 +61,25 @@ pub fn run_stencil_rows(
     y1: usize,
     boundary: Boundary,
 ) {
+    run_stencil_rows_ex(st, inp, out, y0, y1, boundary, false)
+}
+
+/// [`run_stencil_rows`] with the `vector` interior-body switch: the
+/// unit-stride accumulation runs of every term stream whole lane-group
+/// column runs ([`vecn::axpy`]); the wrap/fold columns at row edges
+/// stay scalar.  Bit-exact with the scalar body by construction.
+pub fn run_stencil_rows_ex(
+    st: &Stencil,
+    inp: &Planes,
+    out: &mut [&mut [f32]; 4],
+    y0: usize,
+    y1: usize,
+    boundary: Boundary,
+    vector: bool,
+) {
     match boundary {
-        Boundary::Periodic => run_stencil_periodic(st, inp, out, y0, y1),
-        Boundary::Symmetric => run_stencil_symmetric(st, inp, out, y0, y1),
+        Boundary::Periodic => run_stencil_periodic(st, inp, out, y0, y1, vector),
+        Boundary::Symmetric => run_stencil_symmetric(st, inp, out, y0, y1, vector),
     }
 }
 
@@ -65,6 +97,7 @@ fn run_stencil_periodic(
     out: &mut [&mut [f32]; 4],
     y0: usize,
     y1: usize,
+    vector: bool,
 ) {
     let (w2, h2, stride) = (inp.w2, inp.h2, inp.stride);
     for i in 0..4 {
@@ -92,18 +125,15 @@ fn run_stencil_periodic(
                 let sy = (y + shift_row) % h2;
                 let src = &inp.p[j][sy * stride..sy * stride + w2];
                 if shift_col == 0 {
-                    for x in 0..w2 {
-                        dst[x] += c * src[x];
-                    }
+                    acc_run(dst, src, c, vector);
                 } else {
+                    // split at the wrap point: both halves are
+                    // unit-stride runs
                     let head = w2 - shift_col;
                     let (s_hi, s_lo) = (&src[shift_col..], &src[..shift_col]);
-                    for x in 0..head {
-                        dst[x] += c * s_hi[x];
-                    }
-                    for x in head..w2 {
-                        dst[x] += c * s_lo[x - head];
-                    }
+                    let (d_hi, d_lo) = dst.split_at_mut(head);
+                    acc_run(d_hi, s_hi, c, vector);
+                    acc_run(d_lo, s_lo, c, vector);
                 }
             }
         }
@@ -121,11 +151,22 @@ fn run_stencil_symmetric(
     out: &mut [&mut [f32]; 4],
     y0: usize,
     y1: usize,
+    vector: bool,
 ) {
     let (w2, h2, stride) = (inp.w2, inp.h2, inp.stride);
+    // the term's x-interior: the span where the fold is the identity
+    // (`xi[x] == x + km`), so the read is a unit-stride run — the same
+    // interior/tail seam the lift kernels split on
+    let x_interior = |km: i32| -> (usize, usize) {
+        let lo = (-(km as i64)).clamp(0, w2 as i64) as usize;
+        let hi = (w2 as i64 - (km as i64).max(0)).clamp(lo as i64, w2 as i64) as usize;
+        (lo, hi)
+    };
+    // (src plane, x fold table, x interior, y fold table per band row,
+    // coeff)
+    type Term = (usize, Vec<usize>, (usize, usize), Vec<usize>, f32);
     for i in 0..4 {
-        // (src plane, x fold table, y fold table per band row, coeff)
-        let terms: Vec<(usize, Vec<usize>, Vec<usize>, f32)> = st.rows[i]
+        let terms: Vec<Term> = st.rows[i]
             .iter()
             .map(|&(j, km, kn, c)| {
                 let hodd = plane_is_odd(j, Axis::Horizontal);
@@ -136,7 +177,7 @@ fn run_stencil_symmetric(
                 let yi = (y0..y1)
                     .map(|y| fold_sym(y as i64 + kn as i64, h2 as i64, vodd))
                     .collect();
-                (j, xi, yi, c)
+                (j, xi, x_interior(km), yi, c)
             })
             .collect();
         let plane = &mut *out[i];
@@ -144,10 +185,21 @@ fn run_stencil_symmetric(
             let dst_row = (y - y0) * stride;
             let drow = &mut plane[dst_row..dst_row + w2];
             drow.fill(0.0);
-            for (j, xi, yi, c) in &terms {
+            for (j, xi, (lo, hi), yi, c) in &terms {
+                let (lo, hi) = (*lo, *hi);
                 let sy = yi[y - y0];
                 let srow = &inp.p[*j][sy * stride..sy * stride + w2];
-                for x in 0..w2 {
+                // folded left edge, unit-stride interior, folded right
+                // edge — per-element ops identical to one full folded
+                // sweep, since the fold is the identity on the interior
+                for x in 0..lo {
+                    drow[x] += *c * srow[xi[x]];
+                }
+                if lo < hi {
+                    let off = xi[lo]; // == lo + km
+                    acc_run(&mut drow[lo..hi], &srow[off..off + (hi - lo)], *c, vector);
+                }
+                for x in hi..w2 {
                     drow[x] += *c * srow[xi[x]];
                 }
             }

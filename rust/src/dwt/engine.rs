@@ -4,7 +4,8 @@
 //! special cases remain: separable lifting, the non-separable schemes,
 //! and the section-5 optimized groupings all execute the same IR — and
 //! the `*_with` methods accept any [`PlanExecutor`] backend (scalar,
-//! band-parallel, future SIMD/GPU) for the same compiled plans.
+//! band-parallel, SIMD, future GPU dispatch) for the same compiled
+//! plans.
 
 use super::executor::{PlanExecutor, ScalarExecutor};
 use super::lifting::Boundary;

@@ -312,24 +312,46 @@ pub fn band_ranges(h2: usize, n: usize) -> Vec<Range<usize>> {
 
 /// Band-parallel plan executor: horizontal bands on a persistent
 /// thread pool, phase barriers as halo exchanges (module docs).
+///
+/// The `vector` knob composes SIMD *under* band-parallelism: each band
+/// runs the vectorized interior bodies of the shared row-range kernels
+/// — lane-groups within threads, the CPU analogue of the paper's
+/// work-group x lane hierarchy.  The knob never changes a single
+/// output bit (the interiors are bit-exact either way), only how the
+/// interior arithmetic is issued.
 pub struct ParallelExecutor {
     pool: BandPool,
+    vector: bool,
 }
 
 impl ParallelExecutor {
-    /// Pool sized by [`default_threads`] (`PALLAS_THREADS` override).
+    /// Pool sized by [`default_threads`] (`PALLAS_THREADS` override),
+    /// scalar interior bodies.
     pub fn new() -> Self {
         Self::with_threads(default_threads())
     }
 
     pub fn with_threads(threads: usize) -> Self {
+        Self::with_threads_vector(threads, false)
+    }
+
+    /// Explicit thread count *and* interior-body selection (`vector ==
+    /// true` is the parallel+simd configuration the coordinator runs by
+    /// default; `PALLAS_SIMD=0` turns it off service-wide).
+    pub fn with_threads_vector(threads: usize, vector: bool) -> Self {
         Self {
             pool: BandPool::new(threads),
+            vector,
         }
     }
 
     pub fn threads(&self) -> usize {
         self.pool.size()
+    }
+
+    /// Whether bands run the vectorized interior bodies.
+    pub fn vector(&self) -> bool {
+        self.vector
     }
 
     /// Run one in-place phase band-parallel.  Planes some kernel of the
@@ -358,12 +380,13 @@ impl ParallelExecutor {
                 shared[i] = Some(p.as_slice());
             }
         }
+        let vector = self.vector;
         let mut iters = banded.map(Vec::into_iter);
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bands.len());
         for range in bands.iter().cloned() {
             let mine: [Option<&mut [f32]>; 4] = std::array::from_fn(|i| iters[i].next());
             jobs.push(Box::new(move || {
-                run_band_kernels(kernels, mine, shared, range, stride, w2, h2, boundary);
+                run_band_kernels(kernels, mine, shared, range, stride, w2, h2, boundary, vector);
             }));
         }
         self.pool.scope_run(jobs);
@@ -385,6 +408,7 @@ impl ParallelExecutor {
         let mut b1 = split_bands(o1.as_mut_slice(), bands, stride).into_iter();
         let mut b2 = split_bands(o2.as_mut_slice(), bands, stride).into_iter();
         let mut b3 = split_bands(o3.as_mut_slice(), bands, stride).into_iter();
+        let vector = self.vector;
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bands.len());
         for range in bands.iter().cloned() {
             let chunk = [
@@ -395,7 +419,9 @@ impl ParallelExecutor {
             ];
             jobs.push(Box::new(move || {
                 let mut chunk = chunk;
-                apply::run_stencil_rows(st, inp, &mut chunk, range.start, range.end, boundary);
+                apply::run_stencil_rows_ex(
+                    st, inp, &mut chunk, range.start, range.end, boundary, vector,
+                );
             }));
         }
         self.pool.scope_run(jobs);
@@ -410,14 +436,19 @@ impl Default for ParallelExecutor {
 
 impl PlanExecutor for ParallelExecutor {
     fn name(&self) -> &'static str {
-        "parallel"
+        if self.vector {
+            "parallel+simd"
+        } else {
+            "parallel"
+        }
     }
 
     fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>) {
         let bands = band_ranges(planes.h2, self.pool.size());
         if bands.len() <= 1 {
-            // too short to band (or a 1-thread pool): scalar path
-            plan.execute_with(planes, scratch);
+            // too short to band (or a 1-thread pool): single-band path,
+            // keeping this executor's interior-body selection
+            plan.execute_opts(planes, scratch, self.vector);
             return;
         }
         for step in &plan.steps {
@@ -468,6 +499,7 @@ fn run_band_kernels(
     w2: usize,
     h2: usize,
     boundary: Boundary,
+    vector: bool,
 ) {
     let n_rows = rows.end - rows.start;
     for k in kernels {
@@ -477,6 +509,7 @@ fn run_band_kernels(
                 src,
                 axis,
                 taps,
+                class,
             } => {
                 let src_odd = plane_is_odd(*src, *axis);
                 match axis {
@@ -484,19 +517,24 @@ fn run_band_kernels(
                         if let Some(full) = shared[*src] {
                             let srows = &full[rows.start * stride..rows.end * stride];
                             let d = mine[*dst].as_deref_mut().expect("written plane is banded");
-                            lifting::lift_rows_h(d, srows, stride, w2, n_rows, taps, boundary,
-                                                 src_odd);
+                            lifting::lift_rows_h_ex(
+                                d, srows, stride, w2, n_rows, taps, *class, boundary, src_odd,
+                                vector,
+                            );
                         } else {
                             let (d, s) = two_chunks(&mut mine, *dst, *src);
-                            lifting::lift_rows_h(d, s, stride, w2, n_rows, taps, boundary,
-                                                 src_odd);
+                            lifting::lift_rows_h_ex(
+                                d, s, stride, w2, n_rows, taps, *class, boundary, src_odd,
+                                vector,
+                            );
                         }
                     }
                     Axis::Vertical => {
                         let s = shared[*src].expect("vertical source is phase-shared");
                         let d = mine[*dst].as_deref_mut().expect("written plane is banded");
-                        lifting::lift_rows_v(
+                        lifting::lift_rows_v_ex(
                             d, s, stride, w2, h2, rows.start, rows.end, taps, boundary, src_odd,
+                            vector,
                         );
                     }
                 }
@@ -506,9 +544,8 @@ fn run_band_kernels(
                     if (f - 1.0).abs() > 1e-12 {
                         let d = mine[c].as_deref_mut().expect("scaled plane is banded");
                         for r in 0..n_rows {
-                            for v in &mut d[r * stride..r * stride + w2] {
-                                *v *= f;
-                            }
+                            let row = &mut d[r * stride..r * stride + w2];
+                            crate::dwt::vecn::scale_opt(row, f, vector);
                         }
                     }
                 }

@@ -7,6 +7,7 @@
 
 use super::plan::fold_sym;
 use super::planes::Planes;
+use super::vecn;
 use crate::polyphase::wavelets::Wavelet;
 
 /// Which axis a 1-D lifting step runs along.
@@ -55,6 +56,56 @@ pub fn fold_1d(i: i64, n: i64, boundary: Boundary, odd: bool) -> usize {
     }
 }
 
+/// Shape classification of a lift kernel's taps, computed **once at
+/// plan lowering time** ([`classify_taps`]) and carried on
+/// `Kernel::Lift` — not re-derived per row-range call.  The symmetric
+/// 2-tap shape (every CDF predict/update) gets the fused single-pass
+/// body `d[x] += c * (s[x+k0] + s[x+k1])`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TapClass {
+    /// Two taps with (f64-)equal coefficients.
+    Sym2 { k0: i32, k1: i32, c: f32 },
+    /// Anything else: per-tap unit-stride sweeps.
+    Generic,
+}
+
+/// Classify a tap list.  The equality tolerance is on the *f64* lowered
+/// coefficients (1e-15): pairs that differ by less than that are
+/// indistinguishable after the cast to the f32 the kernels multiply
+/// with, so fusing them is exact in f32 — asserted by the
+/// `near_equal_taps` regression test below.
+pub fn classify_taps(taps: &[(i32, f64)]) -> TapClass {
+    match taps {
+        [(k0, c0), (k1, c1)] if (c0 - c1).abs() < 1e-15 => TapClass::Sym2 {
+            k0: *k0,
+            k1: *k1,
+            c: *c0 as f32,
+        },
+        _ => TapClass::Generic,
+    }
+}
+
+/// The interior/tail seam shared by every backend: the span of an
+/// `n`-sample axis a reach-`reach` kernel can process without boundary
+/// folds (`None` when the axis is too short and the whole range must
+/// take the folded path).  Scalar, band-parallel, and SIMD execution
+/// all split on exactly this seam, which is why their boundary columns
+/// and rows are literally the same code.
+#[inline]
+pub fn interior_span(n: usize, reach: usize) -> Option<(usize, usize)> {
+    if n > 2 * reach {
+        Some((reach, n - reach))
+    } else {
+        None
+    }
+}
+
+/// Largest absolute tap offset — the kernel's 1-D reach.
+#[inline]
+pub fn taps_reach(taps: &[(i32, f64)]) -> usize {
+    taps.iter().map(|&(k, _)| k.unsigned_abs() as usize).max().unwrap_or(0)
+}
+
 /// `dst[i] += sum_k c_k src[i + k]` along `axis`, periodic, in place.
 ///
 /// The tap offsets of all three wavelets are tiny (|k| <= 2), so the
@@ -94,9 +145,44 @@ pub fn lift_axis_b(
     boundary: Boundary,
     src_is_odd: bool,
 ) {
+    lift_axis_c(
+        dst,
+        src,
+        stride,
+        w2,
+        h2,
+        taps,
+        classify_taps(taps),
+        axis,
+        boundary,
+        src_is_odd,
+        false,
+    )
+}
+
+/// [`lift_axis_b`] with a pre-computed [`TapClass`] (plan lowering
+/// classifies once per kernel) and the `vector` interior-body switch.
+#[allow(clippy::too_many_arguments)]
+pub fn lift_axis_c(
+    dst: &mut [f32],
+    src: &[f32],
+    stride: usize,
+    w2: usize,
+    h2: usize,
+    taps: &[(i32, f64)],
+    class: TapClass,
+    axis: Axis,
+    boundary: Boundary,
+    src_is_odd: bool,
+    vector: bool,
+) {
     match axis {
-        Axis::Horizontal => lift_rows_h(dst, src, stride, w2, h2, taps, boundary, src_is_odd),
-        Axis::Vertical => lift_rows_v(dst, src, stride, w2, h2, 0, h2, taps, boundary, src_is_odd),
+        Axis::Horizontal => lift_rows_h_ex(
+            dst, src, stride, w2, h2, taps, class, boundary, src_is_odd, vector,
+        ),
+        Axis::Vertical => lift_rows_v_ex(
+            dst, src, stride, w2, h2, 0, h2, taps, boundary, src_is_odd, vector,
+        ),
     }
 }
 
@@ -115,9 +201,43 @@ pub fn lift_rows_h(
     boundary: Boundary,
     src_is_odd: bool,
 ) {
+    lift_rows_h_ex(
+        dst,
+        src,
+        stride,
+        w2,
+        rows,
+        taps,
+        classify_taps(taps),
+        boundary,
+        src_is_odd,
+        false,
+    )
+}
+
+/// [`lift_rows_h`] with explicit tap class and interior body selection.
+/// `vector == true` runs the interior in [`vecn`] lane-groups (8 output
+/// pixels per group); the boundary prologue/epilogue always takes the
+/// scalar folded path.  Both interior bodies perform the identical
+/// per-element operation sequence, so the output is bit-exact either
+/// way — the [`interior_span`] seam only decides *where* the folded
+/// code stops, never *what* is computed.
+#[allow(clippy::too_many_arguments)]
+pub fn lift_rows_h_ex(
+    dst: &mut [f32],
+    src: &[f32],
+    stride: usize,
+    w2: usize,
+    rows: usize,
+    taps: &[(i32, f64)],
+    class: TapClass,
+    boundary: Boundary,
+    src_is_odd: bool,
+    vector: bool,
+) {
     let fold = move |i: i64, n: i64| -> usize { fold_1d(i, n, boundary, src_is_odd) };
-    let max_reach = taps.iter().map(|&(k, _)| k.unsigned_abs() as usize).max().unwrap_or(0);
-    if w2 <= 2 * max_reach {
+    let max_reach = taps_reach(taps);
+    let Some((lo, hi)) = interior_span(w2, max_reach) else {
         // degenerate small plane: plain modular path
         for y in 0..rows {
             let row = y * stride;
@@ -131,19 +251,13 @@ pub fn lift_rows_h(
             }
         }
         return;
-    }
-    // symmetric 2-tap steps (all CDF wavelets) get a fused
-    // single-pass kernel: d[x] += c * (s[x+k0] + s[x+k1])
-    let sym2 = match taps {
-        [(k0, c0), (k1, c1)] if (c0 - c1).abs() < 1e-15 => Some((*k0, *k1, *c0 as f32)),
-        _ => None,
     };
     for y in 0..rows {
         let row = y * stride;
         let s = &src[row..row + w2];
         let d = &mut dst[row..row + w2];
-        // prologue + epilogue with wrap
-        for x in (0..max_reach).chain(w2 - max_reach..w2) {
+        // prologue + epilogue with wrap (scalar in every backend)
+        for x in (0..lo).chain(hi..w2) {
             let mut acc = 0.0f32;
             for &(k, c) in taps {
                 let xx = fold(x as i64 + k as i64, w2 as i64);
@@ -151,28 +265,19 @@ pub fn lift_rows_h(
             }
             d[x] += acc;
         }
-        // interior: no wrap possible; per-tap unit-stride sweeps
-        // auto-vectorize (the per-pixel tap loop does not)
-        let (lo, hi) = (max_reach, w2 - max_reach);
-        if let Some((k0, k1, c)) = sym2 {
+        // interior: no wrap possible; the fused symmetric 2-tap body
+        // (all CDF wavelets) or per-tap unit-stride sweeps, as lane
+        // groups or scalar loops per `vector`
+        let n = hi - lo;
+        if let TapClass::Sym2 { k0, k1, c } = class {
             let o0 = (lo as i64 + k0 as i64) as usize;
             let o1 = (lo as i64 + k1 as i64) as usize;
-            let n = hi - lo;
             let (s0, s1) = (&s[o0..o0 + n], &s[o1..o1 + n]);
-            let dd = &mut d[lo..hi];
-            for i in 0..n {
-                dd[i] += c * (s0[i] + s1[i]);
-            }
+            vecn::axpy2_opt(&mut d[lo..hi], s0, s1, c, vector);
         } else {
             for &(k, c) in taps {
                 let off = (lo as i64 + k as i64) as usize;
-                let n = hi - lo;
-                let sv = &s[off..off + n];
-                let dd = &mut d[lo..hi];
-                let cf = c as f32;
-                for i in 0..n {
-                    dd[i] += cf * sv[i];
-                }
+                vecn::axpy_opt(&mut d[lo..hi], &s[off..off + n], c as f32, vector);
             }
         }
     }
@@ -196,9 +301,33 @@ pub fn lift_rows_v(
     boundary: Boundary,
     src_is_odd: bool,
 ) {
+    lift_rows_v_ex(
+        dst, src, stride, w2, h2, y0, y1, taps, boundary, src_is_odd, false,
+    )
+}
+
+/// [`lift_rows_v`] with the `vector` interior body switch: interior
+/// rows (the [`interior_span`] of the *vertical* axis) stream whole
+/// lane-group column runs per tap; rows inside the top/bottom fold
+/// reach always take the scalar folded path.  Bit-exact either way.
+#[allow(clippy::too_many_arguments)]
+pub fn lift_rows_v_ex(
+    dst: &mut [f32],
+    src: &[f32],
+    stride: usize,
+    w2: usize,
+    h2: usize,
+    y0: usize,
+    y1: usize,
+    taps: &[(i32, f64)],
+    boundary: Boundary,
+    src_is_odd: bool,
+    vector: bool,
+) {
     let fold = move |i: i64, n: i64| -> usize { fold_1d(i, n, boundary, src_is_odd) };
-    let max_reach = taps.iter().map(|&(k, _)| k.unsigned_abs() as usize).max().unwrap_or(0);
-    if h2 <= 2 * max_reach {
+    let max_reach = taps_reach(taps);
+    let interior = interior_span(h2, max_reach);
+    if interior.is_none() {
         for y in y0..y1 {
             let dst_row = (y - y0) * stride;
             for x in 0..w2 {
@@ -212,10 +341,11 @@ pub fn lift_rows_v(
         }
         return;
     }
+    let (lo, hi) = interior.expect("checked above");
     // row-major friendly: iterate rows outermost, whole rows of
     // MACs per tap (unit-stride inner loops)
     for y in y0..y1 {
-        let wrap = y < max_reach || y >= h2 - max_reach;
+        let wrap = y < lo || y >= hi;
         let dst_row = (y - y0) * stride;
         if wrap {
             for x in 0..w2 {
@@ -229,11 +359,8 @@ pub fn lift_rows_v(
         } else {
             for &(k, c) in taps {
                 let src_row = ((y as i64 + k as i64) as usize) * stride;
-                let cf = c as f32;
                 let (s, d) = (&src[src_row..src_row + w2], &mut dst[dst_row..dst_row + w2]);
-                for x in 0..w2 {
-                    d[x] += cf * s[x];
-                }
+                vecn::axpy_opt(d, s, c as f32, vector);
             }
         }
     }
@@ -402,6 +529,91 @@ mod tests {
         forward_in_place(&w, &mut planes);
         inverse_in_place(&w, &mut planes);
         assert!(planes.merge().max_abs_diff(&img) < 1e-3);
+    }
+
+    #[test]
+    fn classify_taps_shapes() {
+        // every CDF predict/update is the fused symmetric 2-tap shape
+        for w in Wavelet::all() {
+            for pr in &w.pairs {
+                for taps in [&pr.predict, &pr.update] {
+                    if taps.len() == 2 && (taps[0].1 - taps[1].1).abs() < 1e-15 {
+                        assert!(matches!(classify_taps(taps), TapClass::Sym2 { .. }));
+                    }
+                }
+            }
+        }
+        // 1-tap, 3-tap, and unequal 2-tap lists stay generic
+        assert_eq!(classify_taps(&[(0, 0.5)]), TapClass::Generic);
+        assert_eq!(
+            classify_taps(&[(-1, 0.25), (0, 0.5), (1, 0.25)]),
+            TapClass::Generic
+        );
+        assert_eq!(classify_taps(&[(0, 0.5), (1, 0.5 + 1e-9)]), TapClass::Generic);
+    }
+
+    #[test]
+    fn near_equal_taps_regression() {
+        // the tolerance edge: a pair differing by LESS than 1e-15 takes
+        // the fused path with c0 for both taps — that must be exact in
+        // the f32 arithmetic the kernels run, because both coefficients
+        // round to the same f32 (the fix hoisted this classification
+        // into lowering; the invariant it relies on lives here)
+        let c0 = 0.443_506_852_043_971_2_f64;
+        let c1 = c0 + 0.4e-15;
+        let taps = vec![(0i32, c0), (1i32, c1)];
+        assert!(matches!(classify_taps(&taps), TapClass::Sym2 { .. }));
+        assert_eq!(c0 as f32, c1 as f32, "sub-tolerance pair must collapse in f32");
+        // the fused body rounds differently from per-tap sweeps
+        // (c*(s0+s1) vs c*s0 + c*s1) — that is fine as long as every
+        // backend agrees on the class.  What the hoist must guarantee:
+        // (a) the wrapper's internal classification equals the lowered
+        // class, so the hand-scheduled path and the plan path cannot
+        // drift, and (b) scalar and vector interiors of the SAME class
+        // are bit-identical.
+        let w2 = 33usize;
+        let src: Vec<f32> = (0..w2).map(|i| ((i * 13 + 5) % 29) as f32 * 0.71).collect();
+        let run = |class: TapClass, vector: bool| -> Vec<f32> {
+            let mut d = vec![0.25f32; w2];
+            lift_rows_h_ex(
+                &mut d, &src, w2, w2, 1, &taps, class, Boundary::Periodic, false, vector,
+            );
+            d
+        };
+        let via_wrapper = {
+            let mut d = vec![0.25f32; w2];
+            lift_rows_h(&mut d, &src, w2, w2, 1, &taps, Boundary::Periodic, false);
+            d
+        };
+        let lowered = run(classify_taps(&taps), false);
+        assert!(
+            via_wrapper.iter().zip(&lowered).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "wrapper classification drifted from the lowered class"
+        );
+        let vectored = run(classify_taps(&taps), true);
+        assert!(
+            lowered.iter().zip(&vectored).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "vector interior diverges from scalar for the fused class"
+        );
+        // (c) the fused and generic bodies agree to f32 accuracy (the
+        // classification tolerance is far below f32 resolution)
+        let generic = run(TapClass::Generic, false);
+        for (a, b) in lowered.iter().zip(&generic) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        // and a pair JUST outside the tolerance must stay generic
+        assert_eq!(
+            classify_taps(&[(0, c0), (1, c0 + 1.1e-15)]),
+            TapClass::Generic
+        );
+    }
+
+    #[test]
+    fn interior_span_seam() {
+        assert_eq!(interior_span(16, 2), Some((2, 14)));
+        assert_eq!(interior_span(16, 0), Some((0, 16)));
+        assert_eq!(interior_span(4, 2), None, "w2 == 2*reach is degenerate");
+        assert_eq!(interior_span(3, 2), None);
     }
 
     #[test]

@@ -8,13 +8,18 @@
 //!   and scale kernels, with barrier structure and per-step cost/halo
 //!   metadata preserved.  One plan drives the engine, the gpusim cost
 //!   model, and the coordinator.
-//! * [`executor`] — *how* a plan runs: [`executor::ScalarExecutor`]
-//!   (single-threaded reference) and [`executor::ParallelExecutor`]
-//!   (horizontal bands on a persistent thread pool, synchronizing
-//!   exactly where a kernel's vertical reach crosses a band edge — the
-//!   CPU analogue of the paper's work-group halo exchange).  Backends
-//!   are bit-exact with each other; a new backend implements the trait
-//!   and touches no per-scheme code.
+//! * [`executor`] / [`simd`] — *how* a plan runs:
+//!   [`executor::ScalarExecutor`] (single-threaded reference),
+//!   [`executor::ParallelExecutor`] (horizontal bands on a persistent
+//!   thread pool, synchronizing exactly where a kernel's vertical reach
+//!   crosses a band edge — the CPU analogue of the paper's work-group
+//!   halo exchange), and [`simd::SimdExecutor`] (lane-group interiors
+//!   through the [`vecn`] portable vector layer, scalar folded tails
+//!   outside the `lifting::interior_span` seam).  SIMD composes under
+//!   band parallelism (`ParallelExecutor::with_threads_vector`) —
+//!   lane-groups within threads, the work-group x lane hierarchy.
+//!   Backends are bit-exact with each other; a new backend implements
+//!   the trait and touches no per-scheme code.
 //! * [`lifting`] — the in-place 1-D lifting kernel library the plan
 //!   dispatches into, as row-range bodies both executors share (plus
 //!   the hand-scheduled separable reference).
@@ -42,6 +47,8 @@ pub mod multilevel;
 pub mod plan;
 pub mod planes;
 pub mod pyramid;
+pub mod simd;
+pub mod vecn;
 
 pub use engine::{Engine, PlanVariant};
 pub use executor::{default_threads, ParallelExecutor, PlanExecutor, ScalarExecutor};
@@ -49,3 +56,4 @@ pub use lifting::{Axis, Boundary};
 pub use plan::KernelPlan;
 pub use planes::{Image, Planes};
 pub use pyramid::PyramidPlan;
+pub use simd::{default_simd, SimdExecutor};

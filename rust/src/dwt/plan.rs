@@ -39,8 +39,9 @@
 //! symmetric (verified against the separable-lifting reference).
 
 use super::apply;
-use super::lifting::{self, Axis, Boundary};
+use super::lifting::{self, Axis, Boundary, TapClass};
 use super::planes::Planes;
+use super::vecn;
 use crate::polyphase::{Poly, PolyMatrix};
 
 /// 1-D taps `(offset, coeff)` along one axis.
@@ -50,12 +51,18 @@ pub type Taps = Vec<(i32, f64)>;
 #[derive(Debug, Clone)]
 pub enum Kernel {
     /// In-place `planes[dst] += taps(planes[src])` along `axis`
-    /// (dispatched to [`lifting::lift_axis_b`]).
+    /// (dispatched to [`lifting::lift_axis_c`]).
     Lift {
         dst: usize,
         src: usize,
         axis: Axis,
         taps: Taps,
+        /// Tap-shape classification, computed once here at lowering
+        /// ([`lifting::classify_taps`]) rather than per row-range call
+        /// — every backend reads the same class, so the fused
+        /// symmetric-2-tap body can never be taken by one executor and
+        /// skipped by another.
+        class: TapClass,
     },
     /// Fused out-of-place stencil, double-buffered through the scratch
     /// planes (dispatched to [`apply::run_stencil`]).
@@ -183,6 +190,14 @@ impl KernelPlan {
     /// [`KernelPlan::execute`] with a caller-owned scratch slot, so
     /// repeated transforms reuse one double-buffer allocation.
     pub fn execute_with(&self, planes: &mut Planes, scratch: &mut Option<Planes>) {
+        self.execute_opts(planes, scratch, false)
+    }
+
+    /// [`KernelPlan::execute_with`] with the `vector` interior-body
+    /// switch: `true` runs every kernel's interior in [`vecn`]
+    /// lane-groups (the [`crate::dwt::simd::SimdExecutor`] path),
+    /// `false` the plain scalar loops.  Output is bit-exact either way.
+    pub fn execute_opts(&self, planes: &mut Planes, scratch: &mut Option<Planes>, vector: bool) {
         for step in &self.steps {
             for kernel in &step.kernels {
                 match kernel {
@@ -191,28 +206,30 @@ impl KernelPlan {
                         src,
                         axis,
                         taps,
+                        class,
                     } => {
                         let (st, w2, h2) = (planes.stride, planes.w2, planes.h2);
                         let src_odd = plane_is_odd(*src, *axis);
                         let (d, s) = two_planes(&mut planes.p, *dst, *src);
-                        lifting::lift_axis_b(d, s, st, w2, h2, taps, *axis, self.boundary,
-                                             src_odd);
+                        lifting::lift_axis_c(
+                            d, s, st, w2, h2, taps, *class, *axis, self.boundary, src_odd,
+                            vector,
+                        );
                     }
                     Kernel::Scale { factors } => {
                         let (st, w2, h2) = (planes.stride, planes.w2, planes.h2);
                         for (c, &f) in factors.iter().enumerate() {
                             if (f - 1.0).abs() > 1e-12 {
                                 for y in 0..h2 {
-                                    for v in &mut planes.p[c][y * st..y * st + w2] {
-                                        *v *= f;
-                                    }
+                                    let row = &mut planes.p[c][y * st..y * st + w2];
+                                    vecn::scale_opt(row, f, vector);
                                 }
                             }
                         }
                     }
                     Kernel::Stencil(st) => {
                         let out = ensure_scratch(planes, scratch);
-                        apply::run_stencil(st, planes, out, self.boundary);
+                        apply::run_stencil_ex(st, planes, out, self.boundary, vector);
                         std::mem::swap(planes, out);
                     }
                 }
@@ -458,12 +475,7 @@ fn lower_unipotent(m: &PolyMatrix) -> Option<Vec<Kernel>> {
     let mut ks = Vec::with_capacity(entries.len());
     for (i, j) in entries {
         let (axis, taps) = taps_of(&m.m[i][j])?;
-        ks.push(Kernel::Lift {
-            dst: i,
-            src: j,
-            axis,
-            taps,
-        });
+        ks.push(lift(i, j, axis, &taps));
     }
     Some(ks)
 }
@@ -536,6 +548,7 @@ fn lift(dst: usize, src: usize, axis: Axis, taps: &[(i32, f64)]) -> Kernel {
         dst,
         src,
         axis,
+        class: lifting::classify_taps(taps),
         taps: taps.to_vec(),
     }
 }

@@ -1,0 +1,255 @@
+//! Portable fixed-width f32 lane layer — the vector substrate of the
+//! SIMD plan executor ([`crate::dwt::simd::SimdExecutor`]).
+//!
+//! [`F32xN`] is a `wide`-style value type over `[f32; LANES]` with
+//! explicit lane-wise mul/add.  There is deliberately **no** nightly
+//! `std::simd` dependency and **no** fused multiply-add: every lane
+//! performs exactly the scalar sequence `d + c * s` (separate mul, then
+//! add), so a lane-group of 8 outputs computes bit for bit what 8
+//! scalar loop iterations compute, in any order the compiler issues
+//! them — lanes never interact.  The fixed-size-array chunked loops
+//! below are the shape LLVM reliably turns into packed SSE/AVX/NEON
+//! arithmetic at `opt-level=3` without arch-specific intrinsics.
+//!
+//! The helpers ([`axpy`], [`axpy2`], [`scale`]) are the vectorized
+//! interior bodies of the shared row-range kernels
+//! (`lifting::lift_rows_*`, `apply::run_stencil_rows_ex`); each handles
+//! its sub-lane-group remainder with the scalar statement it replaces,
+//! so callers never need length padding.
+
+/// Lane-group width in f32 samples (one AVX2 register; two NEON/SSE
+/// registers — the compiler splits the fixed-size array either way).
+pub const LANES: usize = 8;
+
+/// A lane-group of [`LANES`] f32 values with explicit element-wise
+/// arithmetic.  Operations are pure per-lane scalar f32 ops — no
+/// horizontal reductions, no reassociation, no FMA contraction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+#[repr(transparent)]
+pub struct F32xN(pub [f32; LANES]);
+
+impl F32xN {
+    /// All lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        Self([v; LANES])
+    }
+
+    /// Load the first [`LANES`] samples of `s`.
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> Self {
+        let mut a = [0.0f32; LANES];
+        a.copy_from_slice(&s[..LANES]);
+        Self(a)
+    }
+
+    /// Store into the first [`LANES`] samples of `d`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Lane-wise addition.
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        let mut a = self.0;
+        for (x, y) in a.iter_mut().zip(&o.0) {
+            *x += *y;
+        }
+        Self(a)
+    }
+
+    /// Lane-wise multiplication.
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        let mut a = self.0;
+        for (x, y) in a.iter_mut().zip(&o.0) {
+            *x *= *y;
+        }
+        Self(a)
+    }
+}
+
+/// `d[i] += c * s[i]` over equal-length slices, [`LANES`] outputs per
+/// lane-group, scalar remainder tail.  Bit-exact with the plain loop.
+#[inline]
+pub fn axpy(d: &mut [f32], s: &[f32], c: f32) {
+    debug_assert_eq!(d.len(), s.len());
+    let vc = F32xN::splat(c);
+    let mut dc = d.chunks_exact_mut(LANES);
+    let mut sc = s.chunks_exact(LANES);
+    for (dg, sg) in dc.by_ref().zip(sc.by_ref()) {
+        F32xN::load(dg).add(F32xN::load(sg).mul(vc)).store(dg);
+    }
+    for (x, y) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *x += c * *y;
+    }
+}
+
+/// `d[i] += c * (a[i] + b[i])` — the fused symmetric-2-tap lift body
+/// ([`crate::dwt::lifting::TapClass::Sym2`]), lane-grouped.
+#[inline]
+pub fn axpy2(d: &mut [f32], a: &[f32], b: &[f32], c: f32) {
+    debug_assert!(d.len() == a.len() && d.len() == b.len());
+    let vc = F32xN::splat(c);
+    let mut dc = d.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((dg, ag), bg) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+        F32xN::load(dg)
+            .add(F32xN::load(ag).add(F32xN::load(bg)).mul(vc))
+            .store(dg);
+    }
+    for ((x, y), z) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *x += c * (*y + *z);
+    }
+}
+
+/// The one scalar-vs-lane-group dispatch every kernel interior goes
+/// through: `vector == false` runs the plain scalar statement the lane
+/// body replaces.  Centralized here so the two bodies of each
+/// operation — whose per-element identity is the cross-backend
+/// bit-exactness invariant — live next to each other and cannot drift
+/// apart per call site.
+#[inline]
+pub fn axpy_opt(d: &mut [f32], s: &[f32], c: f32, vector: bool) {
+    if vector {
+        axpy(d, s, c);
+    } else {
+        debug_assert_eq!(d.len(), s.len());
+        for (x, y) in d.iter_mut().zip(s) {
+            *x += c * *y;
+        }
+    }
+}
+
+/// [`axpy2`] with the interior-body switch (see [`axpy_opt`]).
+#[inline]
+pub fn axpy2_opt(d: &mut [f32], a: &[f32], b: &[f32], c: f32, vector: bool) {
+    if vector {
+        axpy2(d, a, b, c);
+    } else {
+        debug_assert!(d.len() == a.len() && d.len() == b.len());
+        for ((x, y), z) in d.iter_mut().zip(a).zip(b) {
+            *x += c * (*y + *z);
+        }
+    }
+}
+
+/// [`scale`] with the interior-body switch (see [`axpy_opt`]).
+#[inline]
+pub fn scale_opt(d: &mut [f32], c: f32, vector: bool) {
+    if vector {
+        scale(d, c);
+    } else {
+        for x in d {
+            *x *= c;
+        }
+    }
+}
+
+/// `d[i] *= c`, lane-grouped.
+#[inline]
+pub fn scale(d: &mut [f32], c: f32) {
+    let vc = F32xN::splat(c);
+    let mut dc = d.chunks_exact_mut(LANES);
+    for dg in dc.by_ref() {
+        F32xN::load(dg).mul(vc).store(dg);
+    }
+    for x in dc.into_remainder() {
+        *x *= c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize, seed: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i * 37 + 11) % 101) as f32 * 0.37 + seed).collect()
+    }
+
+    #[test]
+    fn axpy_bit_exact_with_scalar_for_all_remainders() {
+        for n in [0, 1, 7, 8, 9, 15, 16, 17, 33, 100] {
+            let s = ramp(n, 0.25);
+            let mut d = ramp(n, -3.5);
+            let mut want = d.clone();
+            let c = 0.112_358_f32;
+            for i in 0..n {
+                want[i] += c * s[i];
+            }
+            axpy(&mut d, &s, c);
+            assert!(
+                d.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy2_bit_exact_with_fused_scalar() {
+        for n in [3, 8, 19, 64, 65] {
+            let a = ramp(n, 1.0);
+            let b = ramp(n, 2.0);
+            let mut d = ramp(n, -1.0);
+            let mut want = d.clone();
+            let c = -0.586f32;
+            for i in 0..n {
+                want[i] += c * (a[i] + b[i]);
+            }
+            axpy2(&mut d, &a, &b, c);
+            assert!(
+                d.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_bit_exact() {
+        for n in [0, 5, 8, 31] {
+            let mut d = ramp(n, 4.0);
+            let mut want = d.clone();
+            for v in want.iter_mut() {
+                *v *= 1.149_604_4;
+            }
+            scale(&mut d, 1.149_604_4);
+            assert!(d.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+
+    #[test]
+    fn opt_dispatch_bodies_agree_bit_for_bit() {
+        for n in [0, 1, 7, 8, 9, 33] {
+            let s = ramp(n, 0.5);
+            let b = ramp(n, 1.5);
+            let c = 0.707_f32;
+            let (mut d0, mut d1) = (ramp(n, -2.0), ramp(n, -2.0));
+            axpy_opt(&mut d0, &s, c, false);
+            axpy_opt(&mut d1, &s, c, true);
+            assert!(d0.iter().zip(&d1).all(|(x, y)| x.to_bits() == y.to_bits()), "axpy n={n}");
+            let (mut d0, mut d1) = (ramp(n, -2.0), ramp(n, -2.0));
+            axpy2_opt(&mut d0, &s, &b, c, false);
+            axpy2_opt(&mut d1, &s, &b, c, true);
+            assert!(d0.iter().zip(&d1).all(|(x, y)| x.to_bits() == y.to_bits()), "axpy2 n={n}");
+            let (mut d0, mut d1) = (ramp(n, 3.0), ramp(n, 3.0));
+            scale_opt(&mut d0, c, false);
+            scale_opt(&mut d1, c, true);
+            assert!(d0.iter().zip(&d1).all(|(x, y)| x.to_bits() == y.to_bits()), "scale n={n}");
+        }
+    }
+
+    #[test]
+    fn lane_ops_are_elementwise() {
+        let a = F32xN::splat(2.0);
+        let b = F32xN([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.mul(b).0, [2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 14.0, 16.0]);
+        assert_eq!(a.add(b).0, [3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]);
+    }
+}

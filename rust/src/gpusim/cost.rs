@@ -47,6 +47,7 @@ fn step_time_ms(
     ops_per_quad: f64,
     total_ops: f64,
     pixels: f64,
+    lane_gain: f64,
 ) -> f64 {
     let image_bytes = pixels * 4.0;
     // --- memory term ---
@@ -68,11 +69,40 @@ fn step_time_ms(
         // VLIW clause/register packing collapses past ~160 ops/quad
         gf *= spill_factor(total_ops, 160.0, 2.0);
     }
-    let alu_ms = flops / (gf * 1e9) * 1e3;
+    // vector issue: the lane-width parameter scales arithmetic
+    // throughput only — the memory term already assumes saturating
+    // wide accesses, which is why SIMD pays off exactly where a
+    // transform is compute-bound
+    let alu_ms = flops / (gf * 1e9) * 1e3 / lane_gain;
     device.launch_overhead_us / 1e3 + mem_ms.max(alu_ms)
 }
 
-/// Predict one point.
+/// Fraction of a `w2`-column row's outputs that fall in whole
+/// lane-groups of the kernel interior — the columns a `lanes`-wide
+/// executor actually vectorizes.  Reads the same
+/// [`crate::dwt::lifting::interior_span`] seam the executors split on:
+/// boundary columns and the sub-lane-group remainder stay scalar.
+pub fn vector_coverage(w2: usize, reach: usize, lanes: usize) -> f64 {
+    if lanes <= 1 || w2 == 0 {
+        return 0.0;
+    }
+    match crate::dwt::lifting::interior_span(w2, reach) {
+        None => 0.0,
+        Some((lo, hi)) => ((hi - lo) / lanes * lanes) as f64 / w2 as f64,
+    }
+}
+
+/// Amdahl speedup of the arithmetic stream when `coverage` of the
+/// outputs issue `lanes` wide: `1 / ((1 - c) + c / lanes)`.  Bounded by
+/// `lanes`, and exactly 1 for scalar issue.
+pub fn lane_speedup(coverage: f64, lanes: usize) -> f64 {
+    if lanes <= 1 {
+        return 1.0;
+    }
+    1.0 / ((1.0 - coverage) + coverage / lanes as f64)
+}
+
+/// Predict one point (scalar issue; [`predict_vec`] with wider lanes).
 pub fn predict(
     device: &Device,
     pipeline: PipelineKind,
@@ -93,6 +123,66 @@ pub fn predict(
                 s.ops_per_quad,
                 load.total_ops,
                 px,
+                1.0,
+            )
+        })
+        .sum();
+    let gbs = px * 4.0 / (time_ms * 1e-3) / 1e9;
+    SimPoint {
+        pixels,
+        time_ms,
+        gbs,
+    }
+}
+
+/// [`predict`] with a vector lane-width parameter: each step's
+/// arithmetic throughput is scaled by the Amdahl [`lane_speedup`] over
+/// that step's [`vector_coverage`] (per-step horizontal reach read off
+/// the same compiled plan the executors run — wide-reach steps leave
+/// more scalar boundary work).  `lanes == 1` reproduces [`predict`]
+/// exactly; the native `SimdExecutor` corresponds to
+/// `lanes == dwt::vecn::LANES`.
+pub fn predict_vec(
+    device: &Device,
+    pipeline: PipelineKind,
+    scheme: Scheme,
+    w: &Wavelet,
+    pixels: usize,
+    lanes: usize,
+) -> SimPoint {
+    use crate::dwt::lifting::Boundary;
+    use crate::dwt::plan::KernelPlan;
+    if lanes <= 1 {
+        // scalar issue: every lane gain is exactly 1.0 — skip the plan
+        // compile the per-step reaches would need
+        return predict(device, pipeline, scheme, w, pixels);
+    }
+    let load: SchemeLoad = scheme_load(scheme, w, pipeline);
+    let px = pixels as f64;
+    // component-plane width of a square image of this pixel count
+    let w2 = (((px.sqrt()) as usize) / 2).max(1);
+    let plan = KernelPlan::from_steps(
+        &crate::polyphase::schemes::build(scheme, w),
+        Boundary::Periodic,
+    );
+    // scheme_load derives its steps from this same chain; a mismatch
+    // would silently truncate the zip below, so fail loudly instead
+    assert_eq!(plan.steps.len(), load.steps.len(), "plan/load step drift");
+    let time_ms: f64 = load
+        .steps
+        .iter()
+        .zip(&plan.steps)
+        .map(|(s, ps)| {
+            let reach = ps.halo.2.max(ps.halo.3).max(0) as usize;
+            let gain = lane_speedup(vector_coverage(w2, reach, lanes), lanes);
+            step_time_ms(
+                device,
+                pipeline,
+                s.bytes_per_pixel,
+                s.ops_per_quad,
+                load.total_ops,
+                px,
+                gain,
             )
         })
         .sum();
@@ -261,6 +351,58 @@ mod tests {
             // throughput is normalized to level-0 bytes: deeper == lower
             assert!(predict_pyramid(&dev, pipe, Scheme::NsConv, &w, px, 3).gbs < single.gbs);
         }
+    }
+
+    #[test]
+    fn lane_width_one_reproduces_predict_exactly() {
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                for (dev, pipe) in [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)] {
+                    let a = predict(&dev, pipe, s, &w, 2048 * 2048);
+                    let b = predict_vec(&dev, pipe, s, &w, 2048 * 2048, 1);
+                    assert_eq!(a.time_ms, b.time_ms, "{} {}", w.name, s.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wider_lanes_never_slow_a_step_and_saturate_at_memory() {
+        let w = Wavelet::cdf97();
+        for (dev, pipe) in [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)] {
+            for s in Scheme::ALL {
+                let scalar = predict_vec(&dev, pipe, s, &w, 2048 * 2048, 1);
+                let v8 = predict_vec(&dev, pipe, s, &w, 2048 * 2048, 8);
+                let v16 = predict_vec(&dev, pipe, s, &w, 2048 * 2048, 16);
+                assert!(v8.time_ms <= scalar.time_ms + 1e-12, "{} on {}", s.name(), dev.label);
+                assert!(v16.time_ms <= v8.time_ms + 1e-12);
+                // the memory term is lane-agnostic: vector issue cannot
+                // push throughput past the bandwidth-bound asymptote
+                assert!(v16.gbs < dev.bandwidth_gbs);
+            }
+        }
+    }
+
+    #[test]
+    fn vector_coverage_reads_the_interior_seam() {
+        // 1024-column plane, reach 2: interior 1020 = 127 groups of 8
+        assert!((vector_coverage(1024, 2, 8) - (127.0 * 8.0 / 1024.0)).abs() < 1e-12);
+        // reach 0 (Haar): whole row vectorizes in groups
+        assert!((vector_coverage(1024, 0, 8) - 1.0).abs() < 1e-12);
+        // degenerate planes have no interior at all
+        assert_eq!(vector_coverage(4, 2, 8), 0.0);
+        assert_eq!(vector_coverage(0, 0, 8), 0.0);
+        // scalar issue: coverage is moot
+        assert_eq!(vector_coverage(1024, 2, 1), 0.0);
+    }
+
+    #[test]
+    fn lane_speedup_bounds() {
+        assert_eq!(lane_speedup(0.0, 8), 1.0);
+        assert!((lane_speedup(1.0, 8) - 8.0).abs() < 1e-12);
+        let s = lane_speedup(0.9, 8);
+        assert!(s > 1.0 && s < 8.0);
+        assert_eq!(lane_speedup(0.9, 1), 1.0);
     }
 
     #[test]

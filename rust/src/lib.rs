@@ -22,11 +22,14 @@
 //! updates, and scale kernels, with `Boundary::{Periodic, Symmetric}`
 //! threaded through the whole plan.  *How* a plan runs is a separate
 //! axis, the [`dwt::executor`] `PlanExecutor` trait: the scalar
-//! reference backend and the band-parallel backend (horizontal bands on
-//! a persistent thread pool, halo-synchronized at barrier phases — the
-//! CPU analogue of the paper's work-group scheme) execute the same
-//! plans bit-exactly, and future SIMD/GPU backends slot in as further
-//! executors rather than hand-written per-scheme paths.  The gpusim
+//! reference backend, the band-parallel backend (horizontal bands on a
+//! persistent thread pool, halo-synchronized at barrier phases — the
+//! CPU analogue of the paper's work-group scheme), and the SIMD
+//! backend ([`dwt::simd`]: lane-group kernel interiors through the
+//! portable [`dwt::vecn`] layer, composing under band parallelism)
+//! execute the same plans bit-exactly, and future GPU-dispatch
+//! backends slot in as further executors rather than hand-written
+//! per-scheme paths.  The gpusim
 //! cost model meters the same plans' per-step ops and halo traffic
 //! (including per-band halo bytes for the CPU backend),
 //! `polyphase::opcount` reads Table 1 off them, and the coordinator
@@ -52,7 +55,7 @@ pub mod runtime;
 
 pub use dwt::{
     Boundary, Image, KernelPlan, ParallelExecutor, Planes, PlanExecutor, PyramidPlan,
-    ScalarExecutor,
+    ScalarExecutor, SimdExecutor,
 };
 pub use polyphase::wavelets::Wavelet;
 pub use polyphase::Scheme;

@@ -8,19 +8,21 @@
 //! ids).
 //!
 //! The PJRT client depends on the `xla` bindings, which need the
-//! xla_extension shared library at build time.  That is gated behind
-//! the `pjrt` cargo feature (add the `xla` crate to `[dependencies]`
-//! when enabling it); the default build ships a stub whose
-//! [`Runtime::new`] always errors, which the coordinator treats as
-//! "PJRT path disabled" and serves everything through the native
-//! `KernelPlan` engine.
+//! xla_extension shared library at build time.  Two feature gates keep
+//! that honest: `pjrt` is the *scaffolding* (this module's plumbing,
+//! always checkable — CI runs `cargo check --features pjrt` in its
+//! matrix), while `xla-runtime` compiles the real client and requires
+//! the `xla` crate to be added/vendored in `[dependencies]`.  Every
+//! other configuration ships a stub whose [`Runtime::new`] always
+//! errors, which the coordinator treats as "PJRT path disabled" and
+//! serves everything through the native `KernelPlan` engine.
 
 pub mod json;
 pub mod manifest;
 
 pub use manifest::{Entry, Manifest};
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla-runtime")]
 mod client {
     use super::Manifest;
     use crate::dwt::Image;
@@ -162,26 +164,30 @@ mod client {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla-runtime"))]
 mod client {
     use super::Manifest;
     use crate::dwt::Image;
     use anyhow::{anyhow, Result};
     use std::path::Path;
 
-    /// Stub runtime compiled when the `pjrt` feature is off: creation
-    /// always fails, so the coordinator falls back to the native
-    /// `KernelPlan` engine (the same code path as a missing artifact
-    /// directory).
+    /// Stub runtime compiled whenever the real client is not (`pjrt`
+    /// off, or on without `xla-runtime`): creation always fails, so
+    /// the coordinator falls back to the native `KernelPlan` engine
+    /// (the same code path as a missing artifact directory).
     pub struct Runtime {
         pub manifest: Manifest,
     }
 
     impl Runtime {
         pub fn new(_artifacts_dir: &Path) -> Result<Self> {
-            Err(anyhow!(
+            Err(anyhow!(if cfg!(feature = "pjrt") {
+                "pjrt scaffolding built without the `xla-runtime` feature \
+                 (vendor the `xla` bindings to enable the real client); \
+                 AOT artifact execution unavailable"
+            } else {
                 "built without the `pjrt` feature; AOT artifact execution unavailable"
-            ))
+            }))
         }
 
         pub fn platform(&self) -> String {

@@ -9,12 +9,22 @@ use dwt_accel::polyphase::schemes::Scheme;
 use dwt_accel::polyphase::wavelets::Wavelet;
 
 fn native_cfg() -> CoordinatorConfig {
+    // simd: false pins the legacy scalar/parallel routing these tests
+    // assert on; the SIMD routes get their own tests below
     CoordinatorConfig {
         artifacts_dir: None,
         workers: 4,
         batch: BatchPolicy::default(),
         parallel_threshold: 512 * 512,
         threads: 4,
+        simd: false,
+    }
+}
+
+fn simd_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        simd: true,
+        ..native_cfg()
     }
 }
 
@@ -183,6 +193,7 @@ fn pjrt_route_used_at_serve_size_and_batches_form() {
         },
         parallel_threshold: usize::MAX,
         threads: 0,
+        simd: true,
     })
     .unwrap();
     assert!(coord.pjrt_available());
@@ -368,6 +379,7 @@ fn bad_artifacts_dir_falls_back_to_native() {
         batch: BatchPolicy::default(),
         parallel_threshold: usize::MAX,
         threads: 0,
+        simd: false,
     })
     .unwrap();
     assert!(!coord.pjrt_available());
@@ -394,6 +406,7 @@ fn corrupt_manifest_falls_back_to_native() {
         batch: BatchPolicy::default(),
         parallel_threshold: usize::MAX,
         threads: 0,
+        simd: false,
     })
     .unwrap();
     assert!(!coord.pjrt_available());
@@ -490,6 +503,83 @@ fn inverse_requests_use_the_parallel_route_too() {
 }
 
 #[test]
+fn simd_route_small_image_is_bit_exact_with_scalar() {
+    // PR-4 acceptance: with SIMD on (the service default), a
+    // sub-threshold request is served by the SimdExecutor, reported as
+    // NativeSimd, and returns bit-identical coefficients
+    let coord = Coordinator::new(simd_cfg()).unwrap();
+    let img = Image::synthetic(66, 34, 100); // awkward width: w2 = 33
+    for s in Scheme::ALL {
+        for boundary in [Boundary::Periodic, Boundary::Symmetric] {
+            let resp = coord
+                .transform(Request {
+                    image: img.clone(),
+                    wavelet: "cdf97".into(),
+                    scheme: s,
+                    boundary,
+                    ..Request::default()
+                })
+                .unwrap();
+            assert_eq!(resp.backend, Backend::NativeSimd, "{}", s.name());
+            let expect = Engine::with_boundary(s, Wavelet::cdf97(), boundary).forward(&img);
+            assert_eq!(resp.image.max_abs_diff(&expect), 0.0, "{}", s.name());
+        }
+    }
+    let summary = coord.metrics.summary();
+    assert_eq!(summary.per_backend[3].0, "native-simd");
+    assert_eq!(summary.per_backend[3].1, 2 * Scheme::ALL.len() as u64);
+}
+
+#[test]
+fn simd_route_rides_parallel_above_threshold() {
+    // parallel_threshold routing is unchanged by the SIMD knob: above
+    // it the request runs parallel+simd and is still bit-exact
+    let coord = Coordinator::new(simd_cfg()).unwrap();
+    let img = Image::synthetic(1024, 512, 101);
+    let resp = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "cdf97".into(),
+            scheme: Scheme::SepLifting,
+            ..Request::default()
+        })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::NativeParallel);
+    let expect = Engine::new(Scheme::SepLifting, Wavelet::cdf97()).forward(&img);
+    assert_eq!(resp.image.max_abs_diff(&expect), 0.0);
+}
+
+#[test]
+fn simd_route_serves_pyramids_bit_exactly() {
+    let coord = Coordinator::new(simd_cfg()).unwrap();
+    let img = Image::synthetic(128, 64, 102);
+    let resp = coord
+        .transform(Request {
+            image: img.clone(),
+            wavelet: "cdf53".into(),
+            scheme: Scheme::NsConv,
+            levels: 3,
+            ..Request::default()
+        })
+        .unwrap();
+    assert_eq!(resp.backend, Backend::NativeSimd);
+    let engine = Engine::new(Scheme::NsConv, Wavelet::cdf53());
+    let expect = engine.forward_multi(&img, 3).unwrap();
+    assert_eq!(resp.image.max_abs_diff(&expect), 0.0);
+    let rec = coord
+        .transform(Request {
+            image: resp.image,
+            wavelet: "cdf53".into(),
+            scheme: Scheme::NsConv,
+            levels: 3,
+            inverse: true,
+            ..Request::default()
+        })
+        .unwrap();
+    assert!(rec.image.max_abs_diff(&img) < 5e-2);
+}
+
+#[test]
 fn deterministic_thread_count_is_respected() {
     // threads: 1 degrades the parallel route to the scalar path inside
     // the same executor — still served, still exact
@@ -499,6 +589,7 @@ fn deterministic_thread_count_is_respected() {
         batch: BatchPolicy::default(),
         parallel_threshold: 0, // every request takes the parallel route
         threads: 1,
+        simd: false,
     })
     .unwrap();
     let img = Image::synthetic(64, 64, 96);
