@@ -6,18 +6,23 @@
 //! 1024^2) comparing the pyramid-native strided in-place path (scalar
 //! and band-parallel) against the pre-PR-3 crop/paste composition; and
 //! a simd section (PR 4) timing scalar vs SimdExecutor vs parallel vs
-//! parallel+simd at 1024^2 and 2048^2.  Emits `BENCH_native.json`
-//! (schema v4) so future PRs can track the planned-vs-legacy,
-//! parallel-vs-scalar, pyramid, and simd speedup trajectories.
+//! parallel+simd at 1024^2 and 2048^2; and a fusion section (PR 6)
+//! timing fused vs unfused phase scheduling per scheme (with the
+//! barrier counts before/after cross-group batching) plus pipelined vs
+//! serial pyramid levels at L = 5.  Emits `BENCH_native.json`
+//! (schema v5) so future PRs can track the planned-vs-legacy,
+//! parallel-vs-scalar, pyramid, simd, and fusion speedup trajectories.
 //!
 //! Flags: `--quick` caps the per-case budget for CI smoke runs.
 //! `PALLAS_THREADS` pins the parallel executor's thread count.
 
 use dwt_accel::benchutil::{bench, crop_paste_pyramid_forward, default_budget, gbs, Stats, Table};
 use dwt_accel::coordinator::tiler;
-use dwt_accel::dwt::executor::{default_threads, ParallelExecutor, ScalarExecutor};
+use dwt_accel::dwt::executor::{default_threads, ParallelExecutor, ScalarExecutor, SchedOpts};
 use dwt_accel::dwt::simd::SimdExecutor;
-use dwt_accel::dwt::{apply, lifting, Engine, Image, PlanExecutor, PlanVariant, Planes};
+use dwt_accel::dwt::{
+    apply, lifting, Boundary, Engine, Image, KernelPlan, PlanExecutor, PlanVariant, Planes,
+};
 use dwt_accel::gpusim::band_halo_bytes;
 use dwt_accel::polyphase::schemes::{self, Scheme};
 use dwt_accel::polyphase::wavelets::Wavelet;
@@ -57,6 +62,20 @@ struct SimdRecord {
     simd_ms: f64,
     parallel_ms: f64,
     parallel_simd_ms: f64,
+}
+
+struct FusionRecord {
+    /// "plan" for single-level fused-vs-unfused scheduling, "pyramid"
+    /// for pipelined-vs-serial level overlap.
+    kind: &'static str,
+    side: usize,
+    levels: usize,
+    wavelet: &'static str,
+    scheme: &'static str,
+    fused_ms: f64,
+    unfused_ms: f64,
+    barriers_before: usize,
+    barriers_after: usize,
 }
 
 fn main() {
@@ -418,6 +437,135 @@ fn main() {
         }
     }
 
+    // fusion section (PR 6): fused vs unfused phase scheduling on the
+    // band-parallel executor, over the textbook (plain) plans whose
+    // barrier counts the dependency analysis is pinned to — plus
+    // pipelined vs serial pyramid levels at L = 5.  Timed backends are
+    // bit-exact by construction; asserted before every timing.
+    println!("\n--- fusion: fused vs unfused phase schedule (parallel x{threads}) ---\n");
+    let fused_par = ParallelExecutor::with_opts(
+        threads,
+        false,
+        SchedOpts {
+            fuse: true,
+            panel_rows: 0,
+        },
+    );
+    let unfused_par = ParallelExecutor::with_opts(threads, false, SchedOpts::unfused());
+    let tf = Table::new(&[5, 7, 13, 10, 10, 8, 9]);
+    tf.header(&[
+        "side", "wavelet", "scheme", "fused ms", "plain ms", "x fuse", "barriers",
+    ]);
+    let mut fusions: Vec<FusionRecord> = Vec::new();
+    let mut fusion_cases: Vec<(usize, &'static str, Scheme)> =
+        Scheme::ALL.iter().map(|s| (1024usize, "cdf97", *s)).collect();
+    fusion_cases.push((2048, "cdf97", Scheme::NsLifting));
+    fusion_cases.push((2048, "cdf97", Scheme::SepLifting));
+    for (bside, wname, scheme) in fusion_cases {
+        let w = Wavelet::by_name(wname).expect("wavelet");
+        let plan = KernelPlan::from_steps(&schemes::build(scheme, &w), Boundary::Periodic);
+        let bimg = Image::synthetic(bside, bside, 8);
+        let planes0 = Planes::split(&bimg);
+        let a = fused_par.run(&plan, &planes0);
+        let b = unfused_par.run(&plan, &planes0);
+        assert_eq!(
+            a.to_packed().max_abs_diff(&b.to_packed()),
+            0.0,
+            "fused != unfused"
+        );
+        let time = |exec: &ParallelExecutor| -> Stats {
+            bench(
+                || {
+                    std::hint::black_box(exec.run(&plan, std::hint::black_box(&planes0)));
+                },
+                budget,
+                3,
+                50,
+            )
+        };
+        let s_fused = time(&fused_par);
+        let s_unfused = time(&unfused_par);
+        let (before, after) = (plan.n_exec_barriers(false), plan.n_exec_barriers(true));
+        tf.row(&[
+            format!("{bside}"),
+            wname.into(),
+            scheme.name().into(),
+            format!("{:.2}", s_fused.median_ms()),
+            format!("{:.2}", s_unfused.median_ms()),
+            format!(
+                "x{:.2}",
+                s_unfused.median.as_secs_f64() / s_fused.median.as_secs_f64()
+            ),
+            format!("{before} -> {after}"),
+        ]);
+        fusions.push(FusionRecord {
+            kind: "plan",
+            side: bside,
+            levels: 1,
+            wavelet: wname,
+            scheme: scheme.name(),
+            fused_ms: s_fused.median_ms(),
+            unfused_ms: s_unfused.median_ms(),
+            barriers_before: before,
+            barriers_after: after,
+        });
+    }
+    // pipelined vs serial pyramid levels (L = 5): tail detail
+    // evacuation of level l overlaps level l+1's deinterleave
+    for (wname, scheme) in [("cdf97", Scheme::SepLifting), ("cdf53", Scheme::NsLifting)] {
+        let engine = Engine::new(scheme, Wavelet::by_name(wname).expect("wavelet"));
+        let levels = 5usize;
+        let pyr = engine.pyramid_plan(side, side, levels, false).expect("geometry");
+        let serial = pyr.clone().with_pipeline(false);
+        let a = parallel.run_pyramid(&pyr, &img);
+        let b = parallel.run_pyramid(&serial, &img);
+        assert_eq!(a.max_abs_diff(&b), 0.0, "pipelined != serial pyramid");
+        let s_piped = bench(
+            || {
+                std::hint::black_box(parallel.run_pyramid(&pyr, std::hint::black_box(&img)));
+            },
+            budget,
+            3,
+            50,
+        );
+        let s_serial = bench(
+            || {
+                std::hint::black_box(parallel.run_pyramid(&serial, std::hint::black_box(&img)));
+            },
+            budget,
+            3,
+            50,
+        );
+        let plan = engine.plan(PlanVariant::Optimized);
+        tf.row(&[
+            format!("{side}"),
+            wname.into(),
+            format!("{} L={levels}", scheme.name()),
+            format!("{:.2}", s_piped.median_ms()),
+            format!("{:.2}", s_serial.median_ms()),
+            format!(
+                "x{:.2}",
+                s_serial.median.as_secs_f64() / s_piped.median.as_secs_f64()
+            ),
+            format!(
+                "{} -> {}",
+                plan.n_exec_barriers(false),
+                plan.n_exec_barriers(true)
+            ),
+        ]);
+        fusions.push(FusionRecord {
+            kind: "pyramid",
+            side,
+            levels,
+            wavelet: wname,
+            scheme: scheme.name(),
+            fused_ms: s_piped.median_ms(),
+            unfused_ms: s_serial.median_ms(),
+            barriers_before: plan.n_exec_barriers(false),
+            barriers_after: plan.n_exec_barriers(true),
+        });
+    }
+
     // tiled compatibility layer vs monolithic
     let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
     let s_mono = bench(
@@ -461,14 +609,16 @@ fn main() {
     match std::fs::write(
         path,
         to_json(
-            side, threads, quick, memcpy_gbs, &records, &larges, &pyramids, &simds,
+            side, threads, quick, memcpy_gbs, &records, &larges, &pyramids, &simds, &fusions,
         ),
     ) {
         Ok(()) => println!(
-            "\nwrote {path} ({} scheme records, {} pyramid records, {} simd records)",
+            "\nwrote {path} ({} scheme records, {} pyramid records, {} simd records, \
+             {} fusion records)",
             records.len(),
             pyramids.len(),
-            simds.len()
+            simds.len(),
+            fusions.len()
         ),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
@@ -485,11 +635,12 @@ fn to_json(
     larges: &[LargeRecord],
     pyramids: &[PyramidRecord],
     simds: &[SimdRecord],
+    fusions: &[FusionRecord],
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"native_engine\",\n");
-    out.push_str("  \"schema\": 4,\n");
+    out.push_str("  \"schema\": 5,\n");
     out.push_str(&format!("  \"side\": {side},\n"));
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"quick\": {quick},\n"));
@@ -564,6 +715,26 @@ fn to_json(
             r.scalar_ms / r.simd_ms,
             r.parallel_ms / r.parallel_simd_ms,
             if i + 1 == simds.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"fusion\": [\n");
+    for (i, r) in fusions.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"kind\": \"{}\", \"side\": {}, \"levels\": {}, \"wavelet\": \"{}\", \
+             \"scheme\": \"{}\", \"fused_ms\": {:.4}, \"unfused_ms\": {:.4}, \
+             \"fusion_speedup\": {:.3}, \"barriers_before\": {}, \"barriers_after\": {}}}{}\n",
+            r.kind,
+            r.side,
+            r.levels,
+            r.wavelet,
+            r.scheme,
+            r.fused_ms,
+            r.unfused_ms,
+            r.unfused_ms / r.fused_ms,
+            r.barriers_before,
+            r.barriers_after,
+            if i + 1 == fusions.len() { "" } else { "," }
         ));
     }
     out.push_str("  ]\n}\n");

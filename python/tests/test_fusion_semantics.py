@@ -1,0 +1,330 @@
+"""Sweep fusion semantics, validated against the oracle.
+
+Mirrors PR 6's Rust scheduling layer in numpy: the reach-aware
+dependency analysis in `rust/src/dwt/plan.rs` (`KernelPlan::schedule`),
+the panel-blocked fused-phase executor in `rust/src/dwt/executor.rs`
+(`execute_scheduled` / `run_band_kernels`), and the pipelined pyramid
+levels in `rust/src/dwt/pyramid.rs`, then asserts
+
+* the fused partition of the flattened kernel stream never has more
+  barriers than the per-group partition, conserves kernels, and keeps
+  every phase race-free (no plane both written and vertically read at
+  reach > 0 inside one phase),
+* the exact barrier counts the Rust tests pin: both lifting schemes go
+  9 -> 7 for cdf97 and 4 -> 3 for cdf53/dd137, the haar lifting
+  programs collapse to ONE phase (every tap sits at lag zero), and the
+  convolution schemes (stencil steps) gain nothing,
+* fused + panel-blocked banded execution equals scalar execution
+  EXACTLY (same dtype, same per-element op order) for every scheme,
+  wavelet, boundary, band split, and panel height — including heights
+  of 17/33/66 rows with more bands than rows,
+* pipelined pyramid levels (tail detail evacuation overlapped with the
+  next level's deinterleave) touch disjoint rows: running the two
+  halves in either order reproduces the serial pyramid exactly.
+
+The Rust test suite asserts the same invariants on the real
+implementation; this file guards the *algorithm* from a second,
+independent implementation so the two cannot drift silently.
+"""
+
+import numpy as np
+import pytest
+
+from compile import schemes
+from compile import wavelets as wv
+
+import test_executor_semantics as ex
+import test_pyramid_semantics as pyr
+
+WAVELET_NAMES = sorted(wv.WAVELETS)
+BOUNDARIES = ["periodic", "symmetric"]
+
+
+# ----------------------------------------------------------- scheduling
+
+
+def taps_reach(taps):
+    return max((abs(k) for k, _ in taps), default=0)
+
+
+def vread_planes(k):
+    """Reach-aware vertical-read mask: the twin of Rust
+    `plan::vread_planes`.  A vertical lift whose taps all sit at lag
+    zero reads only its own row — it never crosses a band or panel
+    boundary, so it must not force a phase cut (this is what lets the
+    haar lifting schemes collapse to a single phase)."""
+    if k[0] == "lift" and k[3] == "v" and taps_reach(k[4]) > 0:
+        return 1 << k[2]
+    return 0b1111 if k[0] == "stencil" else 0
+
+
+def partition(kernels):
+    """Greedy maximal-prefix partition under the cut rule — the twin of
+    Rust `plan::partition_into`.  Stencils always own their phase."""
+    out, start, written, vread = [], 0, 0, 0
+    for i, k in enumerate(kernels):
+        if k[0] == "stencil":
+            if start < i:
+                out.append(("inplace", kernels[start:i]))
+            out.append(("stencil", k[1]))
+            start, written, vread = i + 1, 0, 0
+            continue
+        w, vr = ex.written_planes(k), vread_planes(k)
+        if (vr & written) or (w & vread):
+            out.append(("inplace", kernels[start:i]))
+            start, written, vread = i, 0, 0
+        written |= w
+        vread |= vr
+    if start < len(kernels):
+        out.append(("inplace", kernels[start:]))
+    return out
+
+
+def schedule(plan, fuse):
+    """`KernelPlan::schedule`: fuse=False partitions each barrier group
+    separately; fuse=True partitions the flattened kernel stream, so
+    phases may span the compile-time group boundaries."""
+    if fuse:
+        return partition([k for g in plan for k in g])
+    out = []
+    for g in plan:
+        out.extend(partition(g))
+    return out
+
+
+def auto_panel_rows(w2):
+    """The Rust `resolve_panel_rows` default: panels sized so four f32
+    planes of panel rows fit in 256 KiB, never fewer than 4 rows."""
+    return max((256 * 1024) // (max(w2, 1) * 4 * 4), 4)
+
+
+def exec_scheduled(plan, planes, boundary, threads, panel_rows=0, fuse=True):
+    """The PR-6 executor memory model: per fused phase, every
+    cross-row (reach > 0 vertical) read is served by the phase-start
+    state of a plane no band writes; each band mutates only its own
+    rows, panel by panel, running every kernel of the phase on one
+    panel before advancing."""
+    planes = [p.copy() for p in planes]
+    h2, w2 = planes[0].shape
+    bands = ex.band_ranges(h2, threads)
+    panel = panel_rows if panel_rows else auto_panel_rows(w2)
+    for ph in schedule(plan, fuse):
+        if ph[0] == "stencil":
+            planes = ex.apply_stencil(ph[1], planes, boundary)
+            continue
+        kernels = ph[1]
+        written = 0
+        for k in kernels:
+            written |= ex.written_planes(k)
+        snapshot = [p.copy() for p in planes]
+        updates = []
+        for (b0, b1) in bands:
+            work = {i: planes[i][b0:b1, :].copy()
+                    for i in range(4) if written & (1 << i)}
+            y = b0
+            while y < b1:
+                ye = min(y + panel, b1)
+                lo, hi = y - b0, ye - b0
+                for k in kernels:
+                    if k[0] == "lift":
+                        _, dst, src, axis, taps = k
+                        src_odd = ex.plane_is_odd(src, axis)
+                        acc = np.zeros((ye - y, w2))
+                        if axis == "h":
+                            srows = (work[src][lo:hi, :]
+                                     if (written >> src) & 1
+                                     else snapshot[src][y:ye, :])
+                            for kk, c in taps:
+                                idx = [ex.fold(x + kk, w2, boundary, src_odd)
+                                       for x in range(w2)]
+                                acc += c * srows[:, idx]
+                        elif (written >> src) & 1:
+                            # in-phase vertical read: legal only at
+                            # reach 0 (own rows, already current)
+                            assert taps_reach(taps) == 0, \
+                                "race: reach>0 vertical read of a written plane"
+                            for _, c in taps:
+                                acc += c * work[src][lo:hi, :]
+                        else:
+                            for kk, c in taps:
+                                idx = [ex.fold(yy + kk, h2, boundary, src_odd)
+                                       for yy in range(y, ye)]
+                                acc += c * snapshot[src][idx, :]
+                        work[dst][lo:hi, :] += acc
+                    elif k[0] == "scale":
+                        for c, f in enumerate(k[1]):
+                            if abs(f - 1.0) > 1e-12:
+                                work[c][lo:hi, :] *= f
+                y = ye
+            updates.append((b0, b1, work))
+        for (b0, b1, work) in updates:
+            for i, chunk in work.items():
+                planes[i][b0:b1, :] = chunk
+    return planes
+
+
+# ------------------------------------------------------ pyramid overlap
+
+
+def evacuate_rows(ws, out, w, h, y0, y1):
+    """Detail evacuation restricted to plane rows [y0, y1) — the twin
+    of Rust `pyramid::evacuate_rows` / `evacuate_tail`."""
+    out[y0:y1, w:2 * w] = ws[1][y0:y1, :w]
+    out[h + y0:h + y1, 0:w] = ws[2][y0:y1, :w]
+    out[h + y0:h + y1, w:2 * w] = ws[3][y0:y1, :w]
+
+
+def pyramid_forward_pipelined(plan, img, levels, boundary, order):
+    """The PR-6 pyramid schedule: after level l, evacuate the head rows
+    [0, nh) synchronously (the deinterleave is about to overwrite
+    them), then run the tail evacuation [nh, h) and the next level's
+    deinterleave as two independent halves, in the given `order`.
+    If the halves touched any common row, one order would diverge."""
+    H, W = img.shape
+    out = np.zeros_like(img)
+    ws = [np.ascontiguousarray(q) for q in ex.split(img)]
+    for l in range(levels):
+        w, h = W >> (l + 1), H >> (l + 1)
+        views = [ws[c][:h, :w] for c in range(4)]
+        pyr.exec_inplace(plan, views, boundary, 1)
+        if l + 1 < levels:
+            nw, nh = w // 2, h // 2
+            evacuate_rows(ws, out, w, h, 0, nh)
+            halves = [
+                lambda: evacuate_rows(ws, out, w, h, nh, h),
+                lambda: pyr.deinterleave_level(ws, nw, nh),
+            ]
+            for half in (halves if order == "tail_first" else halves[::-1]):
+                half()
+        else:
+            evacuate_rows(ws, out, w, h, 0, h)
+    wl, hl = W >> levels, H >> levels
+    out[:hl, :wl] = ws[0][:hl, :wl]
+    return out
+
+
+# --------------------------------------------------------------- tests
+
+
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+@pytest.mark.parametrize("scheme", schemes.SCHEMES)
+def test_fusion_never_adds_barriers_and_phases_are_safe(wname, scheme):
+    w = wv.get(wname)
+    for chain in (schemes.build(scheme, w), schemes.build_inverse(scheme, w)):
+        plan = ex.compile_plan(chain)
+        fused = schedule(plan, True)
+        unfused = schedule(plan, False)
+        assert len(fused) <= len(unfused), f"{wname} {scheme}"
+        # kernel conservation: fusion re-partitions, never drops or
+        # duplicates work
+        count = lambda phs: sum(
+            len(p[1]) if p[0] == "inplace" else 1 for p in phs)
+        assert count(fused) == count(unfused) == count(
+            [("inplace", [k for g in plan for k in g if k[0] != "stencil"])]
+        ) + sum(1 for g in plan for k in g if k[0] == "stencil")
+        # safety: no phase both writes a plane and reads it vertically
+        # at reach > 0
+        for p in fused:
+            if p[0] != "inplace":
+                continue
+            written = vread = 0
+            for k in p[1]:
+                written |= ex.written_planes(k)
+                vread |= vread_planes(k)
+            assert written & vread == 0, f"{wname} {scheme}: unsafe phase"
+
+
+def test_fused_partition_pins_the_rust_barrier_counts():
+    """The exact counts the Rust suite pins in `plan.rs` — if these
+    move, the two implementations have drifted."""
+    for wname, before, after in [("cdf97", 9, 7), ("cdf53", 4, 3),
+                                 ("dd137", 4, 3)]:
+        for scheme in ("ns_lifting", "sep_lifting"):
+            plan = ex.compile_plan(schemes.build(scheme, wv.get(wname)))
+            assert len(schedule(plan, False)) == before, f"{wname} {scheme}"
+            assert len(schedule(plan, True)) == after, f"{wname} {scheme}"
+    # haar lifts entirely at lag zero: reach-aware analysis fuses the
+    # whole program (including the scale) into ONE phase
+    for scheme in ("sep_lifting", "ns_lifting"):
+        plan = ex.compile_plan(schemes.build(scheme, wv.get("haar")))
+        fused = schedule(plan, True)
+        assert len(fused) == 1, f"haar {scheme}"
+        assert all(vread_planes(k) == 0 for k in fused[0][1])
+    # convolution schemes are stencil chains — stencils own their phase
+    for scheme in ("sep_conv", "sep_polyconv", "ns_conv", "ns_polyconv"):
+        plan = ex.compile_plan(schemes.build(scheme, wv.get("cdf97")))
+        assert len(schedule(plan, True)) == len(schedule(plan, False)), scheme
+
+
+def test_reach_awareness_is_what_unlocks_haar():
+    """The PR-2 partitioner (any vertical lift forces a cut) could not
+    fuse haar's spatial lifts; the reach-aware rule is the load-bearing
+    difference.  (ns_lifting here: its spatial matcher emits explicit
+    vertical kernels even at lag zero.)"""
+    plan = ex.compile_plan(schemes.build("ns_lifting", wv.get("haar")))
+    flat = [k for g in plan for k in g]
+    assert len(ex.phases(flat)) > 1  # PR-2 rule: cuts at the V lifts
+    assert len(partition(flat)) == 1  # reach-aware: none needed
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+def test_fused_panel_execution_is_bit_exact(wname, boundary):
+    w = wv.get(wname)
+    for (W, H) in [(64, 64), (96, 70)]:
+        p0 = ex.split(ex.img_of(W, H, 6))
+        for scheme in schemes.SCHEMES:
+            for chain in (schemes.build(scheme, w),
+                          schemes.build_inverse(scheme, w)):
+                plan = ex.compile_plan(chain)
+                want = ex.exec_scalar(plan, p0, boundary)
+                for panel in (1, 3, 0):
+                    for fuse in (True, False):
+                        got = exec_scheduled(plan, p0, boundary, 4,
+                                             panel_rows=panel, fuse=fuse)
+                        assert all(np.array_equal(a, b)
+                                   for a, b in zip(got, want)), \
+                            f"{wname} {scheme} {boundary} {W}x{H} " \
+                            f"panel={panel} fuse={fuse}"
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("rows", [17, 33, 66])
+def test_awkward_heights_with_more_bands_than_rows(boundary, rows):
+    """Plane heights of 17/33/66 rows, 24 requested bands (more bands
+    than rows at 17), panels of 1/3/auto rows: band degradation and
+    panel tails must stay bit-exact, and no kernel may split a row."""
+    for wname in ("cdf97", "haar"):
+        w = wv.get(wname)
+        p0 = ex.split(ex.img_of(34, 2 * rows, 7))
+        for scheme in schemes.SCHEMES:
+            plan = ex.compile_plan(schemes.build(scheme, w))
+            want = ex.exec_scalar(plan, p0, boundary)
+            for panel in (1, 3, 0):
+                for fuse in (True, False):
+                    got = exec_scheduled(plan, p0, boundary, 24,
+                                         panel_rows=panel, fuse=fuse)
+                    assert all(np.array_equal(a, b)
+                               for a, b in zip(got, want)), \
+                        f"{wname} {scheme} {boundary} rows={rows} " \
+                        f"panel={panel} fuse={fuse}"
+
+
+@pytest.mark.parametrize("levels", [2, 3, 5])
+@pytest.mark.parametrize("order", ["tail_first", "deinterleave_first"])
+def test_pipelined_pyramid_levels_match_serial(levels, order):
+    """Order-independence of the overlapped halves proves they touch
+    disjoint rows — the property the Rust `join2` pipeline relies on
+    for bit-exactness."""
+    img = ex.img_of(96, 64, 8)
+    for wname in ("cdf97", "haar"):
+        w = wv.get(wname)
+        for scheme in ("ns_lifting", "sep_lifting", "ns_conv"):
+            for boundary in BOUNDARIES:
+                plan = ex.compile_plan(schemes.build(scheme, w))
+                want = pyr.pyramid_forward_strided(
+                    plan, img, levels, boundary)
+                got = pyramid_forward_pipelined(
+                    plan, img, levels, boundary, order)
+                assert np.array_equal(got, want), \
+                    f"{wname} {scheme} {boundary} L={levels} {order}"

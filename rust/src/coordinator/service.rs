@@ -5,8 +5,10 @@
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{Backend, Metrics};
 use super::worker::WorkerPool;
-use crate::dwt::executor::{default_threads, ParallelExecutor, PlanExecutor, ScalarExecutor};
-use crate::dwt::simd::{default_simd, SimdExecutor};
+use crate::dwt::executor::{
+    default_fuse, default_threads, ParallelExecutor, PlanExecutor, SchedOpts, SingleExecutor,
+};
+use crate::dwt::simd::default_simd;
 use crate::dwt::{Boundary, Engine, Image};
 use crate::polyphase::schemes::Scheme;
 use crate::polyphase::wavelets::Wavelet;
@@ -66,7 +68,7 @@ pub struct CoordinatorConfig {
     /// deterministic runs.
     pub threads: usize,
     /// Vectorized (lane-group) kernel interiors for the native routes:
-    /// sub-threshold requests run on [`SimdExecutor`] (reported as
+    /// sub-threshold requests run vectorized (reported as
     /// [`Backend::NativeSimd`]) and the shared band-parallel executor
     /// runs SIMD inside its bands.  Defaults through [`default_simd`]
     /// (`PALLAS_SIMD=0` is the service-wide escape hatch).  Purely a
@@ -74,6 +76,12 @@ pub struct CoordinatorConfig {
     /// `parallel_threshold` routing is unchanged and clients cannot
     /// observe the setting in the coefficients.
     pub simd: bool,
+    /// Fused (cross-group) phase scheduling for every native executor
+    /// the service builds.  Defaults through [`default_fuse`]
+    /// (`PALLAS_FUSE=0` is the service-wide escape hatch).  Like
+    /// `simd`, purely a performance knob: the fused schedule is
+    /// bit-exact with the unfused one, so clients cannot observe it.
+    pub fuse: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -88,6 +96,7 @@ impl Default for CoordinatorConfig {
             parallel_threshold: 1024 * 1024,
             threads: 0,
             simd: default_simd(),
+            fuse: default_fuse(),
         }
     }
 }
@@ -204,7 +213,14 @@ impl Coordinator {
                 } else {
                     self.cfg.threads
                 };
-                Arc::new(ParallelExecutor::with_threads_vector(threads, self.cfg.simd))
+                Arc::new(ParallelExecutor::with_opts(
+                    threads,
+                    self.cfg.simd,
+                    SchedOpts {
+                        fuse: self.cfg.fuse,
+                        panel_rows: 0,
+                    },
+                ))
             })
             .clone()
     }
@@ -301,10 +317,13 @@ impl Coordinator {
     /// at/above `parallel_threshold` pixels — single-level and
     /// multi-level alike — run on the shared band-parallel executor
     /// (with SIMD inside the bands when `cfg.simd`), everything else
-    /// on the SIMD executor (`cfg.simd`, the default) or the scalar
-    /// one.  All three are bit-exact, so routing is invisible to
-    /// clients and the `parallel_threshold` decision is unchanged by
-    /// the SIMD knob.  Multi-level requests lower
+    /// on a single-threaded executor with the same scheduling options
+    /// (vectorized interiors when `cfg.simd`, the default).  Every
+    /// route runs the fused phase schedule when `cfg.fuse` (the
+    /// default; `PALLAS_FUSE=0` opts out).  All executors are
+    /// bit-exact, so routing is invisible to clients and the
+    /// `parallel_threshold` decision is unchanged by the SIMD and
+    /// fusion knobs.  Multi-level requests lower
     /// to a `PyramidPlan` and execute in place on strided level views;
     /// levels that shrink under `parallel_threshold` gracefully fall
     /// back to the scalar path inside the same run (the plan's
@@ -315,6 +334,7 @@ impl Coordinator {
         let metrics = self.metrics.clone();
         let threshold = self.cfg.parallel_threshold;
         let simd = self.cfg.simd;
+        let fuse = self.cfg.fuse;
         let use_parallel = request.image.width * request.image.height >= threshold;
         let parallel = use_parallel.then(|| self.parallel_executor());
         let inverse = request.inverse;
@@ -328,10 +348,16 @@ impl Coordinator {
             } else {
                 Backend::Native
             };
+            let single = SingleExecutor::new(
+                simd,
+                SchedOpts {
+                    fuse,
+                    panel_rows: 0,
+                },
+            );
             let exec: &dyn PlanExecutor = match &parallel {
                 Some(px) => px.as_ref(),
-                None if simd => &SimdExecutor,
-                None => &ScalarExecutor,
+                None => &single,
             };
             let result = if levels <= 1 {
                 if inverse {

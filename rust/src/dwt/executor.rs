@@ -4,8 +4,10 @@
 //! in `plan.rs`) from "how is it executed".  This module owns the
 //! second half behind the [`PlanExecutor`] trait:
 //!
-//! * [`ScalarExecutor`] — the single-threaded reference path
-//!   ([`KernelPlan::execute_with`] verbatim).
+//! * [`ScalarExecutor`] — the single-threaded path: the compiled
+//!   schedule run panel-blocked with scalar interior bodies
+//!   ([`SingleExecutor`] generalizes it with explicit scheduling
+//!   options and interior-body selection).
 //! * [`ParallelExecutor`] — the CPU analogue of the paper's work-group
 //!   scheme: each polyphase plane is split into horizontal bands, one
 //!   per thread of a persistent [`BandPool`]; the kernels of a barrier
@@ -16,25 +18,40 @@
 //!   row-local and never require an exchange — the reason bands are
 //!   horizontal.
 //!
-//! Both executors drive the same row-range kernel bodies
+//! Every backend executes the *same compiled schedule*
+//! ([`KernelPlan::schedule`]): the kernel stream partitioned into
+//! barrier-free fused phases by the dependency analysis in `plan.rs`.
+//! With fusion on (the default; `PALLAS_FUSE=0` turns it off) the
+//! partition runs across barrier-group boundaries, so consecutive
+//! groups with no spanning vertical dependency merge into one phase.
+//! Within a band, a phase's kernels run *panel-blocked*: row panels
+//! sized to stay L2-resident ([`SchedOpts::panel_rows`]), each panel
+//! running every kernel of the phase before moving on, so a cache line
+//! is touched once per fused phase instead of once per kernel.  Fusion
+//! and panelling decide *when* a kernel body runs, never *what* it
+//! computes — all backends drive the same row-range kernel bodies
 //! ([`lifting::lift_rows_h`] / [`lifting::lift_rows_v`] /
 //! [`apply::run_stencil_rows`]), so their outputs are bit-exact — not
-//! merely close — for every scheme and both boundary modes (asserted
-//! by the tests below).
+//! merely close — across {scalar, simd, parallel, parallel+simd} x
+//! {fused, unfused}, for every scheme and both boundary modes
+//! (asserted by the tests below and the numpy twin).
 //!
 //! A new backend (SIMD, GPU dispatch, ...) implements [`PlanExecutor`]
 //! and slots into [`crate::dwt::Engine`] and the coordinator without
 //! touching any per-scheme code.
 
 use super::apply;
-use super::lifting::{self, Axis, Boundary};
-use super::plan::{ensure_scratch, plane_is_odd, Kernel, KernelPlan, Stencil};
+use super::knobs;
+use super::lifting::{self, taps_reach, Axis, Boundary};
+use super::plan::{
+    ensure_scratch, plane_is_odd, written_planes, FusedPhase, Kernel, KernelPlan, Stencil,
+};
 use super::planes::{Image, Planes};
 use super::pyramid::{self, PyramidPlan};
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Once};
 use std::thread::JoinHandle;
 
 /// A backend that can execute compiled plans.
@@ -74,10 +91,20 @@ pub trait PlanExecutor: Send + Sync {
     fn run_pyramid(&self, pyr: &PyramidPlan, img: &Image) -> Image {
         pyramid::run(self, pyr, img)
     }
+
+    /// Run two independent borrowed jobs, possibly concurrently, and
+    /// return when both are done.  The pyramid driver uses this to
+    /// overlap level-*l* detail evacuation with the level-*l+1*
+    /// deinterleave.  Backends without worker threads run them in
+    /// sequence — same results, no overlap.
+    fn join2<'s>(&self, a: Box<dyn FnOnce() + Send + 's>, b: Box<dyn FnOnce() + Send + 's>) {
+        a();
+        b();
+    }
 }
 
-/// The single-threaded reference backend: [`KernelPlan::execute_with`]
-/// moved behind the trait.
+/// The single-threaded default backend: the compiled schedule with
+/// scalar interior bodies and default scheduling options.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ScalarExecutor;
 
@@ -87,24 +114,162 @@ impl PlanExecutor for ScalarExecutor {
     }
 
     fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>) {
-        plan.execute_with(planes, scratch);
+        execute_scheduled(plan, planes, scratch, false, SchedOpts::default());
+    }
+}
+
+/// A single-threaded backend with explicit interior-body selection and
+/// scheduling options — what the coordinator runs below its parallel
+/// threshold, so the `fuse` configuration applies to small requests
+/// exactly as it does to banded ones.
+#[derive(Debug, Clone, Copy)]
+pub struct SingleExecutor {
+    vector: bool,
+    opts: SchedOpts,
+}
+
+impl SingleExecutor {
+    pub fn new(vector: bool, opts: SchedOpts) -> Self {
+        Self { vector, opts }
+    }
+}
+
+impl PlanExecutor for SingleExecutor {
+    fn name(&self) -> &'static str {
+        if self.vector {
+            "simd"
+        } else {
+            "scalar"
+        }
+    }
+
+    fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>) {
+        execute_scheduled(plan, planes, scratch, self.vector, self.opts);
     }
 }
 
 /// Thread-count resolution for the parallel backend and the
 /// coordinator: the `PALLAS_THREADS` environment override when set to a
 /// positive integer (CI and benches pin this for determinism),
-/// otherwise the machine's available parallelism.
+/// otherwise the machine's available parallelism.  Invalid values warn
+/// once and fall back (strict `knobs` parsing).
 pub fn default_threads() -> usize {
-    std::env::var("PALLAS_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
-        })
+    static WARN: Once = Once::new();
+    let raw = std::env::var("PALLAS_THREADS").ok();
+    knobs::parse_positive("PALLAS_THREADS", raw.as_deref(), &WARN, || {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    })
+}
+
+/// Fusion default for every backend: on unless `PALLAS_FUSE=0`.
+/// Invalid values warn once and keep the default (strict `knobs`
+/// parsing).
+pub fn default_fuse() -> bool {
+    static WARN: Once = Once::new();
+    let raw = std::env::var("PALLAS_FUSE").ok();
+    knobs::parse_switch("PALLAS_FUSE", raw.as_deref(), &WARN, true)
+}
+
+/// Scheduling options shared by every backend: whether to fuse barrier
+/// groups and how tall the row panels of a fused phase are.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedOpts {
+    /// Merge consecutive barrier groups when no vertical dependency
+    /// spans the boundary ([`KernelPlan::schedule`]).
+    pub fuse: bool,
+    /// Rows per panel inside a phase; `0` picks a height that keeps a
+    /// panel's working set L2-resident ([`resolve_panel_rows`]).
+    pub panel_rows: usize,
+}
+
+impl Default for SchedOpts {
+    fn default() -> Self {
+        Self {
+            fuse: default_fuse(),
+            panel_rows: 0,
+        }
+    }
+}
+
+impl SchedOpts {
+    /// The historical per-barrier-group schedule (testing / comparison).
+    pub fn unfused() -> Self {
+        Self {
+            fuse: false,
+            panel_rows: 0,
+        }
+    }
+}
+
+/// Panel height for a given row stride: the configured value when
+/// positive, otherwise enough rows that one panel across the four
+/// planes (~4 bytes x 4 planes x stride per row) stays within a 256 KiB
+/// L2 slice, floored at 4 rows so short strides do not degenerate into
+/// per-row dispatch.
+pub fn resolve_panel_rows(panel_rows: usize, stride: usize) -> usize {
+    if panel_rows > 0 {
+        panel_rows
+    } else {
+        (256 * 1024 / (stride.max(1) * 4 * 4)).max(4)
+    }
+}
+
+/// Single-threaded scheduled execution, shared by [`ScalarExecutor`],
+/// [`SingleExecutor`] and the SIMD backend: the plan's compiled
+/// schedule run phase by phase, the whole plane as one band, each
+/// in-place phase panel-blocked.
+pub(crate) fn execute_scheduled(
+    plan: &KernelPlan,
+    planes: &mut Planes,
+    scratch: &mut Option<Planes>,
+    vector: bool,
+    opts: SchedOpts,
+) {
+    for phase in plan.schedule(opts.fuse).phases {
+        match phase {
+            FusedPhase::InPlace(ks) => {
+                run_phase_single(&ks, planes, plan.boundary, vector, opts.panel_rows)
+            }
+            FusedPhase::Stencil(st) => {
+                let out = ensure_scratch(planes, scratch);
+                apply::run_stencil_ex(st, planes, out, plan.boundary, vector);
+                std::mem::swap(planes, out);
+            }
+        }
+    }
+}
+
+/// Run one in-place phase with the whole plane as a single band:
+/// planes the phase writes become the band's private chunk, the rest
+/// stay shared read-only — the same split the parallel backend makes
+/// per band, so both paths execute identical kernel bodies.
+fn run_phase_single(
+    kernels: &[&Kernel],
+    planes: &mut Planes,
+    boundary: Boundary,
+    vector: bool,
+    panel_rows: usize,
+) {
+    let (stride, w2, h2) = (planes.stride, planes.w2, planes.h2);
+    let mut written = 0u8;
+    for k in kernels {
+        written |= written_planes(k);
+    }
+    let [p0, p1, p2, p3] = &mut planes.p;
+    let mut shared: [Option<&[f32]>; 4] = [None; 4];
+    let mut mine: [Option<&mut [f32]>; 4] = [None, None, None, None];
+    for (i, p) in [p0, p1, p2, p3].into_iter().enumerate() {
+        if written & (1 << i) != 0 {
+            mine[i] = Some(p.as_mut_slice());
+        } else {
+            shared[i] = Some(p.as_slice());
+        }
+    }
+    run_band_kernels(
+        kernels, mine, shared, 0..h2, stride, w2, h2, boundary, vector, panel_rows,
+    );
 }
 
 // ------------------------------------------------------------ band pool
@@ -205,93 +370,6 @@ impl Drop for BandPool {
     }
 }
 
-// --------------------------------------------------- phase partitioning
-
-/// One barrier-free slice of a step's kernel list.
-enum Phase<'p> {
-    /// In-place kernels (lifts, scales) every band runs over its own
-    /// rows with no synchronization in between.
-    InPlace(&'p [Kernel]),
-    /// A fused stencil: reads all planes with 2-D reach, writes the
-    /// double buffer — always its own phase, followed by the swap.
-    Stencil(&'p Stencil),
-}
-
-/// Bitmask of planes a kernel writes.
-fn written_planes(k: &Kernel) -> u8 {
-    match k {
-        Kernel::Lift { dst, .. } => 1 << *dst,
-        Kernel::Scale { factors } => {
-            let mut m = 0;
-            for (c, &f) in factors.iter().enumerate() {
-                // same skip condition as the scalar executor
-                if (f - 1.0).abs() > 1e-12 {
-                    m |= 1 << c;
-                }
-            }
-            m
-        }
-        Kernel::Stencil(_) => 0b1111,
-    }
-}
-
-/// Bitmask of planes a kernel reads with *vertical* reach — the reads
-/// that cross band edges and therefore need the source plane globally
-/// consistent (no writer in the same phase).
-fn vread_planes(k: &Kernel) -> u8 {
-    match k {
-        Kernel::Lift {
-            src,
-            axis: Axis::Vertical,
-            ..
-        } => 1 << *src,
-        Kernel::Lift { .. } | Kernel::Scale { .. } => 0,
-        Kernel::Stencil(_) => 0b1111,
-    }
-}
-
-/// Split a barrier group's kernel list into band-parallel phases.
-///
-/// A phase is safe when no band can observe another band's rows in a
-/// half-written state: every plane read with vertical reach must have
-/// no writer in the phase (in either order — bands drift apart, so a
-/// later writer races an earlier reader just the same).  Horizontal
-/// kernels are row-local and never force a cut.  The cut points are
-/// the executor's halo exchanges: between phases, each band's next
-/// vertical read is guaranteed to see its neighbours' finished rows.
-fn phases(kernels: &[Kernel]) -> Vec<Phase<'_>> {
-    let mut out = Vec::new();
-    let mut start = 0usize;
-    let mut written = 0u8;
-    let mut vread = 0u8;
-    for (i, k) in kernels.iter().enumerate() {
-        if let Kernel::Stencil(st) = k {
-            if start < i {
-                out.push(Phase::InPlace(&kernels[start..i]));
-            }
-            out.push(Phase::Stencil(st));
-            start = i + 1;
-            written = 0;
-            vread = 0;
-            continue;
-        }
-        let w = written_planes(k);
-        let vr = vread_planes(k);
-        if (vr & written) != 0 || (w & vread) != 0 {
-            out.push(Phase::InPlace(&kernels[start..i]));
-            start = i;
-            written = 0;
-            vread = 0;
-        }
-        written |= w;
-        vread |= vr;
-    }
-    if start < kernels.len() {
-        out.push(Phase::InPlace(&kernels[start..]));
-    }
-    out
-}
-
 /// Split `h2` rows into at most `n` contiguous non-empty bands.
 pub fn band_ranges(h2: usize, n: usize) -> Vec<Range<usize>> {
     let n = n.clamp(1, h2.max(1));
@@ -322,11 +400,12 @@ pub fn band_ranges(h2: usize, n: usize) -> Vec<Range<usize>> {
 pub struct ParallelExecutor {
     pool: BandPool,
     vector: bool,
+    opts: SchedOpts,
 }
 
 impl ParallelExecutor {
     /// Pool sized by [`default_threads`] (`PALLAS_THREADS` override),
-    /// scalar interior bodies.
+    /// scalar interior bodies, default scheduling.
     pub fn new() -> Self {
         Self::with_threads(default_threads())
     }
@@ -339,9 +418,15 @@ impl ParallelExecutor {
     /// true` is the parallel+simd configuration the coordinator runs by
     /// default; `PALLAS_SIMD=0` turns it off service-wide).
     pub fn with_threads_vector(threads: usize, vector: bool) -> Self {
+        Self::with_opts(threads, vector, SchedOpts::default())
+    }
+
+    /// Full configuration: thread count, interior bodies, scheduling.
+    pub fn with_opts(threads: usize, vector: bool, opts: SchedOpts) -> Self {
         Self {
             pool: BandPool::new(threads),
             vector,
+            opts,
         }
     }
 
@@ -360,7 +445,7 @@ impl ParallelExecutor {
     /// every vertically-read plane is in the second set).
     fn run_inplace_phase(
         &self,
-        kernels: &[Kernel],
+        kernels: &[&Kernel],
         planes: &mut Planes,
         bands: &[Range<usize>],
         boundary: Boundary,
@@ -381,12 +466,15 @@ impl ParallelExecutor {
             }
         }
         let vector = self.vector;
+        let panel_rows = self.opts.panel_rows;
         let mut iters = banded.map(Vec::into_iter);
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bands.len());
         for range in bands.iter().cloned() {
             let mine: [Option<&mut [f32]>; 4] = std::array::from_fn(|i| iters[i].next());
             jobs.push(Box::new(move || {
-                run_band_kernels(kernels, mine, shared, range, stride, w2, h2, boundary, vector);
+                run_band_kernels(
+                    kernels, mine, shared, range, stride, w2, h2, boundary, vector, panel_rows,
+                );
             }));
         }
         self.pool.scope_run(jobs);
@@ -447,24 +535,27 @@ impl PlanExecutor for ParallelExecutor {
         let bands = band_ranges(planes.h2, self.pool.size());
         if bands.len() <= 1 {
             // too short to band (or a 1-thread pool): single-band path,
-            // keeping this executor's interior-body selection
-            plan.execute_opts(planes, scratch, self.vector);
+            // keeping this executor's interior-body and scheduling
+            // selection
+            execute_scheduled(plan, planes, scratch, self.vector, self.opts);
             return;
         }
-        for step in &plan.steps {
-            for phase in phases(&step.kernels) {
-                match phase {
-                    Phase::InPlace(ks) => {
-                        self.run_inplace_phase(ks, planes, &bands, plan.boundary)
-                    }
-                    Phase::Stencil(st) => {
-                        let out = ensure_scratch(planes, scratch);
-                        self.run_stencil_phase(st, planes, out, &bands, plan.boundary);
-                        std::mem::swap(planes, out);
-                    }
+        for phase in plan.schedule(self.opts.fuse).phases {
+            match phase {
+                FusedPhase::InPlace(ks) => {
+                    self.run_inplace_phase(&ks, planes, &bands, plan.boundary)
+                }
+                FusedPhase::Stencil(st) => {
+                    let out = ensure_scratch(planes, scratch);
+                    self.run_stencil_phase(st, planes, out, &bands, plan.boundary);
+                    std::mem::swap(planes, out);
                 }
             }
         }
+    }
+
+    fn join2<'s>(&self, a: Box<dyn FnOnce() + Send + 's>, b: Box<dyn FnOnce() + Send + 's>) {
+        self.pool.scope_run(vec![a, b]);
     }
 }
 
@@ -485,73 +576,134 @@ fn split_bands<'a>(
     out
 }
 
-/// Execute one band's share of an in-place phase: the kernels in plan
-/// order, each restricted to rows `rows` — horizontal kernels read the
-/// band's own rows, vertical kernels read the whole (phase-shared)
-/// source plane.
+/// Execute one band's share of an in-place phase, *panel-blocked*: the
+/// band's rows are walked in panels of [`resolve_panel_rows`] height,
+/// and within a panel every kernel of the phase runs before the walk
+/// advances — each cache line is touched once per fused phase instead
+/// of once per kernel.  Horizontal kernels read the panel's own rows;
+/// vertical kernels with reach read the whole phase-shared source
+/// plane (the scheduler guarantees no kernel of the phase writes it,
+/// so panel order cannot be observed); a reach-0 vertical lift reads
+/// its source row-aligned and may therefore take a banded source.
 #[allow(clippy::too_many_arguments)]
 fn run_band_kernels(
-    kernels: &[Kernel],
+    kernels: &[&Kernel],
     mut mine: [Option<&mut [f32]>; 4],
     shared: [Option<&[f32]>; 4],
-    rows: Range<usize>,
+    band: Range<usize>,
     stride: usize,
     w2: usize,
     h2: usize,
     boundary: Boundary,
     vector: bool,
+    panel_rows: usize,
 ) {
-    let n_rows = rows.end - rows.start;
-    for k in kernels {
-        match k {
-            Kernel::Lift {
-                dst,
-                src,
-                axis,
-                taps,
-                class,
-            } => {
-                let src_odd = plane_is_odd(*src, *axis);
-                match axis {
-                    Axis::Horizontal => {
-                        if let Some(full) = shared[*src] {
-                            let srows = &full[rows.start * stride..rows.end * stride];
-                            let d = mine[*dst].as_deref_mut().expect("written plane is banded");
-                            lifting::lift_rows_h_ex(
-                                d, srows, stride, w2, n_rows, taps, *class, boundary, src_odd,
-                                vector,
-                            );
-                        } else {
-                            let (d, s) = two_chunks(&mut mine, *dst, *src);
-                            lifting::lift_rows_h_ex(
-                                d, s, stride, w2, n_rows, taps, *class, boundary, src_odd,
-                                vector,
-                            );
+    let panel = resolve_panel_rows(panel_rows, stride);
+    let mut y = band.start;
+    while y < band.end {
+        let yend = (y + panel).min(band.end);
+        let pn = yend - y;
+        // chunk-relative sample offsets of this panel's rows
+        let lo = (y - band.start) * stride;
+        let hi = (yend - band.start) * stride;
+        for k in kernels {
+            match k {
+                Kernel::Lift {
+                    dst,
+                    src,
+                    axis,
+                    taps,
+                    class,
+                } => {
+                    let src_odd = plane_is_odd(*src, *axis);
+                    match axis {
+                        Axis::Horizontal => {
+                            if let Some(full) = shared[*src] {
+                                let srows = &full[y * stride..yend * stride];
+                                let d = mine[*dst].as_deref_mut().expect("written plane is mine");
+                                lifting::lift_rows_h_ex(
+                                    &mut d[lo..hi],
+                                    srows,
+                                    stride,
+                                    w2,
+                                    pn,
+                                    taps,
+                                    *class,
+                                    boundary,
+                                    src_odd,
+                                    vector,
+                                );
+                            } else {
+                                let (d, s) = two_chunks(&mut mine, *dst, *src);
+                                lifting::lift_rows_h_ex(
+                                    &mut d[lo..hi],
+                                    &s[lo..hi],
+                                    stride,
+                                    w2,
+                                    pn,
+                                    taps,
+                                    *class,
+                                    boundary,
+                                    src_odd,
+                                    vector,
+                                );
+                            }
+                        }
+                        Axis::Vertical => {
+                            if let Some(s) = shared[*src] {
+                                let d = mine[*dst].as_deref_mut().expect("written plane is mine");
+                                lifting::lift_rows_v_ex(
+                                    &mut d[lo..],
+                                    s,
+                                    stride,
+                                    w2,
+                                    h2,
+                                    y,
+                                    yend,
+                                    taps,
+                                    boundary,
+                                    src_odd,
+                                    vector,
+                                );
+                            } else {
+                                // a banded source is only legal when the
+                                // lift has no vertical reach (the
+                                // scheduler cuts otherwise): every read
+                                // stays inside the panel's own rows
+                                debug_assert_eq!(taps_reach(taps), 0);
+                                let (d, s) = two_chunks(&mut mine, *dst, *src);
+                                lifting::lift_rows_v_ex(
+                                    &mut d[lo..],
+                                    &s[lo..],
+                                    stride,
+                                    w2,
+                                    pn,
+                                    0,
+                                    pn,
+                                    taps,
+                                    boundary,
+                                    src_odd,
+                                    vector,
+                                );
+                            }
                         }
                     }
-                    Axis::Vertical => {
-                        let s = shared[*src].expect("vertical source is phase-shared");
-                        let d = mine[*dst].as_deref_mut().expect("written plane is banded");
-                        lifting::lift_rows_v_ex(
-                            d, s, stride, w2, h2, rows.start, rows.end, taps, boundary, src_odd,
-                            vector,
-                        );
-                    }
                 }
-            }
-            Kernel::Scale { factors } => {
-                for (c, &f) in factors.iter().enumerate() {
-                    if (f - 1.0).abs() > 1e-12 {
-                        let d = mine[c].as_deref_mut().expect("scaled plane is banded");
-                        for r in 0..n_rows {
-                            let row = &mut d[r * stride..r * stride + w2];
-                            crate::dwt::vecn::scale_opt(row, f, vector);
+                Kernel::Scale { factors } => {
+                    for (c, &f) in factors.iter().enumerate() {
+                        if (f - 1.0).abs() > 1e-12 {
+                            let d = mine[c].as_deref_mut().expect("scaled plane is mine");
+                            for r in 0..pn {
+                                let row = &mut d[lo + r * stride..lo + r * stride + w2];
+                                crate::dwt::vecn::scale_opt(row, f, vector);
+                            }
                         }
                     }
                 }
+                Kernel::Stencil(_) => unreachable!("stencils run in their own phase"),
             }
-            Kernel::Stencil(_) => unreachable!("stencils run in their own phase"),
         }
+        y = yend;
     }
 }
 
@@ -613,20 +765,153 @@ mod tests {
     fn phases_cut_exactly_on_vertical_dependencies() {
         // the fused spatial predict lowers to [H, H, V, V] where the
         // last vertical lift reads a plane the first horizontal one
-        // wrote: expect exactly one cut before it
+        // wrote: expect exactly one cut before it in the unfused
+        // schedule of the first step
         let w = Wavelet::cdf97();
         let plan =
             KernelPlan::from_steps(&schemes::build(Scheme::NsLifting, &w), Boundary::Periodic);
-        let step = &plan.steps[0];
-        assert_eq!(step.kernels.len(), 4);
-        let ph = phases(&step.kernels);
-        assert_eq!(ph.len(), 2);
-        match (&ph[0], &ph[1]) {
-            (Phase::InPlace(a), Phase::InPlace(b)) => {
+        assert_eq!(plan.steps[0].kernels.len(), 4);
+        let sched = plan.schedule(false);
+        match (&sched.phases[0], &sched.phases[1]) {
+            (FusedPhase::InPlace(a), FusedPhase::InPlace(b)) => {
                 assert_eq!(a.len(), 3);
                 assert_eq!(b.len(), 1);
             }
             _ => panic!("expected two in-place phases"),
+        }
+    }
+
+    #[test]
+    fn fused_matches_unfused_bit_exactly_on_every_backend() {
+        // the PR-1 kernel-at-a-time path is the reference; fused and
+        // unfused scheduled execution must agree with it bit for bit
+        // on every backend, scheme, wavelet and boundary
+        let backends: Vec<(&str, Box<dyn PlanExecutor>)> = vec![
+            (
+                "single fused",
+                Box::new(SingleExecutor::new(false, SchedOpts {
+                    fuse: true,
+                    panel_rows: 0,
+                })),
+            ),
+            (
+                "simd fused",
+                Box::new(SingleExecutor::new(true, SchedOpts {
+                    fuse: true,
+                    panel_rows: 0,
+                })),
+            ),
+            (
+                "parallel fused",
+                Box::new(ParallelExecutor::with_opts(4, false, SchedOpts {
+                    fuse: true,
+                    panel_rows: 0,
+                })),
+            ),
+            (
+                "parallel+simd fused",
+                Box::new(ParallelExecutor::with_opts(3, true, SchedOpts {
+                    fuse: true,
+                    panel_rows: 5,
+                })),
+            ),
+            (
+                "single unfused",
+                Box::new(SingleExecutor::new(false, SchedOpts::unfused())),
+            ),
+            (
+                "parallel unfused",
+                Box::new(ParallelExecutor::with_opts(4, false, SchedOpts::unfused())),
+            ),
+        ];
+        for (w, h) in [(64, 64), (96, 70)] {
+            let img = Image::synthetic(w, h, 76);
+            let planes0 = Planes::split(&img);
+            for wav in Wavelet::all() {
+                for s in Scheme::ALL {
+                    for boundary in [Boundary::Periodic, Boundary::Symmetric] {
+                        let fwd = KernelPlan::from_steps(&schemes::build(s, &wav), boundary);
+                        let want = fwd.run(&planes0);
+                        for (tag, exec) in &backends {
+                            let got = exec.run(&fwd, &planes0);
+                            assert!(
+                                bit_equal(&want, &got),
+                                "{} {} {:?} {}x{}: {tag} != reference",
+                                wav.name,
+                                s.name(),
+                                boundary,
+                                w,
+                                h
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn awkward_heights_fuse_exactly_with_more_bands_than_rows() {
+        // satellite: heights that band unevenly (and 17 rows under 24
+        // requested bands), tiny panels that split phases mid-band —
+        // fused == unfused == reference, bit for bit
+        let scalar = ScalarExecutor;
+        for rows in [17usize, 33, 66] {
+            let img = Image::synthetic(64, rows * 2, 77);
+            let planes0 = Planes::split(&img);
+            assert_eq!(planes0.h2, rows);
+            for panel_rows in [1usize, 3, 0] {
+                let fused = ParallelExecutor::with_opts(24, false, SchedOpts {
+                    fuse: true,
+                    panel_rows,
+                });
+                let unfused = ParallelExecutor::with_opts(24, false, SchedOpts {
+                    fuse: false,
+                    panel_rows,
+                });
+                for wav in [Wavelet::cdf97(), Wavelet::haar()] {
+                    for s in Scheme::ALL {
+                        for boundary in [Boundary::Periodic, Boundary::Symmetric] {
+                            let plan = KernelPlan::from_steps(&schemes::build(s, &wav), boundary);
+                            let want = scalar.run(&plan, &planes0);
+                            for (tag, exec) in
+                                [("fused", &fused), ("unfused", &unfused)]
+                            {
+                                assert!(
+                                    bit_equal(&want, &exec.run(&plan, &planes0)),
+                                    "{} {} {:?} h2={rows} panel={panel_rows}: {tag}",
+                                    wav.name,
+                                    s.name(),
+                                    boundary
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_optimized_groupings_roundtrip_through_every_backend() {
+        let par = ParallelExecutor::with_opts(4, true, SchedOpts {
+            fuse: true,
+            panel_rows: 0,
+        });
+        let img = Image::synthetic(64, 48, 78);
+        let planes0 = Planes::split(&img);
+        for wav in Wavelet::all() {
+            for s in Scheme::ALL {
+                let plan =
+                    KernelPlan::compile(&schemes::build_optimized(s, &wav), Boundary::Periodic);
+                let want = plan.run(&planes0);
+                assert!(
+                    bit_equal(&want, &par.run(&plan, &planes0)),
+                    "{} {} optimized fused",
+                    wav.name,
+                    s.name()
+                );
+            }
         }
     }
 

@@ -1,0 +1,91 @@
+//! Strict parsing for the `PALLAS_*` environment knobs.
+//!
+//! Invalid values used to fall through silently to the default, which
+//! made a typo (`PALLAS_THREADS=fuor`, `PALLAS_SIMD=off`)
+//! indistinguishable from a deliberate default.  The helpers here parse
+//! strictly, print a one-line warning on stderr — once per knob, so a
+//! service calling the resolver per request does not spam — and fall
+//! back to the documented default.
+//!
+//! Used by [`super::executor::default_threads`] (`PALLAS_THREADS`),
+//! [`super::simd::default_simd`] (`PALLAS_SIMD`) and
+//! [`super::executor::default_fuse`] (`PALLAS_FUSE`).
+
+use std::sync::Once;
+
+/// Parse a positive-integer knob (`PALLAS_THREADS`).  Unset or empty
+/// resolves to `default()`; a valid integer `>= 1` passes through;
+/// anything else (including `0`) warns once and falls back.
+pub(crate) fn parse_positive(
+    name: &str,
+    raw: Option<&str>,
+    warn: &Once,
+    default: impl FnOnce() -> usize,
+) -> usize {
+    match raw.map(str::trim) {
+        None | Some("") => default(),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                warn_once(warn, name, v, "a positive integer");
+                default()
+            }
+        },
+    }
+}
+
+/// Parse an on/off knob (`PALLAS_SIMD`, `PALLAS_FUSE`): strictly `"0"`
+/// is off and `"1"` is on.  Unset or empty resolves to `default`;
+/// anything else warns once and keeps `default`.
+pub(crate) fn parse_switch(name: &str, raw: Option<&str>, warn: &Once, default: bool) -> bool {
+    match raw.map(str::trim) {
+        None | Some("") => default,
+        Some("0") => false,
+        Some("1") => true,
+        Some(v) => {
+            warn_once(warn, name, v, "0 or 1");
+            default
+        }
+    }
+}
+
+fn warn_once(warn: &Once, name: &str, value: &str, expected: &str) {
+    warn.call_once(|| {
+        eprintln!("warning: ignoring invalid {name}={value:?} (expected {expected}); using the default");
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // every assertion runs the parser on explicit values — no process
+    // environment is mutated (tests run concurrently)
+
+    #[test]
+    fn positive_accepts_integers_and_rejects_the_rest() {
+        let once = Once::new();
+        let def = || 7usize;
+        assert_eq!(parse_positive("K", None, &once, def), 7);
+        assert_eq!(parse_positive("K", Some(""), &once, def), 7);
+        assert_eq!(parse_positive("K", Some("3"), &once, def), 3);
+        assert_eq!(parse_positive("K", Some(" 12 "), &once, def), 12);
+        assert_eq!(parse_positive("K", Some("0"), &once, def), 7);
+        assert_eq!(parse_positive("K", Some("-2"), &once, def), 7);
+        assert_eq!(parse_positive("K", Some("four"), &once, def), 7);
+    }
+
+    #[test]
+    fn switch_is_strict_zero_one() {
+        let once = Once::new();
+        assert!(parse_switch("K", None, &once, true));
+        assert!(!parse_switch("K", None, &once, false));
+        assert!(!parse_switch("K", Some("0"), &once, true));
+        assert!(parse_switch("K", Some("1"), &once, false));
+        assert!(!parse_switch("K", Some(" 0 "), &once, true));
+        // invalid values keep the default instead of silently flipping
+        assert!(parse_switch("K", Some("yes"), &once, true));
+        assert!(!parse_switch("K", Some("yes"), &once, false));
+        assert!(parse_switch("K", Some("off"), &once, true));
+    }
+}

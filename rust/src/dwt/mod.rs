@@ -7,7 +7,12 @@
 //!   is lowered into fused stencil kernels, in-place lifting updates,
 //!   and scale kernels, with barrier structure and per-step cost/halo
 //!   metadata preserved.  One plan drives the engine, the gpusim cost
-//!   model, and the coordinator.
+//!   model, and the coordinator.  [`plan::KernelPlan::schedule`] then
+//!   compiles the kernel stream into barrier-free *fused phases*
+//!   (sweep fusion): with fusion on — the default; `PALLAS_FUSE=0`
+//!   opts out — consecutive barrier groups merge whenever no vertical
+//!   dependency spans the boundary, so every backend pays only the
+//!   barriers the data flow demands, not the scheme structure.
 //! * [`executor`] / [`simd`] — *how* a plan runs:
 //!   [`executor::ScalarExecutor`] (single-threaded reference),
 //!   [`executor::ParallelExecutor`] (horizontal bands on a persistent
@@ -18,8 +23,11 @@
 //!   outside the `lifting::interior_span` seam).  SIMD composes under
 //!   band parallelism (`ParallelExecutor::with_threads_vector`) —
 //!   lane-groups within threads, the work-group x lane hierarchy.
-//!   Backends are bit-exact with each other; a new backend implements
-//!   the trait and touches no per-scheme code.
+//!   Backends are bit-exact with each other — fused or not — and run
+//!   each fused phase panel-blocked (row panels sized to L2 via
+//!   [`executor::SchedOpts::panel_rows`]) so a cache line is touched
+//!   once per phase instead of once per kernel; a new backend
+//!   implements the trait and touches no per-scheme code.
 //! * [`lifting`] — the in-place 1-D lifting kernel library the plan
 //!   dispatches into, as row-range bodies both executors share (plus
 //!   the hand-scheduled separable reference).
@@ -35,13 +43,19 @@
 //!   one workspace through any executor
 //!   ([`PlanExecutor::run_pyramid`]), with in-place polyphase
 //!   deinterleave between levels and details streamed straight into
-//!   the packed output.
+//!   the packed output.  Forward levels are *pipelined*: level *l*'s
+//!   detail evacuation overlaps the level *l+1* deinterleave
+//!   ([`PlanExecutor::join2`], band-pool-backed on the parallel
+//!   executor).
+//! * `knobs` — strict parsing for the `PALLAS_*` environment knobs
+//!   (invalid values warn once and fall back to the default).
 //!
 //! All paths compute identical coefficients; the test suite enforces it.
 
 pub mod apply;
 pub mod engine;
 pub mod executor;
+pub(crate) mod knobs;
 pub mod lifting;
 pub mod multilevel;
 pub mod plan;
@@ -51,9 +65,12 @@ pub mod simd;
 pub mod vecn;
 
 pub use engine::{Engine, PlanVariant};
-pub use executor::{default_threads, ParallelExecutor, PlanExecutor, ScalarExecutor};
+pub use executor::{
+    default_fuse, default_threads, ParallelExecutor, PlanExecutor, ScalarExecutor, SchedOpts,
+    SingleExecutor,
+};
 pub use lifting::{Axis, Boundary};
-pub use plan::KernelPlan;
+pub use plan::{FusedPhase, KernelPlan, Schedule};
 pub use planes::{Image, Planes};
 pub use pyramid::PyramidPlan;
 pub use simd::{default_simd, SimdExecutor};

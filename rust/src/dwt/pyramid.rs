@@ -23,6 +23,16 @@
 //! band-parallel pyramid execution are bit-exact, level by level, for
 //! the same reason single-level execution is: both drive the same
 //! row-range kernel bodies.
+//!
+//! Forward levels are additionally *pipelined* (on by default;
+//! [`PyramidPlan::with_pipeline`] opts out): after level *l* finishes,
+//! only the detail rows the level-*l+1* deinterleave is about to
+//! overwrite are evacuated synchronously — the remaining tail rows
+//! stream into the packed output *concurrently* with the deinterleave,
+//! through [`PlanExecutor::join2`] (band-pool-backed on the parallel
+//! executor, sequential on single-threaded backends).  The two jobs
+//! touch disjoint rows, so pipelined and serial inter-level execution
+//! are bit-identical.
 
 use super::executor::PlanExecutor;
 use super::plan::KernelPlan;
@@ -66,6 +76,9 @@ pub struct PyramidPlan<'p> {
     /// its `parallel_threshold` here.  Has no effect on the computed
     /// coefficients: executors are bit-exact with each other.
     pub scalar_below: usize,
+    /// Overlap detail evacuation with the next level's deinterleave
+    /// (forward runs only).  On by default; no effect on coefficients.
+    pipeline: bool,
 }
 
 impl<'p> PyramidPlan<'p> {
@@ -114,6 +127,7 @@ impl<'p> PyramidPlan<'p> {
             height,
             inverse,
             scalar_below: 0,
+            pipeline: true,
         })
     }
 
@@ -121,6 +135,20 @@ impl<'p> PyramidPlan<'p> {
     pub fn with_scalar_below(mut self, pixels: usize) -> Self {
         self.scalar_below = pixels;
         self
+    }
+
+    /// Builder-style override of the inter-level pipelining (serial
+    /// evacuation-then-deinterleave when `false`; used for comparison
+    /// benches and tests — the coefficients never differ).
+    pub fn with_pipeline(mut self, pipeline: bool) -> Self {
+        self.pipeline = pipeline;
+        self
+    }
+
+    /// Whether forward runs overlap detail evacuation with the next
+    /// level's deinterleave.
+    pub fn pipelined(&self) -> bool {
+        self.pipeline
     }
 
     pub fn n_levels(&self) -> usize {
@@ -217,13 +245,36 @@ fn run_forward<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, img: &Imag
     // region and deinterleave within it
     let mut ws = Planes::split(img);
     let mut scratch: Option<Planes> = None;
-    for lv in pyr.levels() {
-        if lv.level > 0 {
-            deinterleave_level(&mut ws, lv.w2, lv.h2);
-        }
+    for (i, lv) in pyr.levels().iter().enumerate() {
         ws.set_region(lv.w2, lv.h2);
         level_exec(exec, pyr, lv, &mut ws, &mut scratch);
-        evacuate_details(&ws, &mut out);
+        // the level's detail subbands are final: stream them out, and
+        // prepare the next level's LL (if any) by deinterleaving.  The
+        // deinterleave overwrites rows [0, nx.h2) of p1/p2/p3 with
+        // next-level data, so those rows evacuate synchronously first;
+        // the tail rows [nx.h2, h2) are untouched by it and evacuate
+        // concurrently when pipelining is on.
+        match pyr.levels().get(i + 1) {
+            Some(nx) if pyr.pipeline => {
+                evacuate_rows(&ws, &mut out, 0, nx.h2);
+                let (w, h, s) = (ws.w2, ws.h2, ws.stride);
+                let (nw, nh) = (nx.w2, nx.h2);
+                let [p0, p1, p2, p3] = &mut ws.p;
+                let (head1, tail1) = p1.split_at_mut(nh * s);
+                let (head2, tail2) = p2.split_at_mut(nh * s);
+                let (head3, tail3) = p3.split_at_mut(nh * s);
+                let out_ref = &mut out;
+                exec.join2(
+                    Box::new(move || evacuate_tail(tail1, tail2, tail3, out_ref, w, h, nh, s)),
+                    Box::new(move || deinterleave_slices(p0, head1, head2, head3, s, nw, nh)),
+                );
+            }
+            Some(nx) => {
+                evacuate_rows(&ws, &mut out, 0, ws.h2);
+                deinterleave_level(&mut ws, nx.w2, nx.h2);
+            }
+            None => evacuate_rows(&ws, &mut out, 0, ws.h2),
+        }
     }
     store_ll(&ws, &mut out);
     out
@@ -263,6 +314,22 @@ fn run_inverse<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, packed: &I
 fn deinterleave_level(ws: &mut Planes, w: usize, h: usize) {
     let s = ws.stride;
     let [p0, p1, p2, p3] = &mut ws.p;
+    deinterleave_slices(p0, p1, p2, p3, s, w, h);
+}
+
+/// [`deinterleave_level`] on raw plane slices, so the pipelined forward
+/// path can hand the deinterleave only the rows it owns (`p1`/`p2`/`p3`
+/// need just their first `h` rows) while the detail tails stream out
+/// concurrently.
+fn deinterleave_slices(
+    p0: &mut [f32],
+    p1: &mut [f32],
+    p2: &mut [f32],
+    p3: &mut [f32],
+    s: usize,
+    w: usize,
+    h: usize,
+) {
     for y in 0..h {
         let even = 2 * y * s;
         let odd = (2 * y + 1) * s;
@@ -304,19 +371,43 @@ fn interleave_level(ws: &mut Planes, w: usize, h: usize) {
     }
 }
 
-/// Stream the finished detail subbands of the current level into their
-/// packed-layout quadrants (`HL` right of `LL`, `LH` below, `HH`
-/// diagonal) — after this the workspace corners are free for the next
-/// level.
-fn evacuate_details(ws: &Planes, out: &mut Image) {
+/// Stream rows `[y0, y1)` of the current level's finished detail
+/// subbands into their packed-layout quadrants (`HL` right of `LL`,
+/// `LH` below, `HH` diagonal) — after this the evacuated workspace
+/// rows are free for the next level.
+fn evacuate_rows(ws: &Planes, out: &mut Image, y0: usize, y1: usize) {
     let (w, h, s) = (ws.w2, ws.h2, ws.stride);
     let ow = out.width;
-    for y in 0..h {
+    for y in y0..y1 {
         let src = y * s..y * s + w;
         out.data[y * ow + w..y * ow + 2 * w].copy_from_slice(&ws.p[1][src.clone()]);
         let by = (y + h) * ow;
         out.data[by..by + w].copy_from_slice(&ws.p[2][src.clone()]);
         out.data[by + w..by + 2 * w].copy_from_slice(&ws.p[3][src]);
+    }
+}
+
+/// [`evacuate_rows`] for the pipelined path: the detail planes arrive
+/// as tail slices beginning at row `y0`, so the source indexing is
+/// slice-relative while the packed destination stays absolute.
+#[allow(clippy::too_many_arguments)]
+fn evacuate_tail(
+    p1: &[f32],
+    p2: &[f32],
+    p3: &[f32],
+    out: &mut Image,
+    w: usize,
+    h: usize,
+    y0: usize,
+    s: usize,
+) {
+    let ow = out.width;
+    for y in y0..h {
+        let src = (y - y0) * s..(y - y0) * s + w;
+        out.data[y * ow + w..y * ow + 2 * w].copy_from_slice(&p1[src.clone()]);
+        let by = (y + h) * ow;
+        out.data[by..by + w].copy_from_slice(&p2[src.clone()]);
+        out.data[by + w..by + 2 * w].copy_from_slice(&p3[src]);
     }
 }
 
@@ -526,6 +617,41 @@ mod tests {
         assert!(pyr.macs_per_pixel() < e.macs_per_pixel() * 4.0 / 3.0 + 1e-9);
         let dims: Vec<_> = pyr.levels().iter().map(|l| (l.w2, l.h2)).collect();
         assert_eq!(dims, vec![(128, 128), (64, 64), (32, 32)]);
+    }
+
+    #[test]
+    fn pipelined_levels_match_serial_bit_exactly() {
+        // the overlapped evacuate/deinterleave pair touches disjoint
+        // rows — pipelined forward output must equal the serial path
+        // bit for bit, on every backend, for deep pyramids too
+        let par = ParallelExecutor::with_threads(4);
+        let scalar = ScalarExecutor;
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                for boundary in [Boundary::Periodic, Boundary::Symmetric] {
+                    let e = Engine::with_boundary(s, w.clone(), boundary);
+                    let img = Image::synthetic(96, 64, 88);
+                    for levels in [2usize, 3, 5] {
+                        let pyr = e.pyramid_plan(img.width, img.height, levels, false).unwrap();
+                        assert!(pyr.pipelined(), "pipelining must default on");
+                        let serial = pyr.clone().with_pipeline(false);
+                        for exec in [&par as &dyn PlanExecutor, &scalar] {
+                            let a = exec.run_pyramid(&pyr, &img);
+                            let b = exec.run_pyramid(&serial, &img);
+                            assert_eq!(
+                                a.max_abs_diff(&b),
+                                0.0,
+                                "{} {} {:?} L={levels} {}",
+                                w.name,
+                                s.name(),
+                                boundary,
+                                exec.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -27,15 +27,19 @@
 //! coordinator enables both by default (`PALLAS_SIMD=0` opts out,
 //! service-wide).
 
-use super::executor::PlanExecutor;
+use super::executor::{execute_scheduled, PlanExecutor, SchedOpts};
+use super::knobs;
 use super::plan::KernelPlan;
 use super::planes::Planes;
+use std::sync::Once;
 
 pub use super::vecn::LANES;
 
-/// The vectorized single-threaded backend: the scalar executor's
+/// The vectorized single-threaded backend: the scheduled, panel-blocked
 /// traversal with lane-group interior bodies.  Stateless and free to
-/// construct, like the scalar backend.
+/// construct, like the scalar backend (scheduling follows the process
+/// defaults; [`super::executor::SingleExecutor`] takes explicit
+/// options).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SimdExecutor;
 
@@ -45,16 +49,19 @@ impl PlanExecutor for SimdExecutor {
     }
 
     fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>) {
-        plan.execute_opts(planes, scratch, true);
+        execute_scheduled(plan, planes, scratch, true, SchedOpts::default());
     }
 }
 
 /// SIMD default for the coordinator: on unless `PALLAS_SIMD=0` (the
-/// escape hatch; any other value — including unset — keeps the
-/// vectorized interiors).  Purely a performance knob: routing through
-/// scalar interiors returns bit-identical coefficients.
+/// escape hatch).  Invalid values warn once and keep the default
+/// (strict `knobs` parsing).  Purely a performance knob: routing
+/// through scalar
+/// interiors returns bit-identical coefficients.
 pub fn default_simd() -> bool {
-    std::env::var("PALLAS_SIMD").map(|v| v.trim() != "0").unwrap_or(true)
+    static WARN: Once = Once::new();
+    let raw = std::env::var("PALLAS_SIMD").ok();
+    knobs::parse_switch("PALLAS_SIMD", raw.as_deref(), &WARN, true)
 }
 
 #[cfg(test)]
@@ -217,9 +224,14 @@ mod tests {
     fn pallas_simd_env_escape_hatch() {
         // not a concurrency-safe env test harness — run the parser on
         // explicit values instead of mutating the process environment
-        let parse = |v: Option<&str>| v.map(|s| s.trim() != "0").unwrap_or(true);
+        use crate::dwt::knobs::parse_switch;
+        use std::sync::Once;
+        let once = Once::new();
+        let parse = |v: Option<&str>| parse_switch("PALLAS_SIMD", v, &once, true);
         assert!(parse(None));
         assert!(parse(Some("1")));
+        // strict parsing: "yes" is not a valid switch — warn and keep
+        // the default instead of silently enabling
         assert!(parse(Some("yes")));
         assert!(!parse(Some("0")));
         assert!(!parse(Some(" 0 ")));

@@ -194,6 +194,71 @@ pub fn predict_vec(
     }
 }
 
+/// [`predict`] priced off the *compiled execution schedule* instead of
+/// the scheme's barrier steps: launches, traffic and op distribution
+/// all follow the fused phases of [`crate::dwt::KernelPlan::schedule`]
+/// (`fuse == false` reproduces the dependency-cut-only schedule).  One
+/// launch is charged per phase; each phase's OpenCL bytes are
+/// halo-inflated by the phase's *combined* reach (the same
+/// [`super::pipeline::onchip_pass_bytes`] formula the per-step model
+/// uses), and [`platform_ops`] is distributed over phases
+/// proportionally to the terms the executor evaluates in each
+/// ([`crate::dwt::FusedPhase::exec_ops`]).  Stencil-only schemes
+/// schedule identically fused or not, so their predictions are equal
+/// by construction; lifting schemes with fusible boundaries pay fewer
+/// launches and fewer memory sweeps fused.
+pub fn predict_fused(
+    device: &Device,
+    pipeline: PipelineKind,
+    scheme: Scheme,
+    w: &Wavelet,
+    pixels: usize,
+    fuse: bool,
+) -> SimPoint {
+    use super::pipeline::{onchip_pass_bytes, platform_ops};
+    use crate::dwt::lifting::Boundary;
+    use crate::dwt::plan::KernelPlan;
+    let plan = KernelPlan::from_steps(
+        &crate::polyphase::schemes::build(scheme, w),
+        Boundary::Periodic,
+    );
+    let sched = plan.schedule(fuse);
+    let total_ops = platform_ops(scheme, w, pipeline);
+    let raw: Vec<f64> = sched
+        .phases
+        .iter()
+        .map(|p| p.exec_ops().max(1) as f64)
+        .collect();
+    let raw_sum: f64 = raw.iter().sum();
+    let px = pixels as f64;
+    let time_ms: f64 = sched
+        .phases
+        .iter()
+        .zip(&raw)
+        .map(|(ph, r)| {
+            let bytes = match pipeline {
+                PipelineKind::Shaders => 8.0,
+                PipelineKind::OpenCl => onchip_pass_bytes(ph.halo()),
+            };
+            step_time_ms(
+                device,
+                pipeline,
+                bytes,
+                total_ops * r / raw_sum,
+                total_ops,
+                px,
+                1.0,
+            )
+        })
+        .sum();
+    let gbs = px * 4.0 / (time_ms * 1e-3) / 1e9;
+    SimPoint {
+        pixels,
+        time_ms,
+        gbs,
+    }
+}
+
 /// Predict an L-level Mallat pyramid: each level is a full
 /// kernel-launch sequence of its own over a quarter of the previous
 /// level's pixels, so time sums the per-level geometric series
@@ -403,6 +468,41 @@ mod tests {
         let s = lane_speedup(0.9, 8);
         assert!(s > 1.0 && s < 8.0);
         assert_eq!(lane_speedup(0.9, 1), 1.0);
+    }
+
+    #[test]
+    fn fused_prediction_helps_where_barriers_fall_and_is_neutral_elsewhere() {
+        let px = 2048 * 2048;
+        // stencil-only schemes schedule identically fused or not: the
+        // prediction is the same float-for-float
+        for s in [Scheme::SepConv, Scheme::NsConv, Scheme::SepPolyconv, Scheme::NsPolyconv] {
+            for w in [Wavelet::cdf53(), Wavelet::cdf97()] {
+                for (dev, pipe) in [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)] {
+                    let a = predict_fused(&dev, pipe, s, &w, px, true);
+                    let b = predict_fused(&dev, pipe, s, &w, px, false);
+                    assert_eq!(a.time_ms, b.time_ms, "{} {} on {}", w.name, s.name(), dev.label);
+                }
+            }
+        }
+        // lifting chains with fusible boundaries pay fewer launches and
+        // fewer shader sweeps: strictly faster fused where phases drop
+        for (s, w) in [
+            (Scheme::SepLifting, Wavelet::haar()),
+            (Scheme::NsLifting, Wavelet::haar()),
+            (Scheme::NsLifting, Wavelet::cdf53()),
+            (Scheme::NsLifting, Wavelet::cdf97()),
+        ] {
+            let fused = predict_fused(&nv(), PipelineKind::Shaders, s, &w, px, true);
+            let unfused = predict_fused(&nv(), PipelineKind::Shaders, s, &w, px, false);
+            assert!(
+                fused.time_ms < unfused.time_ms,
+                "{} {}: fused {} !< unfused {}",
+                w.name,
+                s.name(),
+                fused.time_ms,
+                unfused.time_ms
+            );
+        }
     }
 
     #[test]

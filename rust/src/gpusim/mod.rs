@@ -14,6 +14,11 @@ pub mod cost;
 pub mod device;
 pub mod pipeline;
 
-pub use cost::{lane_speedup, predict_pyramid, predict_vec, simulate, vector_coverage, SimPoint};
+pub use cost::{
+    lane_speedup, predict_fused, predict_pyramid, predict_vec, simulate, vector_coverage, SimPoint,
+};
 pub use device::Device;
-pub use pipeline::{band_halo_bytes, pyramid_band_halo_bytes, PipelineKind};
+pub use pipeline::{
+    band_halo_bytes, fused_band_halo_bytes, onchip_pass_bytes, pyramid_band_halo_bytes,
+    PipelineKind,
+};

@@ -94,13 +94,7 @@ pub fn scheme_load(scheme: Scheme, w: &Wavelet, pipeline: PipelineKind) -> Schem
                 // the per-tap re-reads) + write 4 B/pel
                 PipelineKind::Shaders => 8.0,
                 // one kernel per barrier: halo-inflated read + write
-                PipelineKind::OpenCl => {
-                    let (t, b, l, r_) = step.halo;
-                    let gy = GROUP_SIDE as f64 + (t + b) as f64;
-                    let gx = GROUP_SIDE as f64 + (l + r_) as f64;
-                    let halo_factor = (gx * gy) / (GROUP_SIDE * GROUP_SIDE) as f64;
-                    4.0 * halo_factor + 4.0
-                }
+                PipelineKind::OpenCl => onchip_pass_bytes(step.halo),
             };
             StepLoad {
                 bytes_per_pixel: bytes,
@@ -128,6 +122,20 @@ impl SchemeLoad {
     }
 }
 
+/// Bytes per input pixel of one OpenCL pass whose work groups read the
+/// `(top, bottom, left, right)` halo: halo-inflated read + plain write,
+/// over the [`GROUP_SIDE`]-square group geometry.  Shared by the
+/// per-barrier-step accounting ([`scheme_load`]) and the fused-phase
+/// accounting ([`crate::gpusim::cost::predict_fused`]), so both price
+/// traffic off the same formula.
+pub fn onchip_pass_bytes(halo: (i32, i32, i32, i32)) -> f64 {
+    let (t, b, l, r) = halo;
+    let gy = GROUP_SIDE as f64 + (t + b) as f64;
+    let gx = GROUP_SIDE as f64 + (l + r) as f64;
+    let halo_factor = (gx * gy) / (GROUP_SIDE * GROUP_SIDE) as f64;
+    4.0 * halo_factor + 4.0
+}
+
 /// Halo traffic of a band-parallel CPU execution of `plan` — the same
 /// accounting the OpenCL work-group model applies per 16x16 group,
 /// restated for the [`crate::dwt::ParallelExecutor`]'s geometry: `bands`
@@ -153,6 +161,32 @@ pub fn band_halo_bytes(plan: &KernelPlan, w2: usize, bands: usize) -> usize {
         .map(|s| {
             let (t, b, _, _) = s.halo;
             (t.max(0) + b.max(0)) as usize * w2 * 4 * 4 * bands
+        })
+        .sum()
+}
+
+/// Halo traffic of a banded execution under the *compiled schedule*:
+/// one exchange per fused phase ([`KernelPlan::schedule`]), metering
+/// only the plane each vertically-reaching kernel actually reads
+/// (`top + bottom` reach rows, `w2` columns, 4 bytes, per band) —
+/// unlike the conservative all-four-planes upper bound of
+/// [`band_halo_bytes`], which charges a whole-workspace exchange per
+/// barrier step.  The two are different metrics of the same plan; this
+/// one exists to show what fusion changes and what it provably cannot:
+/// vertical reach adds under composition, so the byte total is
+/// partition-invariant — `fused == unfused` always — while the
+/// *exchange count* ([`KernelPlan::n_exec_barriers`]) drops.  Fusion
+/// trades synchronization latency, never bandwidth.
+pub fn fused_band_halo_bytes(plan: &KernelPlan, w2: usize, bands: usize, fuse: bool) -> usize {
+    if bands <= 1 {
+        return 0; // one band: nothing crosses an edge
+    }
+    plan.schedule(fuse)
+        .phases
+        .iter()
+        .map(|ph| {
+            let (t, b, _, _) = ph.halo();
+            (t.max(0) + b.max(0)) as usize * w2 * 4 * bands
         })
         .sum()
 }
@@ -328,6 +362,40 @@ mod tests {
         assert_eq!(deep, deeper, "exhausted levels add no traffic");
         // scalar execution still exchanges nothing at any depth
         assert_eq!(pyramid_band_halo_bytes(&plan, 512, 512, 1, 5), 0);
+    }
+
+    #[test]
+    fn fused_halo_bytes_are_conserved_while_exchanges_drop() {
+        // vertical reach adds under composition: any partition of the
+        // kernel stream reports the same byte total, so fusion cannot
+        // inflate traffic — it only removes synchronization points
+        for w in Wavelet::all() {
+            for s in Scheme::ALL {
+                let plan = KernelPlan::from_steps(&schemes::build(s, &w), Boundary::Periodic);
+                assert_eq!(
+                    fused_band_halo_bytes(&plan, 256, 4, true),
+                    fused_band_halo_bytes(&plan, 256, 4, false),
+                    "{} {}",
+                    w.name,
+                    s.name()
+                );
+                assert!(plan.n_exec_barriers(true) <= plan.n_exec_barriers(false));
+            }
+        }
+        // the showcase: ns_lifting pays strictly fewer exchanges fused
+        let w = Wavelet::cdf97();
+        let plan = KernelPlan::from_steps(&schemes::build(Scheme::NsLifting, &w),
+                                          Boundary::Periodic);
+        assert!(plan.n_exec_barriers(true) < plan.n_exec_barriers(false));
+        assert!(fused_band_halo_bytes(&plan, 256, 4, true) > 0);
+        // single band (scalar execution) exchanges nothing
+        assert_eq!(fused_band_halo_bytes(&plan, 256, 1, true), 0);
+        // Haar reads nothing vertically: zero bytes at any band count
+        let hp = KernelPlan::from_steps(
+            &schemes::build(Scheme::SepLifting, &Wavelet::haar()),
+            Boundary::Periodic,
+        );
+        assert_eq!(fused_band_halo_bytes(&hp, 256, 8, true), 0);
     }
 
     #[test]

@@ -18,6 +18,7 @@ fn native_cfg() -> CoordinatorConfig {
         parallel_threshold: 512 * 512,
         threads: 4,
         simd: false,
+        fuse: true,
     }
 }
 
@@ -68,6 +69,41 @@ fn parallel_route_large_image_matches_monolithic() {
     // routing by size is invisible to clients
     let expect = Engine::new(Scheme::SepLifting, Wavelet::cdf97()).forward(&img);
     assert_eq!(resp.image.max_abs_diff(&expect), 0.0);
+}
+
+#[test]
+fn fusion_knob_is_invisible_to_clients() {
+    // fused phase scheduling (the default) must produce bit-identical
+    // coefficients to the unfused schedule on both native routes
+    let fused = Coordinator::new(native_cfg()).unwrap();
+    let unfused = Coordinator::new(CoordinatorConfig {
+        fuse: false,
+        ..native_cfg()
+    })
+    .unwrap();
+    // 1024x512 takes the parallel route, 64x64 the single-threaded one
+    for (w, h) in [(1024, 512), (64, 64)] {
+        let img = Image::synthetic(w, h, 57);
+        for scheme in [Scheme::NsLifting, Scheme::SepLifting] {
+            let req = Request {
+                image: img.clone(),
+                wavelet: "cdf97".into(),
+                scheme,
+                ..Request::default()
+            };
+            let a = fused.transform(req.clone()).unwrap();
+            let b = unfused.transform(req).unwrap();
+            assert_eq!(a.backend, b.backend);
+            assert_eq!(
+                a.image.max_abs_diff(&b.image),
+                0.0,
+                "{} {}x{}: fused != unfused",
+                scheme.name(),
+                w,
+                h
+            );
+        }
+    }
 }
 
 #[test]
@@ -194,6 +230,7 @@ fn pjrt_route_used_at_serve_size_and_batches_form() {
         parallel_threshold: usize::MAX,
         threads: 0,
         simd: true,
+        fuse: true,
     })
     .unwrap();
     assert!(coord.pjrt_available());
@@ -380,6 +417,7 @@ fn bad_artifacts_dir_falls_back_to_native() {
         parallel_threshold: usize::MAX,
         threads: 0,
         simd: false,
+        fuse: true,
     })
     .unwrap();
     assert!(!coord.pjrt_available());
@@ -407,6 +445,7 @@ fn corrupt_manifest_falls_back_to_native() {
         parallel_threshold: usize::MAX,
         threads: 0,
         simd: false,
+        fuse: true,
     })
     .unwrap();
     assert!(!coord.pjrt_available());
@@ -590,6 +629,7 @@ fn deterministic_thread_count_is_respected() {
         parallel_threshold: 0, // every request takes the parallel route
         threads: 1,
         simd: false,
+        fuse: true,
     })
     .unwrap();
     let img = Image::synthetic(64, 64, 96);
