@@ -9,9 +9,14 @@
 //! parallel+simd at 1024^2 and 2048^2; and a fusion section (PR 6)
 //! timing fused vs unfused phase scheduling per scheme (with the
 //! barrier counts before/after cross-group batching) plus pipelined vs
-//! serial pyramid levels at L = 5.  Emits `BENCH_native.json`
-//! (schema v5) so future PRs can track the planned-vs-legacy,
-//! parallel-vs-scalar, pyramid, simd, and fusion speedup trajectories.
+//! serial pyramid levels at L = 5; and a throughput section (PR 7)
+//! measuring requests/sec at 512^2 and 1024^2 through the pooled
+//! zero-allocation request path vs the allocate-per-request
+//! composition, with `allocs_per_request` counted by this binary's own
+//! global allocator (pooled records must report 0 — the CI gate
+//! hard-asserts it).  Emits `BENCH_native.json` (schema v6) so future
+//! PRs can track the planned-vs-legacy, parallel-vs-scalar, pyramid,
+//! simd, fusion, and pooled-throughput trajectories.
 //!
 //! Flags: `--quick` caps the per-case budget for CI smoke runs.
 //! `PALLAS_THREADS` pins the parallel executor's thread count.
@@ -22,11 +27,71 @@ use dwt_accel::dwt::executor::{default_threads, ParallelExecutor, ScalarExecutor
 use dwt_accel::dwt::simd::SimdExecutor;
 use dwt_accel::dwt::{
     apply, lifting, Boundary, Engine, Image, KernelPlan, PlanExecutor, PlanVariant, Planes,
+    WorkspacePool,
 };
 use dwt_accel::gpusim::band_halo_bytes;
 use dwt_accel::polyphase::schemes::{self, Scheme};
 use dwt_accel::polyphase::wavelets::Wavelet;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
+
+/// Counting global allocator for the `allocs_per_request` column: the
+/// throughput section arms it around a measured batch of steady-state
+/// requests.  Disarmed it is a single relaxed load per allocation, so
+/// the timing sections are unaffected.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Mean allocations per call of `f` over a measured batch, after two
+/// warm-up calls (which fill the workspace arena's size classes and
+/// memoize the plan schedules).  Counts every thread — band-pool
+/// workers included.
+fn allocs_per_call(f: &mut dyn FnMut()) -> f64 {
+    f();
+    f();
+    const N: u64 = 16;
+    ARMED.store(true, Ordering::SeqCst);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..N {
+        f();
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    ARMED.store(false, Ordering::SeqCst);
+    (after - before) as f64 / N as f64
+}
 
 struct SchemeRecord {
     wavelet: &'static str,
@@ -62,6 +127,20 @@ struct SimdRecord {
     simd_ms: f64,
     parallel_ms: f64,
     parallel_simd_ms: f64,
+}
+
+struct ThroughputRecord {
+    side: usize,
+    wavelet: &'static str,
+    scheme: &'static str,
+    backend: &'static str,
+    /// true: workspace-arena request path, outputs recycled via
+    /// `put_image`.  false: allocate-per-request composition (fresh
+    /// split + execute + pack), the pre-arena request shape.
+    pooled: bool,
+    requests_per_sec: f64,
+    ms_per_request: f64,
+    allocs_per_request: f64,
 }
 
 struct FusionRecord {
@@ -566,6 +645,78 @@ fn main() {
         });
     }
 
+    // throughput section (PR 7): requests/sec through the
+    // zero-allocation steady state.  "pooled" is the arena request
+    // path — cached schedules, workspace checkouts from the global
+    // pool, outputs recycled with `put_image` (what a serving loop
+    // does); "unpooled" is the allocate-per-request composition the
+    // engine shipped with before the arena (fresh split + execute +
+    // pack, every buffer heap-fresh).  cdf97 sep_lifting on purpose:
+    // lifting plans lower entirely to in-place kernels, so the pooled
+    // path is provably allocation-free — allocs/req is measured live
+    // by this binary's counting allocator and must read 0.0 for every
+    // pooled record (the CI gate and rust/tests/zero_alloc.rs both
+    // pin this).
+    println!("\n--- throughput: pooled vs unpooled requests/sec (cdf97 sep_lifting) ---\n");
+    let tt = Table::new(&[5, 9, 9, 10, 10, 11]);
+    tt.header(&["side", "backend", "pooled", "req/s", "ms/req", "allocs/req"]);
+    let mut throughputs: Vec<ThroughputRecord> = Vec::new();
+    let pool = WorkspacePool::global();
+    let tengine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
+    let tplan = tengine.plan(PlanVariant::Optimized);
+    for tside in [512usize, 1024] {
+        let timg = Image::synthetic(tside, tside, 9);
+        for (bname, exec) in [
+            ("scalar", &scalar as &dyn PlanExecutor),
+            ("parallel", &parallel as &dyn PlanExecutor),
+        ] {
+            for pooled in [true, false] {
+                let mut request: Box<dyn FnMut() + '_> = if pooled {
+                    Box::new(|| {
+                        pool.put_image(tengine.forward_with(std::hint::black_box(&timg), exec));
+                    })
+                } else {
+                    Box::new(|| {
+                        let mut p = Planes::split(std::hint::black_box(&timg));
+                        exec.execute(tplan, &mut p);
+                        std::hint::black_box(p.to_packed());
+                    })
+                };
+                let allocs = allocs_per_call(&mut *request);
+                let s = bench(|| request(), budget, 3, 200);
+                let rps = 1.0 / s.median.as_secs_f64();
+                tt.row(&[
+                    format!("{tside}"),
+                    bname.into(),
+                    format!("{pooled}"),
+                    format!("{rps:.1}"),
+                    format!("{:.3}", s.median_ms()),
+                    format!("{allocs:.1}"),
+                ]);
+                throughputs.push(ThroughputRecord {
+                    side: tside,
+                    wavelet: "cdf97",
+                    scheme: "sep_lifting",
+                    backend: bname,
+                    pooled,
+                    requests_per_sec: rps,
+                    ms_per_request: s.median_ms(),
+                    allocs_per_request: allocs,
+                });
+            }
+        }
+    }
+    {
+        let ps = pool.stats();
+        println!(
+            "\narena: {} hits / {} misses (hit rate {:.3}), {} resident buffers",
+            ps.hits,
+            ps.misses,
+            ps.hit_rate(),
+            ps.resident
+        );
+    }
+
     // tiled compatibility layer vs monolithic
     let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
     let s_mono = bench(
@@ -610,15 +761,17 @@ fn main() {
         path,
         to_json(
             side, threads, quick, memcpy_gbs, &records, &larges, &pyramids, &simds, &fusions,
+            &throughputs,
         ),
     ) {
         Ok(()) => println!(
             "\nwrote {path} ({} scheme records, {} pyramid records, {} simd records, \
-             {} fusion records)",
+             {} fusion records, {} throughput records)",
             records.len(),
             pyramids.len(),
             simds.len(),
-            fusions.len()
+            fusions.len(),
+            throughputs.len()
         ),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
@@ -636,11 +789,12 @@ fn to_json(
     pyramids: &[PyramidRecord],
     simds: &[SimdRecord],
     fusions: &[FusionRecord],
+    throughputs: &[ThroughputRecord],
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"native_engine\",\n");
-    out.push_str("  \"schema\": 5,\n");
+    out.push_str("  \"schema\": 6,\n");
     out.push_str(&format!("  \"side\": {side},\n"));
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"quick\": {quick},\n"));
@@ -735,6 +889,24 @@ fn to_json(
             r.barriers_before,
             r.barriers_after,
             if i + 1 == fusions.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"throughput\": [\n");
+    for (i, r) in throughputs.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"side\": {}, \"wavelet\": \"{}\", \"scheme\": \"{}\", \
+             \"backend\": \"{}\", \"pooled\": {}, \"requests_per_sec\": {:.2}, \
+             \"ms_per_request\": {:.4}, \"allocs_per_request\": {:.2}}}{}\n",
+            r.side,
+            r.wavelet,
+            r.scheme,
+            r.backend,
+            r.pooled,
+            r.requests_per_sec,
+            r.ms_per_request,
+            r.allocs_per_request,
+            if i + 1 == throughputs.len() { "" } else { "," }
         ));
     }
     out.push_str("  ]\n}\n");

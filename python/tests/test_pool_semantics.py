@@ -1,0 +1,333 @@
+"""Workspace-arena semantics, validated against the oracle.
+
+Mirrors PR 7's Rust pooling layer in numpy: the size-class accounting
+of `rust/src/dwt/pool.rs` (`WorkspacePool`), and — the load-bearing
+property — the **dirty-checkout contract**: the arena hands buffers
+back with their previous contents intact, so a pooled request is
+bit-exact with a fresh-allocation request if and only if every code
+path fully overwrites whatever region it later reads.  This file runs
+the request paths on worst-case dirty buffers (NaN-prefilled, so any
+leak poisons the output and fails exact equality) and asserts they
+reproduce the fresh zero-initialized paths EXACTLY:
+
+* the accounting model: exact-length size classes never cross, hits
+  recycle (dirty) rather than allocate, classes cap at 32 buffers and
+  evict beyond that, a disabled pool (`PALLAS_POOL=0`) never caches,
+  and the hit/miss/return/evicted/resident counters move the way the
+  Rust unit tests pin;
+* single-level forward and inverse requests on NaN-dirty workspaces
+  and NaN-dirty packed outputs equal the fresh paths for every scheme,
+  wavelet, and boundary — including buffers recycled from a *previous
+  request on a different image* (the true steady-state shape);
+* the stencil double buffer stays safe when checked out dirty because
+  the executor zeroes each destination row before accumulating;
+* L-level pyramids (forward and inverse) on NaN-dirty workspaces and
+  outputs equal the fresh strided pyramid — proving the per-level
+  evacuate/store partition writes every output sample and no level
+  reads a sample nothing wrote.
+
+The Rust test suite asserts the same invariants on the real
+implementation (`pool.rs` unit tests, `planes.rs` dirty-buffer pins,
+and the counting-allocator gate in `rust/tests/zero_alloc.rs`); this
+file guards the *contract* from a second, independent implementation
+so the two cannot drift silently.
+"""
+
+import numpy as np
+import pytest
+
+from compile import schemes
+from compile import wavelets as wv
+
+import test_executor_semantics as ex
+import test_pyramid_semantics as pyr
+
+WAVELET_NAMES = sorted(wv.WAVELETS)
+BOUNDARIES = ["periodic", "symmetric"]
+
+MAX_PER_CLASS = 32  # rust/src/dwt/pool.rs
+
+
+# ------------------------------------------------- the accounting model
+
+
+class PoolModel:
+    """The twin of `WorkspacePool`: free lists keyed by exact sample
+    count, dirty hand-back, per-class cap, and the five counters.
+    (Sharding is a lock-contention detail with no semantic content, so
+    the model keeps a single dict.)"""
+
+    def __init__(self, enabled=True):
+        self.enabled = enabled
+        self.classes = {}
+        self.hits = self.misses = 0
+        self.returns = self.evicted = self.resident = 0
+
+    def take(self, n):
+        free = self.classes.get(n)
+        if self.enabled and free:
+            self.hits += 1
+            self.resident -= 1
+            return free.pop()  # dirty: previous contents intact
+        self.misses += 1
+        return np.zeros(n, dtype=np.float64)
+
+    def put(self, a):
+        self.returns += 1
+        if not self.enabled or a.size == 0:
+            return
+        free = self.classes.setdefault(a.size, [])
+        if len(free) >= MAX_PER_CLASS:
+            self.evicted += 1
+            return
+        free.append(a)
+        self.resident += 1
+
+    def hit_rate(self):
+        total = self.hits + self.misses
+        return 0.0 if total == 0 else self.hits / total
+
+
+def test_roundtrip_recycles_the_same_buffer_dirty():
+    pool = PoolModel()
+    v = pool.take(1024)
+    assert v.size == 1024 and not v.any(), "cold miss is zero-filled"
+    v[3] = 7.0
+    pool.put(v)
+    back = pool.take(1024)
+    assert back is v, "hit must recycle the buffer"
+    assert back[3] == 7.0, "recycled buffers come back dirty"
+    assert (pool.hits, pool.misses, pool.returns) == (1, 1, 1)
+    assert pool.resident == 0
+    assert abs(pool.hit_rate() - 0.5) < 1e-12
+
+
+def test_size_classes_do_not_cross():
+    pool = PoolModel()
+    pool.put(np.ones(64))
+    v = pool.take(128)
+    assert v.size == 128
+    assert pool.hits == 0, "64-class must not serve 128"
+    assert pool.resident == 1
+
+
+def test_disabled_pool_never_caches():
+    pool = PoolModel(enabled=False)
+    pool.put(np.full(256, 9.0))
+    v = pool.take(256)
+    assert not v.any(), "disabled take is always fresh"
+    assert (pool.hits, pool.misses, pool.returns, pool.resident) == (0, 1, 1, 0)
+
+
+def test_full_classes_evict_instead_of_growing():
+    pool = PoolModel()
+    for _ in range(MAX_PER_CLASS):
+        pool.put(np.zeros(32))
+    assert pool.resident == MAX_PER_CLASS
+    pool.put(np.zeros(32))
+    assert pool.evicted == 1
+    assert pool.resident == MAX_PER_CLASS
+    # empty returns are dropped without residency
+    pool.put(np.zeros(0))
+    assert pool.resident == MAX_PER_CLASS
+
+
+# --------------------------------------- dirty-checkout request fidelity
+
+
+def dirty(shape):
+    """A worst-case recycled buffer: any sample that leaks into the
+    output turns it NaN and fails exact equality."""
+    return np.full(shape, np.nan)
+
+
+def split_into(img, planes):
+    """`Planes::split_into`: writes every sample of the active region,
+    so the destination's previous contents are unreachable."""
+    planes[0][:, :] = img[0::2, 0::2]
+    planes[1][:, :] = img[0::2, 1::2]
+    planes[2][:, :] = img[1::2, 0::2]
+    planes[3][:, :] = img[1::2, 1::2]
+
+
+def to_packed_into(planes, out):
+    """`Planes::to_packed_into`: the four quadrants partition the
+    output — every sample written exactly once."""
+    h2, w2 = planes[0].shape
+    out[:h2, :w2] = planes[0]
+    out[:h2, w2:] = planes[1]
+    out[h2:, :w2] = planes[2]
+    out[h2:, w2:] = planes[3]
+
+
+def from_packed_into(packed, planes):
+    h2, w2 = packed.shape[0] // 2, packed.shape[1] // 2
+    planes[0][:, :] = packed[:h2, :w2]
+    planes[1][:, :] = packed[:h2, w2:]
+    planes[2][:, :] = packed[h2:, :w2]
+    planes[3][:, :] = packed[h2:, w2:]
+
+
+def merge_into(planes, out):
+    """`Planes::merge_into`: polyphase interleave — again a partition
+    of the output samples."""
+    out[0::2, 0::2] = planes[0]
+    out[0::2, 1::2] = planes[1]
+    out[1::2, 0::2] = planes[2]
+    out[1::2, 1::2] = planes[3]
+
+
+def forward_request(plan, img, boundary, pool):
+    """The pooled `Engine::forward_with` shape: check out a dirty
+    four-plane workspace and a dirty packed output, overwrite-by-
+    construction, return the workspace to the pool."""
+    h2, w2 = img.shape[0] // 2, img.shape[1] // 2
+    planes = [pool.take(h2 * w2).reshape(h2, w2) for _ in range(4)]
+    split_into(img, planes)
+    pyr.exec_inplace(plan, planes, boundary, 1)
+    out = pool.take(img.size).reshape(img.shape)
+    to_packed_into(planes, out)
+    for p in planes:
+        pool.put(p.reshape(-1))
+    return out
+
+
+def inverse_request(inv_plan, packed, boundary, pool):
+    """The pooled `Engine::inverse_with` shape."""
+    h2, w2 = packed.shape[0] // 2, packed.shape[1] // 2
+    planes = [pool.take(h2 * w2).reshape(h2, w2) for _ in range(4)]
+    from_packed_into(packed, planes)
+    pyr.exec_inplace(inv_plan, planes, boundary, 1)
+    out = pool.take(packed.size).reshape(packed.shape)
+    merge_into(planes, out)
+    for p in planes:
+        pool.put(p.reshape(-1))
+    return out
+
+
+class NaNPool(PoolModel):
+    """A pool whose cold misses are *also* dirty: stricter than the
+    Rust arena (which zero-fills misses) — under this pool the request
+    paths cannot distinguish first touch from recycled touch at all."""
+
+    def take(self, n):
+        v = super().take(n)
+        if not np.isnan(v).any():
+            v = dirty(n)
+        return v
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES)
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+def test_pooled_requests_are_bit_exact_and_recycle_across_images(
+        wname, boundary):
+    """Steady state across three different images: request i + 1 runs
+    entirely on buffers still holding request i's data.  Every output
+    must equal the fresh zero-workspace path exactly."""
+    w = wv.get(wname)
+    for scheme in schemes.SCHEMES:
+        plan = ex.compile_plan(schemes.build(scheme, w))
+        inv = ex.compile_plan(schemes.build_inverse(scheme, w))
+        pool = NaNPool()
+        for seed in (3, 4, 5):
+            img = ex.img_of(32, 24, seed)
+            want = pyr.to_packed(ex.exec_scalar(plan, ex.split(img), boundary))
+            got = forward_request(plan, img, boundary, pool)
+            assert np.array_equal(got, want), \
+                f"{wname} {scheme} {boundary} seed={seed}: forward leaked"
+            back = inverse_request(inv, got, boundary, pool)
+            fresh_planes = ex.exec_scalar(inv, pyr.from_packed(want), boundary)
+            want_img = np.empty_like(img)
+            merge_into(fresh_planes, want_img)
+            assert np.array_equal(back, want_img), \
+                f"{wname} {scheme} {boundary} seed={seed}: inverse leaked"
+            pool.put(got.reshape(-1))
+            pool.put(back.reshape(-1))
+        assert pool.hits > 0, "steady state never recycled"
+
+
+def test_stencil_double_buffer_is_safe_when_dirty():
+    """The stencil executor's scratch checkout comes back dirty; it is
+    safe because every destination row is zeroed before accumulation
+    (`dst.fill(0.0)` in apply.rs).  Twin: accumulate into NaN-prefilled
+    outputs with an explicit pre-zero, match the fresh path exactly."""
+    w = wv.get("cdf97")
+    boundary = "periodic"
+    planes = ex.split(ex.img_of(16, 12, 11))
+    for scheme in ("ns_conv", "sep_conv", "ns_polyconv"):
+        plan = ex.compile_plan(schemes.build(scheme, w))
+        for group in plan:
+            for k in group:
+                if k[0] != "stencil":
+                    continue
+                want = ex.apply_stencil(k[1], planes, boundary)
+                h2, w2 = planes[0].shape
+                got = []
+                for i in range(4):
+                    o = dirty((h2, w2))
+                    for y in range(h2):
+                        o[y, :] = 0.0  # the per-row zero, as in Rust
+                        for (j, km, kn, c) in k[1][i]:
+                            xi = [ex.fold(x + km, w2, boundary,
+                                          ex.plane_is_odd(j, "h"))
+                                  for x in range(w2)]
+                            yy = ex.fold(y + kn, h2, boundary,
+                                         ex.plane_is_odd(j, "v"))
+                            o[y, :] += c * planes[j][yy, xi]
+                    got.append(o)
+                assert all(np.array_equal(a, b) for a, b in zip(got, want)), \
+                    f"{scheme}: dirty double buffer leaked"
+
+
+@pytest.mark.parametrize("levels", [2, 3])
+def test_pooled_pyramid_forward_and_inverse_are_bit_exact(levels):
+    """The pooled pyramid: NaN-dirty workspace and NaN-dirty packed
+    output.  Exact equality with the fresh strided pyramid proves the
+    per-level evacuate/store-LL partition writes every output sample
+    and no level reads a sample nothing wrote."""
+    img = ex.img_of(64, 32, 9)
+    H, W = img.shape
+    for wname in ("cdf97", "haar"):
+        w = wv.get(wname)
+        for scheme in ("sep_lifting", "ns_conv"):
+            for boundary in BOUNDARIES:
+                plan = ex.compile_plan(schemes.build(scheme, w))
+                want = pyr.pyramid_forward_strided(plan, img, levels, boundary)
+
+                # forward on dirty checkouts
+                out = dirty(img.shape)
+                ws = [dirty((H // 2, W // 2)) for _ in range(4)]
+                split_into(img, ws)
+                for l in range(levels):
+                    lw, lh = W >> (l + 1), H >> (l + 1)
+                    if l > 0:
+                        pyr.deinterleave_level(ws, lw, lh)
+                    views = [ws[c][:lh, :lw] for c in range(4)]
+                    pyr.exec_inplace(plan, views, boundary, 1)
+                    out[0:lh, lw:2 * lw] = views[1]
+                    out[lh:2 * lh, 0:lw] = views[2]
+                    out[lh:2 * lh, lw:2 * lw] = views[3]
+                wl, hl = W >> levels, H >> levels
+                out[:hl, :wl] = ws[0][:hl, :wl]
+                assert np.array_equal(out, want), \
+                    f"{wname} {scheme} {boundary} L={levels}: forward leaked"
+
+                # inverse on dirty checkouts
+                inv = ex.compile_plan(schemes.build_inverse(scheme, w))
+                want_img = pyr.pyramid_inverse_strided(
+                    inv, want, levels, boundary)
+                ws = [dirty((H // 2, W // 2)) for _ in range(4)]
+                ws[0][:hl, :wl] = want[:hl, :wl]
+                for l in reversed(range(levels)):
+                    lw, lh = W >> (l + 1), H >> (l + 1)
+                    ws[1][:lh, :lw] = want[0:lh, lw:2 * lw]
+                    ws[2][:lh, :lw] = want[lh:2 * lh, 0:lw]
+                    ws[3][:lh, :lw] = want[lh:2 * lh, lw:2 * lw]
+                    views = [ws[c][:lh, :lw] for c in range(4)]
+                    pyr.exec_inplace(inv, views, boundary, 1)
+                    if l > 0:
+                        pyr.interleave_level(ws, lw, lh)
+                rec = dirty(img.shape)
+                merge_into(ws, rec)
+                assert np.array_equal(rec, want_img), \
+                    f"{wname} {scheme} {boundary} L={levels}: inverse leaked"

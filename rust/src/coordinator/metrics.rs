@@ -71,6 +71,17 @@ pub struct Summary {
     pub pyramid_requests: u64,
     /// Deepest pyramid served so far (1 when only single-level).
     pub max_levels: usize,
+    /// Workspace-arena checkouts served without allocating
+    /// ([`crate::dwt::WorkspacePool`] global counters; process-wide,
+    /// not per-coordinator).
+    pub pool_hits: u64,
+    /// Workspace-arena checkouts that allocated fresh.
+    pub pool_misses: u64,
+    /// Fraction of checkouts served from the arena (0 when idle, or
+    /// when `PALLAS_POOL=0` disables caching).
+    pub pool_hit_rate: f64,
+    /// Buffers currently parked on the arena's free lists.
+    pub pool_resident: u64,
 }
 
 impl Metrics {
@@ -114,6 +125,10 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> Summary {
+        // arena occupancy rides along with every summary snapshot: the
+        // pool is process-global, so these reflect all engines in the
+        // process, not just this coordinator's requests
+        let pool = crate::dwt::WorkspacePool::global().stats();
         let g = self.inner.lock().unwrap();
         let mut lat = g.latencies_us.clone();
         lat.sort_unstable();
@@ -145,6 +160,10 @@ impl Metrics {
             ],
             pyramid_requests: g.pyramid_requests,
             max_levels: g.max_levels.max(1),
+            pool_hits: pool.hits,
+            pool_misses: pool.misses,
+            pool_hit_rate: pool.hit_rate(),
+            pool_resident: pool.resident,
         }
     }
 }
@@ -196,6 +215,17 @@ mod tests {
         assert_eq!(s.per_backend[3], ("native-simd", 2));
         assert_eq!(s.per_backend[1], ("native", 1));
         assert_eq!(Backend::NativeSimd.name(), "native-simd");
+    }
+
+    #[test]
+    fn summary_carries_pool_counters() {
+        // touch the process-global arena so the counters are live;
+        // other tests share it, so only monotone facts are assertable
+        let pool = crate::dwt::WorkspacePool::global();
+        pool.put_vec(pool.take_vec(64));
+        let s = Metrics::new().summary();
+        assert!(s.pool_hits + s.pool_misses >= 1);
+        assert!((0.0..=1.0).contains(&s.pool_hit_rate));
     }
 
     #[test]

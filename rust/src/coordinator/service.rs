@@ -531,10 +531,14 @@ fn run_batch(
         .find(batch_name)
         .map(|e| e.input_shape[0])
         .unwrap_or(items.len());
-    // pad the batch to the artifact's fixed leading dimension
-    let mut images: Vec<Image> = items.iter().map(|(r, _, _, _)| r.image.clone()).collect();
-    while images.len() < b {
-        images.push(images[0].clone());
+    // pad the batch to the artifact's fixed leading dimension by
+    // repeating the head image *by reference* — a short batch must not
+    // pay deep copies for its padding lanes
+    let mut images: Vec<&Image> = items.iter().map(|(r, _, _, _)| &r.image).collect();
+    if let Some(&head) = images.first() {
+        while images.len() < b {
+            images.push(head);
+        }
     }
     match runtime.execute_batch(batch_name, &images) {
         Ok(outs) => {

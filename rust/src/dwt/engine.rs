@@ -11,6 +11,7 @@ use super::executor::{PlanExecutor, ScalarExecutor};
 use super::lifting::Boundary;
 use super::plan::KernelPlan;
 use super::planes::{Image, Planes};
+use super::pool::WorkspacePool;
 use super::pyramid::PyramidPlan;
 use anyhow::Result;
 use crate::polyphase::schemes::{self, Scheme};
@@ -106,8 +107,18 @@ impl Engine {
     }
 
     /// [`Engine::forward`] through an explicit executor backend.
+    ///
+    /// Every buffer is checked out from the [`WorkspacePool`]: the
+    /// returned image may be handed back with
+    /// [`WorkspacePool::put_image`] to make repeat requests
+    /// allocation-free.
     pub fn forward_with(&self, img: &Image, exec: &dyn PlanExecutor) -> Image {
-        self.forward_planes_with(img, exec).to_packed()
+        let pool = WorkspacePool::global();
+        let planes = self.forward_planes_with(img, exec);
+        let mut out = pool.take_image(img.width, img.height);
+        planes.to_packed_into(&mut out);
+        pool.put_planes(planes);
+        out
     }
 
     /// Forward transform -> polyphase planes (LL, HL, LH, HH).
@@ -122,8 +133,12 @@ impl Engine {
 
     /// [`Engine::forward_planes`] through an explicit executor backend
     /// (same compiled plan; bit-exact across backends by contract).
+    /// The returned workspace is pool-checked-out; hand it back with
+    /// [`WorkspacePool::put_planes`] when done to keep the steady
+    /// state allocation-free.
     pub fn forward_planes_with(&self, img: &Image, exec: &dyn PlanExecutor) -> Planes {
-        let mut planes = Planes::split(img);
+        let mut planes = WorkspacePool::global().take_planes(img.width / 2, img.height / 2);
+        planes.split_into(img);
         exec.execute(&self.optimized_plan, &mut planes);
         planes
     }
@@ -150,8 +165,17 @@ impl Engine {
     }
 
     /// [`Engine::inverse`] through an explicit executor backend.
+    /// Pool-backed like [`Engine::forward_with`] (one unpack copy, no
+    /// intermediate clone).
     pub fn inverse_with(&self, packed: &Image, exec: &dyn PlanExecutor) -> Image {
-        self.inverse_planes_with(&Planes::from_packed(packed), exec)
+        let pool = WorkspacePool::global();
+        let mut p = pool.take_planes(packed.width / 2, packed.height / 2);
+        p.from_packed_into(packed);
+        exec.execute(&self.inverse_plan, &mut p);
+        let mut out = pool.take_image(packed.width, packed.height);
+        p.merge_into(&mut out);
+        pool.put_planes(p);
+        out
     }
 
     /// Inverse transform from subband planes.
@@ -161,9 +185,14 @@ impl Engine {
 
     /// [`Engine::inverse_planes`] through an explicit executor backend.
     pub fn inverse_planes_with(&self, planes: &Planes, exec: &dyn PlanExecutor) -> Image {
-        let mut p = planes.clone();
+        let pool = WorkspacePool::global();
+        let mut p = pool.take_planes(planes.w2, planes.h2);
+        p.copy_from(planes);
         exec.execute(&self.inverse_plan, &mut p);
-        p.merge()
+        let mut out = pool.take_image(planes.w2 * 2, planes.h2 * 2);
+        p.merge_into(&mut out);
+        pool.put_planes(p);
+        out
     }
 
     /// Lower an L-level Mallat request onto this engine's cached plans:

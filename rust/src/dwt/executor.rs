@@ -44,14 +44,14 @@ use super::apply;
 use super::knobs;
 use super::lifting::{self, taps_reach, Axis, Boundary};
 use super::plan::{
-    ensure_scratch, plane_is_odd, written_planes, FusedPhase, Kernel, KernelPlan, Stencil,
+    ensure_scratch, plane_is_odd, written_planes, FusedPhase, Kernel, KernelPlan, KernelRef,
+    Stencil,
 };
 use super::planes::{Image, Planes};
 use super::pyramid::{self, PyramidPlan};
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, Once};
+use std::sync::{Arc, Condvar, Mutex, Once};
 use std::thread::JoinHandle;
 
 /// A backend that can execute compiled plans.
@@ -67,10 +67,15 @@ pub trait PlanExecutor: Send + Sync {
     /// throwaway slot per transform.
     fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>);
 
-    /// [`PlanExecutor::execute_with`] with a throwaway scratch slot.
+    /// [`PlanExecutor::execute_with`] with a per-call scratch slot
+    /// (checked out from and retired to the workspace arena, so repeat
+    /// geometry is allocation-free even without a held slot).
     fn execute(&self, plan: &KernelPlan, planes: &mut Planes) {
         let mut scratch = None;
         self.execute_with(plan, planes, &mut scratch);
+        if let Some(s) = scratch {
+            super::pool::WorkspacePool::global().put_planes(s);
+        }
     }
 
     /// Out-of-place convenience wrapper.
@@ -96,8 +101,10 @@ pub trait PlanExecutor: Send + Sync {
     /// return when both are done.  The pyramid driver uses this to
     /// overlap level-*l* detail evacuation with the level-*l+1*
     /// deinterleave.  Backends without worker threads run them in
-    /// sequence — same results, no overlap.
-    fn join2<'s>(&self, a: Box<dyn FnOnce() + Send + 's>, b: Box<dyn FnOnce() + Send + 's>) {
+    /// sequence — same results, no overlap.  Takes `&mut dyn FnMut`
+    /// (each closure is called exactly once) instead of boxed `FnOnce`
+    /// so the steady-state path never heap-allocates a job.
+    fn join2(&self, a: &mut (dyn FnMut() + Send), b: &mut (dyn FnMut() + Send)) {
         a();
         b();
     }
@@ -227,12 +234,15 @@ pub(crate) fn execute_scheduled(
     vector: bool,
     opts: SchedOpts,
 ) {
-    for phase in plan.schedule(opts.fuse).phases {
+    for phase in &plan.schedule(opts.fuse).phases {
         match phase {
             FusedPhase::InPlace(ks) => {
-                run_phase_single(&ks, planes, plan.boundary, vector, opts.panel_rows)
+                run_phase_single(plan, ks, planes, vector, opts.panel_rows)
             }
-            FusedPhase::Stencil(st) => {
+            FusedPhase::Stencil(r) => {
+                let Kernel::Stencil(st) = plan.kernel(*r) else {
+                    unreachable!("stencil phase refs a stencil kernel")
+                };
                 let out = ensure_scratch(planes, scratch);
                 apply::run_stencil_ex(st, planes, out, plan.boundary, vector);
                 std::mem::swap(planes, out);
@@ -246,16 +256,16 @@ pub(crate) fn execute_scheduled(
 /// stay shared read-only — the same split the parallel backend makes
 /// per band, so both paths execute identical kernel bodies.
 fn run_phase_single(
-    kernels: &[&Kernel],
+    plan: &KernelPlan,
+    refs: &[KernelRef],
     planes: &mut Planes,
-    boundary: Boundary,
     vector: bool,
     panel_rows: usize,
 ) {
     let (stride, w2, h2) = (planes.stride, planes.w2, planes.h2);
     let mut written = 0u8;
-    for k in kernels {
-        written |= written_planes(k);
+    for &r in refs {
+        written |= written_planes(plan.kernel(r));
     }
     let [p0, p1, p2, p3] = &mut planes.p;
     let mut shared: [Option<&[f32]>; 4] = [None; 4];
@@ -267,50 +277,116 @@ fn run_phase_single(
             shared[i] = Some(p.as_slice());
         }
     }
-    run_band_kernels(
-        kernels, mine, shared, 0..h2, stride, w2, h2, boundary, vector, panel_rows,
-    );
+    run_band_kernels(plan, refs, mine, shared, 0..h2, stride, w2, h2, vector, panel_rows);
 }
 
 // ------------------------------------------------------------ band pool
 
-type PoolJob = Box<dyn FnOnce() + Send + 'static>;
+/// The one borrowed task of an indexed run, lifetime-erased for the
+/// worker threads.  A `&'static` reference to a `Sync` type is `Send +
+/// Copy`, so no unsafe `Send` impl is needed — only the lifetime
+/// transmute in [`BandPool::run_indexed`], whose blocking protocol
+/// guarantees the borrow outlives every use.
+type TaskRef = &'static (dyn Fn(usize) + Sync);
 
-/// A persistent fixed-size thread pool with *scoped* fan-out: jobs may
-/// borrow the caller's stack because [`BandPool::scope_run`] blocks
-/// until every job has finished (or panicked) before returning.
+/// The shared job board: one published task, `n` indices to claim.
+struct BoardState {
+    shutdown: bool,
+    task: Option<TaskRef>,
+    /// Indices of the current run are `0..n`; `next` is the first
+    /// unclaimed one, `pending` counts indices not yet *completed*.
+    n: usize,
+    next: usize,
+    pending: usize,
+    /// First panic payload of the run (resumed on the caller).
+    payload: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct PoolShared {
+    state: Mutex<BoardState>,
+    /// Workers wait here for a claimable index (or shutdown).
+    work: Condvar,
+    /// The caller waits here for `pending == 0`.
+    done: Condvar,
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let (task, i) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match st.task {
+                    Some(task) if st.next < st.n => {
+                        let i = st.next;
+                        st.next += 1;
+                        break (task, i);
+                    }
+                    _ => st = shared.work.wait(st).unwrap(),
+                }
+            }
+        };
+        // run outside the lock; catch so a panicking band job cannot
+        // poison the board or kill the worker
+        let result = catch_unwind(AssertUnwindSafe(|| task(i)));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(p) = result {
+            st.payload.get_or_insert(p);
+        }
+        st.pending -= 1;
+        if st.pending == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// A persistent fixed-size thread pool with *scoped* fan-out: the task
+/// of [`BandPool::run_indexed`] may borrow the caller's stack because
+/// the call blocks until every index has finished (or panicked) before
+/// returning.
+///
+/// The steady-state path performs **zero heap allocations**: one task
+/// reference and an index counter on a Mutex + Condvar job board — no
+/// per-job boxing, no channel nodes.  (The panic path allocates its
+/// payload box; nothing else does.)
 pub struct BandPool {
-    tx: Option<Sender<PoolJob>>,
+    shared: Arc<PoolShared>,
     handles: Vec<JoinHandle<()>>,
+    /// Serializes callers: one indexed run owns the board at a time.
+    caller: Mutex<()>,
     size: usize,
 }
 
 impl BandPool {
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
-        let (tx, rx) = channel::<PoolJob>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(BoardState {
+                shutdown: false,
+                task: None,
+                n: 0,
+                next: 0,
+                pending: 0,
+                payload: None,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
         let handles = (0..size)
             .map(|i| {
-                let rx: Arc<Mutex<Receiver<PoolJob>>> = rx.clone();
+                let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("dwt-band-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // channel closed: shut down
-                        }
-                    })
+                    .spawn(move || worker_loop(&shared))
                     .expect("spawn band worker")
             })
             .collect();
         Self {
-            tx: Some(tx),
+            shared,
             handles,
+            caller: Mutex::new(()),
             size,
         }
     }
@@ -319,70 +395,94 @@ impl BandPool {
         self.size
     }
 
-    /// Run borrowed jobs to completion on the pool.  The jobs may
-    /// capture non-`'static` references: this call does not return
-    /// until every job has signalled completion, so the borrows outlive
-    /// all use on the workers.  Panics in a job are caught on the
-    /// worker (keeping the pool alive) and resumed here with their
-    /// original payload once every job has finished.
-    #[allow(clippy::type_complexity)]
-    pub fn scope_run(&self, jobs: Vec<Box<dyn FnOnce() + Send + '_>>) {
-        let n = jobs.len();
-        let (done_tx, done_rx) = channel::<std::thread::Result<()>>();
-        let tx = self.tx.as_ref().expect("band pool shut down");
-        for job in jobs {
-            // SAFETY: the loop below blocks until all `n` completions
-            // arrive, so every borrow captured by `job` strictly
-            // outlives its execution on the worker thread.
-            let job = unsafe { erase_job_lifetime(job) };
-            let done = done_tx.clone();
-            tx.send(Box::new(move || {
-                let result = catch_unwind(AssertUnwindSafe(job));
-                let _ = done.send(result);
-            }))
-            .expect("band pool closed");
+    /// Run `task(0) ..= task(n-1)` to completion on the pool, each index
+    /// exactly once, possibly concurrently.  The task may capture
+    /// non-`'static` references: this call does not return until every
+    /// index has finished, so the borrows outlive all use on the
+    /// workers.  Panics in the task are caught on the worker (keeping
+    /// the pool alive) and the first payload is resumed here once the
+    /// run has drained.
+    pub fn run_indexed(&self, n: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
         }
-        let mut payload = None;
-        for _ in 0..n {
-            if let Err(p) = done_rx.recv().expect("band worker died") {
-                payload.get_or_insert(p);
-            }
+        let _one_run = self.caller.lock().unwrap();
+        // SAFETY: the wait below blocks until all `n` indices have
+        // completed, and the board's task slot is cleared before this
+        // function returns — the erased borrow strictly outlives every
+        // use on the worker threads and never escapes the run.
+        let task: TaskRef = unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), TaskRef>(task) };
+        let mut st = self.shared.state.lock().unwrap();
+        st.task = Some(task);
+        st.n = n;
+        st.next = 0;
+        st.pending = n;
+        drop(st);
+        self.shared.work.notify_all();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.shared.done.wait(st).unwrap();
         }
+        st.task = None;
+        st.n = 0;
+        let payload = st.payload.take();
+        drop(st);
         if let Some(p) = payload {
             std::panic::resume_unwind(p);
         }
     }
-}
 
-#[allow(clippy::needless_lifetimes)]
-unsafe fn erase_job_lifetime<'a>(
-    job: Box<dyn FnOnce() + Send + 'a>,
-) -> Box<dyn FnOnce() + Send + 'static> {
-    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(job)
+    /// Run a batch of distinct borrowed jobs (compatibility shim over
+    /// [`BandPool::run_indexed`] for callers whose jobs are not a
+    /// uniform indexed task).  This path boxes — the hot executor paths
+    /// use `run_indexed` directly.
+    #[allow(clippy::type_complexity)]
+    pub fn scope_run(&self, jobs: Vec<Box<dyn FnOnce() + Send + '_>>) {
+        let cells: Vec<Mutex<Option<Box<dyn FnOnce() + Send + '_>>>> =
+            jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        self.run_indexed(cells.len(), &|i| {
+            if let Some(job) = cells[i].lock().unwrap().take() {
+                job();
+            }
+        });
+    }
 }
 
 impl Drop for BandPool {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-/// Split `h2` rows into at most `n` contiguous non-empty bands.
-pub fn band_ranges(h2: usize, n: usize) -> Vec<Range<usize>> {
-    let n = n.clamp(1, h2.max(1));
+/// Number of bands `h2` rows split into on an `n`-thread pool: `n`,
+/// clamped so every band is non-empty.
+pub fn n_bands(h2: usize, n: usize) -> usize {
+    n.clamp(1, h2.max(1))
+}
+
+/// Row range of band `b` when `h2` rows split into `n` bands (closed
+/// form of the base + remainder distribution, so a band job can compute
+/// its own range without a materialized list).
+pub fn band_range(h2: usize, n: usize, b: usize) -> Range<usize> {
+    let n = n_bands(h2, n);
+    debug_assert!(b < n);
     let base = h2 / n;
     let rem = h2 % n;
-    let mut out = Vec::with_capacity(n);
-    let mut y = 0;
-    for b in 0..n {
-        let rows = base + usize::from(b < rem);
-        out.push(y..y + rows);
-        y += rows;
-    }
-    debug_assert_eq!(y, h2);
+    let start = b * base + b.min(rem);
+    start..start + base + usize::from(b < rem)
+}
+
+/// Split `h2` rows into at most `n` contiguous non-empty bands (the
+/// materialized view of [`band_range`], for tests and callers that want
+/// the whole list).
+pub fn band_ranges(h2: usize, n: usize) -> Vec<Range<usize>> {
+    let n = n_bands(h2, n);
+    let out: Vec<Range<usize>> = (0..n).map(|b| band_range(h2, n, b)).collect();
+    debug_assert_eq!(out.last().expect("n >= 1").end, h2);
     out
 }
 
@@ -443,41 +543,50 @@ impl ParallelExecutor {
     /// phase writes are handed to each band as its private row chunk;
     /// the rest stay whole and read-only (the phase rule guarantees
     /// every vertically-read plane is in the second set).
+    ///
+    /// Band chunks are reconstructed *inside* each band job from a base
+    /// pointer and the job's own [`band_range`] — no per-phase chunk
+    /// list, no per-band job box: the whole fan-out is one
+    /// [`BandPool::run_indexed`] call on borrowed state.
     fn run_inplace_phase(
         &self,
-        kernels: &[&Kernel],
+        plan: &KernelPlan,
+        refs: &[KernelRef],
         planes: &mut Planes,
-        bands: &[Range<usize>],
-        boundary: Boundary,
+        nbands: usize,
     ) {
         let (stride, w2, h2) = (planes.stride, planes.w2, planes.h2);
         let mut written = 0u8;
-        for k in kernels {
-            written |= written_planes(k);
+        for &r in refs {
+            written |= written_planes(plan.kernel(r));
         }
-        let [p0, p1, p2, p3] = &mut planes.p;
         let mut shared: [Option<&[f32]>; 4] = [None; 4];
-        let mut banded: [Vec<&mut [f32]>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
-        for (i, p) in [p0, p1, p2, p3].into_iter().enumerate() {
+        let mut base: [Option<SendMut>; 4] = [None; 4];
+        for (i, p) in planes.p.iter_mut().enumerate() {
             if written & (1 << i) != 0 {
-                banded[i] = split_bands(p.as_mut_slice(), bands, stride);
+                base[i] = Some(SendMut(p.as_mut_ptr()));
             } else {
                 shared[i] = Some(p.as_slice());
             }
         }
         let vector = self.vector;
         let panel_rows = self.opts.panel_rows;
-        let mut iters = banded.map(Vec::into_iter);
-        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bands.len());
-        for range in bands.iter().cloned() {
-            let mine: [Option<&mut [f32]>; 4] = std::array::from_fn(|i| iters[i].next());
-            jobs.push(Box::new(move || {
-                run_band_kernels(
-                    kernels, mine, shared, range, stride, w2, h2, boundary, vector, panel_rows,
-                );
-            }));
-        }
-        self.pool.scope_run(jobs);
+        self.pool.run_indexed(nbands, &|b| {
+            let range = band_range(h2, nbands, b);
+            // SAFETY: run_indexed hands each index to exactly one job,
+            // and distinct bands are disjoint row ranges of the same
+            // plane — the mutable slices never alias.  The borrow is
+            // scoped by run_indexed's blocking protocol.
+            let mine: [Option<&mut [f32]>; 4] = std::array::from_fn(|i| {
+                base[i].map(|ptr| unsafe {
+                    std::slice::from_raw_parts_mut(
+                        ptr.0.add(range.start * stride),
+                        range.len() * stride,
+                    )
+                })
+            });
+            run_band_kernels(plan, refs, mine, shared, range, stride, w2, h2, vector, panel_rows);
+        });
     }
 
     /// Run one stencil phase band-parallel into the scratch planes
@@ -487,34 +596,37 @@ impl ParallelExecutor {
         st: &Stencil,
         inp: &Planes,
         out: &mut Planes,
-        bands: &[Range<usize>],
+        nbands: usize,
         boundary: Boundary,
     ) {
-        let stride = inp.stride;
-        let [o0, o1, o2, o3] = &mut out.p;
-        let mut b0 = split_bands(o0.as_mut_slice(), bands, stride).into_iter();
-        let mut b1 = split_bands(o1.as_mut_slice(), bands, stride).into_iter();
-        let mut b2 = split_bands(o2.as_mut_slice(), bands, stride).into_iter();
-        let mut b3 = split_bands(o3.as_mut_slice(), bands, stride).into_iter();
+        let (stride, h2) = (inp.stride, inp.h2);
+        let base: [SendMut; 4] = std::array::from_fn(|i| SendMut(out.p[i].as_mut_ptr()));
         let vector = self.vector;
-        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bands.len());
-        for range in bands.iter().cloned() {
-            let chunk = [
-                b0.next().expect("one chunk per band"),
-                b1.next().expect("one chunk per band"),
-                b2.next().expect("one chunk per band"),
-                b3.next().expect("one chunk per band"),
-            ];
-            jobs.push(Box::new(move || {
-                let mut chunk = chunk;
-                apply::run_stencil_rows_ex(
-                    st, inp, &mut chunk, range.start, range.end, boundary, vector,
-                );
-            }));
-        }
-        self.pool.scope_run(jobs);
+        self.pool.run_indexed(nbands, &|b| {
+            let range = band_range(h2, nbands, b);
+            // SAFETY: as in run_inplace_phase — one job per index,
+            // disjoint row ranges per band, borrow scoped by the
+            // blocking run
+            let mut chunk: [&mut [f32]; 4] = std::array::from_fn(|i| unsafe {
+                std::slice::from_raw_parts_mut(
+                    base[i].0.add(range.start * stride),
+                    range.len() * stride,
+                )
+            });
+            apply::run_stencil_rows_ex(
+                st, inp, &mut chunk, range.start, range.end, boundary, vector,
+            );
+        });
     }
 }
+
+/// A raw plane base pointer that may cross into band jobs.  Safety rests
+/// on the callers above: every job derives a *disjoint* row range from
+/// its claimed index, so no two jobs ever build overlapping slices.
+#[derive(Clone, Copy)]
+struct SendMut(*mut f32);
+unsafe impl Send for SendMut {}
+unsafe impl Sync for SendMut {}
 
 impl Default for ParallelExecutor {
     fn default() -> Self {
@@ -532,48 +644,39 @@ impl PlanExecutor for ParallelExecutor {
     }
 
     fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>) {
-        let bands = band_ranges(planes.h2, self.pool.size());
-        if bands.len() <= 1 {
+        let nbands = n_bands(planes.h2, self.pool.size());
+        if nbands <= 1 {
             // too short to band (or a 1-thread pool): single-band path,
             // keeping this executor's interior-body and scheduling
             // selection
             execute_scheduled(plan, planes, scratch, self.vector, self.opts);
             return;
         }
-        for phase in plan.schedule(self.opts.fuse).phases {
+        for phase in &plan.schedule(self.opts.fuse).phases {
             match phase {
-                FusedPhase::InPlace(ks) => {
-                    self.run_inplace_phase(&ks, planes, &bands, plan.boundary)
-                }
-                FusedPhase::Stencil(st) => {
+                FusedPhase::InPlace(ks) => self.run_inplace_phase(plan, ks, planes, nbands),
+                FusedPhase::Stencil(r) => {
+                    let Kernel::Stencil(st) = plan.kernel(*r) else {
+                        unreachable!("stencil phase refs a stencil kernel")
+                    };
                     let out = ensure_scratch(planes, scratch);
-                    self.run_stencil_phase(st, planes, out, &bands, plan.boundary);
+                    self.run_stencil_phase(st, planes, out, nbands, plan.boundary);
                     std::mem::swap(planes, out);
                 }
             }
         }
     }
 
-    fn join2<'s>(&self, a: Box<dyn FnOnce() + Send + 's>, b: Box<dyn FnOnce() + Send + 's>) {
-        self.pool.scope_run(vec![a, b]);
+    fn join2(&self, a: &mut (dyn FnMut() + Send), b: &mut (dyn FnMut() + Send)) {
+        // hand the two closures to the board as take-once cells — stack
+        // state only, no job boxes
+        let cells = [Mutex::new(Some(a)), Mutex::new(Some(b))];
+        self.pool.run_indexed(2, &|i| {
+            if let Some(f) = cells[i].lock().unwrap().take() {
+                f();
+            }
+        });
     }
-}
-
-/// Cut one plane into per-band mutable row chunks (`stride` samples per
-/// row).  A pyramid level view's buffer extends past the active region;
-/// the tail after the last band simply stays unsplit.
-fn split_bands<'a>(
-    mut p: &'a mut [f32],
-    bands: &[Range<usize>],
-    stride: usize,
-) -> Vec<&'a mut [f32]> {
-    let mut out = Vec::with_capacity(bands.len());
-    for b in bands {
-        let (head, tail) = p.split_at_mut((b.end - b.start) * stride);
-        out.push(head);
-        p = tail;
-    }
-    out
 }
 
 /// Execute one band's share of an in-place phase, *panel-blocked*: the
@@ -587,17 +690,18 @@ fn split_bands<'a>(
 /// its source row-aligned and may therefore take a banded source.
 #[allow(clippy::too_many_arguments)]
 fn run_band_kernels(
-    kernels: &[&Kernel],
+    plan: &KernelPlan,
+    refs: &[KernelRef],
     mut mine: [Option<&mut [f32]>; 4],
     shared: [Option<&[f32]>; 4],
     band: Range<usize>,
     stride: usize,
     w2: usize,
     h2: usize,
-    boundary: Boundary,
     vector: bool,
     panel_rows: usize,
 ) {
+    let boundary = plan.boundary;
     let panel = resolve_panel_rows(panel_rows, stride);
     let mut y = band.start;
     while y < band.end {
@@ -606,8 +710,8 @@ fn run_band_kernels(
         // chunk-relative sample offsets of this panel's rows
         let lo = (y - band.start) * stride;
         let hi = (yend - band.start) * stride;
-        for k in kernels {
-            match k {
+        for &r in refs {
+            match plan.kernel(r) {
                 Kernel::Lift {
                     dst,
                     src,
@@ -758,7 +862,48 @@ mod tests {
             for w in bands.windows(2) {
                 assert_eq!(w[0].end, w[1].start);
             }
+            // the closed form a band job computes for itself agrees
+            // with the materialized list
+            for (b, r) in bands.iter().enumerate() {
+                assert_eq!(band_range(h2, n, b), *r, "h2={h2} n={n} b={b}");
+            }
         }
+    }
+
+    #[test]
+    fn run_indexed_claims_every_index_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = BandPool::new(3);
+        for n in [1usize, 2, 3, 7, 32] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_indexed(n, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "index {i} of {n}");
+            }
+        }
+        // n == 0 is a no-op, not a hang
+        pool.run_indexed(0, &|_| panic!("no index to claim"));
+    }
+
+    #[test]
+    fn run_indexed_survives_a_panicking_task_and_runs_again() {
+        let pool = BandPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_indexed(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // the board must be clean for the next run
+        let count = std::sync::atomic::AtomicUsize::new(0);
+        pool.run_indexed(5, &|_| {
+            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 5);
     }
 
     #[test]

@@ -47,6 +47,13 @@
 //!   detail evacuation overlaps the level *l+1* deinterleave
 //!   ([`PlanExecutor::join2`], band-pool-backed on the parallel
 //!   executor).
+//! * [`pool`] — the workspace arena: size-class-keyed, lock-sharded
+//!   checkout/return of plane workspaces, stencil double buffers,
+//!   pyramid scratch, and packed image buffers.  With cached schedules
+//!   ([`plan::KernelPlan::schedule`] memoizes per fuse flag) and the
+//!   band pool's allocation-free job board, a steady-state request
+//!   performs **zero heap allocations** after warm-up (`PALLAS_POOL=0`
+//!   opts out; counters surface through the coordinator metrics).
 //! * `knobs` — strict parsing for the `PALLAS_*` environment knobs
 //!   (invalid values warn once and fall back to the default).
 //!
@@ -60,6 +67,7 @@ pub mod lifting;
 pub mod multilevel;
 pub mod plan;
 pub mod planes;
+pub mod pool;
 pub mod pyramid;
 pub mod simd;
 pub mod vecn;
@@ -70,7 +78,8 @@ pub use executor::{
     SingleExecutor,
 };
 pub use lifting::{Axis, Boundary};
-pub use plan::{FusedPhase, KernelPlan, Schedule};
+pub use plan::{FusedPhase, KernelPlan, KernelRef, Schedule};
 pub use planes::{Image, Planes};
+pub use pool::{default_pool, PoolStats, WorkspacePool};
 pub use pyramid::PyramidPlan;
 pub use simd::{default_simd, SimdExecutor};

@@ -43,6 +43,7 @@ use super::lifting::{self, Axis, Boundary, TapClass};
 use super::planes::Planes;
 use super::vecn;
 use crate::polyphase::{Poly, PolyMatrix};
+use std::sync::OnceLock;
 
 /// 1-D taps `(offset, coeff)` along one axis.
 pub type Taps = Vec<(i32, f64)>;
@@ -102,6 +103,12 @@ pub struct PlanStep {
 pub struct KernelPlan {
     pub boundary: Boundary,
     pub steps: Vec<PlanStep>,
+    /// Memoized execution schedules, one slot per fuse flag — a plan is
+    /// partitioned at most once per mode, no matter how many requests
+    /// execute it (`OnceLock` clones by value, so a cloned plan keeps a
+    /// valid cache: [`KernelRef`] indices are positions in `steps`,
+    /// which the clone copies verbatim).
+    sched: [OnceLock<Schedule>; 2],
 }
 
 impl KernelPlan {
@@ -115,7 +122,17 @@ impl KernelPlan {
     /// (the section-5 optimized structures).
     pub fn compile(groups: &[Vec<PolyMatrix>], boundary: Boundary) -> Self {
         let steps = groups.iter().map(|g| lower_group(g)).collect();
-        Self { boundary, steps }
+        Self {
+            boundary,
+            steps,
+            sched: Default::default(),
+        }
+    }
+
+    /// Resolve a schedule's [`KernelRef`] back to the kernel it names.
+    #[inline]
+    pub fn kernel(&self, (step, k): KernelRef) -> &Kernel {
+        &self.steps[step].kernels[k]
     }
 
     /// Number of barrier-separated steps (Table 1 "steps" column).
@@ -260,7 +277,15 @@ pub fn ensure_scratch<'a>(planes: &Planes, scratch: &'a mut Option<Planes>) -> &
         Some(s) if s.stride == planes.stride
             && (0..4).all(|c| s.p[c].len() >= planes.h2 * planes.stride));
     if !fits {
-        *scratch = Some(Planes::new_like(planes));
+        // retire the unfit buffers and check out from the arena: the
+        // stencil executor overwrites every destination row it touches
+        // (`dst.fill(0.0)` before accumulating), so a dirty checkout is
+        // safe — and on repeat geometry this is allocation-free
+        let pool = super::pool::WorkspacePool::global();
+        if let Some(old) = scratch.take() {
+            pool.put_planes(old);
+        }
+        *scratch = Some(pool.take_planes_like(planes));
     }
     let s = scratch.as_mut().expect("scratch just filled");
     s.w2 = planes.w2;
@@ -406,19 +431,25 @@ fn stencil_reach(st: &Stencil) -> (i32, i32, i32, i32) {
     h
 }
 
+/// Index of one kernel inside a compiled plan:
+/// `plan.steps[r.0].kernels[r.1]`.  Schedules store these instead of
+/// borrows so a schedule *owns* its data and can be memoized on the
+/// plan itself; resolve with [`KernelPlan::kernel`].
+pub type KernelRef = (usize, usize);
+
 /// One barrier-free phase of a compiled [`Schedule`]: kernels that run
 /// with no synchronization in between, in plan order.
 #[derive(Debug, Clone)]
-pub enum FusedPhase<'p> {
+pub enum FusedPhase {
     /// In-place kernels (lifts, scales): every band runs them over its
     /// own rows, panel by panel, with no barrier until the phase ends.
-    InPlace(Vec<&'p Kernel>),
+    InPlace(Vec<KernelRef>),
     /// A fused stencil: reads all planes with 2-D reach and writes the
     /// double buffer — always a phase of its own, followed by the swap.
-    Stencil(&'p Stencil),
+    Stencil(KernelRef),
 }
 
-impl<'p> FusedPhase<'p> {
+impl FusedPhase {
     pub fn n_kernels(&self) -> usize {
         match self {
             FusedPhase::InPlace(ks) => ks.len(),
@@ -427,16 +458,17 @@ impl<'p> FusedPhase<'p> {
     }
 
     /// Terms the executor evaluates in this phase (same counting as
-    /// [`KernelPlan::exec_ops`]).
-    pub fn exec_ops(&self) -> usize {
+    /// [`KernelPlan::exec_ops`]).  `plan` must be the plan this
+    /// schedule was compiled from.
+    pub fn exec_ops(&self, plan: &KernelPlan) -> usize {
         let of = |k: &Kernel| match k {
             Kernel::Lift { taps, .. } => taps.len(),
             Kernel::Stencil(st) => st.rows.iter().map(Vec::len).sum(),
             Kernel::Scale { .. } => 0,
         };
         match self {
-            FusedPhase::InPlace(ks) => ks.iter().map(|k| of(k)).sum(),
-            FusedPhase::Stencil(st) => st.rows.iter().map(Vec::len).sum(),
+            FusedPhase::InPlace(ks) => ks.iter().map(|&r| of(plan.kernel(r))).sum(),
+            FusedPhase::Stencil(r) => of(plan.kernel(*r)),
         }
     }
 
@@ -445,11 +477,11 @@ impl<'p> FusedPhase<'p> {
     /// under composition, so summing a plan's phases gives the same
     /// totals under any partition — fusion conserves halo traffic and
     /// cuts only the number of exchanges.
-    pub fn halo(&self) -> (i32, i32, i32, i32) {
+    pub fn halo(&self, plan: &KernelPlan) -> (i32, i32, i32, i32) {
         match self {
             FusedPhase::InPlace(ks) => {
                 let mut h = (0, 0, 0, 0);
-                for r in ks.iter().map(|k| kernel_reach(k)) {
+                for r in ks.iter().map(|&r| kernel_reach(plan.kernel(r))) {
                     h.0 += r.0;
                     h.1 += r.1;
                     h.2 += r.2;
@@ -457,7 +489,7 @@ impl<'p> FusedPhase<'p> {
                 }
                 h
             }
-            FusedPhase::Stencil(st) => stencil_reach(st),
+            FusedPhase::Stencil(r) => kernel_reach(plan.kernel(*r)),
         }
     }
 }
@@ -468,9 +500,9 @@ impl<'p> FusedPhase<'p> {
 /// executor's halo exchanges, and the sweep boundaries of the
 /// single-threaded panel-blocked traversal.
 #[derive(Debug, Clone)]
-pub struct Schedule<'p> {
+pub struct Schedule {
     /// Barrier-separated phases, in execution order.
-    pub phases: Vec<FusedPhase<'p>>,
+    pub phases: Vec<FusedPhase>,
     /// Whether cross-group fusion was applied.
     pub fused: bool,
 }
@@ -493,16 +525,31 @@ impl KernelPlan {
     /// Fusion never reorders kernels and never changes what a kernel
     /// computes — both schedules execute bit-identically (asserted by
     /// the executor and twin test suites).
-    pub fn schedule(&self, fuse: bool) -> Schedule<'_> {
-        let mut phases = Vec::new();
-        if fuse {
-            partition_into(self.steps.iter().flat_map(|s| s.kernels.iter()), &mut phases);
-        } else {
-            for s in &self.steps {
-                partition_into(s.kernels.iter(), &mut phases);
+    ///
+    /// The partition is **memoized** on the plan: the first call per
+    /// fuse flag computes it, every later call returns the same cached
+    /// `&Schedule` (zero work, zero allocation) — a steady-state
+    /// request never re-partitions phases.
+    pub fn schedule(&self, fuse: bool) -> &Schedule {
+        self.sched[fuse as usize].get_or_init(|| {
+            let mut phases = Vec::new();
+            if fuse {
+                partition_into(
+                    self.steps.iter().enumerate().flat_map(|(si, s)| {
+                        s.kernels.iter().enumerate().map(move |(ki, k)| ((si, ki), k))
+                    }),
+                    &mut phases,
+                );
+            } else {
+                for (si, s) in self.steps.iter().enumerate() {
+                    partition_into(
+                        s.kernels.iter().enumerate().map(|(ki, k)| ((si, ki), k)),
+                        &mut phases,
+                    );
+                }
             }
-        }
-        Schedule { phases, fused: fuse }
+            Schedule { phases, fused: fuse }
+        })
     }
 
     /// Barriers an executor actually pays under a scheduling mode: the
@@ -514,18 +561,21 @@ impl KernelPlan {
     }
 }
 
-fn partition_into<'p>(kernels: impl Iterator<Item = &'p Kernel>, out: &mut Vec<FusedPhase<'p>>) {
-    let mut cur: Vec<&'p Kernel> = Vec::new();
+fn partition_into<'p>(
+    kernels: impl Iterator<Item = (KernelRef, &'p Kernel)>,
+    out: &mut Vec<FusedPhase>,
+) {
+    let mut cur: Vec<KernelRef> = Vec::new();
     let mut written = 0u8;
     let mut vread = 0u8;
-    for k in kernels {
-        if let Kernel::Stencil(st) = k {
+    for (r, k) in kernels {
+        if matches!(k, Kernel::Stencil(_)) {
             if !cur.is_empty() {
                 out.push(FusedPhase::InPlace(std::mem::take(&mut cur)));
             }
             written = 0;
             vread = 0;
-            out.push(FusedPhase::Stencil(st));
+            out.push(FusedPhase::Stencil(r));
             continue;
         }
         let w = written_planes(k);
@@ -535,7 +585,7 @@ fn partition_into<'p>(kernels: impl Iterator<Item = &'p Kernel>, out: &mut Vec<F
             written = 0;
             vread = 0;
         }
-        cur.push(k);
+        cur.push(r);
         written |= w;
         vread |= vr;
     }
@@ -972,9 +1022,14 @@ mod tests {
                 assert_eq!(n, total, "{tag}: schedule drops or duplicates kernels");
                 for ph in &sched.phases {
                     if let FusedPhase::InPlace(ks) = ph {
-                        let written: u8 =
-                            ks.iter().map(|k| written_planes(k)).fold(0, |a, b| a | b);
-                        let vread: u8 = ks.iter().map(|k| vread_planes(k)).fold(0, |a, b| a | b);
+                        let written: u8 = ks
+                            .iter()
+                            .map(|&r| written_planes(plan.kernel(r)))
+                            .fold(0, |a, b| a | b);
+                        let vread: u8 = ks
+                            .iter()
+                            .map(|&r| vread_planes(plan.kernel(r)))
+                            .fold(0, |a, b| a | b);
                         assert_eq!(
                             written & vread,
                             0,
@@ -1032,11 +1087,32 @@ mod tests {
         every_plan(&mut |tag, plan| {
             let sum = |sched: &Schedule| {
                 sched.phases.iter().fold(((0, 0, 0, 0), 0usize), |(h, o), p| {
-                    let r = p.halo();
-                    ((h.0 + r.0, h.1 + r.1, h.2 + r.2, h.3 + r.3), o + p.exec_ops())
+                    let r = p.halo(plan);
+                    ((h.0 + r.0, h.1 + r.1, h.2 + r.2, h.3 + r.3), o + p.exec_ops(plan))
                 })
             };
-            assert_eq!(sum(&plan.schedule(true)), sum(&plan.schedule(false)), "{tag}");
+            assert_eq!(sum(plan.schedule(true)), sum(plan.schedule(false)), "{tag}");
         });
+    }
+
+    #[test]
+    fn schedules_are_memoized_per_fuse_flag() {
+        let plan = KernelPlan::from_steps(
+            &schemes::build(Scheme::NsLifting, &Wavelet::cdf97()),
+            Boundary::Periodic,
+        );
+        // repeated calls return the SAME cached object — the partition
+        // runs at most once per (plan, fuse) pair
+        assert!(std::ptr::eq(plan.schedule(true), plan.schedule(true)));
+        assert!(std::ptr::eq(plan.schedule(false), plan.schedule(false)));
+        assert!(!std::ptr::eq(plan.schedule(true), plan.schedule(false)));
+        // a cloned plan carries the cache over and its KernelRef indices
+        // stay valid (they index the cloned steps)
+        let copy = plan.clone();
+        assert_eq!(copy.schedule(true).phases.len(), plan.schedule(true).phases.len());
+        let ops = |p: &KernelPlan| -> usize {
+            p.schedule(true).phases.iter().map(|ph| ph.exec_ops(p)).sum()
+        };
+        assert_eq!(ops(&copy), ops(&plan));
     }
 }

@@ -172,20 +172,35 @@ impl Planes {
 
     /// Polyphase split of an even-sized image.
     pub fn split(img: &Image) -> Self {
+        let mut out = Self::new(img.width / 2, img.height / 2);
+        out.split_into(img);
+        out
+    }
+
+    /// [`Planes::split`] into this container (no allocation): the
+    /// active region must already be `img.width/2 x img.height/2`.
+    /// Every active sample is written, so a dirty pooled workspace is a
+    /// valid destination.
+    pub fn split_into(&mut self, img: &Image) {
         assert!(
             img.width % 2 == 0 && img.height % 2 == 0,
             "image sides must be even (got {}x{})",
             img.width,
             img.height
         );
-        let (w2, h2) = (img.width / 2, img.height / 2);
-        let mut out = Self::new(w2, h2);
+        let (w2, h2, s) = (self.w2, self.h2, self.stride);
+        assert!(
+            w2 == img.width / 2 && h2 == img.height / 2,
+            "planes region {w2}x{h2} does not match image {}x{}",
+            img.width,
+            img.height
+        );
         let w = img.width;
         for y in 0..h2 {
             let even = &img.data[2 * y * w..2 * y * w + w];
             let odd = &img.data[(2 * y + 1) * w..(2 * y + 1) * w + w];
-            let r = y * w2..(y + 1) * w2;
-            let (ee, rest) = out.p.split_at_mut(1);
+            let r = y * s..y * s + w2;
+            let (ee, rest) = self.p.split_at_mut(1);
             let (oe, rest) = rest.split_at_mut(1);
             let (eo, oo) = rest.split_at_mut(1);
             let (ee, oe) = (&mut ee[0][r.clone()], &mut oe[0][r.clone()]);
@@ -197,15 +212,28 @@ impl Planes {
                 oo[x] = odd[2 * x + 1];
             }
         }
-        out
     }
 
     /// Interleaving merge of the active region (exact inverse of
     /// [`Planes::split`] for plain planes).
     pub fn merge(&self) -> Image {
+        let mut img = Image::new(self.w2 * 2, self.h2 * 2);
+        self.merge_into(&mut img);
+        img
+    }
+
+    /// [`Planes::merge`] into a caller-provided image (no allocation).
+    /// Every output sample is written, so a dirty pooled buffer is a
+    /// valid destination.
+    pub fn merge_into(&self, img: &mut Image) {
         let (w2, h2, s) = (self.w2, self.h2, self.stride);
         let w = w2 * 2;
-        let mut img = Image::new(w, h2 * 2);
+        assert!(
+            img.width == w && img.height == h2 * 2,
+            "image {}x{} does not match planes region {w2}x{h2}",
+            img.width,
+            img.height
+        );
         for y in 0..h2 {
             let r = y * s..y * s + w2;
             let (ee, oe, eo, oo) = (
@@ -222,15 +250,28 @@ impl Planes {
                 odd[2 * x + 1] = oo[x];
             }
         }
-        img
     }
 
     /// Pack subbands in the canonical quadrant layout
     /// `[[LL, HL], [LH, HH]]` (the layout the AOT artifacts emit).
     pub fn to_packed(&self) -> Image {
+        let mut img = Image::new(self.w2 * 2, self.h2 * 2);
+        self.to_packed_into(&mut img);
+        img
+    }
+
+    /// [`Planes::to_packed`] into a caller-provided image (no
+    /// allocation): whole-row `copy_from_slice` passes per quadrant,
+    /// every output sample written.
+    pub fn to_packed_into(&self, img: &mut Image) {
         let (w2, h2, s) = (self.w2, self.h2, self.stride);
         let w = w2 * 2;
-        let mut img = Image::new(w, h2 * 2);
+        assert!(
+            img.width == w && img.height == h2 * 2,
+            "image {}x{} does not match planes region {w2}x{h2}",
+            img.width,
+            img.height
+        );
         for y in 0..h2 {
             let r = y * s..y * s + w2;
             img.data[y * w..y * w + w2].copy_from_slice(&self.p[0][r.clone()]);
@@ -239,23 +280,55 @@ impl Planes {
             img.data[by * w..by * w + w2].copy_from_slice(&self.p[2][r.clone()]);
             img.data[by * w + w2..(by + 1) * w].copy_from_slice(&self.p[3][r]);
         }
-        img
     }
 
     /// Inverse of [`Planes::to_packed`].
     pub fn from_packed(img: &Image) -> Self {
-        let (w2, h2) = (img.width / 2, img.height / 2);
-        let w = img.width;
-        let mut out = Self::new(w2, h2);
-        for y in 0..h2 {
-            let r = y * w2..(y + 1) * w2;
-            let by = y + h2;
-            out.p[0][r.clone()].copy_from_slice(&img.data[y * w..y * w + w2]);
-            out.p[1][r.clone()].copy_from_slice(&img.data[y * w + w2..(y + 1) * w]);
-            out.p[2][r.clone()].copy_from_slice(&img.data[by * w..by * w + w2]);
-            out.p[3][r].copy_from_slice(&img.data[by * w + w2..(by + 1) * w]);
-        }
+        let mut out = Self::new(img.width / 2, img.height / 2);
+        out.from_packed_into(img);
         out
+    }
+
+    /// [`Planes::from_packed`] into this container (no allocation):
+    /// the active region must already be `img.width/2 x img.height/2`.
+    pub fn from_packed_into(&mut self, img: &Image) {
+        let (w2, h2, s) = (self.w2, self.h2, self.stride);
+        assert!(
+            w2 == img.width / 2 && h2 == img.height / 2,
+            "planes region {w2}x{h2} does not match image {}x{}",
+            img.width,
+            img.height
+        );
+        let w = img.width;
+        for y in 0..h2 {
+            let r = y * s..y * s + w2;
+            let by = y + h2;
+            self.p[0][r.clone()].copy_from_slice(&img.data[y * w..y * w + w2]);
+            self.p[1][r.clone()].copy_from_slice(&img.data[y * w + w2..(y + 1) * w]);
+            self.p[2][r.clone()].copy_from_slice(&img.data[by * w..by * w + w2]);
+            self.p[3][r].copy_from_slice(&img.data[by * w + w2..(by + 1) * w]);
+        }
+    }
+
+    /// Overwrite this container's active region from `other` (no
+    /// allocation; regions must match).  The pooled replacement for
+    /// `planes.clone()` on the inverse path.
+    pub fn copy_from(&mut self, other: &Planes) {
+        assert!(
+            self.w2 == other.w2 && self.h2 == other.h2,
+            "region mismatch: {}x{} vs {}x{}",
+            self.w2,
+            self.h2,
+            other.w2,
+            other.h2
+        );
+        for c in 0..4 {
+            for y in 0..self.h2 {
+                let d = y * self.stride;
+                let s = y * other.stride;
+                self.p[c][d..d + self.w2].copy_from_slice(&other.p[c][s..s + self.w2]);
+            }
+        }
     }
 
     pub fn max_abs_diff(&self, other: &Planes) -> f32 {
@@ -315,5 +388,59 @@ mod tests {
     fn split_rejects_odd() {
         let img = Image::new(3, 4);
         let _ = Planes::split(&img);
+    }
+
+    /// A planes container whose every sample (including dead storage)
+    /// starts as garbage — what a pooled checkout hands back.
+    fn dirty_planes(w2: usize, h2: usize) -> Planes {
+        let mut p = Planes::new(w2, h2);
+        for c in 0..4 {
+            p.p[c].iter_mut().enumerate().for_each(|(i, v)| *v = -7.5 - i as f32);
+        }
+        p
+    }
+
+    #[test]
+    fn into_variants_match_fresh_paths_bit_exactly_on_dirty_buffers() {
+        let img = Image::synthetic(20, 12, 4);
+
+        // split: fresh vs dirty-destination _into
+        let fresh = Planes::split(&img);
+        let mut pooled = dirty_planes(10, 6);
+        pooled.split_into(&img);
+        assert_eq!(pooled, fresh);
+
+        // merge / to_packed: fresh vs dirty-destination _into
+        let mut merged = Image::from_data(20, 12, vec![f32::NAN; 240]);
+        fresh.merge_into(&mut merged);
+        assert_eq!(merged.data, fresh.merge().data);
+        let mut packed = Image::from_data(20, 12, vec![f32::NAN; 240]);
+        fresh.to_packed_into(&mut packed);
+        assert_eq!(packed.data, fresh.to_packed().data);
+
+        // from_packed: fresh vs dirty-destination _into
+        let mut unpacked = dirty_planes(10, 6);
+        unpacked.from_packed_into(&packed);
+        assert_eq!(unpacked, Planes::from_packed(&packed));
+    }
+
+    #[test]
+    fn copy_from_matches_clone_across_strides() {
+        // source is a strided level view; the copy lands in a plain
+        // container and must equal the active region
+        let mut src = Planes::split(&Image::synthetic(16, 16, 5));
+        src.set_region(4, 3);
+        let mut dst = dirty_planes(4, 3);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        assert_eq!(dst.max_abs_diff(&src), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn merge_into_rejects_shape_mismatch() {
+        let planes = Planes::new(4, 4);
+        let mut img = Image::new(10, 8);
+        planes.merge_into(&mut img);
     }
 }

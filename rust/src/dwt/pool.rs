@@ -1,0 +1,311 @@
+//! The workspace arena: size-class-keyed, lock-sharded checkout and
+//! return of every heap buffer the steady-state request path touches.
+//!
+//! The transform is memory-bound once the arithmetic is fused, which
+//! puts per-request allocation — page faults on first touch, allocator
+//! lock traffic under load — on the critical path.  [`WorkspacePool`]
+//! keeps retired buffers on free lists keyed by their *exact* sample
+//! count (plane sizes are fully determined by request geometry, so
+//! exact-length classes hit on every repeat request) and hands them
+//! back dirty: callers own full initialization of whatever region they
+//! read, which every kernel in this crate already guarantees (lifting
+//! updates read only rows they or the splitter wrote; stencils zero
+//! each destination row before accumulating; pack/merge passes write
+//! every output sample).
+//!
+//! Checkout and return are O(1) under one of [`SHARDS`] mutexes chosen
+//! by a multiplicative hash of the length, so concurrent coordinator
+//! workers do not serialize on a single free list.  Each size class
+//! caps its free list at [`MAX_PER_CLASS`] buffers; returns beyond the
+//! cap free the buffer and count as evictions, which bounds resident
+//! memory at `SHARDS x classes x MAX_PER_CLASS` buffers under shifting
+//! workloads.
+//!
+//! `PALLAS_POOL=0` (strict `0`/`1` parsing via [`super::knobs`])
+//! disables caching process-wide: every checkout allocates fresh and
+//! every return frees, which restores the pre-pool allocation profile
+//! for A/B measurement — the `throughput` bench section reports both
+//! sides.  Occupancy and hit-rate counters are exported through
+//! [`WorkspacePool::stats`] and surfaced by the coordinator's metrics
+//! summary.
+
+use super::knobs;
+use super::planes::{Image, Planes};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+/// Number of independent free-list shards (must be a power of two).
+const SHARDS: usize = 8;
+
+/// Free-list cap per exact-length size class, per shard.  A request
+/// needs at most a handful of buffers per class (4 planes + scratch +
+/// packed output), so this accommodates many concurrent workers before
+/// evicting.
+const MAX_PER_CLASS: usize = 32;
+
+/// Process default for workspace pooling: `PALLAS_POOL` (strict
+/// `"0"` = off / `"1"` = on; anything else warns once and keeps the
+/// default), default **on**.
+pub fn default_pool() -> bool {
+    static WARN: Once = Once::new();
+    knobs::parse_switch(
+        "PALLAS_POOL",
+        std::env::var("PALLAS_POOL").ok().as_deref(),
+        &WARN,
+        true,
+    )
+}
+
+/// Snapshot of the pool's counters (monotonic since process start,
+/// except `resident` which tracks the current free-list population).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Checkouts served from a free list (no allocation).
+    pub hits: u64,
+    /// Checkouts that allocated fresh (cold class, or pool disabled).
+    pub misses: u64,
+    /// Buffers handed back (cached or not).
+    pub returns: u64,
+    /// Returns dropped because their size class was full.
+    pub evicted: u64,
+    /// Buffers currently parked on free lists.
+    pub resident: u64,
+}
+
+impl PoolStats {
+    /// Fraction of checkouts served without allocating; 0 when idle.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The arena itself.  One process-wide instance lives behind
+/// [`WorkspacePool::global`]; tests construct private instances to
+/// control the enabled flag without touching the environment.
+pub struct WorkspacePool {
+    enabled: bool,
+    shards: [Mutex<HashMap<usize, Vec<Vec<f32>>>>; SHARDS],
+    hits: AtomicU64,
+    misses: AtomicU64,
+    returns: AtomicU64,
+    evicted: AtomicU64,
+    resident: AtomicU64,
+}
+
+impl WorkspacePool {
+    /// A fresh pool.  `enabled == false` turns every checkout into a
+    /// plain allocation and every return into a free.
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            enabled,
+            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            returns: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            resident: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide pool, honoring `PALLAS_POOL` (read once, at
+    /// first use).
+    pub fn global() -> &'static WorkspacePool {
+        static POOL: OnceLock<WorkspacePool> = OnceLock::new();
+        POOL.get_or_init(|| WorkspacePool::new(default_pool()))
+    }
+
+    /// Whether checkouts may be served from free lists.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn shard(&self, len: usize) -> &Mutex<HashMap<usize, Vec<Vec<f32>>>> {
+        // class lengths are highly structured (powers of two dominate),
+        // so mix before reducing to a shard index
+        let h = (len as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        &self.shards[(h >> 56) as usize % SHARDS]
+    }
+
+    /// Check out a buffer of exactly `len` samples.  The contents are
+    /// **unspecified** (a recycled buffer keeps its previous values):
+    /// the caller must fully overwrite every sample it later reads.
+    /// Misses allocate zero-filled, so the two cases are only
+    /// distinguishable by code that reads samples it never wrote.
+    pub fn take_vec(&self, len: usize) -> Vec<f32> {
+        if self.enabled {
+            let popped = self.shard(len).lock().unwrap().get_mut(&len).and_then(Vec::pop);
+            if let Some(v) = popped {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.resident.fetch_sub(1, Ordering::Relaxed);
+                debug_assert_eq!(v.len(), len);
+                return v;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        vec![0.0; len]
+    }
+
+    /// Return a buffer to its size class.  Freed instead of cached when
+    /// the pool is disabled, the buffer is empty, or the class is full
+    /// (counted as an eviction).
+    pub fn put_vec(&self, v: Vec<f32>) {
+        self.returns.fetch_add(1, Ordering::Relaxed);
+        if !self.enabled || v.is_empty() {
+            return; // dropping frees it
+        }
+        let len = v.len();
+        let mut shard = self.shard(len).lock().unwrap();
+        let class = shard.entry(len).or_default();
+        if class.len() >= MAX_PER_CLASS {
+            drop(shard); // free outside the lock
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        class.push(v);
+        self.resident.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Check out a plain-stride `w2 x h2` four-plane workspace.  Active
+    /// regions are dirty — see [`Self::take_vec`].
+    pub fn take_planes(&self, w2: usize, h2: usize) -> Planes {
+        let p = std::array::from_fn(|_| self.take_vec(w2 * h2));
+        Planes {
+            w2,
+            h2,
+            stride: w2,
+            p,
+        }
+    }
+
+    /// Check out a workspace buffer-compatible with `like`: same plane
+    /// lengths and stride, active region set to `like`'s.  This is the
+    /// stencil double buffer's checkout — `like` may be a pyramid level
+    /// view whose buffers keep level-0 geometry.
+    pub fn take_planes_like(&self, like: &Planes) -> Planes {
+        let p = std::array::from_fn(|i| self.take_vec(like.p[i].len()));
+        Planes {
+            w2: like.w2,
+            h2: like.h2,
+            stride: like.stride,
+            p,
+        }
+    }
+
+    /// Return a workspace's four plane buffers to their size classes.
+    pub fn put_planes(&self, planes: Planes) {
+        for v in planes.p {
+            self.put_vec(v);
+        }
+    }
+
+    /// Check out a packed `width x height` image buffer (dirty — every
+    /// sample must be written before the image is read).
+    pub fn take_image(&self, width: usize, height: usize) -> Image {
+        Image::from_data(width, height, self.take_vec(width * height))
+    }
+
+    /// Return a packed image's buffer to its size class.
+    pub fn put_image(&self, img: Image) {
+        self.put_vec(img.data);
+    }
+
+    /// Counter snapshot (relaxed loads; exact under quiescence).
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            returns: self.returns.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            resident: self.resident.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_reuses_the_same_allocation() {
+        let pool = WorkspacePool::new(true);
+        let mut v = pool.take_vec(1024);
+        assert_eq!(v.len(), 1024);
+        assert!(v.iter().all(|&x| x == 0.0), "cold miss is zero-filled");
+        v[3] = 7.0;
+        let ptr = v.as_ptr();
+        pool.put_vec(v);
+        let back = pool.take_vec(1024);
+        assert_eq!(back.as_ptr(), ptr, "hit must recycle the buffer");
+        assert_eq!(back[3], 7.0, "recycled buffers come back dirty");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.returns), (1, 1, 1));
+        assert_eq!(s.resident, 0);
+        assert!((pool.stats().hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn size_classes_do_not_cross() {
+        let pool = WorkspacePool::new(true);
+        pool.put_vec(vec![1.0; 64]);
+        let v = pool.take_vec(128);
+        assert_eq!(v.len(), 128);
+        assert_eq!(pool.stats().hits, 0, "64-class must not serve 128");
+        assert_eq!(pool.stats().resident, 1);
+    }
+
+    #[test]
+    fn disabled_pool_never_caches() {
+        let pool = WorkspacePool::new(false);
+        assert!(!pool.enabled());
+        pool.put_vec(vec![9.0; 256]);
+        let v = pool.take_vec(256);
+        assert!(v.iter().all(|&x| x == 0.0), "disabled take is always fresh");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.returns, s.resident), (0, 1, 1, 0));
+    }
+
+    #[test]
+    fn full_classes_evict_instead_of_growing() {
+        let pool = WorkspacePool::new(true);
+        for _ in 0..MAX_PER_CLASS {
+            pool.put_vec(vec![0.0; 32]);
+        }
+        assert_eq!(pool.stats().resident, MAX_PER_CLASS as u64);
+        pool.put_vec(vec![0.0; 32]);
+        let s = pool.stats();
+        assert_eq!(s.evicted, 1);
+        assert_eq!(s.resident, MAX_PER_CLASS as u64);
+    }
+
+    #[test]
+    fn planes_and_image_checkouts_have_request_geometry() {
+        let pool = WorkspacePool::new(true);
+        let planes = pool.take_planes(8, 6);
+        assert_eq!((planes.w2, planes.h2, planes.stride), (8, 6, 8));
+        assert!(planes.p.iter().all(|p| p.len() == 48));
+        let like = pool.take_planes_like(&planes);
+        assert_eq!((like.w2, like.h2, like.stride), (8, 6, 8));
+        pool.put_planes(planes);
+        pool.put_planes(like);
+        let img = pool.take_image(16, 12);
+        assert_eq!((img.width, img.height, img.data.len()), (16, 12, 192));
+        pool.put_image(img);
+        // 8 plane buffers + 1 image buffer came back
+        assert_eq!(pool.stats().returns, 9);
+    }
+
+    #[test]
+    fn empty_returns_are_ignored() {
+        let pool = WorkspacePool::new(true);
+        pool.put_vec(Vec::new());
+        assert_eq!(pool.stats().resident, 0);
+        // len-0 checkout still works (degenerate geometry)
+        assert_eq!(pool.take_vec(0).len(), 0);
+    }
+}

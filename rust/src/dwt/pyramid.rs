@@ -240,10 +240,15 @@ fn level_exec<E: PlanExecutor + ?Sized>(
 }
 
 fn run_forward<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, img: &Image) -> Image {
-    let mut out = Image::new(pyr.width, pyr.height);
+    let pool = super::pool::WorkspacePool::global();
+    // every output sample is written exactly once (detail evacuation +
+    // final store_ll partition the packed layout), so a dirty pooled
+    // buffer is a valid destination
+    let mut out = pool.take_image(pyr.width, pyr.height);
     // the one workspace of the whole run; levels > 0 re-scope its
     // region and deinterleave within it
-    let mut ws = Planes::split(img);
+    let mut ws = pool.take_planes(pyr.width / 2, pyr.height / 2);
+    ws.split_into(img);
     let mut scratch: Option<Planes> = None;
     for (i, lv) in pyr.levels().iter().enumerate() {
         ws.set_region(lv.w2, lv.h2);
@@ -265,8 +270,8 @@ fn run_forward<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, img: &Imag
                 let (head3, tail3) = p3.split_at_mut(nh * s);
                 let out_ref = &mut out;
                 exec.join2(
-                    Box::new(move || evacuate_tail(tail1, tail2, tail3, out_ref, w, h, nh, s)),
-                    Box::new(move || deinterleave_slices(p0, head1, head2, head3, s, nw, nh)),
+                    &mut move || evacuate_tail(tail1, tail2, tail3, out_ref, w, h, nh, s),
+                    &mut move || deinterleave_slices(p0, head1, head2, head3, s, nw, nh),
                 );
             }
             Some(nx) => {
@@ -277,12 +282,20 @@ fn run_forward<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, img: &Imag
         }
     }
     store_ll(&ws, &mut out);
+    pool.put_planes(ws);
+    if let Some(s) = scratch {
+        pool.put_planes(s);
+    }
     out
 }
 
 fn run_inverse<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, packed: &Image) -> Image {
+    let pool = super::pool::WorkspacePool::global();
     let (w2, h2) = (pyr.width / 2, pyr.height / 2);
-    let mut ws = Planes::new(w2, h2);
+    // dirty checkout is safe: each level's active region is fully
+    // written by load_ll/load_details/interleave before a kernel reads
+    // it, and kernels never read outside the active region
+    let mut ws = pool.take_planes(w2, h2);
     let mut scratch: Option<Planes> = None;
     let deepest = *pyr.levels().last().expect("levels >= 1");
     ws.set_region(deepest.w2, deepest.h2);
@@ -297,7 +310,13 @@ fn run_inverse<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, packed: &I
         }
     }
     // level 0 reconstructed the full polyphase components
-    ws.merge()
+    let mut img = pool.take_image(pyr.width, pyr.height);
+    ws.merge_into(&mut img);
+    pool.put_planes(ws);
+    if let Some(s) = scratch {
+        pool.put_planes(s);
+    }
+    img
 }
 
 // ------------------------------------------------- inter-level steps

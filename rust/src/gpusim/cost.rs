@@ -227,7 +227,7 @@ pub fn predict_fused(
     let raw: Vec<f64> = sched
         .phases
         .iter()
-        .map(|p| p.exec_ops().max(1) as f64)
+        .map(|p| p.exec_ops(&plan).max(1) as f64)
         .collect();
     let raw_sum: f64 = raw.iter().sum();
     let px = pixels as f64;
@@ -238,7 +238,7 @@ pub fn predict_fused(
         .map(|(ph, r)| {
             let bytes = match pipeline {
                 PipelineKind::Shaders => 8.0,
-                PipelineKind::OpenCl => onchip_pass_bytes(ph.halo()),
+                PipelineKind::OpenCl => onchip_pass_bytes(ph.halo(&plan)),
             };
             step_time_ms(
                 device,

@@ -185,7 +185,7 @@ pub fn fused_band_halo_bytes(plan: &KernelPlan, w2: usize, bands: usize, fuse: b
         .phases
         .iter()
         .map(|ph| {
-            let (t, b, _, _) = ph.halo();
+            let (t, b, _, _) = ph.halo(plan);
             (t.max(0) + b.max(0)) as usize * w2 * 4 * bands
         })
         .sum()

@@ -121,8 +121,10 @@ mod client {
             Ok(Image::from_data(img.width, img.height, out))
         }
 
-        /// Run a batched entry on a stack of same-shape images.
-        pub fn execute_batch(&self, name: &str, batch: &[Image]) -> Result<Vec<Image>> {
+        /// Run a batched entry on a stack of same-shape images, taken
+        /// by reference so callers can pad a partial batch by repeating
+        /// the head image without deep-copying it.
+        pub fn execute_batch(&self, name: &str, batch: &[&Image]) -> Result<Vec<Image>> {
             let entry = self
                 .manifest
                 .find(name)
@@ -202,7 +204,7 @@ mod client {
             Err(anyhow!("pjrt disabled: cannot execute {name}"))
         }
 
-        pub fn execute_batch(&self, name: &str, _batch: &[Image]) -> Result<Vec<Image>> {
+        pub fn execute_batch(&self, name: &str, _batch: &[&Image]) -> Result<Vec<Image>> {
             Err(anyhow!("pjrt disabled: cannot execute {name}"))
         }
 

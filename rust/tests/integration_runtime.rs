@@ -82,7 +82,8 @@ fn pjrt_batched_matches_singles() {
     let Some(rt) = runtime_or_skip() else { return };
     let name = "cdf97_ns_polyconv_batch8_fwd_256x256";
     let batch: Vec<Image> = (0..8).map(|i| Image::synthetic(256, 256, 200 + i)).collect();
-    let outs = rt.execute_batch(name, &batch).expect("batched execute");
+    let refs: Vec<&Image> = batch.iter().collect();
+    let outs = rt.execute_batch(name, &refs).expect("batched execute");
     for (i, (img, out)) in batch.iter().zip(&outs).enumerate() {
         let single = rt
             .execute_image("cdf97_ns_polyconv_fwd_256x256", img)

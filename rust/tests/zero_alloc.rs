@@ -1,0 +1,133 @@
+//! Steady-state allocation regression: after warm-up, a forward,
+//! inverse, or L=3 pyramid request performs **zero** heap allocations
+//! on every native backend.
+//!
+//! This binary swaps in a counting global allocator (which is why it is
+//! registered as its own `[[test]]` target — the counter must not
+//! observe the other test binaries), warms each request shape twice —
+//! populating the [`WorkspacePool`] size classes, memoizing the
+//! compiled plan's phase schedules, and faulting in every lazily built
+//! structure (band-pool threads, engine caches) — and then hard-asserts
+//! an allocation count of 0 for the third request, across all threads.
+//!
+//! The workload is a lifting scheme on purpose: lifting plans lower
+//! entirely to in-place `Lift`/`Scale` kernels (pinned by
+//! `plan::tests::lifting_schemes_lower_fully_to_lift_kernels`), so the
+//! whole request is pool-checkout + kernels + pool-return.  Stencil
+//! (convolution) schemes still resolve per-plane term tables inside
+//! `apply.rs` and are covered by the pool's hit counters rather than a
+//! zero-alloc guarantee.
+
+use dwt_accel::dwt::executor::{ParallelExecutor, PlanExecutor, ScalarExecutor};
+use dwt_accel::dwt::simd::SimdExecutor;
+use dwt_accel::dwt::{Engine, Image, WorkspacePool};
+use dwt_accel::polyphase::schemes::Scheme;
+use dwt_accel::polyphase::wavelets::Wavelet;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations performed while running `f`, counted across all threads
+/// (band-pool workers included — a worker that boxes jobs would show
+/// up here).
+fn allocs_during(f: impl FnOnce()) -> u64 {
+    ARMED.store(true, Ordering::SeqCst);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    f();
+    let after = ALLOCS.load(Ordering::SeqCst);
+    ARMED.store(false, Ordering::SeqCst);
+    after - before
+}
+
+// One test function on purpose: ARMED is process-global, so a second
+// test running concurrently would leak its allocations into this
+// measurement window.
+#[test]
+fn steady_state_requests_allocate_nothing() {
+    let pool = WorkspacePool::global();
+    assert!(
+        pool.enabled(),
+        "this regression requires the workspace pool (unset PALLAS_POOL)"
+    );
+    let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
+    let img = Image::synthetic(128, 64, 7);
+    let packed = engine.forward(&img);
+    let parallel = ParallelExecutor::with_threads(3);
+    let backends: [(&str, &dyn PlanExecutor); 3] = [
+        ("scalar", &ScalarExecutor),
+        ("simd", &SimdExecutor),
+        ("parallel", &parallel),
+    ];
+
+    for (name, exec) in backends {
+        for _ in 0..2 {
+            pool.put_image(engine.forward_with(&img, exec));
+            pool.put_image(engine.inverse_with(&packed, exec));
+        }
+        let fwd = allocs_during(|| {
+            pool.put_image(engine.forward_with(&img, exec));
+        });
+        assert_eq!(fwd, 0, "{name}: steady-state forward allocated {fwd}x");
+        let inv = allocs_during(|| {
+            pool.put_image(engine.inverse_with(&packed, exec));
+        });
+        assert_eq!(inv, 0, "{name}: steady-state inverse allocated {inv}x");
+
+        // L=3 pyramid: a serving loop holds the lowered PyramidPlan
+        // (per-level geometry is request metadata, compiled once like
+        // the schedules), so the steady state is run_pyramid itself
+        let pyr = engine
+            .pyramid_plan(img.width, img.height, 3, false)
+            .unwrap();
+        for _ in 0..2 {
+            pool.put_image(exec.run_pyramid(&pyr, &img));
+        }
+        let pyd = allocs_during(|| {
+            pool.put_image(exec.run_pyramid(&pyr, &img));
+        });
+        assert_eq!(pyd, 0, "{name}: steady-state L=3 pyramid allocated {pyd}x");
+
+        // the measured requests were served, and served from the pool
+        let s = pool.stats();
+        assert!(s.hits > 0, "{name}: pool never hit");
+    }
+
+    // schedules were computed at most once per (plan, fuse) pair:
+    // memoization means repeated scheduling returns the same object
+    let plan = engine.plan(dwt_accel::dwt::PlanVariant::Optimized);
+    assert!(std::ptr::eq(plan.schedule(true), plan.schedule(true)));
+}
