@@ -14,16 +14,22 @@
 //! zero-allocation request path vs the allocate-per-request
 //! composition, with `allocs_per_request` counted by this binary's own
 //! global allocator (pooled records must report 0 — the CI gate
-//! hard-asserts it).  Emits `BENCH_native.json` (schema v6) so future
-//! PRs can track the planned-vs-legacy, parallel-vs-scalar, pyramid,
-//! simd, fusion, and pooled-throughput trajectories.
+//! hard-asserts it); and a stencil section (PR 8) timing cached vs
+//! uncached compiled-stencil convolution at 512^2 and 1024^2 under the
+//! symmetric boundary (fold-table arenas), with live
+//! `allocs_per_request` — cached records must report 0, which the CI
+//! gate also hard-asserts.  Emits `BENCH_native.json` (schema v7) so
+//! future PRs can track the planned-vs-legacy, parallel-vs-scalar,
+//! pyramid, simd, fusion, pooled-throughput, and stencil trajectories.
 //!
 //! Flags: `--quick` caps the per-case budget for CI smoke runs.
 //! `PALLAS_THREADS` pins the parallel executor's thread count.
 
 use dwt_accel::benchutil::{bench, crop_paste_pyramid_forward, default_budget, gbs, Stats, Table};
 use dwt_accel::coordinator::tiler;
-use dwt_accel::dwt::executor::{default_threads, ParallelExecutor, ScalarExecutor, SchedOpts};
+use dwt_accel::dwt::executor::{
+    default_threads, ParallelExecutor, ScalarExecutor, SchedOpts, SingleExecutor,
+};
 use dwt_accel::dwt::simd::SimdExecutor;
 use dwt_accel::dwt::{
     apply, lifting, Boundary, Engine, Image, KernelPlan, PlanExecutor, PlanVariant, Planes,
@@ -138,6 +144,21 @@ struct ThroughputRecord {
     /// `put_image`.  false: allocate-per-request composition (fresh
     /// split + execute + pack), the pre-arena request shape.
     pooled: bool,
+    requests_per_sec: f64,
+    ms_per_request: f64,
+    allocs_per_request: f64,
+}
+
+struct StencilRecord {
+    side: usize,
+    wavelet: &'static str,
+    scheme: &'static str,
+    backend: &'static str,
+    /// true: stencil kernels resolve compiled programs from the plan's
+    /// geometry cache (the default).  false: a fresh program — fold
+    /// tables, term classification — is compiled per stencil pass
+    /// (`PALLAS_STENCIL_CACHE=0`), the pre-PR-8 per-request cost.
+    cached: bool,
     requests_per_sec: f64,
     ms_per_request: f64,
     allocs_per_request: f64,
@@ -717,6 +738,72 @@ fn main() {
         );
     }
 
+    // stencil section (PR 8): cached vs uncached compiled-stencil
+    // convolution throughput.  "cached" resolves each stencil kernel's
+    // StencilProgram from the plan's geometry cache (warm pointer
+    // load); "uncached" recompiles it per pass — periodic rotations
+    // plus, under the symmetric boundary used here, the fold-table
+    // arenas, which is exactly the work PR 8 hoisted out of the request
+    // path.  allocs/req is measured live and must read 0.0 for every
+    // cached pooled record (the CI gate and rust/tests/zero_alloc.rs
+    // both pin this); the uncached rows keep the old allocation profile
+    // on display.
+    println!("\n--- stencil: cached vs uncached compiled programs (cdf97, symmetric) ---\n");
+    let st_t = Table::new(&[5, 12, 9, 8, 9, 10, 11]);
+    st_t.header(&["side", "scheme", "backend", "cached", "req/s", "ms/req", "allocs/req"]);
+    let mut stencils: Vec<StencilRecord> = Vec::new();
+    for scheme in [Scheme::SepConv, Scheme::NsConv] {
+        let sengine = Engine::with_boundary(scheme, Wavelet::cdf97(), Boundary::Symmetric);
+        for sside in [512usize, 1024] {
+            let simg = Image::synthetic(sside, sside, 11);
+            for cached in [true, false] {
+                let opts = SchedOpts {
+                    stencil_cache: cached,
+                    ..SchedOpts::default()
+                };
+                let ssimd = SingleExecutor::new(true, opts);
+                let spar = ParallelExecutor::with_opts(threads, true, opts);
+                for (bname, exec) in [
+                    ("simd", &ssimd as &dyn PlanExecutor),
+                    ("parallel+simd", &spar as &dyn PlanExecutor),
+                ] {
+                    let mut request: Box<dyn FnMut() + '_> = Box::new(|| {
+                        pool.put_image(sengine.forward_with(std::hint::black_box(&simg), exec));
+                    });
+                    let allocs = allocs_per_call(&mut *request);
+                    let s = bench(|| request(), budget, 3, 200);
+                    let rps = 1.0 / s.median.as_secs_f64();
+                    st_t.row(&[
+                        format!("{sside}"),
+                        scheme.name().into(),
+                        bname.into(),
+                        format!("{cached}"),
+                        format!("{rps:.1}"),
+                        format!("{:.3}", s.median_ms()),
+                        format!("{allocs:.1}"),
+                    ]);
+                    stencils.push(StencilRecord {
+                        side: sside,
+                        wavelet: "cdf97",
+                        scheme: scheme.name(),
+                        backend: bname,
+                        cached,
+                        requests_per_sec: rps,
+                        ms_per_request: s.median_ms(),
+                        allocs_per_request: allocs,
+                    });
+                }
+            }
+        }
+    }
+    {
+        let cs = dwt_accel::dwt::stencil_cache_stats();
+        println!(
+            "\nstencil cache: {} hits / {} misses, {} resident programs",
+            cs.hits, cs.misses, cs.resident
+        );
+    }
+
     // tiled compatibility layer vs monolithic
     let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
     let s_mono = bench(
@@ -761,17 +848,18 @@ fn main() {
         path,
         to_json(
             side, threads, quick, memcpy_gbs, &records, &larges, &pyramids, &simds, &fusions,
-            &throughputs,
+            &throughputs, &stencils,
         ),
     ) {
         Ok(()) => println!(
             "\nwrote {path} ({} scheme records, {} pyramid records, {} simd records, \
-             {} fusion records, {} throughput records)",
+             {} fusion records, {} throughput records, {} stencil records)",
             records.len(),
             pyramids.len(),
             simds.len(),
             fusions.len(),
-            throughputs.len()
+            throughputs.len(),
+            stencils.len()
         ),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
@@ -790,11 +878,12 @@ fn to_json(
     simds: &[SimdRecord],
     fusions: &[FusionRecord],
     throughputs: &[ThroughputRecord],
+    stencils: &[StencilRecord],
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"native_engine\",\n");
-    out.push_str("  \"schema\": 6,\n");
+    out.push_str("  \"schema\": 7,\n");
     out.push_str(&format!("  \"side\": {side},\n"));
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"quick\": {quick},\n"));
@@ -907,6 +996,24 @@ fn to_json(
             r.ms_per_request,
             r.allocs_per_request,
             if i + 1 == throughputs.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"stencil\": [\n");
+    for (i, r) in stencils.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"side\": {}, \"wavelet\": \"{}\", \"scheme\": \"{}\", \
+             \"backend\": \"{}\", \"cached\": {}, \"requests_per_sec\": {:.2}, \
+             \"ms_per_request\": {:.4}, \"allocs_per_request\": {:.2}}}{}\n",
+            r.side,
+            r.wavelet,
+            r.scheme,
+            r.backend,
+            r.cached,
+            r.requests_per_sec,
+            r.ms_per_request,
+            r.allocs_per_request,
+            if i + 1 == stencils.len() { "" } else { "," }
         ));
     }
     out.push_str("  ]\n}\n");

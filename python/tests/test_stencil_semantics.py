@@ -1,0 +1,291 @@
+"""Compiled stencil-program semantics, validated against the oracle.
+
+Mirrors PR 8's Rust `dwt::plan::StencilProgram` in numpy: lowering a
+`Stencil` kernel once per geometry into a compiled program — periodic
+terms become resolved rotations, symmetric terms become offsets into
+one shared fold-table arena deduplicated by `(offset, parity)`, each
+term carrying its precomputed x-interior `[lo, hi)` span — and the
+program-driven executor (`apply::run_stencil_program_rows`) that a warm
+convolution request resolves by pointer load.  Asserts
+
+* the compiled program reproduces the fresh per-pass table build
+  (`test_simd_semantics.stencil32`) BIT FOR BIT — compilation moves the
+  fold arithmetic to plan time without touching per-element op order,
+* a program built on a NaN-poisoned arena (the dirty `WorkspacePool`
+  checkout: `take_idx` hands back uncleared storage) overwrites every
+  entry it uses — cached tables never leak stale pool contents,
+* the fold tables, rotation shifts, dedup sharing, and x-interior
+  spans are exactly the pinned values the Rust
+  `plan::tests::compiled_programs_pin_rotations_tables_and_interiors`
+  asserts, so the two implementations pin each other,
+* cached (program reused across requests) equals uncached (rebuilt per
+  pass) bit for bit for every convolution scheme, both boundary modes,
+  and the awkward widths 34 / 66 / 258 — the `PALLAS_STENCIL_CACHE=0`
+  escape hatch is purely a performance switch.
+
+The Rust test suite asserts the same invariants on the real
+implementation; this file guards the *algorithm* from a second,
+independent implementation so the two cannot drift silently (there is
+no Rust toolchain in the authoring container — this is the executable
+check).
+"""
+
+import numpy as np
+import pytest
+
+import test_executor_semantics as ex
+import test_simd_semantics as sd
+from compile import schemes
+from compile import wavelets as wv
+
+F32 = np.float32
+LANES = sd.LANES
+CONV_SCHEMES = ("sep_conv", "sep_polyconv", "ns_conv", "ns_polyconv")
+
+# ----------------------------------------------------- program compile
+
+
+def compile_program(rows_terms, w2, h2, boundary, arena=None):
+    """Twin of `StencilProgram::compile`.
+
+    Periodic: every term's fold is a rotation, so the program stores the
+    resolved nonnegative shifts `(km mod w2, kn mod h2)` — no tables.
+
+    Symmetric: gather the distinct `(offset, parity)` keys across ALL
+    terms of the kernel (x keys and y keys separately), build one fold
+    table per key into a single shared arena (x tables first, then
+    full-height y tables, exactly the Rust `tables: Vec<u32>` layout on
+    the pool's `take_idx` storage), and store per term only the two
+    arena offsets plus the x-interior `[lo, hi)` span.  Terms whose
+    `(offset, parity)` coincide share one table — the dedup the Rust
+    side pins with pointer equality.
+    """
+    if boundary == "periodic":
+        terms = [
+            [(j, F32(c), km % w2, kn % h2) for (j, km, kn, c) in rows_terms[i]]
+            for i in range(4)
+        ]
+        return {"boundary": boundary, "w2": w2, "h2": h2, "terms": terms,
+                "tables": np.zeros(0, dtype=np.float64), "nx": 0, "ny": 0}
+    xkeys, ykeys = [], []
+    for i in range(4):
+        for (j, km, kn, _c) in rows_terms[i]:
+            xk = (km, ex.plane_is_odd(j, "h"))
+            yk = (kn, ex.plane_is_odd(j, "v"))
+            if xk not in xkeys:
+                xkeys.append(xk)
+            if yk not in ykeys:
+                ykeys.append(yk)
+    need = len(xkeys) * w2 + len(ykeys) * h2
+    if arena is None:
+        arena = np.empty(need, dtype=np.float64)
+    tables = arena[:need]
+    for t, (km, odd) in enumerate(xkeys):
+        tables[t * w2:(t + 1) * w2] = [
+            ex.fold_sym(x + km, w2, odd) for x in range(w2)
+        ]
+    ybase = len(xkeys) * w2
+    for t, (kn, odd) in enumerate(ykeys):
+        tables[ybase + t * h2:ybase + (t + 1) * h2] = [
+            ex.fold_sym(y + kn, h2, odd) for y in range(h2)
+        ]
+    terms = []
+    for i in range(4):
+        row = []
+        for (j, km, kn, c) in rows_terms[i]:
+            xo = xkeys.index((km, ex.plane_is_odd(j, "h"))) * w2
+            yo = ybase + ykeys.index((kn, ex.plane_is_odd(j, "v"))) * h2
+            lo, hi = sd.x_interior(km, w2)
+            row.append((j, F32(c), xo, yo, lo, hi))
+        terms.append(row)
+    return {"boundary": boundary, "w2": w2, "h2": h2, "terms": terms,
+            "tables": tables, "nx": len(xkeys), "ny": len(ykeys)}
+
+
+def run_program(prog, planes, lanes):
+    """Twin of `apply::run_stencil_program_rows` over all rows: the warm
+    request body — zero fold arithmetic, everything indexed off the
+    compiled program, same per-element op order as the fresh build."""
+    w2, h2 = prog["w2"], prog["h2"]
+    out = []
+    if prog["boundary"] == "periodic":
+        for i in range(4):
+            o = np.zeros((h2, w2), dtype=F32)
+            for y in range(h2):
+                drow = o[y]
+                for (j, c, sc, sr) in prog["terms"][i]:
+                    srow = planes[j][(y + sr) % h2]
+                    head = w2 - sc
+                    sd._add_run(drow, 0, head, srow[sc:], c, lanes)
+                    sd._add_run(drow, head, w2, srow[:sc], c, lanes)
+            out.append(o)
+        return out
+    tables = prog["tables"]
+    for i in range(4):
+        o = np.zeros((h2, w2), dtype=F32)
+        for y in range(h2):
+            drow = o[y]
+            for (j, c, xo, yo, lo, hi) in prog["terms"][i]:
+                srow = planes[j][int(tables[yo + y])]
+                for x in list(range(lo)) + list(range(hi, w2)):
+                    drow[x] = F32(drow[x] + F32(c * srow[int(tables[xo + x])]))
+                if lo < hi:
+                    off = int(tables[xo + lo])
+                    sd._add_run(drow, lo, hi, srow[off:off + hi - lo], c, lanes)
+        out.append(o)
+    return out
+
+
+def exec_programs(plan, planes, boundary, lanes, cache):
+    """Twin of `executor::execute_scheduled`'s stencil arm with the
+    geometry cache on: stencil kernels resolve through `cache` (keyed
+    like the Rust `ProgKey` on kernel identity + geometry), so a second
+    request with the same `cache` re-runs the SAME program objects."""
+    planes = [p.astype(F32) for p in planes]
+    for gi, group in enumerate(plan):
+        for ki, k in enumerate(group):
+            if k[0] == "lift":
+                _, dst, src, axis, taps = k
+                src_odd = ex.plane_is_odd(src, axis)
+                if axis == "h":
+                    sd.lift_rows_h32(planes[dst], planes[src], taps,
+                                     boundary, src_odd, lanes)
+                else:
+                    sd.lift_rows_v32(planes[dst], planes[src], taps,
+                                     boundary, src_odd, lanes)
+            elif k[0] == "scale":
+                for c, f in enumerate(k[1]):
+                    if abs(f - 1.0) > 1e-12:
+                        planes[c] *= F32(f)
+            else:
+                h2, w2 = planes[0].shape
+                key = (gi, ki, w2, h2)
+                if key not in cache:
+                    cache[key] = compile_program(k[1], w2, h2, boundary)
+                planes = run_program(cache[key], planes, lanes)
+    return planes
+
+
+# --------------------------------------------------------------- tests
+
+# the hand-built kernel the Rust pin test uses: terms crossing planes,
+# parities, and both axes, with a shareable (km = -1, even) x key
+PIN_ROWS = [
+    [(0, -1, 3, 2.0), (1, -1, 0, 0.5)],
+    [(2, -1, 3, 1.0)],
+    [(0, 2, 0, 1.0)],
+    [],
+]
+
+
+def test_periodic_programs_pin_resolved_rotations():
+    prog = compile_program(PIN_ROWS, 8, 5, "periodic")
+    assert prog["tables"].size == 0, "periodic programs carry no tables"
+    t00, t01 = prog["terms"][0]
+    assert (t00[2], t00[3]) == (7, 3), "km=-1 -> shift 7 mod 8, kn=3 -> 3"
+    assert (t01[2], t01[3]) == (7, 0)
+    (t20,) = prog["terms"][2]
+    assert (t20[2], t20[3]) == (2, 0)
+
+
+def test_symmetric_programs_pin_tables_sharing_and_interiors():
+    """The exact pins of the Rust
+    `compiled_programs_pin_rotations_tables_and_interiors` test, from
+    the independent implementation."""
+    w2, h2 = 8, 5
+    prog = compile_program(PIN_ROWS, w2, h2, "symmetric")
+    # dedup: x keys {(-1,even),(-1,odd),(2,even)}, y keys
+    # {(3,even),(0,even),(3,odd)} -> 3 tables each, one shared arena
+    assert (prog["nx"], prog["ny"]) == (3, 3)
+    assert prog["tables"].shape == (3 * w2 + 3 * h2,)
+    tab = prog["tables"]
+    t00, t01 = prog["terms"][0]
+    (t10,) = prog["terms"][1]
+    (t20,) = prog["terms"][2]
+    # x-interior spans: km=-1 folds only x=0; km=2 folds the last two
+    assert (t00[4], t00[5]) == (1, 8)
+    assert (t20[4], t20[5]) == (0, 6)
+    # fold tables, value for value
+    xi = lambda t: list(tab[t[2]:t[2] + w2].astype(int))
+    yi = lambda t: list(tab[t[3]:t[3] + h2].astype(int))
+    assert xi(t00) == [1, 0, 1, 2, 3, 4, 5, 6]
+    assert xi(t20) == [2, 3, 4, 5, 6, 7, 7, 6]
+    assert xi(t01)[0] == 0, "odd parity: fold_sym(-1, 8, odd) == 0"
+    # plane 2 is h-even like plane 0, same km -> the terms SHARE a table
+    assert t10[2] == t00[2]
+    # y tables are full-height (absolute row indexed — bands share one
+    # program), and plane parity splits them: j=0 is v-even, j=2 v-odd
+    assert yi(t00) == [3, 4, 4, 3, 2]
+    assert yi(t10) == [3, 4, 3, 2, 1]
+    # on the interior every fold is the identity — the acc_run premise
+    for t, km in [(t00, -1), (t01, -1), (t20, 2)]:
+        for x in range(t[4], t[5]):
+            assert tab[t[2] + x] == x + km
+
+
+def test_nan_poisoned_arena_is_fully_overwritten():
+    """The pool hands back dirty storage (`take_idx` does not clear).
+    Compile onto a NaN-poisoned arena and demand (a) every entry the
+    program uses was overwritten and (b) execution equals a fresh
+    pristine-arena build bit for bit — cached tables cannot leak stale
+    pool contents."""
+    rng = np.random.RandomState(21)
+    planes = [rng.rand(5, 8).astype(F32) for _ in range(4)]
+    fresh = compile_program(PIN_ROWS, 8, 5, "symmetric")
+    poisoned = np.full(fresh["tables"].size + 32, np.nan)  # oversized checkout
+    prog = compile_program(PIN_ROWS, 8, 5, "symmetric", arena=poisoned)
+    assert not np.isnan(prog["tables"]).any(), "stale pool entry survived"
+    assert np.isnan(poisoned[prog["tables"].size:]).all(), \
+        "compile wrote past the table region it claimed"
+    a = run_program(prog, planes, LANES)
+    b = run_program(fresh, planes, LANES)
+    assert all(np.array_equal(x, y) for x, y in zip(a, b))
+
+
+@pytest.mark.parametrize("size", [(34, 70), (66, 34), (258, 18)])
+@pytest.mark.parametrize("boundary", ["periodic", "symmetric"])
+def test_cached_is_bit_exact_with_uncached(boundary, size):
+    """The tentpole claim: for every convolution scheme, the compiled
+    program (built once, reused warm) computes bit-identical output to
+    the fresh per-pass table build, at widths leaving every lane-group
+    remainder (w2 = 17, 33, 129).  `PALLAS_STENCIL_CACHE=0` can never
+    change a coefficient."""
+    w = wv.get("cdf97")
+    W, H = size
+    p32 = sd.split32(ex.img_of(W, H, 20))
+    for scheme in CONV_SCHEMES:
+        for chain in (schemes.build(scheme, w), schemes.build_inverse(scheme, w)):
+            plan = ex.compile_plan(chain)
+            assert any(k[0] == "stencil" for g in plan for k in g), \
+                f"{scheme} lowered without stencils — nothing under test"
+            uncached = sd.exec32(plan, p32, boundary, LANES)
+            cache = {}
+            cold = exec_programs(plan, p32, boundary, LANES, cache)
+            assert cache, "program cache never filled"
+            warm = exec_programs(plan, p32, boundary, LANES, cache)
+            for a, b, c in zip(uncached, cold, warm):
+                assert np.array_equal(a, b), \
+                    f"{scheme} {boundary} {W}x{H}: compiled != fresh build"
+                assert np.array_equal(b, c), \
+                    f"{scheme} {boundary} {W}x{H}: warm request drifted"
+
+
+def test_programs_cache_per_geometry():
+    """Distinct geometries compile distinct programs; re-running the
+    same geometry resolves the same object (the Rust test pins this
+    with pointer equality on the plan's `OnceLock` slots)."""
+    w = wv.get("cdf97")
+    plan = ex.compile_plan(schemes.build("ns_conv", w))
+    cache = {}
+    exec_programs(plan, sd.split32(ex.img_of(34, 24, 22)), "symmetric",
+                  LANES, cache)
+    n1 = len(cache)
+    assert n1 >= 1
+    progs1 = dict(cache)
+    exec_programs(plan, sd.split32(ex.img_of(34, 24, 23)), "symmetric",
+                  LANES, cache)
+    assert len(cache) == n1, "warm geometry recompiled"
+    assert all(cache[k] is progs1[k] for k in progs1), "program identity lost"
+    exec_programs(plan, sd.split32(ex.img_of(66, 34, 24)), "symmetric",
+                  LANES, cache)
+    assert len(cache) == 2 * n1, "new geometry must compile new programs"

@@ -82,6 +82,15 @@ pub struct Summary {
     pub pool_hit_rate: f64,
     /// Buffers currently parked on the arena's free lists.
     pub pool_resident: u64,
+    /// Stencil-program resolutions served by a plan's geometry cache —
+    /// warm pointer loads ([`crate::dwt::stencil_cache_stats`];
+    /// process-wide, like the pool counters).
+    pub stencil_cache_hits: u64,
+    /// Stencil-program compilations: cache fills, cache-off builds
+    /// (`PALLAS_STENCIL_CACHE=0`), and full-table fallbacks.
+    pub stencil_cache_misses: u64,
+    /// Compiled programs currently parked in plan geometry caches.
+    pub stencil_cache_resident: u64,
 }
 
 impl Metrics {
@@ -129,6 +138,7 @@ impl Metrics {
         // pool is process-global, so these reflect all engines in the
         // process, not just this coordinator's requests
         let pool = crate::dwt::WorkspacePool::global().stats();
+        let stencil = crate::dwt::stencil_cache_stats();
         let g = self.inner.lock().unwrap();
         let mut lat = g.latencies_us.clone();
         lat.sort_unstable();
@@ -164,6 +174,9 @@ impl Metrics {
             pool_misses: pool.misses,
             pool_hit_rate: pool.hit_rate(),
             pool_resident: pool.resident,
+            stencil_cache_hits: stencil.hits,
+            stencil_cache_misses: stencil.misses,
+            stencil_cache_resident: stencil.resident,
         }
     }
 }
@@ -226,6 +239,40 @@ mod tests {
         let s = Metrics::new().summary();
         assert!(s.pool_hits + s.pool_misses >= 1);
         assert!((0.0..=1.0).contains(&s.pool_hit_rate));
+    }
+
+    #[test]
+    fn summary_carries_stencil_cache_counters() {
+        // drive one cached and one uncached resolution so the counters
+        // are live; they are process-global and shared with concurrent
+        // tests, so only monotone facts are assertable
+        use crate::dwt::{Boundary, KernelPlan};
+        use crate::polyphase::{schemes, schemes::Scheme, wavelets::Wavelet};
+        let plan = KernelPlan::from_steps(
+            &schemes::build(Scheme::NsConv, &Wavelet::cdf97()),
+            Boundary::Symmetric,
+        );
+        let r = plan
+            .steps
+            .iter()
+            .enumerate()
+            .find_map(|(si, st)| {
+                st.kernels
+                    .iter()
+                    .position(|k| matches!(k, crate::dwt::plan::Kernel::Stencil(_)))
+                    .map(|ki| (si, ki))
+            })
+            .expect("conv plan has a stencil");
+        let _ = plan.stencil_program(r, 10, 6, true);
+        let _ = plan.stencil_program(r, 10, 6, true);
+        let _ = plan.stencil_program(r, 10, 6, false);
+        let s = Metrics::new().summary();
+        assert!(s.stencil_cache_hits >= 1);
+        assert!(s.stencil_cache_misses >= 2);
+        assert!(s.stencil_cache_resident >= 1, "plan still holds its program");
+        drop(plan);
+        let after = Metrics::new().summary();
+        assert!(after.stencil_cache_hits >= s.stencil_cache_hits);
     }
 
     #[test]

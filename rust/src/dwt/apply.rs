@@ -1,21 +1,33 @@
 //! The plan's stencil executor, plus the legacy generic step evaluator.
 //!
-//! [`run_stencil`] executes one fused [`Stencil`] kernel of a
-//! [`crate::dwt::plan::KernelPlan`] into a caller-provided buffer
-//! (double-buffering: no per-step allocation), with either periodic or
-//! whole-sample symmetric indexing.
+//! Since PR 8 the stencil inner loop executes a compiled
+//! [`StencilProgram`] — the [`Stencil`] kernel's term list resolved
+//! once against a concrete plane geometry (periodic rotations, or
+//! symmetric fold tables + per-term x-interior seams; see
+//! `plan::StencilProgram`).  [`run_stencil_program`] /
+//! [`run_stencil_program_rows`] read everything by field or slice load
+//! and perform **no** per-pass table builds; with the plan's geometry
+//! cache warm, a convolution request is allocation-free.
+//!
+//! [`run_stencil`]/[`run_stencil_rows`] remain as compile-and-run
+//! wrappers (one fresh program per call) — the uncached reference path
+//! and the pre-PR-8 public entry points.
 //!
 //! [`apply_step`]/[`apply_chain`] are the original matrix-walking
 //! evaluator — the numeric twin of `ref.apply_step` in the Python
 //! oracle — retained as the reference/legacy path the benches compare
 //! the compiled plans against.
 
-use super::lifting::{Axis, Boundary};
-use super::plan::{fold_sym, plane_is_odd, Stencil};
+use super::lifting::Boundary;
+use super::plan::{Stencil, StencilProgram};
 use super::planes::Planes;
 use crate::polyphase::{Poly, PolyMatrix};
 
 /// Execute one fused stencil kernel: `out` is fully overwritten.
+/// Compiles a throwaway [`StencilProgram`] — callers on the steady
+/// state resolve a cached program via
+/// [`crate::dwt::plan::KernelPlan::stencil_program`] and call
+/// [`run_stencil_program`] instead.
 pub fn run_stencil(st: &Stencil, inp: &Planes, out: &mut Planes, boundary: Boundary) {
     run_stencil_ex(st, inp, out, boundary, false)
 }
@@ -28,6 +40,23 @@ pub fn run_stencil_ex(
     boundary: Boundary,
     vector: bool,
 ) {
+    let prog = StencilProgram::compile(st, inp.w2, inp.h2, boundary);
+    run_stencil_program(&prog, inp, out, vector);
+}
+
+// The accumulation statement of both stencil bodies is
+// `vecn::axpy_opt` — the shared scalar-vs-lane-group dispatch, so the
+// per-element mul-then-add cannot drift from the lift kernels'.
+use super::vecn::axpy_opt as acc_run;
+
+/// Execute a compiled stencil program: `out`'s active region is fully
+/// overwritten.
+pub fn run_stencil_program(
+    prog: &StencilProgram,
+    inp: &Planes,
+    out: &mut Planes,
+    vector: bool,
+) {
     debug_assert!(inp.w2 == out.w2 && inp.h2 == out.h2 && inp.stride == out.stride);
     let h2 = inp.h2;
     let [o0, o1, o2, o3] = &mut out.p;
@@ -37,22 +66,11 @@ pub fn run_stencil_ex(
         o2.as_mut_slice(),
         o3.as_mut_slice(),
     ];
-    run_stencil_rows_ex(st, inp, &mut rows, 0, h2, boundary, vector);
+    run_stencil_program_rows(prog, inp, &mut rows, 0, h2, vector);
 }
 
-// The accumulation statement of both stencil executors is
-// `vecn::axpy_opt` — the shared scalar-vs-lane-group dispatch, so the
-// per-element mul-then-add cannot drift from the lift kernels'.
-use super::vecn::axpy_opt as acc_run;
-
-/// [`run_stencil`] restricted to output rows `y0..y1`: `out[i]` is the
-/// band of plane `i` covering exactly those rows (`(y1 - y0) * stride`
-/// samples, laid out at the *input's* row stride — `inp.stride == w2`
-/// for plain planes, the level-0 stride for pyramid level views).
-/// Reads still range over the whole input planes — the vertical shifts
-/// of a fused stencil are the halo a band-parallel executor owes this
-/// kernel.  The full-plane [`run_stencil`] delegates here, so banded
-/// and monolithic execution are bit-exact.
+/// [`run_stencil`] restricted to output rows `y0..y1` (compile-and-run
+/// wrapper over [`run_stencil_program_rows`]).
 pub fn run_stencil_rows(
     st: &Stencil,
     inp: &Planes,
@@ -64,10 +82,7 @@ pub fn run_stencil_rows(
     run_stencil_rows_ex(st, inp, out, y0, y1, boundary, false)
 }
 
-/// [`run_stencil_rows`] with the `vector` interior-body switch: the
-/// unit-stride accumulation runs of every term stream whole lane-group
-/// column runs ([`vecn::axpy`]); the wrap/fold columns at row edges
-/// stay scalar.  Bit-exact with the scalar body by construction.
+/// [`run_stencil_rows`] with the `vector` interior-body switch.
 pub fn run_stencil_rows_ex(
     st: &Stencil,
     inp: &Planes,
@@ -77,22 +92,51 @@ pub fn run_stencil_rows_ex(
     boundary: Boundary,
     vector: bool,
 ) {
-    match boundary {
-        Boundary::Periodic => run_stencil_periodic(st, inp, out, y0, y1, vector),
-        Boundary::Symmetric => run_stencil_symmetric(st, inp, out, y0, y1, vector),
-    }
+    let prog = StencilProgram::compile(st, inp.w2, inp.h2, boundary);
+    run_stencil_program_rows(&prog, inp, out, y0, y1, vector);
 }
 
-/// Periodic fused stencil: row-blocked accumulation (every term of an
-/// output row is applied while the row is hot in L1), shifts resolved
-/// once per plane.
+/// The stencil inner loop, restricted to output rows `y0..y1`:
+/// `out[i]` is the band of plane `i` covering exactly those rows
+/// (`(y1 - y0) * stride` samples, laid out at the *input's* row stride
+/// — `inp.stride == w2` for plain planes, the level-0 stride for
+/// pyramid level views).  Reads still range over the whole input
+/// planes — the vertical shifts of a fused stencil are the halo a
+/// band-parallel executor owes this kernel; the program's y fold
+/// tables are full-height and indexed by absolute row, so every band
+/// shares one program with no per-band rebuild.  The full-plane
+/// [`run_stencil_program`] delegates here, so banded and monolithic
+/// execution are bit-exact.
+///
+/// With `vector` set, the unit-stride accumulation runs of every term
+/// stream whole lane-group column runs ([`super::vecn::axpy`]); the
+/// wrap/fold columns at row edges stay scalar.  Bit-exact with the
+/// scalar body by construction.
 ///
 /// Deliberately mirrors [`apply_step`]'s indexing rather than sharing
 /// code with it: `apply_step` is the independent reference the
 /// plan-vs-legacy equivalence tests compare against, so the two bodies
 /// must stay in numerical lockstep but not in implementation.
-fn run_stencil_periodic(
-    st: &Stencil,
+pub fn run_stencil_program_rows(
+    prog: &StencilProgram,
+    inp: &Planes,
+    out: &mut [&mut [f32]; 4],
+    y0: usize,
+    y1: usize,
+    vector: bool,
+) {
+    debug_assert!(prog.w2 == inp.w2 && prog.h2 == inp.h2);
+    match prog.boundary {
+        Boundary::Periodic => run_program_periodic(prog, inp, out, y0, y1, vector),
+        Boundary::Symmetric => run_program_symmetric(prog, inp, out, y0, y1, vector),
+    }
+}
+
+/// Periodic fused stencil: row-blocked accumulation (every term of an
+/// output row is applied while the row is hot in L1), rotations read
+/// straight off the program.
+fn run_program_periodic(
+    prog: &StencilProgram,
     inp: &Planes,
     out: &mut [&mut [f32]; 4],
     y0: usize,
@@ -101,18 +145,7 @@ fn run_stencil_periodic(
 ) {
     let (w2, h2, stride) = (inp.w2, inp.h2, inp.stride);
     for i in 0..4 {
-        // resolve the plan's raw offsets against this plane size
-        let terms: Vec<(usize, usize, usize, f32)> = st.rows[i]
-            .iter()
-            .map(|&(j, km, kn, c)| {
-                (
-                    j,
-                    km.rem_euclid(w2 as i32) as usize,
-                    kn.rem_euclid(h2 as i32) as usize,
-                    c,
-                )
-            })
-            .collect();
+        let terms = prog.terms(i);
         let plane = &mut *out[i];
         for y in y0..y1 {
             let dst_row = (y - y0) * stride;
@@ -121,19 +154,19 @@ fn run_stencil_periodic(
             // keeps level-0 geometry, and deep levels must not pay a
             // full-buffer memset per stencil step
             dst.fill(0.0);
-            for &(j, shift_col, shift_row, c) in &terms {
-                let sy = (y + shift_row) % h2;
-                let src = &inp.p[j][sy * stride..sy * stride + w2];
-                if shift_col == 0 {
-                    acc_run(dst, src, c, vector);
+            for t in terms {
+                let sy = (y + t.shift_row) % h2;
+                let src = &inp.p[t.src][sy * stride..sy * stride + w2];
+                if t.shift_col == 0 {
+                    acc_run(dst, src, t.c, vector);
                 } else {
                     // split at the wrap point: both halves are
                     // unit-stride runs
-                    let head = w2 - shift_col;
-                    let (s_hi, s_lo) = (&src[shift_col..], &src[..shift_col]);
+                    let head = w2 - t.shift_col;
+                    let (s_hi, s_lo) = (&src[t.shift_col..], &src[..t.shift_col]);
                     let (d_hi, d_lo) = dst.split_at_mut(head);
-                    acc_run(d_hi, s_hi, c, vector);
-                    acc_run(d_lo, s_lo, c, vector);
+                    acc_run(d_hi, s_hi, t.c, vector);
+                    acc_run(d_lo, s_lo, t.c, vector);
                 }
             }
         }
@@ -141,66 +174,44 @@ fn run_stencil_periodic(
 }
 
 /// Symmetric fused stencil: every read is folded per the source plane's
-/// parity (whole-sample symmetric extension of the interleaved signal).
-/// Fold indices are tabulated once per term — O(terms * (w + h)) fold
-/// evaluations — and accumulation is row-blocked like the periodic
-/// executor, so each output row takes all terms while hot in L1.
-fn run_stencil_symmetric(
-    st: &Stencil,
+/// parity (whole-sample symmetric extension of the interleaved signal),
+/// through the program's precompiled fold tables.  Accumulation is
+/// row-blocked like the periodic body, and each term splits on its
+/// precompiled x-interior: folded scalar edges, one unit-stride
+/// lane-group run inside the seam.
+fn run_program_symmetric(
+    prog: &StencilProgram,
     inp: &Planes,
     out: &mut [&mut [f32]; 4],
     y0: usize,
     y1: usize,
     vector: bool,
 ) {
-    let (w2, h2, stride) = (inp.w2, inp.h2, inp.stride);
-    // the term's x-interior: the span where the fold is the identity
-    // (`xi[x] == x + km`), so the read is a unit-stride run — the same
-    // interior/tail seam the lift kernels split on
-    let x_interior = |km: i32| -> (usize, usize) {
-        let lo = (-(km as i64)).clamp(0, w2 as i64) as usize;
-        let hi = (w2 as i64 - (km as i64).max(0)).clamp(lo as i64, w2 as i64) as usize;
-        (lo, hi)
-    };
-    // (src plane, x fold table, x interior, y fold table per band row,
-    // coeff)
-    type Term = (usize, Vec<usize>, (usize, usize), Vec<usize>, f32);
+    let (w2, stride) = (inp.w2, inp.stride);
     for i in 0..4 {
-        let terms: Vec<Term> = st.rows[i]
-            .iter()
-            .map(|&(j, km, kn, c)| {
-                let hodd = plane_is_odd(j, Axis::Horizontal);
-                let vodd = plane_is_odd(j, Axis::Vertical);
-                let xi = (0..w2)
-                    .map(|x| fold_sym(x as i64 + km as i64, w2 as i64, hodd))
-                    .collect();
-                let yi = (y0..y1)
-                    .map(|y| fold_sym(y as i64 + kn as i64, h2 as i64, vodd))
-                    .collect();
-                (j, xi, x_interior(km), yi, c)
-            })
-            .collect();
+        let terms = prog.terms(i);
         let plane = &mut *out[i];
         for y in y0..y1 {
             let dst_row = (y - y0) * stride;
             let drow = &mut plane[dst_row..dst_row + w2];
             drow.fill(0.0);
-            for (j, xi, (lo, hi), yi, c) in &terms {
-                let (lo, hi) = (*lo, *hi);
-                let sy = yi[y - y0];
-                let srow = &inp.p[*j][sy * stride..sy * stride + w2];
+            for t in terms {
+                let (lo, hi, c) = (t.lo, t.hi, t.c);
+                let xi = prog.xi(t);
+                let sy = prog.yi(t)[y] as usize;
+                let srow = &inp.p[t.src][sy * stride..sy * stride + w2];
                 // folded left edge, unit-stride interior, folded right
                 // edge — per-element ops identical to one full folded
                 // sweep, since the fold is the identity on the interior
                 for x in 0..lo {
-                    drow[x] += *c * srow[xi[x]];
+                    drow[x] += c * srow[xi[x] as usize];
                 }
                 if lo < hi {
-                    let off = xi[lo]; // == lo + km
-                    acc_run(&mut drow[lo..hi], &srow[off..off + (hi - lo)], *c, vector);
+                    let off = xi[lo] as usize; // == lo + km
+                    acc_run(&mut drow[lo..hi], &srow[off..off + (hi - lo)], c, vector);
                 }
                 for x in hi..w2 {
-                    drow[x] += *c * srow[xi[x]];
+                    drow[x] += c * srow[xi[x] as usize];
                 }
             }
         }

@@ -31,7 +31,7 @@
 //! and panelling decide *when* a kernel body runs, never *what* it
 //! computes — all backends drive the same row-range kernel bodies
 //! ([`lifting::lift_rows_h`] / [`lifting::lift_rows_v`] /
-//! [`apply::run_stencil_rows`]), so their outputs are bit-exact — not
+//! [`apply::run_stencil_program_rows`]), so their outputs are bit-exact — not
 //! merely close — across {scalar, simd, parallel, parallel+simd} x
 //! {fused, unfused}, for every scheme and both boundary modes
 //! (asserted by the tests below and the numpy twin).
@@ -44,8 +44,8 @@ use super::apply;
 use super::knobs;
 use super::lifting::{self, taps_reach, Axis, Boundary};
 use super::plan::{
-    ensure_scratch, plane_is_odd, written_planes, FusedPhase, Kernel, KernelPlan, KernelRef,
-    Stencil,
+    default_stencil_cache, ensure_scratch, plane_is_odd, written_planes, FusedPhase, Kernel,
+    KernelPlan, KernelRef, StencilProgram,
 };
 use super::planes::{Image, Planes};
 use super::pyramid::{self, PyramidPlan};
@@ -189,6 +189,12 @@ pub struct SchedOpts {
     /// Rows per panel inside a phase; `0` picks a height that keeps a
     /// panel's working set L2-resident ([`resolve_panel_rows`]).
     pub panel_rows: usize,
+    /// Resolve stencil kernels through the plan's compiled-program
+    /// geometry cache ([`KernelPlan::stencil_program`]).  Off forces a
+    /// fresh per-pass program build — the uncached reference path the
+    /// benches and bit-exactness tests compare against.  Defaults to
+    /// the `PALLAS_STENCIL_CACHE` knob (on).
+    pub stencil_cache: bool,
 }
 
 impl Default for SchedOpts {
@@ -196,6 +202,7 @@ impl Default for SchedOpts {
         Self {
             fuse: default_fuse(),
             panel_rows: 0,
+            stencil_cache: default_stencil_cache(),
         }
     }
 }
@@ -205,7 +212,7 @@ impl SchedOpts {
     pub fn unfused() -> Self {
         Self {
             fuse: false,
-            panel_rows: 0,
+            ..Self::default()
         }
     }
 }
@@ -240,11 +247,10 @@ pub(crate) fn execute_scheduled(
                 run_phase_single(plan, ks, planes, vector, opts.panel_rows)
             }
             FusedPhase::Stencil(r) => {
-                let Kernel::Stencil(st) = plan.kernel(*r) else {
-                    unreachable!("stencil phase refs a stencil kernel")
-                };
+                let prog =
+                    plan.stencil_program(*r, planes.w2, planes.h2, opts.stencil_cache);
                 let out = ensure_scratch(planes, scratch);
-                apply::run_stencil_ex(st, planes, out, plan.boundary, vector);
+                apply::run_stencil_program(&prog, planes, out, vector);
                 std::mem::swap(planes, out);
             }
         }
@@ -590,14 +596,17 @@ impl ParallelExecutor {
     }
 
     /// Run one stencil phase band-parallel into the scratch planes
-    /// (the caller swaps afterwards).
+    /// (the caller swaps afterwards).  Takes the kernel's *compiled*
+    /// program — resolved once (cache hit on the warm path) before the
+    /// fan-out, then shared read-only by every band: the program's y
+    /// fold tables are full-height and indexed by absolute row, so no
+    /// band rebuilds anything.
     fn run_stencil_phase(
         &self,
-        st: &Stencil,
+        prog: &StencilProgram,
         inp: &Planes,
         out: &mut Planes,
         nbands: usize,
-        boundary: Boundary,
     ) {
         let (stride, h2) = (inp.stride, inp.h2);
         let base: [SendMut; 4] = std::array::from_fn(|i| SendMut(out.p[i].as_mut_ptr()));
@@ -613,8 +622,8 @@ impl ParallelExecutor {
                     range.len() * stride,
                 )
             });
-            apply::run_stencil_rows_ex(
-                st, inp, &mut chunk, range.start, range.end, boundary, vector,
+            apply::run_stencil_program_rows(
+                prog, inp, &mut chunk, range.start, range.end, vector,
             );
         });
     }
@@ -656,11 +665,14 @@ impl PlanExecutor for ParallelExecutor {
             match phase {
                 FusedPhase::InPlace(ks) => self.run_inplace_phase(plan, ks, planes, nbands),
                 FusedPhase::Stencil(r) => {
-                    let Kernel::Stencil(st) = plan.kernel(*r) else {
-                        unreachable!("stencil phase refs a stencil kernel")
-                    };
+                    let prog = plan.stencil_program(
+                        *r,
+                        planes.w2,
+                        planes.h2,
+                        self.opts.stencil_cache,
+                    );
                     let out = ensure_scratch(planes, scratch);
-                    self.run_stencil_phase(st, planes, out, nbands, plan.boundary);
+                    self.run_stencil_phase(&prog, planes, out, nbands);
                     std::mem::swap(planes, out);
                 }
             }
@@ -937,6 +949,7 @@ mod tests {
                 Box::new(SingleExecutor::new(false, SchedOpts {
                     fuse: true,
                     panel_rows: 0,
+                    ..SchedOpts::default()
                 })),
             ),
             (
@@ -944,6 +957,7 @@ mod tests {
                 Box::new(SingleExecutor::new(true, SchedOpts {
                     fuse: true,
                     panel_rows: 0,
+                    ..SchedOpts::default()
                 })),
             ),
             (
@@ -951,6 +965,7 @@ mod tests {
                 Box::new(ParallelExecutor::with_opts(4, false, SchedOpts {
                     fuse: true,
                     panel_rows: 0,
+                    ..SchedOpts::default()
                 })),
             ),
             (
@@ -958,6 +973,7 @@ mod tests {
                 Box::new(ParallelExecutor::with_opts(3, true, SchedOpts {
                     fuse: true,
                     panel_rows: 5,
+                    ..SchedOpts::default()
                 })),
             ),
             (
@@ -1009,10 +1025,12 @@ mod tests {
                 let fused = ParallelExecutor::with_opts(24, false, SchedOpts {
                     fuse: true,
                     panel_rows,
+                    ..SchedOpts::default()
                 });
                 let unfused = ParallelExecutor::with_opts(24, false, SchedOpts {
                     fuse: false,
                     panel_rows,
+                    ..SchedOpts::default()
                 });
                 for wav in [Wavelet::cdf97(), Wavelet::haar()] {
                     for s in Scheme::ALL {
@@ -1042,6 +1060,7 @@ mod tests {
         let par = ParallelExecutor::with_opts(4, true, SchedOpts {
             fuse: true,
             panel_rows: 0,
+            ..SchedOpts::default()
         });
         let img = Image::synthetic(64, 48, 78);
         let planes0 = Planes::split(&img);
@@ -1205,5 +1224,65 @@ mod tests {
     fn executor_names_are_stable() {
         assert_eq!(ScalarExecutor.name(), "scalar");
         assert_eq!(ParallelExecutor::with_threads(1).name(), "parallel");
+    }
+
+    #[test]
+    fn cached_stencil_programs_are_bit_exact_with_uncached() {
+        // the geometry cache is a resolution shortcut, never a numeric
+        // path: cached and per-pass-compiled programs must agree bit
+        // for bit on every backend, conv scheme, boundary, and an
+        // awkward-width/pyramid-ish mix of geometries through the SAME
+        // plan (exercising multi-entry cache slots)
+        let uncached = SchedOpts {
+            stencil_cache: false,
+            ..SchedOpts::default()
+        };
+        let cached = SchedOpts {
+            stencil_cache: true,
+            ..SchedOpts::default()
+        };
+        let backends: Vec<(&str, Box<dyn PlanExecutor>, Box<dyn PlanExecutor>)> = vec![
+            (
+                "single",
+                Box::new(SingleExecutor::new(false, cached)),
+                Box::new(SingleExecutor::new(false, uncached)),
+            ),
+            (
+                "simd",
+                Box::new(SingleExecutor::new(true, cached)),
+                Box::new(SingleExecutor::new(true, uncached)),
+            ),
+            (
+                "parallel",
+                Box::new(ParallelExecutor::with_opts(4, false, cached)),
+                Box::new(ParallelExecutor::with_opts(4, false, uncached)),
+            ),
+            (
+                "parallel+simd",
+                Box::new(ParallelExecutor::with_opts(3, true, cached)),
+                Box::new(ParallelExecutor::with_opts(3, true, uncached)),
+            ),
+        ];
+        let wav = Wavelet::cdf97();
+        for s in [Scheme::SepConv, Scheme::NsConv] {
+            for boundary in [Boundary::Periodic, Boundary::Symmetric] {
+                let plan = KernelPlan::from_steps(&schemes::build(s, &wav), boundary);
+                for (w, h) in [(34, 70), (66, 34), (34, 70)] {
+                    let planes0 = Planes::split(&Image::synthetic(w, h, 79));
+                    for (tag, hot, cold) in &backends {
+                        let a = hot.run(&plan, &planes0);
+                        let b = cold.run(&plan, &planes0);
+                        assert!(
+                            bit_equal(&a, &b),
+                            "{} {:?} {}x{} {tag}: cached != uncached",
+                            s.name(),
+                            boundary,
+                            w,
+                            h
+                        );
+                    }
+                }
+            }
+        }
     }
 }

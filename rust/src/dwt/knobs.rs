@@ -8,8 +8,10 @@
 //! back to the documented default.
 //!
 //! Used by [`super::executor::default_threads`] (`PALLAS_THREADS`),
-//! [`super::simd::default_simd`] (`PALLAS_SIMD`) and
-//! [`super::executor::default_fuse`] (`PALLAS_FUSE`).
+//! [`super::simd::default_simd`] (`PALLAS_SIMD`),
+//! [`super::executor::default_fuse`] (`PALLAS_FUSE`),
+//! [`super::pool::default_pool`] (`PALLAS_POOL`) and
+//! [`super::plan::default_stencil_cache`] (`PALLAS_STENCIL_CACHE`).
 
 use std::sync::Once;
 

@@ -31,10 +31,13 @@
 //! * [`lifting`] — the in-place 1-D lifting kernel library the plan
 //!   dispatches into, as row-range bodies both executors share (plus
 //!   the hand-scheduled separable reference).
-//! * [`apply`] — the fused-stencil executor for plan kernels (also
-//!   row-range), plus the legacy matrix-walking evaluator (the
-//!   semantics shared with the Pallas kernels and the pure-jnp oracle)
-//!   kept as reference.
+//! * [`apply`] — the fused-stencil executor for plan kernels: since
+//!   PR 8 it executes *compiled* [`plan::StencilProgram`]s (term lists
+//!   resolved once per geometry — periodic rotations or symmetric fold
+//!   tables with per-term x-interior seams — memoized in the plan's
+//!   geometry cache, `PALLAS_STENCIL_CACHE=0` opts out), with the
+//!   legacy matrix-walking evaluator (the semantics shared with the
+//!   Pallas kernels and the pure-jnp oracle) kept as reference.
 //! * [`engine`] — caches compiled forward/inverse/optimized plans per
 //!   (scheme, wavelet, boundary); `*_with` methods take any executor.
 //! * [`pyramid`] — multi-level (Mallat) transforms as first-class
@@ -49,11 +52,14 @@
 //!   executor).
 //! * [`pool`] — the workspace arena: size-class-keyed, lock-sharded
 //!   checkout/return of plane workspaces, stencil double buffers,
-//!   pyramid scratch, and packed image buffers.  With cached schedules
-//!   ([`plan::KernelPlan::schedule`] memoizes per fuse flag) and the
-//!   band pool's allocation-free job board, a steady-state request
-//!   performs **zero heap allocations** after warm-up (`PALLAS_POOL=0`
-//!   opts out; counters surface through the coordinator metrics).
+//!   pyramid scratch, packed image buffers, and stencil fold-table
+//!   arenas.  With cached schedules ([`plan::KernelPlan::schedule`]
+//!   memoizes per fuse flag), cached stencil programs
+//!   ([`plan::KernelPlan::stencil_program`]), and the band pool's
+//!   allocation-free job board, a steady-state request performs **zero
+//!   heap allocations** after warm-up for *all six schemes*
+//!   (`PALLAS_POOL=0` opts out; counters surface through the
+//!   coordinator metrics).
 //! * `knobs` — strict parsing for the `PALLAS_*` environment knobs
 //!   (invalid values warn once and fall back to the default).
 //!
@@ -78,7 +84,10 @@ pub use executor::{
     SingleExecutor,
 };
 pub use lifting::{Axis, Boundary};
-pub use plan::{FusedPhase, KernelPlan, KernelRef, Schedule};
+pub use plan::{
+    default_stencil_cache, stencil_cache_stats, FusedPhase, KernelPlan, KernelRef, ProgTerm,
+    ProgramRef, Schedule, StencilCacheStats, StencilProgram,
+};
 pub use planes::{Image, Planes};
 pub use pool::{default_pool, PoolStats, WorkspacePool};
 pub use pyramid::PyramidPlan;

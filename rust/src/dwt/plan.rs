@@ -39,11 +39,14 @@
 //! symmetric (verified against the separable-lifting reference).
 
 use super::apply;
+use super::knobs;
 use super::lifting::{self, Axis, Boundary, TapClass};
 use super::planes::Planes;
+use super::pool::WorkspacePool;
 use super::vecn;
 use crate::polyphase::{Poly, PolyMatrix};
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Once, OnceLock};
 
 /// 1-D taps `(offset, coeff)` along one axis.
 pub type Taps = Vec<(i32, f64)>;
@@ -109,6 +112,12 @@ pub struct KernelPlan {
     /// valid cache: [`KernelRef`] indices are positions in `steps`,
     /// which the clone copies verbatim).
     sched: [OnceLock<Schedule>; 2],
+    /// Per-plan geometry cache of compiled [`StencilProgram`]s, keyed
+    /// by `(kernel, w2, h2)` (boundary and plane parities are fixed by
+    /// the plan and the term lists).  Lazily built: lifting-only plans
+    /// never initialize it.  A cloned plan starts with a cold cache —
+    /// programs re-compile on first use, coefficients never change.
+    progs: StencilCache,
 }
 
 impl KernelPlan {
@@ -126,6 +135,7 @@ impl KernelPlan {
             boundary,
             steps,
             sched: Default::default(),
+            progs: Default::default(),
         }
     }
 
@@ -215,8 +225,8 @@ impl KernelPlan {
     /// lane-groups (the [`crate::dwt::simd::SimdExecutor`] path),
     /// `false` the plain scalar loops.  Output is bit-exact either way.
     pub fn execute_opts(&self, planes: &mut Planes, scratch: &mut Option<Planes>, vector: bool) {
-        for step in &self.steps {
-            for kernel in &step.kernels {
+        for (si, step) in self.steps.iter().enumerate() {
+            for (ki, kernel) in step.kernels.iter().enumerate() {
                 match kernel {
                     Kernel::Lift {
                         dst,
@@ -244,9 +254,15 @@ impl KernelPlan {
                             }
                         }
                     }
-                    Kernel::Stencil(st) => {
+                    Kernel::Stencil(_) => {
+                        let prog = self.stencil_program(
+                            (si, ki),
+                            planes.w2,
+                            planes.h2,
+                            default_stencil_cache(),
+                        );
                         let out = ensure_scratch(planes, scratch);
-                        apply::run_stencil_ex(st, planes, out, self.boundary, vector);
+                        apply::run_stencil_program(&prog, planes, out, vector);
                         std::mem::swap(planes, out);
                     }
                 }
@@ -333,6 +349,390 @@ fn two_planes(p: &mut [Vec<f32>; 4], dst: usize, src: usize) -> (&mut [f32], &[f
     } else {
         let (a, b) = p.split_at_mut(dst);
         (b[0].as_mut_slice(), a[src].as_slice())
+    }
+}
+
+// ------------------------------------------- compiled stencil programs
+//
+// PR 8: stencil execution is a compiled, cached artifact.  A `Stencil`
+// kernel's raw `(j, km, kn, c)` term list still has to be resolved
+// against a concrete plane geometry before it can run — periodic
+// boundaries rotate the offsets modulo the plane size, symmetric
+// boundaries tabulate whole-sample fold indices per (offset, parity)
+// and classify each term's x-interior.  Before this section existed,
+// `apply.rs` rebuilt all of that per plane, per band, per pass — the
+// reason convolution schemes sat outside the zero-allocation
+// guarantee.  Now the resolution happens once per (kernel, geometry)
+// into a `StencilProgram`, memoized on the plan in a fixed table of
+// `OnceLock` slots, and a warm request resolves everything by pointer
+// load.
+
+/// Process default for stencil program caching: `PALLAS_STENCIL_CACHE`
+/// (strict `"0"` = off / `"1"` = on via [`knobs`]; anything else warns
+/// once and keeps the default), default **on**, read once at first
+/// use.  Off means every stencil pass compiles a fresh program —
+/// the pre-PR-8 allocation profile for A/B measurement; coefficients
+/// are bit-identical either way.
+pub fn default_stencil_cache() -> bool {
+    static VAL: OnceLock<bool> = OnceLock::new();
+    *VAL.get_or_init(|| {
+        static WARN: Once = Once::new();
+        knobs::parse_switch(
+            "PALLAS_STENCIL_CACHE",
+            std::env::var("PALLAS_STENCIL_CACHE").ok().as_deref(),
+            &WARN,
+            true,
+        )
+    })
+}
+
+static STENCIL_HITS: AtomicU64 = AtomicU64::new(0);
+static STENCIL_MISSES: AtomicU64 = AtomicU64::new(0);
+static STENCIL_RESIDENT: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide stencil program cache counters
+/// (surfaced by the coordinator metrics summary).  `hits` are warm
+/// pointer-load resolutions; `misses` count program compilations —
+/// cache fills, cache-off builds, and full-table fallbacks alike;
+/// `resident` is the number of programs currently parked in plan
+/// caches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StencilCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub resident: u64,
+}
+
+/// Counter snapshot (relaxed loads; exact under quiescence).
+pub fn stencil_cache_stats() -> StencilCacheStats {
+    StencilCacheStats {
+        hits: STENCIL_HITS.load(Ordering::Relaxed),
+        misses: STENCIL_MISSES.load(Ordering::Relaxed),
+        resident: STENCIL_RESIDENT.load(Ordering::Relaxed),
+    }
+}
+
+/// One resolved term of a [`StencilProgram`]: which fields are live
+/// depends on the program's boundary (periodic terms are rotations,
+/// symmetric terms are fold tables + an interior seam).
+#[derive(Debug, Clone, Copy)]
+pub struct ProgTerm {
+    /// Source plane index.
+    pub src: usize,
+    /// Coefficient.
+    pub c: f32,
+    /// Periodic: the column rotation `km mod w2`.
+    pub shift_col: usize,
+    /// Periodic: the row rotation `kn mod h2`.
+    pub shift_row: usize,
+    /// Symmetric: start of this term's `w2`-entry x fold table in the
+    /// program's table arena (terms with equal `(km, parity)` share
+    /// one table).
+    pub xi: usize,
+    /// Symmetric: start of this term's `h2`-entry y fold table.  Full
+    /// plane height, indexed by *absolute* row — a band-parallel
+    /// executor slices rows out of the same program without any
+    /// per-band rebuild.
+    pub yi: usize,
+    /// Symmetric: the x-interior `[lo, hi)` where the fold is the
+    /// identity (`xi[x] == x + km`), i.e. the unit-stride lane-group
+    /// span; columns outside it take the folded scalar path.
+    pub lo: usize,
+    /// See `lo`.
+    pub hi: usize,
+}
+
+/// A [`Stencil`] kernel lowered against one concrete plane geometry:
+/// per output plane the resolved term list, plus (for symmetric
+/// boundaries) the packed fold-table arena, checked out from the
+/// [`WorkspacePool`] and returned on drop.  Everything the inner loop
+/// needs — shifts, fold indices, interior seams — is a field or slice
+/// load; nothing is computed per pass.
+#[derive(Debug)]
+pub struct StencilProgram {
+    pub w2: usize,
+    pub h2: usize,
+    pub boundary: Boundary,
+    terms: [Vec<ProgTerm>; 4],
+    tables: Vec<u32>,
+    /// True when this program lives in a plan's geometry cache
+    /// (resident-counter accounting).
+    cached: bool,
+}
+
+impl StencilProgram {
+    /// Lower `st` against a `w2 x h2` plane geometry.  Cold-path only:
+    /// allocates the term lists and (symmetric) checks the table arena
+    /// out of the workspace pool.
+    pub fn compile(st: &Stencil, w2: usize, h2: usize, boundary: Boundary) -> Self {
+        match boundary {
+            Boundary::Periodic => {
+                let terms = std::array::from_fn(|i| {
+                    st.rows[i]
+                        .iter()
+                        .map(|&(j, km, kn, c)| ProgTerm {
+                            src: j,
+                            c,
+                            shift_col: km.rem_euclid(w2 as i32) as usize,
+                            shift_row: kn.rem_euclid(h2 as i32) as usize,
+                            xi: 0,
+                            yi: 0,
+                            lo: 0,
+                            hi: 0,
+                        })
+                        .collect()
+                });
+                Self {
+                    w2,
+                    h2,
+                    boundary,
+                    terms,
+                    tables: Vec::new(),
+                    cached: false,
+                }
+            }
+            Boundary::Symmetric => Self::compile_symmetric(st, w2, h2),
+        }
+    }
+
+    fn compile_symmetric(st: &Stencil, w2: usize, h2: usize) -> Self {
+        // the term's x-interior: the span where the fold is the
+        // identity, so the read is a unit-stride run — the same
+        // interior/tail seam the lift kernels split on
+        let x_interior = |km: i32| -> (usize, usize) {
+            let lo = (-(km as i64)).clamp(0, w2 as i64) as usize;
+            let hi = (w2 as i64 - (km as i64).max(0)).clamp(lo as i64, w2 as i64) as usize;
+            (lo, hi)
+        };
+        // distinct fold tables, keyed by (offset, source parity): a
+        // fused non-separable stencil reuses the same handful of
+        // offsets across hundreds of terms, so tables are shared
+        let mut xkeys: Vec<(i32, bool)> = Vec::new();
+        let mut ykeys: Vec<(i32, bool)> = Vec::new();
+        for row in &st.rows {
+            for &(j, km, kn, _) in row {
+                let xk = (km, plane_is_odd(j, Axis::Horizontal));
+                if !xkeys.contains(&xk) {
+                    xkeys.push(xk);
+                }
+                let yk = (kn, plane_is_odd(j, Axis::Vertical));
+                if !ykeys.contains(&yk) {
+                    ykeys.push(yk);
+                }
+            }
+        }
+        // one pool-backed arena holds every table; a dirty checkout is
+        // safe because each entry below is written before use
+        let mut tables =
+            WorkspacePool::global().take_idx(xkeys.len() * w2 + ykeys.len() * h2);
+        let mut off = 0;
+        let mut xoff = Vec::with_capacity(xkeys.len());
+        for &(km, odd) in &xkeys {
+            for x in 0..w2 {
+                tables[off + x] = fold_sym(x as i64 + km as i64, w2 as i64, odd) as u32;
+            }
+            xoff.push(off);
+            off += w2;
+        }
+        let mut yoff = Vec::with_capacity(ykeys.len());
+        for &(kn, odd) in &ykeys {
+            for y in 0..h2 {
+                tables[off + y] = fold_sym(y as i64 + kn as i64, h2 as i64, odd) as u32;
+            }
+            yoff.push(off);
+            off += h2;
+        }
+        let terms = std::array::from_fn(|i| {
+            st.rows[i]
+                .iter()
+                .map(|&(j, km, kn, c)| {
+                    let xk = (km, plane_is_odd(j, Axis::Horizontal));
+                    let yk = (kn, plane_is_odd(j, Axis::Vertical));
+                    let (lo, hi) = x_interior(km);
+                    ProgTerm {
+                        src: j,
+                        c,
+                        shift_col: 0,
+                        shift_row: 0,
+                        xi: xoff[xkeys.iter().position(|k| *k == xk).unwrap()],
+                        yi: yoff[ykeys.iter().position(|k| *k == yk).unwrap()],
+                        lo,
+                        hi,
+                    }
+                })
+                .collect()
+        });
+        Self {
+            w2,
+            h2,
+            boundary: Boundary::Symmetric,
+            terms,
+            tables,
+            cached: false,
+        }
+    }
+
+    /// The resolved terms of output plane `i`.
+    #[inline]
+    pub fn terms(&self, i: usize) -> &[ProgTerm] {
+        &self.terms[i]
+    }
+
+    /// A term's x fold table (symmetric programs only).
+    #[inline]
+    pub fn xi(&self, t: &ProgTerm) -> &[u32] {
+        &self.tables[t.xi..t.xi + self.w2]
+    }
+
+    /// A term's full-height y fold table (symmetric programs only).
+    #[inline]
+    pub fn yi(&self, t: &ProgTerm) -> &[u32] {
+        &self.tables[t.yi..t.yi + self.h2]
+    }
+}
+
+impl Clone for StencilProgram {
+    fn clone(&self) -> Self {
+        // a clone is never the cache's copy (fresh plain buffers)
+        Self {
+            w2: self.w2,
+            h2: self.h2,
+            boundary: self.boundary,
+            terms: self.terms.clone(),
+            tables: self.tables.clone(),
+            cached: false,
+        }
+    }
+}
+
+impl Drop for StencilProgram {
+    fn drop(&mut self) {
+        if self.cached {
+            STENCIL_RESIDENT.fetch_sub(1, Ordering::Relaxed);
+        }
+        let t = std::mem::take(&mut self.tables);
+        if !t.is_empty() {
+            WorkspacePool::global().put_idx(t);
+        }
+    }
+}
+
+/// A resolved stencil program: borrowed from the plan's geometry cache
+/// on the warm path, owned when caching is off or the slot table is
+/// full.  Derefs to [`StencilProgram`] either way, so executors do not
+/// branch on provenance.
+#[derive(Debug)]
+pub enum ProgramRef<'a> {
+    Cached(&'a StencilProgram),
+    Owned(StencilProgram),
+}
+
+impl std::ops::Deref for ProgramRef<'_> {
+    type Target = StencilProgram;
+    #[inline]
+    fn deref(&self) -> &StencilProgram {
+        match self {
+            ProgramRef::Cached(p) => p,
+            ProgramRef::Owned(p) => p,
+        }
+    }
+}
+
+/// Slots in a plan's program cache.  A plan sees one geometry per
+/// pyramid level per stencil kernel, so this accommodates deep
+/// pyramids with room to spare; a full table degrades to per-pass
+/// compilation (counted as misses), never to wrong results.
+const PROG_SLOTS: usize = 64;
+
+/// `(step, kernel, w2, h2)` — the program's identity within one plan.
+type ProgKey = (usize, usize, usize, usize);
+
+#[derive(Debug)]
+struct CachedProgram {
+    key: ProgKey,
+    prog: StencilProgram,
+}
+
+/// The per-plan geometry cache: a lazily allocated, insert-only open
+/// hash table of `OnceLock` slots (linear probing).  Lock-free on the
+/// warm path — a hit is one pointer load plus a key compare.
+#[derive(Debug, Default)]
+pub(crate) struct StencilCache {
+    slots: OnceLock<Box<[OnceLock<CachedProgram>; PROG_SLOTS]>>,
+}
+
+impl Clone for StencilCache {
+    /// Cloned plans start cold: programs re-compile on first use
+    /// (kernel indices stay valid, but sharing table arenas across
+    /// plan clones is not worth the bookkeeping).
+    fn clone(&self) -> Self {
+        Self::default()
+    }
+}
+
+impl KernelPlan {
+    /// Resolve the compiled [`StencilProgram`] for stencil kernel `r`
+    /// at the active plane geometry.  With `use_cache` (the
+    /// [`default_stencil_cache`] knob, or an explicit
+    /// [`crate::dwt::SchedOpts`] override) the program is memoized in
+    /// the plan's slot table; otherwise it is compiled fresh for this
+    /// pass.  Panics if `r` does not name a stencil kernel.
+    pub fn stencil_program(
+        &self,
+        r: KernelRef,
+        w2: usize,
+        h2: usize,
+        use_cache: bool,
+    ) -> ProgramRef<'_> {
+        let Kernel::Stencil(st) = self.kernel(r) else {
+            unreachable!("stencil_program called on a non-stencil kernel")
+        };
+        if !use_cache {
+            STENCIL_MISSES.fetch_add(1, Ordering::Relaxed);
+            return ProgramRef::Owned(StencilProgram::compile(st, w2, h2, self.boundary));
+        }
+        let key: ProgKey = (r.0, r.1, w2, h2);
+        let slots = self
+            .progs
+            .slots
+            .get_or_init(|| Box::new(std::array::from_fn(|_| OnceLock::new())));
+        let mut h = 0u64;
+        for v in [key.0, key.1, key.2, key.3] {
+            h = (h ^ v as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        let start = (h >> 32) as usize % PROG_SLOTS;
+        for i in 0..PROG_SLOTS {
+            let slot = &slots[(start + i) % PROG_SLOTS];
+            if let Some(c) = slot.get() {
+                if c.key == key {
+                    STENCIL_HITS.fetch_add(1, Ordering::Relaxed);
+                    return ProgramRef::Cached(&c.prog);
+                }
+                continue; // occupied by another geometry: probe on
+            }
+            // empty slot: race to fill it (a concurrent loser with a
+            // different key just probes past the winner's entry)
+            let mut built = false;
+            let c = slot.get_or_init(|| {
+                built = true;
+                let mut prog = StencilProgram::compile(st, w2, h2, self.boundary);
+                prog.cached = true;
+                STENCIL_RESIDENT.fetch_add(1, Ordering::Relaxed);
+                CachedProgram { key, prog }
+            });
+            if c.key == key {
+                if built {
+                    STENCIL_MISSES.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    STENCIL_HITS.fetch_add(1, Ordering::Relaxed);
+                }
+                return ProgramRef::Cached(&c.prog);
+            }
+        }
+        // every slot holds some other geometry: degrade to per-pass
+        // compilation rather than evicting under live borrows
+        STENCIL_MISSES.fetch_add(1, Ordering::Relaxed);
+        ProgramRef::Owned(StencilProgram::compile(st, w2, h2, self.boundary))
     }
 }
 
@@ -1114,5 +1514,111 @@ mod tests {
             p.schedule(true).phases.iter().map(|ph| ph.exec_ops(p)).sum()
         };
         assert_eq!(ops(&copy), ops(&plan));
+    }
+
+    fn first_stencil_ref(plan: &KernelPlan) -> KernelRef {
+        for (si, step) in plan.steps.iter().enumerate() {
+            for (ki, k) in step.kernels.iter().enumerate() {
+                if matches!(k, Kernel::Stencil(_)) {
+                    return (si, ki);
+                }
+            }
+        }
+        panic!("plan has no stencil kernel")
+    }
+
+    #[test]
+    fn stencil_programs_are_cached_per_geometry() {
+        let plan = KernelPlan::from_steps(
+            &schemes::build(Scheme::NsConv, &Wavelet::cdf97()),
+            Boundary::Symmetric,
+        );
+        let r = first_stencil_ref(&plan);
+        // counters are process-global and monotone: only >= deltas are
+        // safe under the concurrent test runner
+        let before = stencil_cache_stats();
+        let a = plan.stencil_program(r, 17, 13, true);
+        let b = plan.stencil_program(r, 17, 13, true);
+        // warm resolution is a pointer load: the SAME compiled program
+        let (pa, pb): (&StencilProgram, &StencilProgram) = (&a, &b);
+        assert!(std::ptr::eq(pa, pb));
+        let after = stencil_cache_stats();
+        assert!(after.misses >= before.misses + 1, "first resolve compiles");
+        assert!(after.hits >= before.hits + 1, "second resolve is a hit");
+        // a different geometry compiles (and caches) its own program
+        let c = plan.stencil_program(r, 33, 13, true);
+        assert!(!std::ptr::eq(pa, &*c));
+        assert_eq!((c.w2, c.h2), (33, 13));
+        // cache off: a fresh owned build per call, never the cached one
+        let d = plan.stencil_program(r, 17, 13, false);
+        assert!(matches!(&d, ProgramRef::Owned(_)));
+        assert!(!std::ptr::eq(pa, &*d));
+        // a cloned plan starts cold but compiles an identical program
+        let copy = plan.clone();
+        let e = copy.stencil_program(r, 17, 13, true);
+        for i in 0..4 {
+            assert_eq!(e.terms(i).len(), a.terms(i).len());
+        }
+    }
+
+    #[test]
+    fn compiled_programs_pin_rotations_tables_and_interiors() {
+        // hand-built stencil, one term per pinned property:
+        //   rows[0][0]: src 0 (h-even, v-even), km=-1, kn=3
+        //   rows[0][1]: src 1 (h-ODD),          km=-1       -> own x table
+        //   rows[1][0]: src 2 (h-even, v-ODD),  km=-1, kn=3 -> shares the
+        //               x table of rows[0][0], own y table
+        //   rows[2][0]: src 0, km=+2 -> right-edge interior clip
+        let mut rows: [Vec<(usize, i32, i32, f32)>; 4] = Default::default();
+        rows[0].push((0, -1, 3, 2.0));
+        rows[0].push((1, -1, 0, 0.5));
+        rows[1].push((2, -1, 3, 1.0));
+        rows[2].push((0, 2, 0, 1.0));
+        let st = Stencil { rows };
+
+        let per = StencilProgram::compile(&st, 8, 5, Boundary::Periodic);
+        let t = per.terms(0)[0];
+        assert_eq!((t.shift_col, t.shift_row), (7, 3), "km=-1 kn=3 mod (8,5)");
+        assert_eq!(per.terms(2)[0].shift_col, 2);
+
+        let sym = StencilProgram::compile(&st, 8, 5, Boundary::Symmetric);
+        let (t00, t01) = (sym.terms(0)[0], sym.terms(0)[1]);
+        let (t10, t20) = (sym.terms(1)[0], sym.terms(2)[0]);
+        // x-interior spans: km=-1 folds only column 0; km=+2 folds the
+        // two rightmost columns
+        assert_eq!((t00.lo, t00.hi), (1, 8));
+        assert_eq!((t20.lo, t20.hi), (0, 6));
+        // the interior really is the identity span (xi[x] == x + km),
+        // and the folded edges match fold_sym per source parity
+        assert_eq!(sym.xi(&t00), &[1, 0, 1, 2, 3, 4, 5, 6]);
+        assert_eq!(sym.xi(&t20), &[2, 3, 4, 5, 6, 7, 7, 6]);
+        // h-odd source folds -1 -> 0, not -1 -> 1
+        assert_eq!(sym.xi(&t01)[0], 0);
+        // same (km, parity) shares one table; different parity gets its
+        // own
+        assert_eq!(t10.xi, t00.xi, "shared (km=-1, h-even) x table");
+        assert_ne!(t01.xi, t00.xi, "h-odd source needs its own table");
+        // y tables are FULL-HEIGHT and indexed by absolute row (what
+        // band-parallel execution relies on), folded per v-parity
+        assert_eq!(sym.yi(&t00), &[3, 4, 4, 3, 2]);
+        assert_eq!(sym.yi(&t10), &[3, 4, 3, 2, 1]);
+        assert_ne!(t10.yi, t00.yi);
+    }
+
+    #[test]
+    fn pallas_stencil_cache_env_escape_hatch() {
+        // not a concurrency-safe env test harness — run the parser on
+        // explicit values instead of mutating the process environment
+        let once = Once::new();
+        let parse =
+            |v: Option<&str>| knobs::parse_switch("PALLAS_STENCIL_CACHE", v, &once, true);
+        assert!(parse(None));
+        assert!(parse(Some("1")));
+        assert!(!parse(Some("0")));
+        assert!(!parse(Some(" 0 ")));
+        // strict parsing: invalid values warn and keep the default
+        // instead of silently disabling the cache
+        assert!(parse(Some("off")));
+        assert!(parse(Some("no")));
     }
 }

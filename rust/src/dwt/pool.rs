@@ -91,6 +91,12 @@ impl PoolStats {
 pub struct WorkspacePool {
     enabled: bool,
     shards: [Mutex<HashMap<usize, Vec<Vec<f32>>>>; SHARDS],
+    /// Fold-index table storage for compiled stencil programs
+    /// ([`crate::dwt::plan::StencilProgram`]): same size-class / shard /
+    /// cap policy as the sample shards, but holding `u32` index buffers
+    /// — fold tables are plane indices, not samples, and must not lose
+    /// precision to an f32 encoding.
+    idx_shards: [Mutex<HashMap<usize, Vec<Vec<u32>>>>; SHARDS],
     hits: AtomicU64,
     misses: AtomicU64,
     returns: AtomicU64,
@@ -105,6 +111,7 @@ impl WorkspacePool {
         Self {
             enabled,
             shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+            idx_shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             returns: AtomicU64::new(0),
@@ -164,6 +171,53 @@ impl WorkspacePool {
         let class = shard.entry(len).or_default();
         if class.len() >= MAX_PER_CLASS {
             drop(shard); // free outside the lock
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        class.push(v);
+        self.resident.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn idx_shard(&self, len: usize) -> &Mutex<HashMap<usize, Vec<Vec<u32>>>> {
+        let h = (len as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        &self.idx_shards[(h >> 56) as usize % SHARDS]
+    }
+
+    /// Check out a fold-index table buffer of exactly `len` entries.
+    /// Dirty like [`Self::take_vec`]: stencil program compilation
+    /// writes every entry it later reads.  Counted into the same
+    /// hit/miss/resident counters as the sample classes.
+    pub fn take_idx(&self, len: usize) -> Vec<u32> {
+        if self.enabled {
+            let popped = self
+                .idx_shard(len)
+                .lock()
+                .unwrap()
+                .get_mut(&len)
+                .and_then(Vec::pop);
+            if let Some(v) = popped {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.resident.fetch_sub(1, Ordering::Relaxed);
+                debug_assert_eq!(v.len(), len);
+                return v;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        vec![0; len]
+    }
+
+    /// Return a fold-index table buffer to its size class (same
+    /// disabled/empty/full-class policy as [`Self::put_vec`]).
+    pub fn put_idx(&self, v: Vec<u32>) {
+        self.returns.fetch_add(1, Ordering::Relaxed);
+        if !self.enabled || v.is_empty() {
+            return;
+        }
+        let len = v.len();
+        let mut shard = self.idx_shard(len).lock().unwrap();
+        let class = shard.entry(len).or_default();
+        if class.len() >= MAX_PER_CLASS {
+            drop(shard);
             self.evicted.fetch_add(1, Ordering::Relaxed);
             return;
         }
@@ -298,6 +352,30 @@ mod tests {
         pool.put_image(img);
         // 8 plane buffers + 1 image buffer came back
         assert_eq!(pool.stats().returns, 9);
+    }
+
+    #[test]
+    fn idx_tables_roundtrip_like_sample_buffers() {
+        let pool = WorkspacePool::new(true);
+        let mut t = pool.take_idx(66);
+        assert_eq!(t.len(), 66);
+        t[5] = 41;
+        let ptr = t.as_ptr();
+        pool.put_idx(t);
+        let back = pool.take_idx(66);
+        assert_eq!(back.as_ptr(), ptr, "idx hit must recycle the buffer");
+        assert_eq!(back[5], 41, "idx buffers come back dirty");
+        // u32 and f32 classes are separate free lists: a 66-entry idx
+        // return must never serve a 66-sample take_vec
+        pool.put_idx(back);
+        let v = pool.take_vec(66);
+        assert_eq!(v.len(), 66);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 2));
+        let disabled = WorkspacePool::new(false);
+        disabled.put_idx(vec![1; 8]);
+        assert_eq!(disabled.stats().resident, 0);
+        assert!(disabled.take_idx(8).iter().all(|&x| x == 0));
     }
 
     #[test]

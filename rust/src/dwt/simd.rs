@@ -6,12 +6,15 @@
 //!
 //! * `lift_rows_h` processes 8 output pixels per lane-group, gathering
 //!   the `±k` taps as shifted unit-stride slices of the same row;
-//! * `lift_rows_v` and `run_stencil_rows` stream whole lane-group
-//!   column runs per row (one `axpy` per tap/term);
+//! * `lift_rows_v` and the compiled-stencil body
+//!   (`apply::run_stencil_program_rows`, reading each term's
+//!   precompiled x-interior seam and fold tables straight off the
+//!   [`super::plan::StencilProgram`]) stream whole lane-group column
+//!   runs per row (one `axpy` per tap/term);
 //! * boundary columns and rows — everything outside the
-//!   [`super::lifting::interior_span`] seam — fall back to the scalar
-//!   folded tails, which are literally the same code the scalar
-//!   backend runs.
+//!   [`super::lifting::interior_span`] seam / the stencil term's
+//!   `[lo, hi)` span — fall back to the scalar folded tails, which are
+//!   literally the same code the scalar backend runs.
 //!
 //! Because the vector bodies perform the identical per-element
 //! mul-then-add sequence (no reassociation, no FMA contraction — see

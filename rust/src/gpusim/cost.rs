@@ -289,6 +289,135 @@ pub fn predict_pyramid(
     }
 }
 
+// -------------------------------------- stencil table compilation cost
+//
+// PR 8: the native engine lowers each stencil kernel into a compiled
+// `StencilProgram` once per geometry (fold tables + interior seams) and
+// caches it on the plan, so the steady-state request pays nothing for
+// table resolution.  The cost model mirrors that split: `predict` /
+// `predict_fused` price the *warm* request, `predict_cold` /
+// `predict_fused_cold` add the one-time table build (what the uncached
+// `PALLAS_STENCIL_CACHE=0` path pays on every request), and
+// `amortized_request_ms` spreads the build over a request count —
+// converging to the steady-state prediction as the count grows.
+
+/// Fold-table entries a symmetric-boundary [`crate::dwt::StencilProgram`]
+/// tabulates for `scheme` at this image size: per stencil kernel, one
+/// `w2`-entry x table per distinct `(km, horizontal parity)` and one
+/// `h2`-entry y table per distinct `(kn, vertical parity)` — the exact
+/// dedup rule `StencilProgram::compile` applies, so the model and the
+/// engine agree by construction.  Lifting-only plans return 0 (their
+/// boundary folds are computed in-register, never tabulated).
+pub fn stencil_table_entries(scheme: Scheme, w: &Wavelet, pixels: usize) -> usize {
+    use crate::dwt::lifting::{Axis, Boundary};
+    use crate::dwt::plan::{plane_is_odd, Kernel, KernelPlan};
+    let side = (pixels as f64).sqrt() as usize;
+    let (w2, h2) = ((side / 2).max(1), (side / 2).max(1));
+    let plan = KernelPlan::from_steps(
+        &crate::polyphase::schemes::build(scheme, w),
+        Boundary::Symmetric,
+    );
+    let mut entries = 0usize;
+    for step in &plan.steps {
+        for k in &step.kernels {
+            if let Kernel::Stencil(st) = k {
+                let mut xk: Vec<(i32, bool)> = Vec::new();
+                let mut yk: Vec<(i32, bool)> = Vec::new();
+                for row in &st.rows {
+                    for &(j, km, kn, _) in row {
+                        let x = (km, plane_is_odd(j, Axis::Horizontal));
+                        if !xk.contains(&x) {
+                            xk.push(x);
+                        }
+                        let y = (kn, plane_is_odd(j, Axis::Vertical));
+                        if !yk.contains(&y) {
+                            yk.push(y);
+                        }
+                    }
+                }
+                entries += xk.len() * w2 + yk.len() * h2;
+            }
+        }
+    }
+    entries
+}
+
+/// One-time stencil program compile cost in milliseconds: the fold
+/// tables are index buffers written once (4 bytes per entry, sequential
+/// stores), so the build is priced as a pure memory sweep at the
+/// device's effective bandwidth for that footprint.  Zero for lifting
+/// schemes.
+pub fn table_build_ms(device: &Device, scheme: Scheme, w: &Wavelet, pixels: usize) -> f64 {
+    let entries = stencil_table_entries(scheme, w, pixels);
+    if entries == 0 {
+        return 0.0;
+    }
+    let bytes = entries as f64 * 4.0;
+    bytes / (device.effective_bandwidth_gbs(bytes) * 1e9) * 1e3
+}
+
+/// [`predict`] for a *cold* plan: the steady-state request plus the
+/// one-time table build — equivalently, what the uncached
+/// (`PALLAS_STENCIL_CACHE=0`) engine pays on **every** request, since
+/// it recompiles the program per pass.  Conserves exactly:
+/// `cold = warm + table_build_ms`, float for float.
+pub fn predict_cold(
+    device: &Device,
+    pipeline: PipelineKind,
+    scheme: Scheme,
+    w: &Wavelet,
+    pixels: usize,
+) -> SimPoint {
+    let warm = predict(device, pipeline, scheme, w, pixels);
+    let time_ms = warm.time_ms + table_build_ms(device, scheme, w, pixels);
+    let gbs = pixels as f64 * 4.0 / (time_ms * 1e-3) / 1e9;
+    SimPoint {
+        pixels,
+        time_ms,
+        gbs,
+    }
+}
+
+/// [`predict_fused`] for a cold plan (see [`predict_cold`]): the fused
+/// schedule changes launch and sweep pricing, never the table build —
+/// programs are geometry artifacts, compiled once either way.
+pub fn predict_fused_cold(
+    device: &Device,
+    pipeline: PipelineKind,
+    scheme: Scheme,
+    w: &Wavelet,
+    pixels: usize,
+    fuse: bool,
+) -> SimPoint {
+    let warm = predict_fused(device, pipeline, scheme, w, pixels, fuse);
+    let time_ms = warm.time_ms + table_build_ms(device, scheme, w, pixels);
+    let gbs = pixels as f64 * 4.0 / (time_ms * 1e-3) / 1e9;
+    SimPoint {
+        pixels,
+        time_ms,
+        gbs,
+    }
+}
+
+/// Per-request cost over a run of `requests` identical requests against
+/// one plan: the table build is paid once, then amortized —
+/// `(build + n * warm) / n`.  `n == 1` reproduces [`predict_cold`];
+/// as `n` grows the per-request cost converges to the steady-state
+/// [`predict`] from above, which is the model-side statement of the
+/// PR-8 guarantee.
+pub fn amortized_request_ms(
+    device: &Device,
+    pipeline: PipelineKind,
+    scheme: Scheme,
+    w: &Wavelet,
+    pixels: usize,
+    requests: usize,
+) -> f64 {
+    let n = requests.max(1) as f64;
+    let warm = predict(device, pipeline, scheme, w, pixels).time_ms;
+    warm + table_build_ms(device, scheme, w, pixels) / n
+}
+
 /// The resolution sweep used by the figures (64^2 .. 8192^2).
 pub fn default_sizes() -> Vec<usize> {
     (6..=13).map(|p| (1usize << p) * (1usize << p)).collect()
@@ -501,6 +630,74 @@ mod tests {
                 s.name(),
                 fused.time_ms,
                 unfused.time_ms
+            );
+        }
+    }
+
+    #[test]
+    fn table_build_is_free_for_lifting_and_conserved_for_stencils() {
+        let px = 1024 * 1024;
+        for w in Wavelet::all() {
+            // lifting plans tabulate nothing: cold == warm exactly
+            for s in [Scheme::SepLifting, Scheme::NsLifting] {
+                assert_eq!(stencil_table_entries(s, &w, px), 0, "{} {}", w.name, s.name());
+                for (dev, pipe) in [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)] {
+                    assert_eq!(table_build_ms(&dev, s, &w, px), 0.0);
+                    let warm = predict(&dev, pipe, s, &w, px);
+                    let cold = predict_cold(&dev, pipe, s, &w, px);
+                    assert_eq!(warm.time_ms, cold.time_ms, "{} {}", w.name, s.name());
+                    assert_eq!(warm.gbs, cold.gbs);
+                }
+            }
+            // stencil schemes pay a positive one-time build, and the
+            // cold model conserves warm + build float for float — the
+            // build never leaks into (or out of) the steady-state terms
+            for s in [Scheme::SepConv, Scheme::NsConv, Scheme::SepPolyconv, Scheme::NsPolyconv] {
+                let entries = stencil_table_entries(s, &w, px);
+                assert!(entries > 0, "{} {}", w.name, s.name());
+                // tables scale with the plane side, not the pixel count
+                assert!(entries < px / 16, "{} {}: {} entries", w.name, s.name(), entries);
+                for (dev, pipe) in [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)] {
+                    let build = table_build_ms(&dev, s, &w, px);
+                    assert!(build > 0.0);
+                    let warm = predict(&dev, pipe, s, &w, px);
+                    let cold = predict_cold(&dev, pipe, s, &w, px);
+                    assert_eq!(cold.time_ms, warm.time_ms + build, "{} {}", w.name, s.name());
+                    assert!(cold.gbs < warm.gbs);
+                    for fuse in [false, true] {
+                        let fw = predict_fused(&dev, pipe, s, &w, px, fuse);
+                        let fc = predict_fused_cold(&dev, pipe, s, &w, px, fuse);
+                        assert_eq!(fc.time_ms, fw.time_ms + build);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_build_amortizes_out_of_the_steady_state() {
+        let w = Wavelet::cdf97();
+        let px = 1024 * 1024;
+        for (dev, pipe) in [(amd(), PipelineKind::OpenCl), (nv(), PipelineKind::Shaders)] {
+            let warm = predict(&dev, pipe, Scheme::NsConv, &w, px).time_ms;
+            let cold = predict_cold(&dev, pipe, Scheme::NsConv, &w, px).time_ms;
+            // n = 1 is the cold request; per-request cost then falls
+            // monotonically and converges to the warm prediction
+            let one = amortized_request_ms(&dev, pipe, Scheme::NsConv, &w, px, 1);
+            assert!((one - cold).abs() < 1e-15, "{} vs {}", one, cold);
+            let mut prev = one;
+            for n in [2usize, 8, 64, 4096] {
+                let a = amortized_request_ms(&dev, pipe, Scheme::NsConv, &w, px, n);
+                assert!(a < prev, "amortized cost must fall with request count");
+                assert!(a > warm, "the build never pays back below steady state");
+                prev = a;
+            }
+            let settled = amortized_request_ms(&dev, pipe, Scheme::NsConv, &w, px, 1 << 30);
+            assert!(
+                (settled - warm).abs() / warm < 1e-6,
+                "steady state not reached: {} vs {}",
+                settled,
+                warm
             );
         }
     }

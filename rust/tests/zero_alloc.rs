@@ -1,26 +1,29 @@
 //! Steady-state allocation regression: after warm-up, a forward,
 //! inverse, or L=3 pyramid request performs **zero** heap allocations
-//! on every native backend.
+//! on every native backend — for **all six schemes**.
 //!
 //! This binary swaps in a counting global allocator (which is why it is
 //! registered as its own `[[test]]` target — the counter must not
 //! observe the other test binaries), warms each request shape twice —
 //! populating the [`WorkspacePool`] size classes, memoizing the
-//! compiled plan's phase schedules, and faulting in every lazily built
-//! structure (band-pool threads, engine caches) — and then hard-asserts
-//! an allocation count of 0 for the third request, across all threads.
+//! compiled plan's phase schedules *and* stencil programs, and faulting
+//! in every lazily built structure (band-pool threads, engine caches) —
+//! and then hard-asserts an allocation count of 0 for the third
+//! request, across all threads.
 //!
-//! The workload is a lifting scheme on purpose: lifting plans lower
-//! entirely to in-place `Lift`/`Scale` kernels (pinned by
-//! `plan::tests::lifting_schemes_lower_fully_to_lift_kernels`), so the
-//! whole request is pool-checkout + kernels + pool-return.  Stencil
-//! (convolution) schemes still resolve per-plane term tables inside
-//! `apply.rs` and are covered by the pool's hit counters rather than a
-//! zero-alloc guarantee.
+//! Scope grew with PR 8: the lifting schemes were always pure
+//! pool-checkout + in-place kernels (pinned by
+//! `plan::tests::lifting_schemes_lower_fully_to_lift_kernels`), but the
+//! convolution schemes used to rebuild per-plane stencil term tables in
+//! `apply.rs` on every pass.  Now a `Stencil` kernel lowers once per
+//! geometry into a cached `StencilProgram` (periodic rotations, or
+//! symmetric fold tables on a pool-backed arena), so a warm convolution
+//! request resolves everything by pointer load and the guarantee covers
+//! every scheme and both boundary modes.
 
 use dwt_accel::dwt::executor::{ParallelExecutor, PlanExecutor, ScalarExecutor};
 use dwt_accel::dwt::simd::SimdExecutor;
-use dwt_accel::dwt::{Engine, Image, WorkspacePool};
+use dwt_accel::dwt::{Boundary, Engine, Image, WorkspacePool};
 use dwt_accel::polyphase::schemes::Scheme;
 use dwt_accel::polyphase::wavelets::Wavelet;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -83,9 +86,7 @@ fn steady_state_requests_allocate_nothing() {
         pool.enabled(),
         "this regression requires the workspace pool (unset PALLAS_POOL)"
     );
-    let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
     let img = Image::synthetic(128, 64, 7);
-    let packed = engine.forward(&img);
     let parallel = ParallelExecutor::with_threads(3);
     let backends: [(&str, &dyn PlanExecutor); 3] = [
         ("scalar", &ScalarExecutor),
@@ -93,41 +94,65 @@ fn steady_state_requests_allocate_nothing() {
         ("parallel", &parallel),
     ];
 
-    for (name, exec) in backends {
-        for _ in 0..2 {
-            pool.put_image(engine.forward_with(&img, exec));
-            pool.put_image(engine.inverse_with(&packed, exec));
-        }
-        let fwd = allocs_during(|| {
-            pool.put_image(engine.forward_with(&img, exec));
-        });
-        assert_eq!(fwd, 0, "{name}: steady-state forward allocated {fwd}x");
-        let inv = allocs_during(|| {
-            pool.put_image(engine.inverse_with(&packed, exec));
-        });
-        assert_eq!(inv, 0, "{name}: steady-state inverse allocated {inv}x");
+    // periodic covers every scheme; symmetric re-runs the stencil
+    // schemes whose programs carry fold-table arenas (the PR-8 case —
+    // lifting folds are computed in-register, tables are the risk)
+    let mut workloads: Vec<(Scheme, Boundary)> =
+        Scheme::ALL.iter().map(|&s| (s, Boundary::Periodic)).collect();
+    workloads.extend([
+        (Scheme::SepConv, Boundary::Symmetric),
+        (Scheme::NsConv, Boundary::Symmetric),
+    ]);
 
-        // L=3 pyramid: a serving loop holds the lowered PyramidPlan
-        // (per-level geometry is request metadata, compiled once like
-        // the schedules), so the steady state is run_pyramid itself
-        let pyr = engine
-            .pyramid_plan(img.width, img.height, 3, false)
-            .unwrap();
-        for _ in 0..2 {
-            pool.put_image(exec.run_pyramid(&pyr, &img));
-        }
-        let pyd = allocs_during(|| {
-            pool.put_image(exec.run_pyramid(&pyr, &img));
-        });
-        assert_eq!(pyd, 0, "{name}: steady-state L=3 pyramid allocated {pyd}x");
+    for (scheme, boundary) in workloads {
+        let tag = format!("{}/{:?}", scheme.name(), boundary);
+        let engine = Engine::with_boundary(scheme, Wavelet::cdf97(), boundary);
+        let packed = engine.forward(&img);
 
-        // the measured requests were served, and served from the pool
-        let s = pool.stats();
-        assert!(s.hits > 0, "{name}: pool never hit");
+        for (name, exec) in backends {
+            for _ in 0..2 {
+                pool.put_image(engine.forward_with(&img, exec));
+                pool.put_image(engine.inverse_with(&packed, exec));
+            }
+            let fwd = allocs_during(|| {
+                pool.put_image(engine.forward_with(&img, exec));
+            });
+            assert_eq!(fwd, 0, "{tag} {name}: steady-state forward allocated {fwd}x");
+            let inv = allocs_during(|| {
+                pool.put_image(engine.inverse_with(&packed, exec));
+            });
+            assert_eq!(inv, 0, "{tag} {name}: steady-state inverse allocated {inv}x");
+
+            // L=3 pyramid: a serving loop holds the lowered PyramidPlan
+            // (per-level geometry is request metadata, compiled once
+            // like the schedules), so the steady state is run_pyramid
+            // itself — for stencil schemes this exercises one cached
+            // program per (kernel, level geometry)
+            let pyr = engine
+                .pyramid_plan(img.width, img.height, 3, false)
+                .unwrap();
+            for _ in 0..2 {
+                pool.put_image(exec.run_pyramid(&pyr, &img));
+            }
+            let pyd = allocs_during(|| {
+                pool.put_image(exec.run_pyramid(&pyr, &img));
+            });
+            assert_eq!(pyd, 0, "{tag} {name}: steady-state L=3 pyramid allocated {pyd}x");
+
+            // the measured requests were served, and served from the pool
+            let s = pool.stats();
+            assert!(s.hits > 0, "{tag} {name}: pool never hit");
+        }
     }
 
     // schedules were computed at most once per (plan, fuse) pair:
     // memoization means repeated scheduling returns the same object
+    let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
     let plan = engine.plan(dwt_accel::dwt::PlanVariant::Optimized);
     assert!(std::ptr::eq(plan.schedule(true), plan.schedule(true)));
+
+    // and warm stencil resolution really was cache-served
+    let st = dwt_accel::dwt::stencil_cache_stats();
+    assert!(st.hits > 0, "stencil programs never resolved warm");
+    assert!(st.resident > 0, "no compiled programs parked in plan caches");
 }
