@@ -13,10 +13,8 @@ fn native_cfg() -> CoordinatorConfig {
     CoordinatorConfig {
         artifacts_dir: None,
         workers: 2,
-        batch: BatchPolicy::default(),
         parallel_threshold: usize::MAX,
-        threads: 0,
-        simd: dwt_accel::dwt::default_simd(),
+        ..CoordinatorConfig::default()
     }
 }
 
@@ -29,12 +27,7 @@ fn main() {
     let st = bench(
         || {
             coord
-                .transform(Request {
-                    image: tiny.clone(),
-                    wavelet: "cdf53".into(),
-                    scheme: Scheme::SepLifting,
-                    ..Request::default()
-                })
+                .transform(Request::forward(tiny.clone(), "cdf53", Scheme::SepLifting))
                 .unwrap();
         },
         default_budget(),
@@ -54,12 +47,7 @@ fn main() {
         let st = bench(
             || {
                 coord
-                    .transform(Request {
-                        image: img.clone(),
-                        wavelet: "cdf97".into(),
-                        scheme,
-                        ..Request::default()
-                    })
+                    .transform(Request::forward(img.clone(), "cdf97", scheme))
                     .unwrap();
             },
             default_budget(),
@@ -90,22 +78,12 @@ fn main() {
             .unwrap();
             // warm the executable caches
             coord
-                .transform(Request {
-                    image: img.clone(),
-                    wavelet: "cdf97".into(),
-                    scheme: Scheme::NsPolyconv,
-                    ..Request::default()
-                })
+                .transform(Request::forward(img.clone(), "cdf97", Scheme::NsPolyconv))
                 .unwrap();
             let t0 = Instant::now();
             let handles: Vec<_> = (0..32)
                 .map(|_| {
-                    coord.submit(Request {
-                        image: img.clone(),
-                        wavelet: "cdf97".into(),
-                        scheme: Scheme::NsPolyconv,
-                        ..Request::default()
-                    })
+                    coord.submit(Request::forward(img.clone(), "cdf97", Scheme::NsPolyconv))
                 })
                 .collect();
             let mut lats = Vec::new();

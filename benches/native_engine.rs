@@ -18,9 +18,15 @@
 //! uncached compiled-stencil convolution at 512^2 and 1024^2 under the
 //! symmetric boundary (fold-table arenas), with live
 //! `allocs_per_request` — cached records must report 0, which the CI
-//! gate also hard-asserts.  Emits `BENCH_native.json` (schema v7) so
-//! future PRs can track the planned-vs-legacy, parallel-vs-scalar,
-//! pyramid, simd, fusion, pooled-throughput, and stencil trajectories.
+//! gate also hard-asserts; and an observability section (PR 9) that
+//! re-measures the fusion story through the execution tracer: each
+//! scheme runs with a `TraceSink` attached under the fused and unfused
+//! schedules, the measured barrier counts must reproduce the planner's
+//! `n_exec_barriers` exactly (asserted here and by the CI gate), and
+//! the per-phase wall-time sums record the measured fused-vs-unfused
+//! delta.  Emits `BENCH_native.json` (schema v8) so future PRs can
+//! track the planned-vs-legacy, parallel-vs-scalar, pyramid, simd,
+//! fusion, observability, pooled-throughput, and stencil trajectories.
 //!
 //! Flags: `--quick` caps the per-case budget for CI smoke runs.
 //! `PALLAS_THREADS` pins the parallel executor's thread count.
@@ -32,14 +38,15 @@ use dwt_accel::dwt::executor::{
 };
 use dwt_accel::dwt::simd::SimdExecutor;
 use dwt_accel::dwt::{
-    apply, lifting, Boundary, Engine, Image, KernelPlan, PlanExecutor, PlanVariant, Planes,
-    WorkspacePool,
+    apply, checkout_sink, lifting, retire_sink, Boundary, Engine, Image, KernelPlan,
+    PlanExecutor, PlanVariant, Planes, WorkspacePool,
 };
 use dwt_accel::gpusim::band_halo_bytes;
 use dwt_accel::polyphase::schemes::{self, Scheme};
 use dwt_accel::polyphase::wavelets::Wavelet;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Counting global allocator for the `allocs_per_request` column: the
@@ -175,6 +182,22 @@ struct FusionRecord {
     fused_ms: f64,
     unfused_ms: f64,
     barriers_before: usize,
+    barriers_after: usize,
+}
+
+struct ObservabilityRecord {
+    side: usize,
+    wavelet: &'static str,
+    scheme: &'static str,
+    /// Median traced wall time (sum over per-phase samples) with the
+    /// fused schedule, in ms.
+    fused_ms: f64,
+    /// The same under the unfused (textbook) schedule.
+    unfused_ms: f64,
+    /// Barriers the tracer *measured* for the unfused run — must equal
+    /// the planner's `n_exec_barriers(false)` (asserted here and in CI).
+    barriers_before: usize,
+    /// Measured barriers for the fused run.
     barriers_after: usize,
 }
 
@@ -543,14 +566,8 @@ fn main() {
     // pipelined vs serial pyramid levels at L = 5.  Timed backends are
     // bit-exact by construction; asserted before every timing.
     println!("\n--- fusion: fused vs unfused phase schedule (parallel x{threads}) ---\n");
-    let fused_par = ParallelExecutor::with_opts(
-        threads,
-        false,
-        SchedOpts {
-            fuse: true,
-            panel_rows: 0,
-        },
-    );
+    let fused_par =
+        ParallelExecutor::with_opts(threads, false, SchedOpts::default().with_fuse(true));
     let unfused_par = ParallelExecutor::with_opts(threads, false, SchedOpts::unfused());
     let tf = Table::new(&[5, 7, 13, 10, 10, 8, 9]);
     tf.header(&[
@@ -666,6 +683,80 @@ fn main() {
         });
     }
 
+    // observability section (PR 9): the fusion story re-told from
+    // *measurement* instead of plan inspection.  Each scheme runs
+    // traced (SchedOpts::with_trace) under the fused and unfused
+    // schedules on the band-parallel executor; the tracer's measured
+    // barrier counts must reproduce the planner's n_exec_barriers
+    // exactly (asserted here, and again by the CI gate against the
+    // fusion section), and the per-phase wall-time sums give the
+    // measured fused-vs-unfused delta the paper's launch-overhead
+    // argument predicts.
+    println!("\n--- observability: traced fused vs unfused (parallel x{threads}, cdf97) ---\n");
+    let to_ = Table::new(&[5, 13, 11, 11, 11, 12]);
+    to_.header(&["side", "scheme", "fused ms", "plain ms", "delta ms", "barriers"]);
+    let mut observes: Vec<ObservabilityRecord> = Vec::new();
+    let obs_reps = if quick { 3 } else { 9 };
+    let obs_side = 512usize;
+    let obs_img = Image::synthetic(obs_side, obs_side, 12);
+    let obs_planes = Planes::split(&obs_img);
+    for scheme in Scheme::ALL {
+        let w = Wavelet::cdf97();
+        let plan = KernelPlan::from_steps(&schemes::build(scheme, &w), Boundary::Periodic);
+        let traced_run = |fuse: bool| -> (usize, f64) {
+            let sink = checkout_sink();
+            let (barriers, ms) = {
+                let exec = ParallelExecutor::with_opts(
+                    threads,
+                    false,
+                    SchedOpts::default().with_fuse(fuse),
+                )
+                .traced(Arc::clone(&sink));
+                // warm caches, then keep the median of the traced sums
+                exec.run(&plan, &obs_planes);
+                let _ = sink.take();
+                let mut barriers = 0usize;
+                let mut times = Vec::with_capacity(obs_reps);
+                for _ in 0..obs_reps {
+                    std::hint::black_box(exec.run(&plan, std::hint::black_box(&obs_planes)));
+                    let t = sink.take();
+                    assert_eq!(
+                        t.barriers(),
+                        plan.n_exec_barriers(fuse),
+                        "{}: traced barriers disagree with the planner (fuse={fuse})",
+                        scheme.name()
+                    );
+                    assert_eq!(t.dropped, 0, "trace overflow at single level");
+                    barriers = t.barriers();
+                    times.push(t.total_nanos() as f64 / 1e6);
+                }
+                times.sort_by(f64::total_cmp);
+                (barriers, times[times.len() / 2])
+            };
+            retire_sink(sink);
+            (barriers, ms)
+        };
+        let (before, unfused_ms) = traced_run(false);
+        let (after, fused_ms) = traced_run(true);
+        to_.row(&[
+            format!("{obs_side}"),
+            scheme.name().into(),
+            format!("{fused_ms:.3}"),
+            format!("{unfused_ms:.3}"),
+            format!("{:+.3}", unfused_ms - fused_ms),
+            format!("{before} -> {after}"),
+        ]);
+        observes.push(ObservabilityRecord {
+            side: obs_side,
+            wavelet: "cdf97",
+            scheme: scheme.name(),
+            fused_ms,
+            unfused_ms,
+            barriers_before: before,
+            barriers_after: after,
+        });
+    }
+
     // throughput section (PR 7): requests/sec through the
     // zero-allocation steady state.  "pooled" is the arena request
     // path — cached schedules, workspace checkouts from the global
@@ -757,11 +848,8 @@ fn main() {
         for sside in [512usize, 1024] {
             let simg = Image::synthetic(sside, sside, 11);
             for cached in [true, false] {
-                let opts = SchedOpts {
-                    stencil_cache: cached,
-                    ..SchedOpts::default()
-                };
-                let ssimd = SingleExecutor::new(true, opts);
+                let opts = SchedOpts::default().with_stencil_cache(cached);
+                let ssimd = SingleExecutor::new(true, opts.clone());
                 let spar = ParallelExecutor::with_opts(threads, true, opts);
                 for (bname, exec) in [
                     ("simd", &ssimd as &dyn PlanExecutor),
@@ -848,16 +936,18 @@ fn main() {
         path,
         to_json(
             side, threads, quick, memcpy_gbs, &records, &larges, &pyramids, &simds, &fusions,
-            &throughputs, &stencils,
+            &observes, &throughputs, &stencils,
         ),
     ) {
         Ok(()) => println!(
             "\nwrote {path} ({} scheme records, {} pyramid records, {} simd records, \
-             {} fusion records, {} throughput records, {} stencil records)",
+             {} fusion records, {} observability records, {} throughput records, \
+             {} stencil records)",
             records.len(),
             pyramids.len(),
             simds.len(),
             fusions.len(),
+            observes.len(),
             throughputs.len(),
             stencils.len()
         ),
@@ -877,13 +967,14 @@ fn to_json(
     pyramids: &[PyramidRecord],
     simds: &[SimdRecord],
     fusions: &[FusionRecord],
+    observes: &[ObservabilityRecord],
     throughputs: &[ThroughputRecord],
     stencils: &[StencilRecord],
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"native_engine\",\n");
-    out.push_str("  \"schema\": 7,\n");
+    out.push_str("  \"schema\": 8,\n");
     out.push_str(&format!("  \"side\": {side},\n"));
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"quick\": {quick},\n"));
@@ -978,6 +1069,24 @@ fn to_json(
             r.barriers_before,
             r.barriers_after,
             if i + 1 == fusions.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"observability\": [\n");
+    for (i, r) in observes.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"side\": {}, \"wavelet\": \"{}\", \"scheme\": \"{}\", \
+             \"fused_ms\": {:.4}, \"unfused_ms\": {:.4}, \"barrier_delta_ms\": {:.4}, \
+             \"barriers_before\": {}, \"barriers_after\": {}}}{}\n",
+            r.side,
+            r.wavelet,
+            r.scheme,
+            r.fused_ms,
+            r.unfused_ms,
+            r.unfused_ms - r.fused_ms,
+            r.barriers_before,
+            r.barriers_after,
+            if i + 1 == observes.len() { "" } else { "," }
         ));
     }
     out.push_str("  ],\n");

@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     };
     let levels = 4;
     let engine = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97());
-    let packed = multilevel::forward(&engine, &img, levels);
+    let packed = engine.forward_multi(&img, levels)?;
 
     println!("subband energy by level (HL / LH / HH):");
     for (lvl, e) in multilevel::subband_energies(&packed, levels).iter().enumerate() {
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
                 *coded.at_mut(x, y) = q;
             }
         }
-        let rec = multilevel::inverse(&engine, &coded, levels);
+        let rec = engine.inverse_multi(&coded, levels)?;
         let psnr = rec.psnr(&img);
         // crude rate estimate: nonzeros * (log2(dynamic range) + sign)
         let bpp = kept as f64 * 12.0 / (img.width * img.height) as f64;

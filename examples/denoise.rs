@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example denoise
 
-use dwt_accel::dwt::{multilevel, Engine, Image};
+use dwt_accel::dwt::{Engine, Image};
 use dwt_accel::image::add_gaussian_noise;
 use dwt_accel::polyphase::schemes::Scheme;
 use dwt_accel::polyphase::wavelets::Wavelet;
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
         ("dd137", Scheme::SepLifting),
     ] {
         let engine = Engine::new(scheme, Wavelet::by_name(wname).unwrap());
-        let mut packed = multilevel::forward(&engine, &noisy, levels);
+        let mut packed = engine.forward_multi(&noisy, levels)?;
         // universal threshold sigma * sqrt(2 ln n), soft shrinkage
         let n = (clean.width * clean.height) as f64;
         let _ = n;
@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
                 *packed.at_mut(x, y) = s as f32;
             }
         }
-        let rec = multilevel::inverse(&engine, &packed, levels);
+        let rec = engine.inverse_multi(&packed, levels)?;
         println!(
             "denoised with {:>6} {:<13}: {:.2} dB",
             wname,

@@ -19,12 +19,7 @@ fn main() -> anyhow::Result<()> {
     //    PALLAS_SIMD=0 to fall back to scalar interiors; the
     //    coefficients are bit-identical either way.)
     let coord = Coordinator::new(CoordinatorConfig::default())?;
-    let resp = coord.transform(Request {
-        image: img.clone(),
-        wavelet: "cdf97".into(),
-        scheme: Scheme::NsPolyconv,
-        ..Request::default()
-    })?;
+    let resp = coord.transform(Request::forward(img.clone(), "cdf97", Scheme::NsPolyconv))?;
     println!(
         "forward via {} in {:.2} ms",
         resp.backend.name(),
@@ -56,13 +51,8 @@ fn main() -> anyhow::Result<()> {
     // 5. a deep Mallat pyramid through the same request path: levels > 1
     //    lowers to a PyramidPlan and executes in place on strided level
     //    views (band-parallel above the coordinator's size threshold)
-    let pyr = coord.transform(Request {
-        image: img.clone(),
-        wavelet: "cdf97".into(),
-        scheme: Scheme::NsPolyconv,
-        levels: 4,
-        ..Request::default()
-    })?;
+    let pyr =
+        coord.transform(Request::forward(img.clone(), "cdf97", Scheme::NsPolyconv).levels(4))?;
     println!(
         "4-level pyramid via {} in {:.2} ms",
         pyr.backend.name(),

@@ -46,12 +46,7 @@ fn main() -> anyhow::Result<()> {
         let t0 = Instant::now();
         let handles: Vec<_> = (0..n_requests)
             .map(|_| {
-                coord.submit(Request {
-                    image: img.clone(),
-                    wavelet: "cdf97".into(),
-                    scheme,
-                    ..Request::default()
-                })
+                coord.submit(Request::forward(img.clone(), "cdf97", scheme))
             })
             .collect();
         let mut backend = "?";
@@ -96,13 +91,10 @@ fn main() -> anyhow::Result<()> {
                         (small.clone(), [Scheme::NsPolyconv, Scheme::NsConv][i % 2], 1)
                     };
                     bytes += img.data.len() * 4;
-                    coord.submit(Request {
-                        image: img,
-                        wavelet: ["cdf97", "cdf53", "dd137"][i % 3].into(),
-                        scheme,
-                        levels,
-                        ..Request::default()
-                    })
+                    coord.submit(
+                        Request::forward(img, ["cdf97", "cdf53", "dd137"][i % 3], scheme)
+                            .levels(levels),
+                    )
                 })
                 .collect();
             for h in handles {

@@ -1,0 +1,246 @@
+"""Execution-trace accounting semantics, validated against the oracle.
+
+Mirrors PR 9's tracing layer in numpy: the per-phase accounting in
+`rust/src/dwt/executor.rs::phase_sample` (kernel counts by class, the
+panel count a phase body is blocked into, the bytes its kernels write)
+and the fixed-capacity trace buffer in `rust/src/dwt/trace.rs`
+(`ExecTrace` / `TraceSink`), then asserts
+
+* a traced request records EXACTLY one sample per scheduled phase, so
+  the measured barrier count must equal the fusion barrier counts the
+  Rust suite and `test_fusion_semantics` pin: cdf97 lifting 9 -> 7,
+  cdf53/dd137 lifting 4 -> 3, haar lifting -> 1 fused phase, and the
+  convolution schemes unchanged by fusion,
+* kernel-class totals are conserved across scheduling: fusion
+  re-partitions the stream, so the traced (lifts, scales, stencils)
+  sums must be identical fused vs unfused and equal the plan's own
+  kernel census,
+* bytes-touched accounting follows the executor's write masks — an
+  in-place phase charges popcount(union of written planes) x plane
+  bytes, a stencil charges all four output planes — which makes the
+  fused total never larger than the unfused total (merging phases
+  unions their masks),
+* panel counts follow `resolve_panel_rows` (the `auto_panel_rows`
+  twin), and a pyramid multiplies the per-level phase count by its
+  traced levels with each sample stamped by `begin_level`,
+* the fixed-capacity buffer (MAX_TRACE_PHASES = 64) drops samples past
+  capacity but still *counts* them: `barriers()` reports every phase
+  the request paid for.
+
+The Rust integration tests assert the same invariants on the real
+executors; this file guards the accounting *model* from a second,
+independent implementation so the two cannot drift silently.
+"""
+
+import math
+
+import pytest
+
+from compile import schemes
+from compile import wavelets as wv
+
+import test_executor_semantics as ex
+import test_fusion_semantics as fs
+
+WAVELET_NAMES = sorted(wv.WAVELETS)
+
+# the Rust trace buffer capacity (`trace::MAX_TRACE_PHASES`)
+MAX_TRACE_PHASES = 64
+
+
+# ------------------------------------------------------ accounting twin
+
+
+def phase_sample(phase, w2, h2, panel_rows=0):
+    """The twin of Rust `executor::phase_sample`: one record per
+    executed phase — kernel counts by class, the panel count the body
+    was blocked into, and the bytes the phase's kernels wrote."""
+    plane_bytes = w2 * h2 * 4
+    if phase[0] == "stencil":
+        lifts, scales, stencils, written = 0, 0, 1, 0b1111
+    else:
+        lifts = sum(1 for k in phase[1] if k[0] == "lift")
+        scales = sum(1 for k in phase[1] if k[0] == "scale")
+        stencils = 0
+        written = 0
+        for k in phase[1]:
+            written |= ex.written_planes(k)
+    panel = panel_rows if panel_rows else fs.auto_panel_rows(w2)
+    return {
+        "lifts": lifts,
+        "scales": scales,
+        "stencils": stencils,
+        "level": 0,
+        "panels": max(math.ceil(h2 / panel), 1),
+        "bytes": bin(written).count("1") * plane_bytes,
+    }
+
+
+def trace_of(plan, fuse, w2, h2, panel_rows=0):
+    """A traced single-level request: one sample per scheduled phase,
+    in execution order — what the Rust sink accumulates between
+    `checkout_sink` and `take`."""
+    return [phase_sample(p, w2, h2, panel_rows)
+            for p in fs.schedule(plan, fuse)]
+
+
+def pyramid_trace_of(plan, fuse, W, H, levels):
+    """A traced L-level pyramid: the per-level schedule re-runs on the
+    halved geometry of each level, every sample stamped with its level
+    (the twin of `pyramid.rs` calling `sink.begin_level`)."""
+    out = []
+    for l in range(levels):
+        w2, h2 = W >> (l + 1), H >> (l + 1)
+        for s in trace_of(plan, fuse, w2, h2):
+            s = dict(s)
+            s["level"] = l
+            out.append(s)
+    return out
+
+
+def kernel_totals(trace):
+    return (sum(s["lifts"] for s in trace),
+            sum(s["scales"] for s in trace),
+            sum(s["stencils"] for s in trace))
+
+
+def capped(trace):
+    """The fixed-capacity buffer: samples past MAX_TRACE_PHASES are
+    counted in `dropped`, never stored — `barriers` still reports every
+    phase (the twin of `ExecTrace::push` / `barriers`)."""
+    stored = trace[:MAX_TRACE_PHASES]
+    dropped = max(len(trace) - MAX_TRACE_PHASES, 0)
+    return {"stored": stored, "dropped": dropped,
+            "barriers": len(stored) + dropped}
+
+
+# --------------------------------------------------------------- tests
+
+
+def test_traced_phase_counts_pin_the_fusion_barriers():
+    """One sample per scheduled phase means the measured barrier count
+    IS the fusion barrier count — the exact numbers the Rust suite,
+    the fusion twin, and the coordinator integration tests pin."""
+    for wname, before, after in [("cdf97", 9, 7), ("cdf53", 4, 3),
+                                 ("dd137", 4, 3)]:
+        for scheme in ("ns_lifting", "sep_lifting"):
+            plan = ex.compile_plan(schemes.build(scheme, wv.get(wname)))
+            assert len(trace_of(plan, False, 32, 32)) == before, \
+                f"{wname} {scheme}"
+            assert len(trace_of(plan, True, 32, 32)) == after, \
+                f"{wname} {scheme}"
+    # haar lifting collapses to ONE traced phase under fusion
+    for scheme in ("ns_lifting", "sep_lifting"):
+        plan = ex.compile_plan(schemes.build(scheme, wv.get("haar")))
+        assert len(trace_of(plan, True, 32, 32)) == 1, f"haar {scheme}"
+    # stencil chains: fusion leaves the traced count unchanged
+    for scheme in ("sep_conv", "sep_polyconv", "ns_conv", "ns_polyconv"):
+        plan = ex.compile_plan(schemes.build(scheme, wv.get("cdf97")))
+        assert len(trace_of(plan, True, 32, 32)) == \
+            len(trace_of(plan, False, 32, 32)), scheme
+
+
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+@pytest.mark.parametrize("scheme", schemes.SCHEMES)
+def test_kernel_class_totals_are_conserved_across_scheduling(wname, scheme):
+    """Fusion re-partitions the kernel stream, never drops or
+    duplicates work — so the traced class totals cannot move, and they
+    must equal the plan's own census."""
+    w = wv.get(wname)
+    for chain in (schemes.build(scheme, w), schemes.build_inverse(scheme, w)):
+        plan = ex.compile_plan(chain)
+        flat = [k for g in plan for k in g]
+        census = (sum(1 for k in flat if k[0] == "lift"),
+                  sum(1 for k in flat if k[0] == "scale"),
+                  sum(1 for k in flat if k[0] == "stencil"))
+        fused = trace_of(plan, True, 48, 32)
+        unfused = trace_of(plan, False, 48, 32)
+        assert kernel_totals(fused) == kernel_totals(unfused) == census, \
+            f"{wname} {scheme}"
+
+
+@pytest.mark.parametrize("wname", WAVELET_NAMES)
+@pytest.mark.parametrize("scheme", schemes.SCHEMES)
+def test_bytes_accounting_follows_the_write_masks(wname, scheme):
+    """Every in-place sample charges popcount(written) x plane bytes;
+    every stencil sample charges all four planes.  Merging phases
+    unions the masks, so the fused bytes total never exceeds the
+    unfused one."""
+    w2, h2 = 48, 32
+    plane_bytes = w2 * h2 * 4
+    plan = ex.compile_plan(schemes.build(scheme, wv.get(wname)))
+    for fuse in (True, False):
+        for s in trace_of(plan, fuse, w2, h2):
+            assert s["bytes"] % plane_bytes == 0
+            assert 1 <= s["bytes"] // plane_bytes <= 4
+            if s["stencils"]:
+                assert s["bytes"] == 4 * plane_bytes
+                assert s["lifts"] == s["scales"] == 0
+    fused_bytes = sum(s["bytes"] for s in trace_of(plan, True, w2, h2))
+    unfused_bytes = sum(s["bytes"] for s in trace_of(plan, False, w2, h2))
+    assert fused_bytes <= unfused_bytes, f"{wname} {scheme}"
+
+
+def test_haar_fused_phase_accounts_every_plane():
+    """The haar showcase, hand-worked: the single fused phase holds the
+    whole lifting program, so it writes all four planes — 4 x plane
+    bytes in one sample."""
+    plan = ex.compile_plan(schemes.build("sep_lifting", wv.get("haar")))
+    trace = trace_of(plan, True, 32, 32)
+    assert len(trace) == 1
+    (s,) = trace
+    assert s["bytes"] == 4 * 32 * 32 * 4
+    assert s["stencils"] == 0 and s["lifts"] >= 1
+
+
+def test_panel_counts_follow_resolve_panel_rows():
+    """Explicit panel heights split h2 into ceil(h2/panel) panels; the
+    auto height (0) resolves through the L2 model, which floors at 4
+    rows — so tiny planes still report one panel, never zero."""
+    plan = ex.compile_plan(schemes.build("sep_lifting", wv.get("cdf97")))
+    for s in trace_of(plan, True, 64, 64, panel_rows=16):
+        assert s["panels"] == 4
+    for s in trace_of(plan, True, 64, 64, panel_rows=7):
+        assert s["panels"] == math.ceil(64 / 7)
+    # auto: 256 KiB / (64 * 16 B/row) = 256 rows per panel >= h2
+    for s in trace_of(plan, True, 64, 64):
+        assert s["panels"] == 1
+    # a 4096-wide plane hits the 4-row floor: 64 / 4 = 16 panels
+    for s in trace_of(plan, True, 4096, 64):
+        assert s["panels"] == 64 // 4
+
+
+@pytest.mark.parametrize("levels", [1, 2, 3])
+def test_pyramid_trace_multiplies_phases_and_stamps_levels(levels):
+    """An L-level pyramid pays the per-level barrier count L times,
+    and `begin_level` stamps each level's samples — the structure the
+    Rust coordinator integration test pins end to end."""
+    plan = ex.compile_plan(schemes.build("sep_lifting", wv.get("cdf97")))
+    per_level = len(fs.schedule(plan, True))
+    assert per_level == 7
+    trace = pyramid_trace_of(plan, True, 128, 64, levels)
+    assert len(trace) == levels * per_level
+    for l in range(levels):
+        stamped = [s for s in trace if s["level"] == l]
+        assert len(stamped) == per_level
+        # halved geometry per level shows up in the bytes charged
+        w2, h2 = 128 >> (l + 1), 64 >> (l + 1)
+        assert all(s["bytes"] % (w2 * h2 * 4) == 0 for s in stamped)
+
+
+def test_capacity_overflow_drops_samples_but_counts_barriers():
+    """Past MAX_TRACE_PHASES the buffer stops storing and starts
+    counting: a deep unfused cdf97 pyramid (9 phases x 8 levels = 72)
+    overflows a 64-slot trace by exactly 8, and `barriers` still
+    reports all 72 paid phases."""
+    plan = ex.compile_plan(schemes.build("sep_lifting", wv.get("cdf97")))
+    trace = pyramid_trace_of(plan, False, 512, 512, 8)
+    assert len(trace) == 72
+    t = capped(trace)
+    assert len(t["stored"]) == MAX_TRACE_PHASES
+    assert t["dropped"] == 8
+    assert t["barriers"] == 72
+    # the fused schedule of the same request fits: 7 x 8 = 56 <= 64
+    fused = capped(pyramid_trace_of(plan, True, 512, 512, 8))
+    assert fused["dropped"] == 0
+    assert fused["barriers"] == 56

@@ -1,6 +1,8 @@
 //! Service metrics: latency percentiles, throughput, per-backend
-//! counters.  Lock-cheap: one mutex around a bounded reservoir.
+//! counters, and — when execution tracing is on — per-phase timing
+//! aggregates.  Lock-cheap: one mutex around bounded reservoirs.
 
+use crate::dwt::trace::ExecTrace;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -47,6 +49,14 @@ struct Inner {
     per_backend: [u64; 4],
     pyramid_requests: u64,
     max_levels: usize,
+    traced_requests: u64,
+    /// Per phase-index reservoirs of phase wall times (nanoseconds),
+    /// filled by [`Metrics::record_trace`].  Index `i` aggregates the
+    /// `i`-th barriered phase across traced requests.
+    phase_ns: Vec<Vec<u64>>,
+    /// Last measured barrier count per scheme name — the runtime
+    /// analogue of the plan's `n_exec_barriers`.
+    trace_barriers: Vec<(&'static str, u64)>,
 }
 
 /// Aggregated service metrics (thread-safe).
@@ -91,6 +101,19 @@ pub struct Summary {
     pub stencil_cache_misses: u64,
     /// Compiled programs currently parked in plan geometry caches.
     pub stencil_cache_resident: u64,
+    /// Requests that carried an execution trace (0 unless the
+    /// coordinator runs with `trace` on).
+    pub traced_requests: u64,
+    /// p50 phase wall time in microseconds, indexed by phase position:
+    /// entry `i` summarizes the `i`-th barriered phase across every
+    /// traced request.  Empty until a trace is recorded.
+    pub phase_p50_us: Vec<u64>,
+    /// p99 phase wall time in microseconds, same indexing.
+    pub phase_p99_us: Vec<u64>,
+    /// Measured barriers per scheme (latest traced request per scheme)
+    /// — for a single-level request this equals the plan's
+    /// `n_exec_barriers`, which the integration tests pin.
+    pub trace_barriers: Vec<(&'static str, u64)>,
 }
 
 impl Metrics {
@@ -125,6 +148,30 @@ impl Metrics {
             g.pyramid_requests += 1;
         }
         g.max_levels = g.max_levels.max(levels.max(1));
+    }
+
+    /// Fold one request's execution trace into the per-phase
+    /// aggregates.  Only called on traced requests, so the reservoir
+    /// growth here never touches the zero-allocation default path.
+    pub fn record_trace(&self, scheme: &'static str, trace: &ExecTrace) {
+        let mut g = self.inner.lock().unwrap();
+        g.traced_requests += 1;
+        for (i, p) in trace.phases().iter().enumerate() {
+            if g.phase_ns.len() <= i {
+                g.phase_ns.push(Vec::new());
+            }
+            let v = &mut g.phase_ns[i];
+            // bounded like the latency reservoir
+            if v.len() >= 100_000 {
+                v.clear();
+            }
+            v.push(p.nanos);
+        }
+        let barriers = trace.barriers() as u64;
+        match g.trace_barriers.iter_mut().find(|(s, _)| *s == scheme) {
+            Some(slot) => slot.1 = barriers,
+            None => g.trace_barriers.push((scheme, barriers)),
+        }
     }
 
     pub fn record_batch(&self, batch_size: usize) {
@@ -177,8 +224,28 @@ impl Metrics {
             stencil_cache_hits: stencil.hits,
             stencil_cache_misses: stencil.misses,
             stencil_cache_resident: stencil.resident,
+            traced_requests: g.traced_requests,
+            phase_p50_us: phase_pct(&g.phase_ns, 0.50),
+            phase_p99_us: phase_pct(&g.phase_ns, 0.99),
+            trace_barriers: g.trace_barriers.clone(),
         }
     }
+}
+
+/// Percentile of each phase index's wall-time reservoir, in
+/// microseconds.
+fn phase_pct(phase_ns: &[Vec<u64>], p: f64) -> Vec<u64> {
+    phase_ns
+        .iter()
+        .map(|v| {
+            if v.is_empty() {
+                return 0;
+            }
+            let mut s = v.clone();
+            s.sort_unstable();
+            s[((s.len() - 1) as f64 * p) as usize] / 1_000
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -273,6 +340,65 @@ mod tests {
         drop(plan);
         let after = Metrics::new().summary();
         assert!(after.stencil_cache_hits >= s.stencil_cache_hits);
+    }
+
+    #[test]
+    fn trace_aggregates_per_phase_index() {
+        use crate::dwt::trace::{PhaseSample, TraceSink};
+        let m = Metrics::new();
+        assert_eq!(m.summary().traced_requests, 0);
+        assert!(m.summary().phase_p50_us.is_empty());
+        let sink = TraceSink::new();
+        // four traced requests with distinct phase-0 durations (the
+        // first goes three phases deep, the rest stop at one) so the
+        // floor-indexed percentiles land on different elements
+        for (i, n) in [10_000u64, 20_000, 30_000, 40_000].iter().enumerate() {
+            sink.record_phase(PhaseSample {
+                nanos: *n,
+                lifts: 1,
+                ..PhaseSample::default()
+            });
+            if i == 0 {
+                for deep in [70_000, 80_000] {
+                    sink.record_phase(PhaseSample {
+                        nanos: deep,
+                        lifts: 1,
+                        ..PhaseSample::default()
+                    });
+                }
+            }
+            m.record_trace("sep_lifting", &sink.take());
+        }
+        let s = m.summary();
+        assert_eq!(s.traced_requests, 4);
+        // phase index 0 saw {10, 20, 30, 40}us; indices 1-2 only the
+        // first request
+        assert_eq!(s.phase_p50_us.len(), 3);
+        assert_eq!(s.phase_p50_us[0], 20);
+        assert_eq!(s.phase_p99_us[0], 30);
+        assert_eq!(s.phase_p50_us[2], 80);
+        assert_eq!(s.phase_p99_us[2], 80);
+        // barrier counts are latest-wins: the last request had 1 phase
+        assert_eq!(s.trace_barriers, vec![("sep_lifting", 1)]);
+    }
+
+    #[test]
+    fn trace_barriers_track_the_latest_per_scheme() {
+        use crate::dwt::trace::{PhaseSample, TraceSink};
+        let m = Metrics::new();
+        let sink = TraceSink::new();
+        for phases in [7usize, 9] {
+            for _ in 0..phases {
+                sink.record_phase(PhaseSample::default());
+            }
+            m.record_trace("ns_lifting", &sink.take());
+        }
+        sink.record_phase(PhaseSample::default());
+        m.record_trace("sep_conv", &sink.take());
+        let s = m.summary();
+        assert_eq!(s.trace_barriers.len(), 2);
+        assert!(s.trace_barriers.contains(&("ns_lifting", 9)));
+        assert!(s.trace_barriers.contains(&("sep_conv", 1)));
     }
 
     #[test]

@@ -31,5 +31,5 @@ pub mod worker;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
-pub use service::{Coordinator, CoordinatorConfig, Request, Response};
+pub use service::{Coordinator, CoordinatorConfig, Request, RequestError, Response};
 pub use tiler::TileGrid;

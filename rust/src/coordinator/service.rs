@@ -9,6 +9,7 @@ use crate::dwt::executor::{
     default_fuse, default_threads, ParallelExecutor, PlanExecutor, SchedOpts, SingleExecutor,
 };
 use crate::dwt::simd::default_simd;
+use crate::dwt::trace::{checkout_sink, default_trace, retire_sink, ExecTrace};
 use crate::dwt::{Boundary, Engine, Image};
 use crate::polyphase::schemes::Scheme;
 use crate::polyphase::wavelets::Wavelet;
@@ -42,12 +43,130 @@ pub struct Request {
     pub boundary: Boundary,
 }
 
+impl Request {
+    /// A forward transform request with the default geometry knobs
+    /// (single level, periodic boundary).  Chain [`Request::inverse`],
+    /// [`Request::levels`], and [`Request::boundary`] to refine; the
+    /// struct fields stay public, so literal construction keeps
+    /// working too.
+    pub fn forward(image: Image, wavelet: impl Into<String>, scheme: Scheme) -> Self {
+        Self {
+            image,
+            wavelet: wavelet.into(),
+            scheme,
+            inverse: false,
+            levels: 1,
+            boundary: Boundary::Periodic,
+        }
+    }
+
+    /// Flip the request to the inverse transform (packed quadrants in,
+    /// image out).
+    pub fn inverse(mut self) -> Self {
+        self.inverse = true;
+        self
+    }
+
+    /// Set the Mallat pyramid depth (1 = single level).
+    pub fn levels(mut self, levels: usize) -> Self {
+        self.levels = levels;
+        self
+    }
+
+    /// Set the boundary handling.
+    pub fn boundary(mut self, boundary: Boundary) -> Self {
+        self.boundary = boundary;
+        self
+    }
+
+    /// Check the request against everything the engine can reject up
+    /// front: the wavelet name must resolve through
+    /// [`Wavelet::by_name`] and the image geometry must fit the
+    /// polyphase representation (even sides; divisible by `2^levels`
+    /// for pyramids).  [`Coordinator::submit`] calls this before any
+    /// work is scheduled — a 33x32 request is a typed `Err`, not a
+    /// panic deep inside `Planes::split` on a worker thread.
+    pub fn validate(&self) -> Result<(), RequestError> {
+        if Wavelet::by_name(&self.wavelet).is_none() {
+            return Err(RequestError::UnknownWavelet {
+                name: self.wavelet.clone(),
+            });
+        }
+        let (width, height) = (self.image.width, self.image.height);
+        if width == 0 || height == 0 || width % 2 != 0 || height % 2 != 0 {
+            return Err(RequestError::OddGeometry { width, height });
+        }
+        let levels = self.levels.max(1);
+        if levels > 1 {
+            if levels >= usize::BITS as usize {
+                return Err(RequestError::LevelsOutOfRange { levels });
+            }
+            let div = 1usize << levels;
+            if width % div != 0 || height % div != 0 {
+                return Err(RequestError::NotDivisible {
+                    width,
+                    height,
+                    levels,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Why a [`Request`] was rejected before any work was scheduled.
+/// Typed (and `PartialEq`) so callers can branch on the variant —
+/// `err.downcast_ref::<RequestError>()` on the `anyhow::Error` a
+/// [`Coordinator`] returns — instead of matching message strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// Image sides must be even and nonzero for the polyphase split.
+    OddGeometry { width: usize, height: usize },
+    /// Pyramid depth does not fit in the address space.
+    LevelsOutOfRange { levels: usize },
+    /// A `levels`-deep pyramid needs sides divisible by `2^levels`.
+    NotDivisible {
+        width: usize,
+        height: usize,
+        levels: usize,
+    },
+    /// The wavelet name did not resolve through [`Wavelet::by_name`].
+    UnknownWavelet { name: String },
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::OddGeometry { width, height } => {
+                write!(f, "image sides must be even and nonzero, got {width}x{height}")
+            }
+            Self::LevelsOutOfRange { levels } => write!(f, "levels {levels} out of range"),
+            Self::NotDivisible {
+                width,
+                height,
+                levels,
+            } => write!(
+                f,
+                "image {width}x{height} not divisible by 2^{levels} for a {levels}-level pyramid"
+            ),
+            Self::UnknownWavelet { name } => write!(f, "unknown wavelet {name}"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
 /// A completed transform.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub image: Image,
     pub backend: Backend,
     pub latency: Duration,
+    /// Per-phase execution trace, present when the coordinator runs
+    /// with [`CoordinatorConfig::trace`] and the request was served
+    /// natively (the PJRT path executes a fused artifact with no
+    /// phase structure to observe, so it reports `None`).
+    pub trace: Option<ExecTrace>,
 }
 
 /// Coordinator configuration.
@@ -82,6 +201,16 @@ pub struct CoordinatorConfig {
     /// `simd`, purely a performance knob: the fused schedule is
     /// bit-exact with the unfused one, so clients cannot observe it.
     pub fuse: bool,
+    /// Per-phase execution tracing for the native routes: when set,
+    /// every natively served request records an [`ExecTrace`] (wall
+    /// time, kernel classes, barriers, panels, bytes per phase) that
+    /// rides back on [`Response::trace`] and feeds the per-phase
+    /// aggregates in [`Metrics::summary`].  Defaults through
+    /// [`default_trace`] (`PALLAS_TRACE=1` turns it on service-wide).
+    /// Recording is allocation-free after warm-up (fixed-capacity
+    /// samples, pooled sinks), but the disabled default stays the
+    /// strictly zero-cost path.
+    pub trace: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -97,6 +226,7 @@ impl Default for CoordinatorConfig {
             threads: 0,
             simd: default_simd(),
             fuse: default_fuse(),
+            trace: default_trace(),
         }
     }
 }
@@ -216,10 +346,7 @@ impl Coordinator {
                 Arc::new(ParallelExecutor::with_opts(
                     threads,
                     self.cfg.simd,
-                    SchedOpts {
-                        fuse: self.cfg.fuse,
-                        panel_rows: 0,
-                    },
+                    SchedOpts::default().with_fuse(self.cfg.fuse),
                 ))
             })
             .clone()
@@ -235,46 +362,18 @@ impl Coordinator {
         e
     }
 
-    /// Reject geometry the polyphase engine cannot represent, before
-    /// any work is scheduled (a 33x32 request must be an `Err`, not a
-    /// panic deep inside `Planes::split` on a worker thread).
-    fn validate(request: &Request) -> Result<()> {
-        let (w, h) = (request.image.width, request.image.height);
-        if w == 0 || h == 0 || w % 2 != 0 || h % 2 != 0 {
-            return Err(anyhow!(
-                "image sides must be even and nonzero, got {w}x{h}"
-            ));
-        }
-        let levels = request.levels.max(1);
-        if levels > 1 {
-            if levels >= usize::BITS as usize {
-                return Err(anyhow!("levels {levels} out of range"));
-            }
-            let div = 1usize << levels;
-            if w % div != 0 || h % div != 0 {
-                return Err(anyhow!(
-                    "image {w}x{h} not divisible by 2^{levels} for a {levels}-level pyramid"
-                ));
-            }
-        }
-        Ok(())
-    }
-
     /// Submit a request; returns a handle to await the response on.
+    /// Invalid requests resolve to a typed [`RequestError`]
+    /// (recoverable via `downcast_ref` on the `anyhow::Error`) before
+    /// any work is scheduled.
     pub fn submit(&self, request: Request) -> Receiver<Result<Response>> {
         let (respond, handle) = channel();
         let start = Instant::now();
-        let wavelet = match Wavelet::by_name(&request.wavelet) {
-            Some(w) => w,
-            None => {
-                let _ = respond.send(Err(anyhow!("unknown wavelet {}", request.wavelet)));
-                return handle;
-            }
-        };
-        if let Err(e) = Self::validate(&request) {
-            let _ = respond.send(Err(e));
+        if let Err(e) = request.validate() {
+            let _ = respond.send(Err(anyhow::Error::new(e)));
             return handle;
         }
+        let wavelet = Wavelet::by_name(&request.wavelet).expect("validated above");
         // route 1: PJRT artifact (forward, serve size, single level,
         // periodic — the AOT artifacts bake in periodic algebra)
         if !request.inverse && request.levels <= 1 && request.boundary == Boundary::Periodic {
@@ -335,10 +434,12 @@ impl Coordinator {
         let threshold = self.cfg.parallel_threshold;
         let simd = self.cfg.simd;
         let fuse = self.cfg.fuse;
+        let tracing = self.cfg.trace;
         let use_parallel = request.image.width * request.image.height >= threshold;
         let parallel = use_parallel.then(|| self.parallel_executor());
         let inverse = request.inverse;
         let levels = request.levels.max(1);
+        let scheme = request.scheme;
         let img = request.image;
         self.pool.submit(move || {
             let backend = if parallel.is_some() {
@@ -348,36 +449,57 @@ impl Coordinator {
             } else {
                 Backend::Native
             };
-            let single = SingleExecutor::new(
-                simd,
-                SchedOpts {
-                    fuse,
-                    panel_rows: 0,
-                },
-            );
-            let exec: &dyn PlanExecutor = match &parallel {
-                Some(px) => px.as_ref(),
-                None => &single,
-            };
-            let result = if levels <= 1 {
-                if inverse {
-                    Ok(engine.inverse_with(&img, exec))
+            // tracing clones the executor with the sink attached —
+            // the shared band pool is reused by reference, so no
+            // threads spawn and nothing allocates once the sink free
+            // list is warm.  The block scopes those clones: their
+            // `Arc<TraceSink>` must drop before `retire_sink` for the
+            // sink to return to the free list.
+            let sink = tracing.then(checkout_sink);
+            let result = {
+                let single = SingleExecutor::new(simd, SchedOpts::default().with_fuse(fuse));
+                let traced_parallel;
+                let traced_single;
+                let exec: &dyn PlanExecutor = match (&parallel, &sink) {
+                    (Some(px), Some(s)) => {
+                        traced_parallel = px.traced(Arc::clone(s));
+                        &traced_parallel
+                    }
+                    (Some(px), None) => px.as_ref(),
+                    (None, Some(s)) => {
+                        traced_single = single.traced(Arc::clone(s));
+                        &traced_single
+                    }
+                    (None, None) => &single,
+                };
+                if levels <= 1 {
+                    if inverse {
+                        Ok(engine.inverse_with(&img, exec))
+                    } else {
+                        Ok(engine.forward_with(&img, exec))
+                    }
                 } else {
-                    Ok(engine.forward_with(&img, exec))
+                    engine
+                        .pyramid_plan(img.width, img.height, levels, inverse)
+                        .map(|pyr| exec.run_pyramid(&pyr.with_scalar_below(threshold), &img))
                 }
-            } else {
-                engine
-                    .pyramid_plan(img.width, img.height, levels, inverse)
-                    .map(|pyr| exec.run_pyramid(&pyr.with_scalar_below(threshold), &img))
             };
+            let trace = sink.as_ref().map(|s| s.take());
+            if let Some(s) = sink {
+                retire_sink(s);
+            }
             match result {
                 Ok(result) => {
                     let latency = start.elapsed();
                     metrics.record_leveled(latency, result.data.len() * 4, backend, levels);
+                    if let Some(t) = &trace {
+                        metrics.record_trace(scheme.name(), t);
+                    }
                     let _ = respond.send(Ok(Response {
                         image: result,
                         backend,
                         latency,
+                        trace,
                     }));
                 }
                 // geometry is validated in submit(); this is a guard
@@ -512,6 +634,9 @@ fn respond_one(
                 image,
                 backend: Backend::Pjrt,
                 latency,
+                // the AOT artifact is one fused launch — there is no
+                // phase structure to trace on this path
+                trace: None,
             }));
         }
         Err(e) => {

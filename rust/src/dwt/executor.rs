@@ -49,10 +49,12 @@ use super::plan::{
 };
 use super::planes::{Image, Planes};
 use super::pyramid::{self, PyramidPlan};
+use super::trace::{PhaseSample, TraceSink};
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, Once};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// A backend that can execute compiled plans.
 pub trait PlanExecutor: Send + Sync {
@@ -108,6 +110,17 @@ pub trait PlanExecutor: Send + Sync {
         a();
         b();
     }
+
+    /// The trace sink this backend records per-phase samples into, if
+    /// one was threaded through its [`SchedOpts`].  The pyramid driver
+    /// reads it to stamp levels ([`TraceSink::begin_level`]); the
+    /// coordinator takes the accumulated [`super::trace::ExecTrace`]
+    /// out after the request.  Backends without scheduling options
+    /// (the process-default [`ScalarExecutor`] / simd executor) are
+    /// never traced.
+    fn trace_sink(&self) -> Option<&TraceSink> {
+        None
+    }
 }
 
 /// The single-threaded default backend: the compiled schedule with
@@ -121,7 +134,7 @@ impl PlanExecutor for ScalarExecutor {
     }
 
     fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>) {
-        execute_scheduled(plan, planes, scratch, false, SchedOpts::default());
+        execute_scheduled(plan, planes, scratch, false, &SchedOpts::default());
     }
 }
 
@@ -129,7 +142,7 @@ impl PlanExecutor for ScalarExecutor {
 /// scheduling options — what the coordinator runs below its parallel
 /// threshold, so the `fuse` configuration applies to small requests
 /// exactly as it does to banded ones.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct SingleExecutor {
     vector: bool,
     opts: SchedOpts,
@@ -138,6 +151,16 @@ pub struct SingleExecutor {
 impl SingleExecutor {
     pub fn new(vector: bool, opts: SchedOpts) -> Self {
         Self { vector, opts }
+    }
+
+    /// A traced clone of this executor: same interior bodies and
+    /// scheduling, phases recorded into `sink`.  Cheap (no pool, no
+    /// heap) — the coordinator builds one per traced request.
+    pub fn traced(&self, sink: Arc<TraceSink>) -> Self {
+        Self {
+            vector: self.vector,
+            opts: self.opts.clone().with_trace(sink),
+        }
     }
 }
 
@@ -151,7 +174,11 @@ impl PlanExecutor for SingleExecutor {
     }
 
     fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>) {
-        execute_scheduled(plan, planes, scratch, self.vector, self.opts);
+        execute_scheduled(plan, planes, scratch, self.vector, &self.opts);
+    }
+
+    fn trace_sink(&self) -> Option<&TraceSink> {
+        self.opts.trace.as_deref()
     }
 }
 
@@ -180,8 +207,14 @@ pub fn default_fuse() -> bool {
 }
 
 /// Scheduling options shared by every backend: whether to fuse barrier
-/// groups and how tall the row panels of a fused phase are.
-#[derive(Debug, Clone, Copy)]
+/// groups, how tall the row panels of a fused phase are, how stencil
+/// programs resolve, and where per-phase trace samples go.
+///
+/// Construct with [`SchedOpts::default`] plus the `with_*` builders —
+/// the struct may grow more fields (it already did twice: PR 8 added
+/// `stencil_cache`, PR 9 added `trace`), and the builders keep call
+/// sites out of the breakage path that struct literals are on.
+#[derive(Debug, Clone)]
 pub struct SchedOpts {
     /// Merge consecutive barrier groups when no vertical dependency
     /// spans the boundary ([`KernelPlan::schedule`]).
@@ -195,6 +228,10 @@ pub struct SchedOpts {
     /// benches and bit-exactness tests compare against.  Defaults to
     /// the `PALLAS_STENCIL_CACHE` knob (on).
     pub stencil_cache: bool,
+    /// Per-phase trace sink ([`crate::dwt::trace`]).  `None` (the
+    /// default) keeps the request path branch-only: no timing, no
+    /// recording, no allocation — `rust/tests/zero_alloc.rs` pins it.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl Default for SchedOpts {
@@ -203,6 +240,7 @@ impl Default for SchedOpts {
             fuse: default_fuse(),
             panel_rows: 0,
             stencil_cache: default_stencil_cache(),
+            trace: None,
         }
     }
 }
@@ -210,10 +248,31 @@ impl Default for SchedOpts {
 impl SchedOpts {
     /// The historical per-barrier-group schedule (testing / comparison).
     pub fn unfused() -> Self {
-        Self {
-            fuse: false,
-            ..Self::default()
-        }
+        Self::default().with_fuse(false)
+    }
+
+    /// Set cross-group phase fusion.
+    pub fn with_fuse(mut self, fuse: bool) -> Self {
+        self.fuse = fuse;
+        self
+    }
+
+    /// Set the panel height (0 = auto, [`resolve_panel_rows`]).
+    pub fn with_panel_rows(mut self, panel_rows: usize) -> Self {
+        self.panel_rows = panel_rows;
+        self
+    }
+
+    /// Set compiled-stencil-program cache resolution.
+    pub fn with_stencil_cache(mut self, stencil_cache: bool) -> Self {
+        self.stencil_cache = stencil_cache;
+        self
+    }
+
+    /// Record per-phase samples into `sink`.
+    pub fn with_trace(mut self, sink: Arc<TraceSink>) -> Self {
+        self.trace = Some(sink);
+        self
     }
 }
 
@@ -239,9 +298,10 @@ pub(crate) fn execute_scheduled(
     planes: &mut Planes,
     scratch: &mut Option<Planes>,
     vector: bool,
-    opts: SchedOpts,
+    opts: &SchedOpts,
 ) {
     for phase in &plan.schedule(opts.fuse).phases {
+        let t0 = opts.trace.as_ref().map(|_| Instant::now());
         match phase {
             FusedPhase::InPlace(ks) => {
                 run_phase_single(plan, ks, planes, vector, opts.panel_rows)
@@ -254,6 +314,51 @@ pub(crate) fn execute_scheduled(
                 std::mem::swap(planes, out);
             }
         }
+        if let Some(sink) = &opts.trace {
+            sink.record_phase(phase_sample(plan, phase, planes, opts.panel_rows, t0.unwrap()));
+        }
+    }
+}
+
+/// Build the trace sample for one executed phase: kernel counts by
+/// class, the panel count the body was blocked into, and the bytes the
+/// phase's kernels wrote (written planes x plane bytes for in-place
+/// phases; a stencil rewrites all four output planes).  Shared by the
+/// single-threaded and band-parallel phase loops so both backends
+/// account identically.
+fn phase_sample(
+    plan: &KernelPlan,
+    phase: &FusedPhase,
+    planes: &Planes,
+    panel_rows: usize,
+    t0: Instant,
+) -> PhaseSample {
+    let plane_bytes = (planes.w2 * planes.h2 * 4) as u64;
+    let (lifts, scales, stencils, written) = match phase {
+        FusedPhase::InPlace(ks) => {
+            let (mut lifts, mut scales, mut written) = (0u32, 0u32, 0u8);
+            for &r in ks.iter() {
+                let k = plan.kernel(r);
+                written |= written_planes(k);
+                match k {
+                    Kernel::Lift { .. } => lifts += 1,
+                    Kernel::Scale { .. } => scales += 1,
+                    Kernel::Stencil(_) => unreachable!("stencils own their phase"),
+                }
+            }
+            (lifts, scales, 0u32, written.count_ones())
+        }
+        FusedPhase::Stencil(_) => (0, 0, 1, 4),
+    };
+    let panel = resolve_panel_rows(panel_rows, planes.stride);
+    PhaseSample {
+        nanos: t0.elapsed().as_nanos() as u64,
+        lifts,
+        scales,
+        stencils,
+        level: 0, // stamped by the sink from begin_level
+        panels: planes.h2.div_ceil(panel).max(1) as u32,
+        bytes: written as u64 * plane_bytes,
     }
 }
 
@@ -504,7 +609,9 @@ pub fn band_ranges(h2: usize, n: usize) -> Vec<Range<usize>> {
 /// output bit (the interiors are bit-exact either way), only how the
 /// interior arithmetic is issued.
 pub struct ParallelExecutor {
-    pool: BandPool,
+    /// Shared so a traced per-request clone ([`ParallelExecutor::traced`])
+    /// reuses the same worker threads instead of spawning a pool.
+    pool: Arc<BandPool>,
     vector: bool,
     opts: SchedOpts,
 }
@@ -530,9 +637,22 @@ impl ParallelExecutor {
     /// Full configuration: thread count, interior bodies, scheduling.
     pub fn with_opts(threads: usize, vector: bool, opts: SchedOpts) -> Self {
         Self {
-            pool: BandPool::new(threads),
+            pool: Arc::new(BandPool::new(threads)),
             vector,
             opts,
+        }
+    }
+
+    /// A traced clone of this executor: the *same* band pool (no
+    /// thread spawns, one `Arc` bump), same interior bodies and
+    /// scheduling, with phases recorded into `sink`.  This is how the
+    /// coordinator traces individual requests against its shared
+    /// parallel backend.
+    pub fn traced(&self, sink: Arc<TraceSink>) -> Self {
+        Self {
+            pool: Arc::clone(&self.pool),
+            vector: self.vector,
+            opts: self.opts.clone().with_trace(sink),
         }
     }
 
@@ -657,11 +777,12 @@ impl PlanExecutor for ParallelExecutor {
         if nbands <= 1 {
             // too short to band (or a 1-thread pool): single-band path,
             // keeping this executor's interior-body and scheduling
-            // selection
-            execute_scheduled(plan, planes, scratch, self.vector, self.opts);
+            // selection (the trace sink rides along in the opts)
+            execute_scheduled(plan, planes, scratch, self.vector, &self.opts);
             return;
         }
         for phase in &plan.schedule(self.opts.fuse).phases {
+            let t0 = self.opts.trace.as_ref().map(|_| Instant::now());
             match phase {
                 FusedPhase::InPlace(ks) => self.run_inplace_phase(plan, ks, planes, nbands),
                 FusedPhase::Stencil(r) => {
@@ -676,6 +797,15 @@ impl PlanExecutor for ParallelExecutor {
                     std::mem::swap(planes, out);
                 }
             }
+            if let Some(sink) = &self.opts.trace {
+                sink.record_phase(phase_sample(
+                    plan,
+                    phase,
+                    planes,
+                    self.opts.panel_rows,
+                    t0.unwrap(),
+                ));
+            }
         }
     }
 
@@ -688,6 +818,10 @@ impl PlanExecutor for ParallelExecutor {
                 f();
             }
         });
+    }
+
+    fn trace_sink(&self) -> Option<&TraceSink> {
+        self.opts.trace.as_deref()
     }
 }
 
@@ -946,35 +1080,27 @@ mod tests {
         let backends: Vec<(&str, Box<dyn PlanExecutor>)> = vec![
             (
                 "single fused",
-                Box::new(SingleExecutor::new(false, SchedOpts {
-                    fuse: true,
-                    panel_rows: 0,
-                    ..SchedOpts::default()
-                })),
+                Box::new(SingleExecutor::new(false, SchedOpts::default().with_fuse(true))),
             ),
             (
                 "simd fused",
-                Box::new(SingleExecutor::new(true, SchedOpts {
-                    fuse: true,
-                    panel_rows: 0,
-                    ..SchedOpts::default()
-                })),
+                Box::new(SingleExecutor::new(true, SchedOpts::default().with_fuse(true))),
             ),
             (
                 "parallel fused",
-                Box::new(ParallelExecutor::with_opts(4, false, SchedOpts {
-                    fuse: true,
-                    panel_rows: 0,
-                    ..SchedOpts::default()
-                })),
+                Box::new(ParallelExecutor::with_opts(
+                    4,
+                    false,
+                    SchedOpts::default().with_fuse(true),
+                )),
             ),
             (
                 "parallel+simd fused",
-                Box::new(ParallelExecutor::with_opts(3, true, SchedOpts {
-                    fuse: true,
-                    panel_rows: 5,
-                    ..SchedOpts::default()
-                })),
+                Box::new(ParallelExecutor::with_opts(
+                    3,
+                    true,
+                    SchedOpts::default().with_fuse(true).with_panel_rows(5),
+                )),
             ),
             (
                 "single unfused",
@@ -1022,16 +1148,16 @@ mod tests {
             let planes0 = Planes::split(&img);
             assert_eq!(planes0.h2, rows);
             for panel_rows in [1usize, 3, 0] {
-                let fused = ParallelExecutor::with_opts(24, false, SchedOpts {
-                    fuse: true,
-                    panel_rows,
-                    ..SchedOpts::default()
-                });
-                let unfused = ParallelExecutor::with_opts(24, false, SchedOpts {
-                    fuse: false,
-                    panel_rows,
-                    ..SchedOpts::default()
-                });
+                let fused = ParallelExecutor::with_opts(
+                    24,
+                    false,
+                    SchedOpts::default().with_fuse(true).with_panel_rows(panel_rows),
+                );
+                let unfused = ParallelExecutor::with_opts(
+                    24,
+                    false,
+                    SchedOpts::default().with_fuse(false).with_panel_rows(panel_rows),
+                );
                 for wav in [Wavelet::cdf97(), Wavelet::haar()] {
                     for s in Scheme::ALL {
                         for boundary in [Boundary::Periodic, Boundary::Symmetric] {
@@ -1057,11 +1183,7 @@ mod tests {
 
     #[test]
     fn fused_optimized_groupings_roundtrip_through_every_backend() {
-        let par = ParallelExecutor::with_opts(4, true, SchedOpts {
-            fuse: true,
-            panel_rows: 0,
-            ..SchedOpts::default()
-        });
+        let par = ParallelExecutor::with_opts(4, true, SchedOpts::default().with_fuse(true));
         let img = Image::synthetic(64, 48, 78);
         let planes0 = Planes::split(&img);
         for wav in Wavelet::all() {
@@ -1227,35 +1349,108 @@ mod tests {
     }
 
     #[test]
+    fn traced_execution_records_one_sample_per_barrier() {
+        // the measured trace must agree with the compiler: one sample
+        // per executed barrier, kernels conserved across the
+        // re-partition, on the single-threaded and banded paths alike —
+        // and tracing must never change an output bit
+        use crate::dwt::trace::checkout_sink;
+        let scalar = ScalarExecutor;
+        let img = Image::synthetic(64, 48, 80);
+        let planes0 = Planes::split(&img);
+        for wav in [Wavelet::cdf97(), Wavelet::haar()] {
+            for s in Scheme::ALL {
+                for fuse in [true, false] {
+                    let plan =
+                        KernelPlan::from_steps(&schemes::build(s, &wav), Boundary::Periodic);
+                    let (mut lifts, mut scales, mut stencils) = (0u64, 0u64, 0u64);
+                    for step in &plan.steps {
+                        for k in &step.kernels {
+                            match k {
+                                Kernel::Lift { .. } => lifts += 1,
+                                Kernel::Scale { .. } => scales += 1,
+                                Kernel::Stencil(_) => stencils += 1,
+                            }
+                        }
+                    }
+                    let want = scalar.run(&plan, &planes0);
+                    let sink = checkout_sink();
+                    let single = SingleExecutor::new(false, SchedOpts::default().with_fuse(fuse))
+                        .traced(Arc::clone(&sink));
+                    assert!(single.trace_sink().is_some());
+                    let got = single.run(&plan, &planes0);
+                    let t = sink.take();
+                    assert!(
+                        bit_equal(&want, &got),
+                        "{} {} fuse={fuse}: tracing changed the output",
+                        wav.name,
+                        s.name()
+                    );
+                    assert_eq!(
+                        t.barriers(),
+                        plan.n_exec_barriers(fuse),
+                        "{} {} fuse={fuse}: trace barriers != schedule barriers",
+                        wav.name,
+                        s.name()
+                    );
+                    assert_eq!(t.dropped, 0);
+                    assert_eq!(
+                        t.kernel_totals(),
+                        (lifts, scales, stencils),
+                        "{} {} fuse={fuse}: kernels not conserved",
+                        wav.name,
+                        s.name()
+                    );
+                    assert!(t.total_bytes() > 0);
+                    // the banded path accounts identically
+                    let psink = checkout_sink();
+                    let par =
+                        ParallelExecutor::with_opts(4, false, SchedOpts::default().with_fuse(fuse))
+                            .traced(Arc::clone(&psink));
+                    let pgot = par.run(&plan, &planes0);
+                    let pt = psink.take();
+                    assert!(bit_equal(&want, &pgot));
+                    assert_eq!(pt.barriers(), t.barriers());
+                    assert_eq!(pt.kernel_totals(), t.kernel_totals());
+                    assert_eq!(pt.total_bytes(), t.total_bytes());
+                    crate::dwt::trace::retire_sink(sink);
+                    crate::dwt::trace::retire_sink(psink);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn untraced_executors_report_no_sink() {
+        assert!(ScalarExecutor.trace_sink().is_none());
+        assert!(SingleExecutor::new(true, SchedOpts::default()).trace_sink().is_none());
+        assert!(ParallelExecutor::with_threads(2).trace_sink().is_none());
+    }
+
+    #[test]
     fn cached_stencil_programs_are_bit_exact_with_uncached() {
         // the geometry cache is a resolution shortcut, never a numeric
         // path: cached and per-pass-compiled programs must agree bit
         // for bit on every backend, conv scheme, boundary, and an
         // awkward-width/pyramid-ish mix of geometries through the SAME
         // plan (exercising multi-entry cache slots)
-        let uncached = SchedOpts {
-            stencil_cache: false,
-            ..SchedOpts::default()
-        };
-        let cached = SchedOpts {
-            stencil_cache: true,
-            ..SchedOpts::default()
-        };
+        let uncached = SchedOpts::default().with_stencil_cache(false);
+        let cached = SchedOpts::default().with_stencil_cache(true);
         let backends: Vec<(&str, Box<dyn PlanExecutor>, Box<dyn PlanExecutor>)> = vec![
             (
                 "single",
-                Box::new(SingleExecutor::new(false, cached)),
-                Box::new(SingleExecutor::new(false, uncached)),
+                Box::new(SingleExecutor::new(false, cached.clone())),
+                Box::new(SingleExecutor::new(false, uncached.clone())),
             ),
             (
                 "simd",
-                Box::new(SingleExecutor::new(true, cached)),
-                Box::new(SingleExecutor::new(true, uncached)),
+                Box::new(SingleExecutor::new(true, cached.clone())),
+                Box::new(SingleExecutor::new(true, uncached.clone())),
             ),
             (
                 "parallel",
-                Box::new(ParallelExecutor::with_opts(4, false, cached)),
-                Box::new(ParallelExecutor::with_opts(4, false, uncached)),
+                Box::new(ParallelExecutor::with_opts(4, false, cached.clone())),
+                Box::new(ParallelExecutor::with_opts(4, false, uncached.clone())),
             ),
             (
                 "parallel+simd",

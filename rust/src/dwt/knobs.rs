@@ -10,8 +10,9 @@
 //! Used by [`super::executor::default_threads`] (`PALLAS_THREADS`),
 //! [`super::simd::default_simd`] (`PALLAS_SIMD`),
 //! [`super::executor::default_fuse`] (`PALLAS_FUSE`),
-//! [`super::pool::default_pool`] (`PALLAS_POOL`) and
-//! [`super::plan::default_stencil_cache`] (`PALLAS_STENCIL_CACHE`).
+//! [`super::pool::default_pool`] (`PALLAS_POOL`),
+//! [`super::plan::default_stencil_cache`] (`PALLAS_STENCIL_CACHE`) and
+//! [`super::trace::default_trace`] (`PALLAS_TRACE`).
 
 use std::sync::Once;
 

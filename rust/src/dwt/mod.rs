@@ -76,6 +76,7 @@ pub mod planes;
 pub mod pool;
 pub mod pyramid;
 pub mod simd;
+pub mod trace;
 pub mod vecn;
 
 pub use engine::{Engine, PlanVariant};
@@ -92,3 +93,7 @@ pub use planes::{Image, Planes};
 pub use pool::{default_pool, PoolStats, WorkspacePool};
 pub use pyramid::PyramidPlan;
 pub use simd::{default_simd, SimdExecutor};
+pub use trace::{
+    checkout_sink, default_trace, retire_sink, ExecTrace, PhaseSample, TraceSink,
+    MAX_TRACE_PHASES,
+};

@@ -251,6 +251,9 @@ fn run_forward<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, img: &Imag
     ws.split_into(img);
     let mut scratch: Option<Planes> = None;
     for (i, lv) in pyr.levels().iter().enumerate() {
+        if let Some(sink) = exec.trace_sink() {
+            sink.begin_level(lv.level);
+        }
         ws.set_region(lv.w2, lv.h2);
         level_exec(exec, pyr, lv, &mut ws, &mut scratch);
         // the level's detail subbands are final: stream them out, and
@@ -301,6 +304,9 @@ fn run_inverse<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, packed: &I
     ws.set_region(deepest.w2, deepest.h2);
     load_ll(&mut ws, packed);
     for lv in pyr.levels().iter().rev() {
+        if let Some(sink) = exec.trace_sink() {
+            sink.begin_level(lv.level);
+        }
         ws.set_region(lv.w2, lv.h2);
         load_details(&mut ws, packed);
         level_exec(exec, pyr, lv, &mut ws, &mut scratch);

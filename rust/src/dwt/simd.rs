@@ -52,7 +52,7 @@ impl PlanExecutor for SimdExecutor {
     }
 
     fn execute_with(&self, plan: &KernelPlan, planes: &mut Planes, scratch: &mut Option<Planes>) {
-        execute_scheduled(plan, planes, scratch, true, SchedOpts::default());
+        execute_scheduled(plan, planes, scratch, true, &SchedOpts::default());
     }
 }
 

@@ -1,0 +1,350 @@
+//! Execution tracing: per-request, per-phase profiling for every
+//! backend (PR 9).
+//!
+//! The paper's central claim is a *step-count* argument — fewer
+//! barriered passes — and its companion GPU study shows the win is
+//! dominated by per-launch/per-barrier overhead, which only shows up
+//! under measurement.  This module is the measurement seam: a
+//! fixed-capacity [`ExecTrace`] filled through a [`TraceSink`] that is
+//! threaded to the executors via
+//! [`crate::dwt::executor::SchedOpts::trace`].  Each executed phase
+//! (the unit separated by a barrier) records one [`PhaseSample`]: wall
+//! time, kernel counts by class (lift / scale / stencil), the pyramid
+//! level it ran at, its panel count, and the bytes its kernels wrote.
+//!
+//! Cost discipline:
+//! * **disabled (the default)** — `SchedOpts::trace` is `None`; the
+//!   executors take one branch per phase and nothing else.  The
+//!   zero-allocation guarantee of `rust/tests/zero_alloc.rs` is
+//!   unchanged.
+//! * **enabled** — recording is allocation-free too: the sample buffer
+//!   is a fixed `[PhaseSample; MAX_TRACE_PHASES]` inline in the sink
+//!   (phases past capacity are counted in `dropped`, never grown), and
+//!   sinks are recycled through a process-wide free list
+//!   ([`checkout_sink`] / [`retire_sink`]) so a serving loop does not
+//!   allocate a sink per request once the list is warm.
+//!
+//! The `PALLAS_TRACE` environment knob ([`default_trace`]) turns
+//! tracing on service-wide in the coordinator; it parses strictly
+//! through [`super::knobs`] like every other knob.
+
+use super::knobs;
+use std::sync::{Arc, Mutex, Once};
+use std::time::Instant;
+
+/// Capacity of the inline sample buffer: enough for the deepest
+/// schedule the engine produces (an unfused cdf97 lifting plan has 9
+/// phases; an L-level pyramid multiplies by its traced levels), chosen
+/// so the sink never heap-allocates.
+pub const MAX_TRACE_PHASES: usize = 64;
+
+/// One executed phase, as the executor saw it.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PhaseSample {
+    /// Wall time of the phase body in nanoseconds.
+    pub nanos: u64,
+    /// Lift kernels executed in the phase.
+    pub lifts: u32,
+    /// Scale kernels executed in the phase.
+    pub scales: u32,
+    /// Stencil kernels executed in the phase (a stencil always owns
+    /// its phase, so this is 0 or 1).
+    pub stencils: u32,
+    /// Pyramid level the phase ran at (0 for single-level requests).
+    pub level: u32,
+    /// Row panels the phase body was blocked into.
+    pub panels: u32,
+    /// Bytes the phase's kernels wrote (written planes x plane bytes
+    /// for in-place phases, all four output planes for stencils).
+    pub bytes: u64,
+}
+
+/// The per-request trace: a fixed-capacity log of executed phases.
+///
+/// `barriers()` is the measured analogue of
+/// [`crate::dwt::KernelPlan::n_exec_barriers`] — for a single-level
+/// request the two must agree exactly, which the integration tests and
+/// the numpy twin (`python/tests/test_trace_semantics.py`) pin against
+/// the fusion barrier counts.
+#[derive(Debug, Clone)]
+pub struct ExecTrace {
+    n: usize,
+    /// Phases observed past [`MAX_TRACE_PHASES`] (counted, not stored).
+    pub dropped: usize,
+    /// Distinct pyramid levels the request executed (1 for single-level).
+    pub levels: usize,
+    samples: [PhaseSample; MAX_TRACE_PHASES],
+}
+
+impl Default for ExecTrace {
+    fn default() -> Self {
+        Self {
+            n: 0,
+            dropped: 0,
+            levels: 1,
+            samples: [PhaseSample::default(); MAX_TRACE_PHASES],
+        }
+    }
+}
+
+impl ExecTrace {
+    /// The recorded samples, in execution order.
+    pub fn phases(&self) -> &[PhaseSample] {
+        &self.samples[..self.n]
+    }
+
+    /// Barriers the request paid: every executed phase ends in one,
+    /// including phases dropped past capacity.
+    pub fn barriers(&self) -> usize {
+        self.n + self.dropped
+    }
+
+    /// Total traced wall time across phases, in nanoseconds.
+    pub fn total_nanos(&self) -> u64 {
+        self.phases().iter().map(|s| s.nanos).sum()
+    }
+
+    /// Kernel totals `(lifts, scales, stencils)` across phases —
+    /// conservation-checked against the plan by the tests: scheduling
+    /// re-partitions kernels, never drops or duplicates them.
+    pub fn kernel_totals(&self) -> (u64, u64, u64) {
+        self.phases().iter().fold((0, 0, 0), |(l, s, t), p| {
+            (l + p.lifts as u64, s + p.scales as u64, t + p.stencils as u64)
+        })
+    }
+
+    /// Bytes written across phases.
+    pub fn total_bytes(&self) -> u64 {
+        self.phases().iter().map(|s| s.bytes).sum()
+    }
+
+    fn push(&mut self, sample: PhaseSample) {
+        if self.n < MAX_TRACE_PHASES {
+            self.samples[self.n] = sample;
+            self.n += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.n = 0;
+        self.dropped = 0;
+        self.levels = 1;
+    }
+}
+
+struct SinkState {
+    trace: ExecTrace,
+    level: u32,
+}
+
+/// The collection point an executor records into: interior-mutable
+/// (executors only see `&self` through [`SchedOpts`]) and shared by
+/// every band of a parallel request.  The mutex is uncontended in
+/// practice — phases are recorded by the coordinating thread, one at a
+/// time, between fan-outs.
+pub struct TraceSink {
+    state: Mutex<SinkState>,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.state.lock().unwrap();
+        f.debug_struct("TraceSink")
+            .field("phases", &st.trace.barriers())
+            .field("level", &st.level)
+            .finish()
+    }
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(SinkState {
+                trace: ExecTrace::default(),
+                level: 0,
+            }),
+        }
+    }
+
+    /// Mark the pyramid level subsequent phases belong to.  The
+    /// pyramid driver calls this at the top of each level; single-level
+    /// requests never do (samples default to level 0).
+    pub fn begin_level(&self, level: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.level = level as u32;
+        st.trace.levels = st.trace.levels.max(level + 1);
+    }
+
+    /// Record one executed phase; `level` is filled in from the current
+    /// [`TraceSink::begin_level`] mark.
+    pub fn record_phase(&self, mut sample: PhaseSample) {
+        let mut st = self.state.lock().unwrap();
+        sample.level = st.level;
+        st.trace.push(sample);
+    }
+
+    /// Convenience for the executors: close a phase opened at `t0`.
+    pub fn record_timed(
+        &self,
+        t0: Instant,
+        lifts: u32,
+        scales: u32,
+        stencils: u32,
+        panels: u32,
+        bytes: u64,
+    ) {
+        self.record_phase(PhaseSample {
+            nanos: t0.elapsed().as_nanos() as u64,
+            lifts,
+            scales,
+            stencils,
+            level: 0,
+            panels,
+            bytes,
+        });
+    }
+
+    /// Take the accumulated trace out of the sink, leaving it reset for
+    /// the next request.
+    pub fn take(&self) -> ExecTrace {
+        let mut st = self.state.lock().unwrap();
+        let out = st.trace.clone();
+        st.trace.reset();
+        st.level = 0;
+        out
+    }
+}
+
+// ---------------------------------------------------------- sink pool
+
+/// Retired sinks kept for reuse: enough for a coordinator's worker
+/// fan-out, small enough to be irrelevant at rest.
+const SINK_POOL_CAP: usize = 16;
+
+static SINK_POOL: Mutex<Vec<Arc<TraceSink>>> = Mutex::new(Vec::new());
+
+/// Check a reset sink out of the process-wide free list (allocating
+/// one only when the list is empty — a serving loop reuses the same
+/// sinks request after request).
+pub fn checkout_sink() -> Arc<TraceSink> {
+    if let Some(s) = SINK_POOL.lock().unwrap().pop() {
+        return s;
+    }
+    Arc::new(TraceSink::new())
+}
+
+/// Return a sink to the free list.  Any trace still inside is
+/// discarded; sinks past the cap (or still shared with a live
+/// executor) are dropped instead of parked.
+pub fn retire_sink(sink: Arc<TraceSink>) {
+    let _ = sink.take();
+    if Arc::strong_count(&sink) != 1 {
+        return;
+    }
+    let mut pool = SINK_POOL.lock().unwrap();
+    if pool.len() < SINK_POOL_CAP {
+        pool.push(sink);
+    }
+}
+
+/// Tracing default for the coordinator: off unless `PALLAS_TRACE=1`.
+/// Invalid values warn once and keep the default (strict `knobs`
+/// parsing).
+pub fn default_trace() -> bool {
+    static WARN: Once = Once::new();
+    let raw = std::env::var("PALLAS_TRACE").ok();
+    knobs::parse_switch("PALLAS_TRACE", raw.as_deref(), &WARN, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_records_in_order_and_resets_on_take() {
+        let sink = TraceSink::new();
+        for i in 0..3u64 {
+            sink.record_phase(PhaseSample {
+                nanos: 10 + i,
+                lifts: i as u32,
+                scales: 1,
+                stencils: 0,
+                level: 0,
+                panels: 2,
+                bytes: 100 * (i + 1),
+            });
+        }
+        let t = sink.take();
+        assert_eq!(t.barriers(), 3);
+        assert_eq!(t.phases().len(), 3);
+        assert_eq!(t.phases()[0].nanos, 10);
+        assert_eq!(t.phases()[2].lifts, 2);
+        assert_eq!(t.total_nanos(), 33);
+        assert_eq!(t.total_bytes(), 600);
+        assert_eq!(t.kernel_totals(), (3, 3, 0));
+        // the sink starts clean for the next request
+        let empty = sink.take();
+        assert_eq!(empty.barriers(), 0);
+        assert_eq!(empty.levels, 1);
+    }
+
+    #[test]
+    fn capacity_overflow_counts_dropped_phases_without_growing() {
+        let sink = TraceSink::new();
+        for _ in 0..MAX_TRACE_PHASES + 5 {
+            sink.record_phase(PhaseSample::default());
+        }
+        let t = sink.take();
+        assert_eq!(t.phases().len(), MAX_TRACE_PHASES);
+        assert_eq!(t.dropped, 5);
+        // barriers still counts every phase the request paid for
+        assert_eq!(t.barriers(), MAX_TRACE_PHASES + 5);
+    }
+
+    #[test]
+    fn begin_level_stamps_subsequent_samples() {
+        let sink = TraceSink::new();
+        sink.begin_level(0);
+        sink.record_phase(PhaseSample::default());
+        sink.begin_level(2);
+        sink.record_phase(PhaseSample::default());
+        sink.record_phase(PhaseSample::default());
+        let t = sink.take();
+        assert_eq!(t.levels, 3);
+        assert_eq!(t.phases()[0].level, 0);
+        assert_eq!(t.phases()[1].level, 2);
+        assert_eq!(t.phases()[2].level, 2);
+    }
+
+    #[test]
+    fn sink_pool_recycles_reset_sinks() {
+        let a = checkout_sink();
+        a.record_phase(PhaseSample::default());
+        retire_sink(a);
+        let b = checkout_sink();
+        // whatever sink we got, it must be clean
+        assert_eq!(b.take().barriers(), 0);
+        retire_sink(b);
+    }
+
+    #[test]
+    fn retire_refuses_shared_sinks() {
+        let a = checkout_sink();
+        let held = Arc::clone(&a);
+        retire_sink(a);
+        // the held clone keeps recording into a sink that must NOT be
+        // handed to another request
+        held.record_phase(PhaseSample::default());
+        let b = checkout_sink();
+        assert!(!Arc::ptr_eq(&held, &b));
+        retire_sink(b);
+    }
+}

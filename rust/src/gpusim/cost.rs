@@ -11,6 +11,7 @@
 
 use super::device::{Device, Memory};
 use super::pipeline::{scheme_load, PipelineKind, SchemeLoad};
+use crate::dwt::trace::ExecTrace;
 use crate::polyphase::schemes::Scheme;
 use crate::polyphase::wavelets::Wavelet;
 
@@ -256,6 +257,72 @@ pub fn predict_fused(
         pixels,
         time_ms,
         gbs,
+    }
+}
+
+/// One measured-vs-predicted comparison: an [`ExecTrace`] from a real
+/// native run held against [`predict_fused`] for the same (scheme,
+/// wavelet, size, fusion) point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceValidation {
+    /// Barriers the executor actually paid ([`ExecTrace::barriers`]).
+    pub phases_measured: usize,
+    /// Phases the compiled schedule predicts for this fusion setting.
+    pub phases_predicted: usize,
+    /// Measured wall time summed over traced phases, in milliseconds.
+    pub measured_ms: f64,
+    /// The cost model's predicted time for the same point.
+    pub predicted_ms: f64,
+    /// `measured_ms / predicted_ms` (0 when the prediction is
+    /// degenerate).  Absolute agreement is not expected — the model is
+    /// parameterized by the paper's GPUs, the trace by this CPU — but
+    /// the *phase structure* must agree exactly, which
+    /// [`TraceValidation::phases_agree`] checks and the tests pin.
+    pub ratio: f64,
+}
+
+impl TraceValidation {
+    /// The structural half of the validation: the executor paid
+    /// exactly the barriers the compiled schedule predicts.
+    pub fn phases_agree(&self) -> bool {
+        self.phases_measured == self.phases_predicted
+    }
+}
+
+/// Hold a measured execution trace against the cost model: the gpusim
+/// `validate` hook.  For single-level requests the measured phase
+/// count must equal the schedule's (the model and the executor price
+/// the *same* compiled phases), making the cost model's launch-count
+/// axis empirically checkable on every traced request.
+pub fn validate_trace(
+    device: &Device,
+    pipeline: PipelineKind,
+    scheme: Scheme,
+    w: &Wavelet,
+    pixels: usize,
+    fuse: bool,
+    trace: &ExecTrace,
+) -> TraceValidation {
+    use crate::dwt::lifting::Boundary;
+    use crate::dwt::plan::KernelPlan;
+    let plan = KernelPlan::from_steps(
+        &crate::polyphase::schemes::build(scheme, w),
+        Boundary::Periodic,
+    );
+    let phases_predicted = plan.schedule(fuse).phases.len();
+    let predicted_ms = predict_fused(device, pipeline, scheme, w, pixels, fuse).time_ms;
+    let measured_ms = trace.total_nanos() as f64 / 1e6;
+    let ratio = if predicted_ms > 0.0 {
+        measured_ms / predicted_ms
+    } else {
+        0.0
+    };
+    TraceValidation {
+        phases_measured: trace.barriers(),
+        phases_predicted,
+        measured_ms,
+        predicted_ms,
+        ratio,
     }
 }
 
@@ -632,6 +699,54 @@ mod tests {
                 unfused.time_ms
             );
         }
+    }
+
+    #[test]
+    fn trace_validation_pins_the_phase_structure() {
+        use crate::dwt::lifting::Boundary;
+        use crate::dwt::plan::KernelPlan;
+        use crate::dwt::trace::{PhaseSample, TraceSink};
+        let w = Wavelet::cdf97();
+        let px = 2048 * 2048;
+        let plan = KernelPlan::from_steps(
+            &crate::polyphase::schemes::build(Scheme::NsLifting, &w),
+            Boundary::Periodic,
+        );
+        let sink = TraceSink::new();
+        for fuse in [true, false] {
+            // a faithful trace: one 1 ms phase per scheduled phase
+            let n = plan.schedule(fuse).phases.len();
+            for _ in 0..n {
+                sink.record_phase(PhaseSample {
+                    nanos: 1_000_000,
+                    lifts: 1,
+                    ..PhaseSample::default()
+                });
+            }
+            let t = sink.take();
+            let v = validate_trace(&amd(), PipelineKind::OpenCl, Scheme::NsLifting, &w, px, fuse, &t);
+            assert!(v.phases_agree(), "fuse={fuse}: {} != {}", v.phases_measured, v.phases_predicted);
+            assert_eq!(v.phases_measured, n);
+            assert!((v.measured_ms - n as f64).abs() < 1e-9);
+            assert!(v.predicted_ms > 0.0);
+            assert!(v.ratio > 0.0);
+        }
+        // fusion drops cdf97 lifting barriers 9 -> 7; a trace from a
+        // fused run held against the unfused schedule must disagree
+        let fused_n = plan.schedule(true).phases.len();
+        for _ in 0..fused_n {
+            sink.record_phase(PhaseSample::default());
+        }
+        let v = validate_trace(
+            &amd(),
+            PipelineKind::OpenCl,
+            Scheme::NsLifting,
+            &w,
+            px,
+            false,
+            &sink.take(),
+        );
+        assert!(!v.phases_agree());
     }
 
     #[test]

@@ -15,7 +15,8 @@ pub mod device;
 pub mod pipeline;
 
 pub use cost::{
-    lane_speedup, predict_fused, predict_pyramid, predict_vec, simulate, vector_coverage, SimPoint,
+    lane_speedup, predict_fused, predict_pyramid, predict_vec, simulate, validate_trace,
+    vector_coverage, SimPoint, TraceValidation,
 };
 pub use device::Device;
 pub use pipeline::{

@@ -238,14 +238,13 @@ fn cmd_transform(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(1);
-    let resp = coord.transform(Request {
-        image: img.clone(),
-        wavelet: wavelet.to_string(),
-        scheme,
-        inverse,
-        levels,
-        boundary,
-    })?;
+    let mut req = Request::forward(img.clone(), wavelet, scheme)
+        .levels(levels)
+        .boundary(boundary);
+    if inverse {
+        req = req.inverse();
+    }
+    let resp = coord.transform(req)?;
     let dt = t0.elapsed();
     let px = img.width * img.height;
     println!(
@@ -308,12 +307,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..n)
         .map(|_| {
-            coord.submit(Request {
-                image: img.clone(),
-                wavelet: wavelet.to_string(),
-                scheme,
-                ..Request::default()
-            })
+            coord.submit(Request::forward(img.clone(), wavelet, scheme))
         })
         .collect();
     for h in handles {

@@ -2,7 +2,7 @@
 //! executor path, request-level boundary selection, and coefficient
 //! equality across backends.
 
-use dwt_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Request};
+use dwt_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Request, RequestError};
 use dwt_accel::coordinator::metrics::Backend;
 use dwt_accel::dwt::{Boundary, Engine, Image};
 use dwt_accel::polyphase::schemes::Scheme;
@@ -19,6 +19,16 @@ fn native_cfg() -> CoordinatorConfig {
         threads: 4,
         simd: false,
         fuse: true,
+        trace: false,
+    }
+}
+
+fn traced_cfg() -> CoordinatorConfig {
+    // construct with the flag instead of setting PALLAS_TRACE: env
+    // mutation is not concurrency-safe under the parallel test runner
+    CoordinatorConfig {
+        trace: true,
+        ..native_cfg()
     }
 }
 
@@ -130,33 +140,50 @@ fn forward_then_inverse_roundtrip_via_coordinator() {
     assert!(rec.image.max_abs_diff(&img) < 1e-2);
 }
 
+/// The exact [`RequestError`] inside a coordinator error, or a panic.
+fn request_error(err: anyhow::Error) -> RequestError {
+    err.downcast_ref::<RequestError>()
+        .unwrap_or_else(|| panic!("expected a RequestError, got: {err}"))
+        .clone()
+}
+
 #[test]
 fn odd_dimension_request_is_an_error_not_a_panic() {
     // regression: a 33x32 request used to panic inside Planes::split on
-    // a worker thread; it must surface as a proper Err from the service
+    // a worker thread; it must surface as a *typed* Err from the service
     let coord = Coordinator::new(native_cfg()).unwrap();
-    let err = coord.transform(Request {
-        image: Image::synthetic(33, 32, 90),
-        wavelet: "cdf53".into(),
-        scheme: Scheme::SepLifting,
-        ..Request::default()
-    });
-    assert!(err.is_err(), "odd width must be rejected");
-    let err = coord.transform(Request {
-        image: Image::synthetic(32, 33, 90),
-        wavelet: "cdf97".into(),
-        scheme: Scheme::NsConv,
-        inverse: true,
-        ..Request::default()
-    });
-    assert!(err.is_err(), "odd height must be rejected");
+    let err = coord
+        .transform(Request::forward(
+            Image::synthetic(33, 32, 90),
+            "cdf53",
+            Scheme::SepLifting,
+        ))
+        .unwrap_err();
+    assert_eq!(
+        request_error(err),
+        RequestError::OddGeometry {
+            width: 33,
+            height: 32
+        }
+    );
+    let err = coord
+        .transform(
+            Request::forward(Image::synthetic(32, 33, 90), "cdf97", Scheme::NsConv).inverse(),
+        )
+        .unwrap_err();
+    assert_eq!(
+        request_error(err),
+        RequestError::OddGeometry {
+            width: 32,
+            height: 33
+        }
+    );
     // the service stays healthy afterwards
-    let ok = coord.transform(Request {
-        image: Image::synthetic(32, 32, 91),
-        wavelet: "cdf53".into(),
-        scheme: Scheme::SepLifting,
-        ..Request::default()
-    });
+    let ok = coord.transform(Request::forward(
+        Image::synthetic(32, 32, 91),
+        "cdf53",
+        Scheme::SepLifting,
+    ));
     assert!(ok.is_ok());
 }
 
@@ -164,34 +191,95 @@ fn odd_dimension_request_is_an_error_not_a_panic() {
 fn indivisible_multilevel_request_is_an_error() {
     let coord = Coordinator::new(native_cfg()).unwrap();
     // 36 is even but not divisible by 2^3
-    let err = coord.transform(Request {
-        image: Image::synthetic(36, 36, 92),
-        wavelet: "cdf53".into(),
-        scheme: Scheme::SepLifting,
-        levels: 3,
-        ..Request::default()
-    });
-    assert!(err.is_err());
-    let ok = coord.transform(Request {
-        image: Image::synthetic(40, 40, 92),
-        wavelet: "cdf53".into(),
-        scheme: Scheme::SepLifting,
-        levels: 3,
-        ..Request::default()
-    });
+    let err = coord
+        .transform(
+            Request::forward(Image::synthetic(36, 36, 92), "cdf53", Scheme::SepLifting).levels(3),
+        )
+        .unwrap_err();
+    assert_eq!(
+        request_error(err),
+        RequestError::NotDivisible {
+            width: 36,
+            height: 36,
+            levels: 3
+        }
+    );
+    let ok = coord.transform(
+        Request::forward(Image::synthetic(40, 40, 92), "cdf53", Scheme::SepLifting).levels(3),
+    );
     assert!(ok.is_ok());
 }
 
 #[test]
 fn unknown_wavelet_is_an_error() {
     let coord = Coordinator::new(native_cfg()).unwrap();
-    let err = coord.transform(Request {
-        image: Image::synthetic(16, 16, 53),
-        wavelet: "db4".into(),
-        scheme: Scheme::SepLifting,
-        ..Request::default()
-    });
-    assert!(err.is_err());
+    let err = coord
+        .transform(Request::forward(
+            Image::synthetic(16, 16, 53),
+            "db4",
+            Scheme::SepLifting,
+        ))
+        .unwrap_err();
+    assert_eq!(
+        request_error(err),
+        RequestError::UnknownWavelet { name: "db4".into() }
+    );
+}
+
+#[test]
+fn absurd_pyramid_depth_is_a_typed_error() {
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let err = coord
+        .transform(
+            Request::forward(Image::synthetic(64, 64, 53), "cdf53", Scheme::SepLifting)
+                .levels(usize::BITS as usize),
+        )
+        .unwrap_err();
+    assert_eq!(
+        request_error(err),
+        RequestError::LevelsOutOfRange {
+            levels: usize::BITS as usize
+        }
+    );
+}
+
+#[test]
+fn builder_requests_equal_struct_literals() {
+    // the builder is sugar, not a new type: it must produce exactly the
+    // literal it replaces, and validate() must agree with submit()
+    let img = Image::synthetic(64, 64, 50);
+    let built = Request::forward(img.clone(), "cdf97", Scheme::NsConv)
+        .inverse()
+        .levels(3)
+        .boundary(Boundary::Symmetric);
+    assert_eq!(built.wavelet, "cdf97");
+    assert_eq!(built.scheme, Scheme::NsConv);
+    assert!(built.inverse);
+    assert_eq!(built.levels, 3);
+    assert_eq!(built.boundary, Boundary::Symmetric);
+    assert!(built.validate().is_ok());
+    // defaults match Request::default's knobs
+    let plain = Request::forward(img.clone(), "cdf53", Scheme::SepLifting);
+    assert!(!plain.inverse);
+    assert_eq!(plain.levels, 1);
+    assert_eq!(plain.boundary, Boundary::Periodic);
+    // validate() rejects exactly what the coordinator rejects
+    assert_eq!(
+        Request::forward(Image::synthetic(33, 32, 1), "cdf53", Scheme::SepLifting)
+            .validate()
+            .unwrap_err(),
+        RequestError::OddGeometry {
+            width: 33,
+            height: 32
+        }
+    );
+    // ...and the coordinator serves a built request end to end
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let resp = coord
+        .transform(Request::forward(img.clone(), "cdf53", Scheme::NsLifting))
+        .unwrap();
+    let expect = Engine::new(Scheme::NsLifting, Wavelet::cdf53()).forward(&img);
+    assert!(resp.image.max_abs_diff(&expect) < 1e-4);
 }
 
 #[test]
@@ -231,6 +319,7 @@ fn pjrt_route_used_at_serve_size_and_batches_form() {
         threads: 0,
         simd: true,
         fuse: true,
+        trace: false,
     })
     .unwrap();
     assert!(coord.pjrt_available());
@@ -297,7 +386,7 @@ fn multilevel_request_roundtrip() {
         .unwrap();
     // the packed pyramid equals the engine-level multilevel
     let engine = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97());
-    let expect = dwt_accel::dwt::multilevel::forward(&engine, &img, 3);
+    let expect = engine.forward_multi(&img, 3).unwrap();
     assert!(fwd.image.max_abs_diff(&expect) < 1e-4);
     let rec = coord
         .transform(Request {
@@ -418,6 +507,7 @@ fn bad_artifacts_dir_falls_back_to_native() {
         threads: 0,
         simd: false,
         fuse: true,
+        trace: false,
     })
     .unwrap();
     assert!(!coord.pjrt_available());
@@ -446,6 +536,7 @@ fn corrupt_manifest_falls_back_to_native() {
         threads: 0,
         simd: false,
         fuse: true,
+        trace: false,
     })
     .unwrap();
     assert!(!coord.pjrt_available());
@@ -630,6 +721,7 @@ fn deterministic_thread_count_is_respected() {
         threads: 1,
         simd: false,
         fuse: true,
+        trace: false,
     })
     .unwrap();
     let img = Image::synthetic(64, 64, 96);
@@ -644,4 +736,147 @@ fn deterministic_thread_count_is_respected() {
     assert_eq!(resp.backend, Backend::NativeParallel);
     let expect = Engine::new(Scheme::SepLifting, Wavelet::cdf53()).forward(&img);
     assert_eq!(resp.image.max_abs_diff(&expect), 0.0);
+}
+
+#[test]
+fn traced_request_phase_count_equals_the_pinned_fusion_barriers() {
+    // PR-9 acceptance: the measured barrier count is the fusion pin
+    // (cdf97 lifting fuses 9 -> 7; haar lifting collapses to 1) — the
+    // same numbers test_fusion_semantics.py pins for the schedule
+    let coord = Coordinator::new(traced_cfg()).unwrap();
+    for (wname, scheme, phases) in [
+        ("cdf97", Scheme::NsLifting, 7usize),
+        ("cdf97", Scheme::SepLifting, 7),
+        ("haar", Scheme::NsLifting, 1),
+        ("haar", Scheme::SepLifting, 1),
+    ] {
+        let resp = coord
+            .transform(Request::forward(Image::synthetic(64, 64, 103), wname, scheme))
+            .unwrap();
+        let trace = resp.trace.expect("tracing is on");
+        assert_eq!(trace.barriers(), phases, "{wname} {}", scheme.name());
+        assert_eq!(trace.dropped, 0);
+        assert_eq!(trace.levels, 1);
+        assert!(trace.total_bytes() > 0);
+        let (lifts, scales, stencils) = trace.kernel_totals();
+        assert!(lifts >= 1, "{wname} {}: no lifts traced", scheme.name());
+        assert_eq!(stencils, 0, "lifting plans have no stencil kernels");
+        let _ = scales;
+    }
+    // an unfused coordinator pays (and measures) the full 9 barriers
+    let unfused = Coordinator::new(CoordinatorConfig {
+        fuse: false,
+        ..traced_cfg()
+    })
+    .unwrap();
+    let resp = unfused
+        .transform(Request::forward(
+            Image::synthetic(64, 64, 103),
+            "cdf97",
+            Scheme::NsLifting,
+        ))
+        .unwrap();
+    assert_eq!(resp.trace.expect("tracing on").barriers(), 9);
+    // tracing off: responses carry no trace at all
+    let off = Coordinator::new(native_cfg()).unwrap();
+    let resp = off
+        .transform(Request::forward(
+            Image::synthetic(64, 64, 103),
+            "cdf97",
+            Scheme::NsLifting,
+        ))
+        .unwrap();
+    assert!(resp.trace.is_none());
+}
+
+#[test]
+fn traced_pyramid_stamps_levels_and_multiplies_phases() {
+    // threshold 0 routes through the (traced) parallel executor and
+    // keeps every pyramid level on it — no untraced scalar fallback
+    let coord = Coordinator::new(CoordinatorConfig {
+        parallel_threshold: 0,
+        ..traced_cfg()
+    })
+    .unwrap();
+    let resp = coord
+        .transform(
+            Request::forward(Image::synthetic(128, 64, 104), "cdf97", Scheme::SepLifting)
+                .levels(3),
+        )
+        .unwrap();
+    assert_eq!(resp.backend, Backend::NativeParallel);
+    let trace = resp.trace.expect("tracing is on");
+    // 7 fused phases per level, three levels
+    assert_eq!(trace.barriers(), 3 * 7);
+    assert_eq!(trace.levels, 3);
+    for lvl in 0..3u32 {
+        assert_eq!(
+            trace.phases().iter().filter(|p| p.level == lvl).count(),
+            7,
+            "level {lvl}"
+        );
+    }
+}
+
+#[test]
+fn traced_metrics_summary_exposes_per_phase_aggregates() {
+    let coord = Coordinator::new(traced_cfg()).unwrap();
+    for seed in 0..4 {
+        coord
+            .transform(Request::forward(
+                Image::synthetic(64, 64, 105 + seed),
+                "cdf97",
+                Scheme::NsLifting,
+            ))
+            .unwrap();
+    }
+    let s = coord.metrics.summary();
+    assert_eq!(s.traced_requests, 4);
+    // one aggregate slot per fused phase of the only traced scheme
+    assert_eq!(s.phase_p50_us.len(), 7);
+    assert_eq!(s.phase_p99_us.len(), 7);
+    for i in 0..7 {
+        assert!(s.phase_p50_us[i] <= s.phase_p99_us[i], "phase {i}");
+    }
+    assert_eq!(s.trace_barriers, vec![("ns_lifting", 7)]);
+    // the untraced coordinator reports empty aggregates
+    let off = Coordinator::new(native_cfg()).unwrap();
+    off.transform(Request::forward(
+        Image::synthetic(64, 64, 110),
+        "cdf53",
+        Scheme::SepConv,
+    ))
+    .unwrap();
+    let s = off.metrics.summary();
+    assert_eq!(s.traced_requests, 0);
+    assert!(s.phase_p50_us.is_empty());
+    assert!(s.trace_barriers.is_empty());
+}
+
+#[test]
+fn traced_responses_validate_against_the_cost_model() {
+    // the gpusim validate hook: a measured trace's phase structure must
+    // agree with predict_fused's schedule for the same point
+    use dwt_accel::gpusim::{validate_trace, Device, PipelineKind};
+    let coord = Coordinator::new(traced_cfg()).unwrap();
+    let img = Image::synthetic(64, 64, 111);
+    let px = img.width * img.height;
+    for (scheme, fuse) in [(Scheme::NsLifting, true), (Scheme::SepConv, true)] {
+        let resp = coord
+            .transform(Request::forward(img.clone(), "cdf97", scheme))
+            .unwrap();
+        let trace = resp.trace.expect("tracing is on");
+        let v = validate_trace(
+            &Device::amd6970(),
+            PipelineKind::OpenCl,
+            scheme,
+            &Wavelet::cdf97(),
+            px,
+            fuse,
+            &trace,
+        );
+        assert!(v.phases_agree(), "{}: {} != {}", scheme.name(), v.phases_measured, v.phases_predicted);
+        assert!(v.predicted_ms > 0.0);
+        assert!(v.measured_ms >= 0.0);
+    }
 }

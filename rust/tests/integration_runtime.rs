@@ -5,7 +5,7 @@
 //! These tests are skipped (with a note) when `make artifacts` has not
 //! been run.
 
-use dwt_accel::dwt::{multilevel, Engine, Image};
+use dwt_accel::dwt::{Engine, Image};
 use dwt_accel::polyphase::schemes::Scheme;
 use dwt_accel::polyphase::wavelets::Wavelet;
 use dwt_accel::runtime::{default_artifacts_dir, Runtime};
@@ -101,7 +101,7 @@ fn pjrt_multilevel_matches_native_pyramid() {
         .execute_image("cdf97_ns_polyconv_ml3_fwd_256x256", &img)
         .unwrap();
     let engine = Engine::new(Scheme::NsPolyconv, Wavelet::cdf97());
-    let native = multilevel::forward(&engine, &img, 3);
+    let native = engine.forward_multi(&img, 3).unwrap();
     let err = out.max_abs_diff(&native);
     assert!(err < 5e-2, "multilevel err {err}");
     // and the AOT inverse restores the image
