@@ -24,15 +24,23 @@
 //! schedules, the measured barrier counts must reproduce the planner's
 //! `n_exec_barriers` exactly (asserted here and by the CI gate), and
 //! the per-phase wall-time sums record the measured fused-vs-unfused
-//! delta.  Emits `BENCH_native.json` (schema v8) so future PRs can
-//! track the planned-vs-legacy, parallel-vs-scalar, pyramid, simd,
-//! fusion, observability, pooled-throughput, and stencil trajectories.
+//! delta; and a robustness section (PR 10) that reports the fault
+//! layer's cost — requests/sec through a live coordinator with the
+//! injection registry disarmed vs armed-but-idle (report-only; the
+//! disarmed probe is a single relaxed load) — then drives injected
+//! band-job panics through the same coordinator and records the
+//! recovery counter, which must equal the injected count (asserted
+//! here and hard-gated in CI).  Emits `BENCH_native.json` (schema v9)
+//! so future PRs can track the planned-vs-legacy, parallel-vs-scalar,
+//! pyramid, simd, fusion, observability, pooled-throughput, stencil,
+//! and robustness trajectories.
 //!
 //! Flags: `--quick` caps the per-case budget for CI smoke runs.
 //! `PALLAS_THREADS` pins the parallel executor's thread count.
 
 use dwt_accel::benchutil::{bench, crop_paste_pyramid_forward, default_budget, gbs, Stats, Table};
-use dwt_accel::coordinator::tiler;
+use dwt_accel::coordinator::{tiler, Coordinator, CoordinatorConfig, Request};
+use dwt_accel::dwt::faults::{self, FaultSite};
 use dwt_accel::dwt::executor::{
     default_threads, ParallelExecutor, ScalarExecutor, SchedOpts, SingleExecutor,
 };
@@ -183,6 +191,23 @@ struct FusionRecord {
     unfused_ms: f64,
     barriers_before: usize,
     barriers_after: usize,
+}
+
+struct RobustnessRecord {
+    /// "off": registry disarmed (one relaxed load per probe).
+    /// "armed-idle": a site armed with an unreachable trigger, so every
+    /// probe pays the slow path but nothing fires — the off vs
+    /// armed-idle req/s delta bounds the cost of arming (report-only).
+    /// "injected": band-job panics driven through the coordinator; the
+    /// timing columns are zero and the panic columns carry the gate.
+    mode: &'static str,
+    requests_per_sec: f64,
+    ms_per_request: f64,
+    /// Panics injected through the registry ("injected" mode only).
+    injected_panics: u64,
+    /// `Metrics::summary().panics_recovered` afterwards — the CI gate
+    /// hard-asserts it equals `injected_panics`.
+    panics_recovered: u64,
 }
 
 struct ObservabilityRecord {
@@ -892,6 +917,98 @@ fn main() {
         );
     }
 
+    // robustness section (PR 10): the fault layer's cost and its
+    // recovery accounting, through a live coordinator at 512^2.
+    println!("\n--- robustness: fault registry off vs armed-idle vs injected (coordinator, 512^2) ---\n");
+    let rob_cfg = CoordinatorConfig {
+        artifacts_dir: None,
+        workers: 2,
+        parallel_threshold: 0, // every request exercises the band-parallel probes
+        threads,
+        simd: false,
+        fuse: true,
+        trace: false,
+        breaker_threshold: 0, // panic accounting without degradation
+        ..CoordinatorConfig::default()
+    };
+    let rob_img = Image::synthetic(512, 512, 13);
+    let mut robustness: Vec<RobustnessRecord> = Vec::new();
+    for mode in ["off", "armed-idle"] {
+        let coord = Coordinator::new(rob_cfg.clone()).unwrap();
+        faults::disarm_all();
+        if mode == "armed-idle" {
+            // armed with an unreachable trigger: every probe takes the
+            // slow path, nothing ever fires
+            faults::arm(FaultSite::SlowPhase, u64::MAX);
+        }
+        let mut run = || {
+            let resp = coord
+                .transform(Request::forward(
+                    rob_img.clone(),
+                    "cdf97",
+                    Scheme::SepLifting,
+                ))
+                .expect("healthy request");
+            std::hint::black_box(resp);
+        };
+        run(); // warm caches and the registry's env read
+        let s = bench(&mut run, budget, 3, 100);
+        faults::disarm_all();
+        let rps = 1.0 / s.median.as_secs_f64();
+        println!(
+            "{mode:<11} {rps:>8.1} req/s   {:.3} ms/req",
+            s.median_ms()
+        );
+        robustness.push(RobustnessRecord {
+            mode,
+            requests_per_sec: rps,
+            ms_per_request: s.median_ms(),
+            injected_panics: 0,
+            panics_recovered: 0,
+        });
+    }
+    {
+        let coord = Coordinator::new(rob_cfg.clone()).unwrap();
+        const INJECTED: u64 = 2;
+        for _ in 0..INJECTED {
+            faults::arm(FaultSite::BandJobPanic, 1);
+            let err = coord
+                .transform(Request::forward(
+                    rob_img.clone(),
+                    "cdf97",
+                    Scheme::SepLifting,
+                ))
+                .expect_err("injected panic must surface as Err");
+            assert!(
+                err.to_string().contains("recovered panic"),
+                "expected a typed Internal, got: {err}"
+            );
+        }
+        faults::disarm_all();
+        // the coordinator stays healthy on the same band pool...
+        coord
+            .transform(Request::forward(
+                rob_img.clone(),
+                "cdf97",
+                Scheme::SepLifting,
+            ))
+            .expect("coordinator healthy after recovered panics");
+        // ...and every injected panic is accounted (the CI gate
+        // re-checks this from the JSON)
+        let recovered = coord.metrics.summary().panics_recovered;
+        assert_eq!(recovered, INJECTED, "recovery accounting must be exact");
+        println!(
+            "injected    {INJECTED} panics -> {recovered} recovered (typed errors, coordinator healthy)"
+        );
+        robustness.push(RobustnessRecord {
+            mode: "injected",
+            requests_per_sec: 0.0,
+            ms_per_request: 0.0,
+            injected_panics: INJECTED,
+            panics_recovered: recovered,
+        });
+    }
+
     // tiled compatibility layer vs monolithic
     let engine = Engine::new(Scheme::SepLifting, Wavelet::cdf97());
     let s_mono = bench(
@@ -936,20 +1053,21 @@ fn main() {
         path,
         to_json(
             side, threads, quick, memcpy_gbs, &records, &larges, &pyramids, &simds, &fusions,
-            &observes, &throughputs, &stencils,
+            &observes, &throughputs, &stencils, &robustness,
         ),
     ) {
         Ok(()) => println!(
             "\nwrote {path} ({} scheme records, {} pyramid records, {} simd records, \
              {} fusion records, {} observability records, {} throughput records, \
-             {} stencil records)",
+             {} stencil records, {} robustness records)",
             records.len(),
             pyramids.len(),
             simds.len(),
             fusions.len(),
             observes.len(),
             throughputs.len(),
-            stencils.len()
+            stencils.len(),
+            robustness.len()
         ),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
@@ -970,11 +1088,12 @@ fn to_json(
     observes: &[ObservabilityRecord],
     throughputs: &[ThroughputRecord],
     stencils: &[StencilRecord],
+    robustness: &[RobustnessRecord],
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"native_engine\",\n");
-    out.push_str("  \"schema\": 8,\n");
+    out.push_str("  \"schema\": 9,\n");
     out.push_str(&format!("  \"side\": {side},\n"));
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"quick\": {quick},\n"));
@@ -1123,6 +1242,21 @@ fn to_json(
             r.ms_per_request,
             r.allocs_per_request,
             if i + 1 == stencils.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"robustness\": [\n");
+    for (i, r) in robustness.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"requests_per_sec\": {:.2}, \
+             \"ms_per_request\": {:.4}, \"injected_panics\": {}, \
+             \"panics_recovered\": {}}}{}\n",
+            r.mode,
+            r.requests_per_sec,
+            r.ms_per_request,
+            r.injected_panics,
+            r.panics_recovered,
+            if i + 1 == robustness.len() { "" } else { "," }
         ));
     }
     out.push_str("  ]\n}\n");

@@ -1,0 +1,304 @@
+"""Fault-tolerance semantics, validated against pure-python models.
+
+Mirrors PR 10's Rust fault layer: the deterministic fire-on-Nth-hit
+injection counters of `rust/src/dwt/faults.rs` and the per-backend
+circuit-breaker state machine of `rust/src/coordinator/service.rs`
+(`Breaker`).  Neither involves numerics — what needs a second
+implementation here is the *protocol*:
+
+* the injection registry: a site armed with trigger N fires exactly
+  once, on its Nth probe after arming, never before and never again;
+  disarmed sites never fire and count nothing; re-arming resets the
+  hit counter so arm/probe rounds are history-independent; sites are
+  independent; the `PALLAS_FAULTS` spec parser accepts well-formed
+  `site:N` entries and skips malformed ones without dropping the rest
+  (mirroring `knobs::parse_fault_spec`);
+* the circuit breaker: `threshold` recovered panics inside a sliding
+  `window` flip Closed -> Open; while Open, parallel-eligible requests
+  are degraded (admit() == False) until `cooldown` elapses, when the
+  next admit() becomes the Half-Open probe; a probe success closes the
+  breaker with a clean panic history, a probe failure re-opens it for
+  a fresh cooldown; panics outside the window age out of the Closed
+  history; `threshold == 0` disables the breaker entirely.
+
+The Rust side asserts the same transitions on the real implementation
+(`faults.rs` unit tests, the `rust/tests/chaos.rs` suite driving a
+live coordinator); this file pins the state machines from a second,
+independent implementation so the two cannot drift silently.  The
+timeline here is an explicit monotonic counter — the model, like the
+Rust breaker, only ever compares instants it was handed, so the tests
+are exactly reproducible.
+"""
+
+from collections import deque
+
+
+# --------------------------------------------------------------------------
+# models
+
+
+class FaultRegistry:
+    """The fire-on-Nth-hit counter model of `rust/src/dwt/faults.rs`.
+
+    trigger == 0 means disarmed.  A probe of an armed site increments
+    the hit counter and fires iff the counter lands exactly on the
+    trigger — single-shot by construction, no RNG anywhere.
+    """
+
+    SITES = ("band-panic", "pool-checkout", "slow-phase", "non-finite")
+
+    def __init__(self):
+        self.triggers = {s: 0 for s in self.SITES}
+        self.hits = {s: 0 for s in self.SITES}
+
+    def arm(self, site, nth):
+        self.hits[site] = 0
+        self.triggers[site] = max(int(nth), 1)
+
+    def disarm_all(self):
+        for s in self.SITES:
+            self.triggers[s] = 0
+            self.hits[s] = 0
+
+    def fire(self, site):
+        if self.triggers[site] == 0:
+            return False  # idle probes are not hits
+        self.hits[site] += 1
+        return self.hits[site] == self.triggers[site]
+
+
+def parse_fault_spec(raw):
+    """`knobs::parse_fault_spec`: comma-separated site:N, N >= 1;
+    malformed entries are skipped while well-formed ones still apply."""
+    if raw is None or not raw.strip():
+        return []
+    out = []
+    for part in raw.split(","):
+        part = part.strip()
+        if not part or ":" not in part:
+            continue
+        site, _, n = part.partition(":")
+        try:
+            n = int(n.strip())
+        except ValueError:
+            continue
+        if n >= 1:
+            out.append((site.strip(), n))
+    return out
+
+
+CLOSED, OPEN, HALF_OPEN = "closed", "open", "half-open"
+
+
+class Breaker:
+    """The `Breaker` state machine of `rust/src/coordinator/service.rs`.
+
+    Time is an explicit parameter (any monotonic number), exactly like
+    the Rust implementation threads `Instant::now()` through `admit` /
+    `record_panic` — the model never reads a clock of its own.
+    """
+
+    def __init__(self, threshold, window, cooldown):
+        self.threshold = threshold
+        self.window = window
+        self.cooldown = cooldown
+        self.state = CLOSED
+        self.recent = deque()  # panic instants, Closed state only
+        self.until = None  # reopen probe time, Open state only
+
+    def admit(self, now):
+        if self.threshold == 0:
+            return True
+        if self.state == OPEN:
+            if now >= self.until:
+                self.state = HALF_OPEN
+                return True
+            return False
+        return True  # Closed or Half-Open
+
+    def record_panic(self, now):
+        if self.threshold == 0:
+            return
+        if self.state == HALF_OPEN:
+            self.state = OPEN
+            self.until = now + self.cooldown
+        elif self.state == CLOSED:
+            self.recent.append(now)
+            while self.recent and now - self.recent[0] > self.window:
+                self.recent.popleft()
+            if len(self.recent) >= self.threshold:
+                self.state = OPEN
+                self.until = now + self.cooldown
+                self.recent.clear()
+
+    def record_success(self):
+        if self.threshold == 0:
+            return
+        if self.state == HALF_OPEN:
+            self.state = CLOSED
+            self.recent.clear()
+
+
+# --------------------------------------------------------------------------
+# registry pins (mirroring the faults.rs unit tests)
+
+
+def test_fires_exactly_once_on_the_nth_hit():
+    r = FaultRegistry()
+    r.arm("slow-phase", 3)
+    assert not r.fire("slow-phase")
+    assert not r.fire("slow-phase")
+    assert r.fire("slow-phase"), "third hit fires"
+    for _ in range(5):
+        assert not r.fire("slow-phase"), "single-shot: never again"
+    assert r.hits["slow-phase"] == 8
+
+
+def test_disarmed_sites_never_fire_and_count_nothing():
+    r = FaultRegistry()
+    for _ in range(4):
+        assert not r.fire("band-panic")
+    assert r.hits["band-panic"] == 0, "idle probes are not hits"
+
+
+def test_rearming_resets_the_counter():
+    r = FaultRegistry()
+    for _ in range(3):
+        r.arm("pool-checkout", 2)
+        assert not r.fire("pool-checkout")
+        assert r.fire("pool-checkout")
+
+
+def test_sites_are_independent():
+    r = FaultRegistry()
+    r.arm("band-panic", 1)
+    assert not r.fire("slow-phase")
+    assert not r.fire("non-finite")
+    assert r.fire("band-panic")
+
+
+def test_arm_clamps_the_trigger_to_at_least_one():
+    r = FaultRegistry()
+    r.arm("band-panic", 0)
+    assert r.fire("band-panic"), "nth=0 arms the very next probe"
+
+
+def test_fault_spec_parses_site_count_pairs():
+    assert parse_fault_spec(None) == []
+    assert parse_fault_spec("  ") == []
+    assert parse_fault_spec("band-panic:3,pool-checkout:1") == [
+        ("band-panic", 3),
+        ("pool-checkout", 1),
+    ]
+    assert parse_fault_spec(" slow-phase : 2 ") == [("slow-phase", 2)]
+    # malformed entries are skipped, well-formed ones still apply
+    assert parse_fault_spec("band-panic, slow-phase:0, non-finite:4") == [
+        ("non-finite", 4)
+    ]
+
+
+# --------------------------------------------------------------------------
+# breaker pins (mirroring rust/tests/chaos.rs with threshold=2,
+# window=10, cooldown=1 on an integer timeline)
+
+
+def make_breaker():
+    return Breaker(threshold=2, window=10.0, cooldown=1.0)
+
+
+def test_breaker_stays_closed_below_the_threshold():
+    b = make_breaker()
+    b.record_panic(0.0)
+    assert b.state == CLOSED
+    assert b.admit(0.1)
+
+
+def test_breaker_opens_at_the_threshold_and_degrades():
+    b = make_breaker()
+    b.record_panic(0.0)
+    b.record_panic(0.1)
+    assert b.state == OPEN
+    # open: parallel-eligible requests degrade until the cooldown
+    assert not b.admit(0.2)
+    assert not b.admit(1.0)  # until = 0.1 + 1.0
+
+
+def test_breaker_probe_success_closes_with_a_clean_history():
+    b = make_breaker()
+    b.record_panic(0.0)
+    b.record_panic(0.1)
+    assert b.admit(1.2), "cooldown elapsed: this request is the probe"
+    assert b.state == HALF_OPEN
+    b.record_success()
+    assert b.state == CLOSED
+    # the panic history was cleared: one new panic does not re-open
+    b.record_panic(1.3)
+    assert b.state == CLOSED
+
+
+def test_breaker_probe_failure_reopens_for_a_fresh_cooldown():
+    b = make_breaker()
+    b.record_panic(0.0)
+    b.record_panic(0.1)
+    assert b.admit(1.2)  # probe
+    b.record_panic(1.2)  # probe panicked
+    assert b.state == OPEN
+    assert not b.admit(2.0), "fresh cooldown runs from the probe failure"
+    assert b.admit(2.3), "until = 1.2 + 1.0"
+
+
+def test_breaker_panics_age_out_of_the_window():
+    b = make_breaker()
+    b.record_panic(0.0)
+    # 11 time units later the first panic is outside the 10-unit
+    # window; the second panic alone is below the threshold
+    b.record_panic(11.0)
+    assert b.state == CLOSED
+    assert b.admit(11.1)
+
+
+def test_breaker_threshold_zero_disables_everything():
+    b = Breaker(threshold=0, window=10.0, cooldown=1.0)
+    for t in range(20):
+        b.record_panic(float(t))
+    assert b.state == CLOSED
+    assert b.admit(0.0)
+
+
+def test_breaker_success_outside_half_open_is_a_no_op():
+    b = make_breaker()
+    b.record_panic(0.0)
+    b.record_success()
+    assert b.state == CLOSED
+    # the Closed-state panic history is NOT cleared by successes (only
+    # the window ages panics out): a second panic still opens
+    b.record_panic(0.5)
+    assert b.state == OPEN
+
+
+def test_end_to_end_injected_panic_recovery_accounting():
+    """The bench's robustness gate in miniature: every injected panic
+    is recovered exactly once, and the request stream stays healthy."""
+    registry = FaultRegistry()
+    breaker = Breaker(threshold=0, window=10.0, cooldown=1.0)
+    injected = recovered = served = 0
+    now = 0.0
+    for round_ in range(2):
+        registry.arm("band-panic", 1)
+        injected += 1
+        for _ in range(3):  # one request = up to 3 banded phases
+            now += 0.01
+            if registry.fire("band-panic"):
+                recovered += 1  # catch_unwind -> typed Internal
+                breaker.record_panic(now)
+                break
+        else:
+            served += 1
+    registry.disarm_all()
+    for _ in range(3):  # subsequent requests on the same coordinator
+        now += 0.01
+        assert breaker.admit(now)
+        assert not registry.fire("band-panic")
+        served += 1
+    assert injected == recovered == 2, "recovery accounting must be exact"
+    assert served == 3, "the coordinator keeps serving after recovery"

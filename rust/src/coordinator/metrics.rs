@@ -3,8 +3,16 @@
 //! aggregates.  Lock-cheap: one mutex around bounded reservoirs.
 
 use crate::dwt::trace::ExecTrace;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
+
+/// Lock the metrics mutex, recovering from poisoning: the guarded data
+/// are plain counters and reservoirs that are valid between any two
+/// operations, so a panic elsewhere in the process must never make the
+/// service unable to record or summarize.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Which execution path served a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,6 +65,10 @@ struct Inner {
     /// Last measured barrier count per scheme name — the runtime
     /// analogue of the plan's `n_exec_barriers`.
     trace_barriers: Vec<(&'static str, u64)>,
+    panics_recovered: u64,
+    deadline_exceeded: u64,
+    rejected_overload: u64,
+    degraded_requests: u64,
 }
 
 /// Aggregated service metrics (thread-safe).
@@ -114,6 +126,22 @@ pub struct Summary {
     /// — for a single-level request this equals the plan's
     /// `n_exec_barriers`, which the integration tests pin.
     pub trace_barriers: Vec<(&'static str, u64)>,
+    /// Executor/kernel panics caught at the request boundary and
+    /// converted into typed `RequestError::Internal` responses.  Under
+    /// the chaos suite's injected-panic runs this equals the injected
+    /// count exactly (the bench `robustness` section gates on it).
+    pub panics_recovered: u64,
+    /// Requests that missed their [`super::Request::deadline`] —
+    /// rejected before execution or cancelled cooperatively at a phase
+    /// boundary.
+    pub deadline_exceeded: u64,
+    /// Requests rejected at admission because `max_in_flight` was
+    /// reached (typed `RequestError::Overloaded`).
+    pub rejected_overload: u64,
+    /// Size-eligible parallel requests the circuit breaker routed to
+    /// the single-threaded SIMD executor while the parallel backend
+    /// cooled down.
+    pub degraded_requests: u64,
 }
 
 impl Metrics {
@@ -134,7 +162,7 @@ impl Metrics {
         backend: Backend,
         levels: usize,
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         // bounded reservoir: keep the most recent 1M samples
         if g.latencies_us.len() >= 1_000_000 {
             g.latencies_us.clear();
@@ -154,7 +182,7 @@ impl Metrics {
     /// aggregates.  Only called on traced requests, so the reservoir
     /// growth here never touches the zero-allocation default path.
     pub fn record_trace(&self, scheme: &'static str, trace: &ExecTrace) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         g.traced_requests += 1;
         for (i, p) in trace.phases().iter().enumerate() {
             if g.phase_ns.len() <= i {
@@ -175,9 +203,31 @@ impl Metrics {
     }
 
     pub fn record_batch(&self, batch_size: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         g.batches += 1;
         g.batched_requests += batch_size as u64;
+    }
+
+    /// Count a panic caught at the request boundary and converted to a
+    /// typed `RequestError::Internal`.
+    pub fn record_panic_recovered(&self) {
+        lock_clean(&self.inner).panics_recovered += 1;
+    }
+
+    /// Count a request that missed its deadline.
+    pub fn record_deadline_exceeded(&self) {
+        lock_clean(&self.inner).deadline_exceeded += 1;
+    }
+
+    /// Count a request rejected at admission (`max_in_flight`).
+    pub fn record_rejected_overload(&self) {
+        lock_clean(&self.inner).rejected_overload += 1;
+    }
+
+    /// Count a request the circuit breaker degraded to the
+    /// single-threaded executor.
+    pub fn record_degraded(&self) {
+        lock_clean(&self.inner).degraded_requests += 1;
     }
 
     pub fn summary(&self) -> Summary {
@@ -186,7 +236,7 @@ impl Metrics {
         // process, not just this coordinator's requests
         let pool = crate::dwt::WorkspacePool::global().stats();
         let stencil = crate::dwt::stencil_cache_stats();
-        let g = self.inner.lock().unwrap();
+        let g = lock_clean(&self.inner);
         let mut lat = g.latencies_us.clone();
         lat.sort_unstable();
         let pct = |p: f64| -> u64 {
@@ -228,6 +278,10 @@ impl Metrics {
             phase_p50_us: phase_pct(&g.phase_ns, 0.50),
             phase_p99_us: phase_pct(&g.phase_ns, 0.99),
             trace_barriers: g.trace_barriers.clone(),
+            panics_recovered: g.panics_recovered,
+            deadline_exceeded: g.deadline_exceeded,
+            rejected_overload: g.rejected_overload,
+            degraded_requests: g.degraded_requests,
         }
     }
 }
@@ -282,6 +336,30 @@ mod tests {
         assert_eq!(s.p99_us, 0);
         assert_eq!(s.pyramid_requests, 0);
         assert_eq!(s.max_levels, 1);
+        assert_eq!(s.panics_recovered, 0);
+        assert_eq!(s.deadline_exceeded, 0);
+        assert_eq!(s.rejected_overload, 0);
+        assert_eq!(s.degraded_requests, 0);
+    }
+
+    #[test]
+    fn fault_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_panic_recovered();
+        m.record_panic_recovered();
+        m.record_deadline_exceeded();
+        m.record_rejected_overload();
+        m.record_rejected_overload();
+        m.record_rejected_overload();
+        m.record_degraded();
+        let s = m.summary();
+        assert_eq!(s.panics_recovered, 2);
+        assert_eq!(s.deadline_exceeded, 1);
+        assert_eq!(s.rejected_overload, 3);
+        assert_eq!(s.degraded_requests, 1);
+        // fault accounting rides beside the request counters, it does
+        // not fabricate served requests
+        assert_eq!(s.requests, 0);
     }
 
     #[test]

@@ -30,6 +30,8 @@ pub mod tiler;
 pub mod worker;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::Metrics;
-pub use service::{Coordinator, CoordinatorConfig, Request, RequestError, Response};
+pub use metrics::{Backend, Metrics};
+pub use service::{
+    default_strict_input, Coordinator, CoordinatorConfig, Request, RequestError, Response,
+};
 pub use tiler::TileGrid;

@@ -1,25 +1,49 @@
 //! The coordinator service: routing, the PJRT executor thread with
 //! dynamic batching, and the native fallback paths (scalar or
 //! band-parallel plan executor, picked per request).
+//!
+//! The request path is fault-tolerant: every execution region is
+//! wrapped in `catch_unwind` so a panic anywhere inside the engine
+//! becomes a typed [`RequestError::Internal`] delivered through the
+//! normal response channel (never a hung receiver), requests carry
+//! optional deadlines enforced cooperatively at phase boundaries,
+//! admission control bounds the number of in-flight requests, and a
+//! per-backend circuit breaker degrades repeated-panic traffic from
+//! the band-parallel executor to the single-threaded SIMD executor
+//! for a cooldown before probing again.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{Backend, Metrics};
 use super::worker::WorkerPool;
 use crate::dwt::executor::{
-    default_fuse, default_threads, ParallelExecutor, PlanExecutor, SchedOpts, SingleExecutor,
+    default_fuse, default_threads, CancelToken, ParallelExecutor, PlanExecutor, SchedOpts,
+    SingleExecutor,
 };
 use crate::dwt::simd::default_simd;
 use crate::dwt::trace::{checkout_sink, default_trace, retire_sink, ExecTrace};
-use crate::dwt::{Boundary, Engine, Image};
+use crate::dwt::{faults, knobs, Boundary, Engine, Image};
 use crate::polyphase::schemes::Scheme;
 use crate::polyphase::wavelets::Wavelet;
 use crate::runtime::Runtime;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, Once, OnceLock, PoisonError};
 use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the data on poison.  The coordinator's
+/// shared state (engine cache, breaker) is only ever mutated through
+/// short, panic-free critical sections — a poisoned flag here means a
+/// *different* region unwound while a guard happened to be live, and
+/// refusing to serve would turn one recovered panic into a
+/// service-wide outage.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// A transform request.
 #[derive(Debug, Clone)]
@@ -41,6 +65,14 @@ pub struct Request {
     /// encode periodic polyphase algebra only — through the same
     /// per-(scheme, wavelet, boundary) compiled-plan cache.
     pub boundary: Boundary,
+    /// Optional deadline, measured from submission.  Enforced
+    /// cooperatively: the native executors check a [`CancelToken`]
+    /// once per fused phase (one branch, same zero-cost-off discipline
+    /// as tracing), so an expired request stops scheduling work at the
+    /// next phase boundary and resolves to
+    /// [`RequestError::DeadlineExceeded`] instead of burning the rest
+    /// of its transform.  `None` (the default) adds no work.
+    pub deadline: Option<Duration>,
 }
 
 impl Request {
@@ -57,6 +89,7 @@ impl Request {
             inverse: false,
             levels: 1,
             boundary: Boundary::Periodic,
+            deadline: None,
         }
     }
 
@@ -64,6 +97,13 @@ impl Request {
     /// image out).
     pub fn inverse(mut self) -> Self {
         self.inverse = true;
+        self
+    }
+
+    /// Set a deadline, measured from submission (see the field docs
+    /// for the cooperative-cancellation semantics).
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 
@@ -112,6 +152,47 @@ impl Request {
         }
         Ok(())
     }
+
+    /// Scan the input for NaN/Inf samples; the first offending index
+    /// becomes a typed [`RequestError::NonFiniteInput`].  Only called
+    /// when [`CoordinatorConfig::strict_input`] is on — the scan is a
+    /// single sequential pass over the pixel data, chunked eight lanes
+    /// at a time so the common all-finite case reduces to one
+    /// accumulated comparison per chunk.
+    pub fn validate_input(&self) -> Result<(), RequestError> {
+        if faults::fire(faults::FaultSite::NonFiniteInput) {
+            return Err(RequestError::NonFiniteInput { index: 0 });
+        }
+        match first_non_finite(&self.image.data) {
+            Some(index) => Err(RequestError::NonFiniteInput { index }),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Index of the first non-finite sample, if any.  Eight-lane chunks
+/// fold their finiteness checks into one boolean so the hot all-finite
+/// path stays branch-light; only a dirty chunk pays the per-lane
+/// position scan.
+fn first_non_finite(data: &[f32]) -> Option<usize> {
+    let mut chunks = data.chunks_exact(8);
+    let mut base = 0usize;
+    for chunk in &mut chunks {
+        let mut any = false;
+        for &x in chunk {
+            any |= !x.is_finite();
+        }
+        if any {
+            let off = chunk.iter().position(|x| !x.is_finite()).unwrap();
+            return Some(base + off);
+        }
+        base += 8;
+    }
+    chunks
+        .remainder()
+        .iter()
+        .position(|x| !x.is_finite())
+        .map(|off| base + off)
 }
 
 /// Why a [`Request`] was rejected before any work was scheduled.
@@ -132,6 +213,21 @@ pub enum RequestError {
     },
     /// The wavelet name did not resolve through [`Wavelet::by_name`].
     UnknownWavelet { name: String },
+    /// The input contained a NaN or infinite sample (first offending
+    /// index reported).  Only raised under
+    /// [`CoordinatorConfig::strict_input`].
+    NonFiniteInput { index: usize },
+    /// Admission control rejected the request: `max_in_flight`
+    /// requests were already executing.  Back off and retry.
+    Overloaded { limit: usize },
+    /// The request's [`Request::deadline`] expired before the
+    /// transform completed; partial work was discarded.
+    DeadlineExceeded,
+    /// A panic inside the engine was caught at the request boundary
+    /// and converted; `site` carries the panic payload when it was a
+    /// string.  The coordinator stays healthy — subsequent requests
+    /// are served normally.
+    Internal { site: String },
 }
 
 impl std::fmt::Display for RequestError {
@@ -150,6 +246,16 @@ impl std::fmt::Display for RequestError {
                 "image {width}x{height} not divisible by 2^{levels} for a {levels}-level pyramid"
             ),
             Self::UnknownWavelet { name } => write!(f, "unknown wavelet {name}"),
+            Self::NonFiniteInput { index } => {
+                write!(f, "non-finite input sample at index {index}")
+            }
+            Self::Overloaded { limit } => {
+                write!(f, "coordinator overloaded ({limit} requests in flight)")
+            }
+            Self::DeadlineExceeded => write!(f, "request deadline exceeded"),
+            Self::Internal { site } => {
+                write!(f, "internal error (recovered panic: {site})")
+            }
         }
     }
 }
@@ -211,6 +317,46 @@ pub struct CoordinatorConfig {
     /// samples, pooled sinks), but the disabled default stays the
     /// strictly zero-cost path.
     pub trace: bool,
+    /// Admission control: maximum requests in flight at once; the
+    /// next submission beyond the cap resolves immediately to
+    /// [`RequestError::Overloaded`] instead of queueing unboundedly.
+    /// `0` (the default) disables the cap.
+    pub max_in_flight: usize,
+    /// Reject inputs containing NaN/Inf samples with a typed
+    /// [`RequestError::NonFiniteInput`] before any work is scheduled.
+    /// Off by default — the scan is one extra pass over the input —
+    /// and defaults through [`default_strict_input`]
+    /// (`PALLAS_STRICT_INPUT=1` turns it on service-wide).
+    pub strict_input: bool,
+    /// Circuit breaker: this many recovered panics on the
+    /// band-parallel backend within [`Self::breaker_window`] open the
+    /// breaker — subsequent parallel-eligible requests degrade to the
+    /// single-threaded SIMD executor (reported as
+    /// [`Backend::NativeSimd`] and counted in
+    /// [`super::metrics::Summary::degraded_requests`]) until
+    /// [`Self::breaker_cooldown`] elapses, then one probe request
+    /// decides between closing and re-opening.  `0` disables the
+    /// breaker.
+    pub breaker_threshold: usize,
+    /// Sliding window over which panics count toward
+    /// [`Self::breaker_threshold`].
+    pub breaker_window: Duration,
+    /// How long an open breaker routes around the parallel backend
+    /// before probing it again.
+    pub breaker_cooldown: Duration,
+}
+
+/// Default for [`CoordinatorConfig::strict_input`]:
+/// `PALLAS_STRICT_INPUT=1` opts in service-wide, anything else (or
+/// unset) keeps the scan off.
+pub fn default_strict_input() -> bool {
+    static WARN: Once = Once::new();
+    knobs::parse_switch(
+        "PALLAS_STRICT_INPUT",
+        std::env::var("PALLAS_STRICT_INPUT").ok().as_deref(),
+        &WARN,
+        false,
+    )
 }
 
 impl Default for CoordinatorConfig {
@@ -227,11 +373,137 @@ impl Default for CoordinatorConfig {
             simd: default_simd(),
             fuse: default_fuse(),
             trace: default_trace(),
+            max_in_flight: 0,
+            strict_input: default_strict_input(),
+            breaker_threshold: 3,
+            breaker_window: Duration::from_secs(10),
+            breaker_cooldown: Duration::from_secs(1),
         }
     }
 }
 
-type Respond = Sender<Result<Response>>;
+/// An admitted request's slot in the in-flight count; dropping it —
+/// on any path, including an unwind — releases the slot, so admission
+/// control cannot leak capacity.
+struct Ticket(Arc<AtomicUsize>);
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// The response channel plus the request's admission ticket.  Every
+/// exit path sends through this (the ticket rides along and releases
+/// on drop), so a receiver always observes `Ok`/`Err` — never a
+/// `RecvError` from a sender dropped mid-panic.
+struct Respond {
+    tx: Sender<Result<Response>>,
+    ticket: Option<Ticket>,
+}
+
+impl Respond {
+    fn send(&self, result: Result<Response>) -> std::result::Result<(), ()> {
+        self.tx.send(result).map_err(|_| ())
+    }
+}
+
+/// Per-backend circuit breaker over the band-parallel executor.
+/// Closed: panics within `window` accumulate; at `threshold` the
+/// breaker opens.  Open: parallel-eligible requests degrade to the
+/// single-threaded SIMD executor until `cooldown` elapses.  Half-open:
+/// one probe request runs parallel — success closes the breaker,
+/// another panic re-opens it for a fresh cooldown.
+struct Breaker {
+    threshold: usize,
+    window: Duration,
+    cooldown: Duration,
+    state: Mutex<BreakerState>,
+}
+
+enum BreakerState {
+    Closed { recent: VecDeque<Instant> },
+    Open { until: Instant },
+    HalfOpen,
+}
+
+impl Breaker {
+    fn new(threshold: usize, window: Duration, cooldown: Duration) -> Self {
+        Self {
+            threshold,
+            window,
+            cooldown,
+            state: Mutex::new(BreakerState::Closed {
+                recent: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// May this request run on the parallel backend right now?
+    /// Transitions Open -> HalfOpen when the cooldown has elapsed (the
+    /// caller becomes the probe).
+    fn admit(&self, now: Instant) -> bool {
+        if self.threshold == 0 {
+            return true;
+        }
+        let mut st = lock_clean(&self.state);
+        match &*st {
+            BreakerState::Closed { .. } | BreakerState::HalfOpen => true,
+            BreakerState::Open { until } => {
+                if now >= *until {
+                    *st = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// A parallel-backend request panicked (and was recovered).
+    fn record_panic(&self, now: Instant) {
+        if self.threshold == 0 {
+            return;
+        }
+        let mut st = lock_clean(&self.state);
+        match &mut *st {
+            BreakerState::HalfOpen => {
+                // the probe failed: re-open for a fresh cooldown
+                *st = BreakerState::Open {
+                    until: now + self.cooldown,
+                };
+            }
+            BreakerState::Closed { recent } => {
+                recent.push_back(now);
+                while recent
+                    .front()
+                    .is_some_and(|t| now.duration_since(*t) > self.window)
+                {
+                    recent.pop_front();
+                }
+                if recent.len() >= self.threshold {
+                    *st = BreakerState::Open {
+                        until: now + self.cooldown,
+                    };
+                }
+            }
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// A parallel-backend request completed cleanly.
+    fn record_success(&self) {
+        if self.threshold == 0 {
+            return;
+        }
+        let mut st = lock_clean(&self.state);
+        if matches!(&*st, BreakerState::HalfOpen) {
+            *st = BreakerState::Closed {
+                recent: VecDeque::new(),
+            };
+        }
+    }
+}
 
 enum ExecMsg {
     Run {
@@ -263,6 +535,10 @@ pub struct Coordinator {
     /// Compiled-plan cache: engines (each holding its forward / inverse
     /// / optimized `KernelPlan`s) keyed by (scheme, wavelet, boundary).
     engines: Mutex<HashMap<(Scheme, &'static str, Boundary), Arc<Engine>>>,
+    /// Requests currently admitted (validated, not yet responded).
+    in_flight: Arc<AtomicUsize>,
+    /// Circuit breaker over the band-parallel backend.
+    breaker: Arc<Breaker>,
 }
 
 impl Coordinator {
@@ -315,6 +591,11 @@ impl Coordinator {
             }
         }
         let pool = WorkerPool::new(cfg.workers);
+        let breaker = Arc::new(Breaker::new(
+            cfg.breaker_threshold,
+            cfg.breaker_window,
+            cfg.breaker_cooldown,
+        ));
         Ok(Self {
             cfg,
             metrics,
@@ -325,6 +606,8 @@ impl Coordinator {
             pool,
             parallel: OnceLock::new(),
             engines: Mutex::new(HashMap::new()),
+            in_flight: Arc::new(AtomicUsize::new(0)),
+            breaker,
         })
     }
 
@@ -354,11 +637,11 @@ impl Coordinator {
 
     fn engine(&self, scheme: Scheme, wavelet: &Wavelet, boundary: Boundary) -> Arc<Engine> {
         let key = (scheme, wavelet.name, boundary);
-        if let Some(e) = self.engines.lock().unwrap().get(&key) {
+        if let Some(e) = lock_clean(&self.engines).get(&key) {
             return e.clone();
         }
         let e = Arc::new(Engine::with_boundary(scheme, wavelet.clone(), boundary));
-        self.engines.lock().unwrap().insert(key, e.clone());
+        lock_clean(&self.engines).insert(key, e.clone());
         e
     }
 
@@ -367,11 +650,32 @@ impl Coordinator {
     /// (recoverable via `downcast_ref` on the `anyhow::Error`) before
     /// any work is scheduled.
     pub fn submit(&self, request: Request) -> Receiver<Result<Response>> {
-        let (respond, handle) = channel();
+        let (tx, handle) = channel();
+        let mut respond = Respond { tx, ticket: None };
         let start = Instant::now();
         if let Err(e) = request.validate() {
             let _ = respond.send(Err(anyhow::Error::new(e)));
             return handle;
+        }
+        if self.cfg.strict_input {
+            if let Err(e) = request.validate_input() {
+                let _ = respond.send(Err(anyhow::Error::new(e)));
+                return handle;
+            }
+        }
+        // admission control: claim an in-flight slot before any work
+        // is scheduled; the Ticket rides on the Respond and releases
+        // the slot when the response is dropped — on every exit path
+        let limit = self.cfg.max_in_flight;
+        if limit > 0 {
+            let prev = self.in_flight.fetch_add(1, Ordering::AcqRel);
+            if prev >= limit {
+                self.in_flight.fetch_sub(1, Ordering::AcqRel);
+                self.metrics.record_rejected_overload();
+                let _ = respond.send(Err(anyhow::Error::new(RequestError::Overloaded { limit })));
+                return handle;
+            }
+            respond.ticket = Some(Ticket(Arc::clone(&self.in_flight)));
         }
         let wavelet = Wavelet::by_name(&request.wavelet).expect("validated above");
         // route 1: PJRT artifact (forward, serve size, single level,
@@ -431,6 +735,7 @@ impl Coordinator {
     fn native_async(&self, wavelet: Wavelet, request: Request, respond: Respond, start: Instant) {
         let engine = self.engine(request.scheme, &wavelet, request.boundary);
         let metrics = self.metrics.clone();
+        let breaker = Arc::clone(&self.breaker);
         let threshold = self.cfg.parallel_threshold;
         let simd = self.cfg.simd;
         let fuse = self.cfg.fuse;
@@ -440,11 +745,26 @@ impl Coordinator {
         let inverse = request.inverse;
         let levels = request.levels.max(1);
         let scheme = request.scheme;
+        let cancel = request
+            .deadline
+            .map(|d| CancelToken::with_deadline(start + d));
         let img = request.image;
         self.pool.submit(move || {
-            let backend = if parallel.is_some() {
+            // deadline already gone (queueing ate it): reject before
+            // touching the engine
+            if cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                metrics.record_deadline_exceeded();
+                let _ = respond.send(Err(anyhow::Error::new(RequestError::DeadlineExceeded)));
+                return;
+            }
+            // circuit breaker: while open, parallel-eligible requests
+            // degrade to the single-threaded SIMD executor (routing
+            // for sub-threshold requests is unchanged)
+            let run_parallel = parallel.is_some() && breaker.admit(Instant::now());
+            let degraded = parallel.is_some() && !run_parallel;
+            let backend = if run_parallel {
                 Backend::NativeParallel
-            } else if simd {
+            } else if simd || degraded {
                 Backend::NativeSimd
             } else {
                 Backend::Native
@@ -456,21 +776,34 @@ impl Coordinator {
             // `Arc<TraceSink>` must drop before `retire_sink` for the
             // sink to return to the free list.
             let sink = tracing.then(checkout_sink);
-            let result = {
-                let single = SingleExecutor::new(simd, SchedOpts::default().with_fuse(fuse));
-                let traced_parallel;
-                let traced_single;
-                let exec: &dyn PlanExecutor = match (&parallel, &sink) {
-                    (Some(px), Some(s)) => {
-                        traced_parallel = px.traced(Arc::clone(s));
-                        &traced_parallel
+            // the unwind boundary: a panic anywhere inside — band jobs
+            // re-raise theirs through the band pool's join — becomes a
+            // typed `Internal` on the normal response channel, never a
+            // dropped sender.  Workspace state is safe to reuse: the
+            // pool forgets buffers that never come back, and the band
+            // pool's job board resets per run.
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                let mut opts = SchedOpts::default().with_fuse(fuse);
+                if let Some(c) = &cancel {
+                    opts = opts.with_cancel(c.clone());
+                }
+                if let Some(s) = &sink {
+                    opts = opts.with_trace(Arc::clone(s));
+                }
+                let stamped_parallel;
+                let single;
+                let exec: &dyn PlanExecutor = match &parallel {
+                    Some(px) if run_parallel => {
+                        stamped_parallel = px.with_schedule(opts);
+                        &stamped_parallel
                     }
-                    (Some(px), None) => px.as_ref(),
-                    (None, Some(s)) => {
-                        traced_single = single.traced(Arc::clone(s));
-                        &traced_single
+                    // sub-threshold, or degraded by the open breaker:
+                    // single-threaded, vectorized when the service
+                    // runs SIMD or the request was degraded
+                    _ => {
+                        single = SingleExecutor::new(simd || degraded, opts);
+                        &single
                     }
-                    (None, None) => &single,
                 };
                 if levels <= 1 {
                     if inverse {
@@ -483,17 +816,40 @@ impl Coordinator {
                         .pyramid_plan(img.width, img.height, levels, inverse)
                         .map(|pyr| exec.run_pyramid(&pyr.with_scalar_below(threshold), &img))
                 }
-            };
+            }));
             let trace = sink.as_ref().map(|s| s.take());
             if let Some(s) = sink {
                 retire_sink(s);
             }
-            match result {
-                Ok(result) => {
+            match outcome {
+                Err(payload) => {
+                    metrics.record_panic_recovered();
+                    if run_parallel {
+                        breaker.record_panic(Instant::now());
+                    }
+                    let _ = respond.send(Err(anyhow::Error::new(RequestError::Internal {
+                        site: panic_site(payload.as_ref()),
+                    })));
+                }
+                Ok(Ok(result)) => {
+                    if cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                        // the executors returned early at a phase
+                        // boundary; the partial transform is discarded
+                        metrics.record_deadline_exceeded();
+                        let _ = respond
+                            .send(Err(anyhow::Error::new(RequestError::DeadlineExceeded)));
+                        return;
+                    }
                     let latency = start.elapsed();
                     metrics.record_leveled(latency, result.data.len() * 4, backend, levels);
                     if let Some(t) = &trace {
                         metrics.record_trace(scheme.name(), t);
+                    }
+                    if run_parallel {
+                        breaker.record_success();
+                    }
+                    if degraded {
+                        metrics.record_degraded();
                     }
                     let _ = respond.send(Ok(Response {
                         image: result,
@@ -504,7 +860,7 @@ impl Coordinator {
                 }
                 // geometry is validated in submit(); this is a guard
                 // against drift between validate() and PyramidPlan
-                Err(e) => {
+                Ok(Err(e)) => {
                     let _ = respond.send(Err(e));
                 }
             }
@@ -519,6 +875,32 @@ impl Coordinator {
     }
 }
 
+/// A printable site/message from a caught panic payload: the panic
+/// string when there was one (`&'static str` or `String`), a generic
+/// marker otherwise.
+fn panic_site(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic".to_string()
+    }
+}
+
+/// Run a PJRT execution under an unwind boundary: a panic inside the
+/// runtime becomes a typed [`RequestError::Internal`] instead of
+/// killing the executor thread (which would silently drop every
+/// queued responder).
+fn catch_internal<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => Err(anyhow::Error::new(RequestError::Internal {
+            site: panic_site(payload.as_ref()),
+        })),
+    }
+}
+
 impl Default for Request {
     fn default() -> Self {
         Self {
@@ -528,6 +910,7 @@ impl Default for Request {
             inverse: false,
             levels: 1,
             boundary: Boundary::Periodic,
+            deadline: None,
         }
     }
 }
@@ -602,7 +985,7 @@ fn executor_main(
                         .push((request, respond, start, entry_name));
                 } else {
                     // unbatched artifact: execute immediately
-                    let out = runtime.execute_image(&entry_name, &request.image);
+                    let out = catch_internal(|| runtime.execute_image(&entry_name, &request.image));
                     respond_one(out, respond, start, &metrics);
                 }
             }
@@ -665,18 +1048,18 @@ fn run_batch(
             images.push(head);
         }
     }
-    match runtime.execute_batch(batch_name, &images) {
+    match catch_internal(|| runtime.execute_batch(batch_name, &images)) {
         Ok(outs) => {
             for ((_, respond, start, _), out) in items.into_iter().zip(outs) {
                 respond_one(Ok(out), respond, start, metrics);
             }
         }
         Err(e) => {
-            // batched path failed: fall back to per-image execution
+            // batched path failed (error or recovered panic): fall
+            // back to per-image execution
             let msg = format!("{e}");
             for (req, respond, start, entry_name) in items {
-                let out = runtime
-                    .execute_image(&entry_name, &req.image)
+                let out = catch_internal(|| runtime.execute_image(&entry_name, &req.image))
                     .map_err(|e2| anyhow!("batch failed ({msg}); single failed: {e2}"));
                 respond_one(out, respond, start, metrics);
             }

@@ -41,6 +41,7 @@
 //! touching any per-scheme code.
 
 use super::apply;
+use super::faults;
 use super::knobs;
 use super::lifting::{self, taps_reach, Axis, Boundary};
 use super::plan::{
@@ -52,9 +53,18 @@ use super::pyramid::{self, PyramidPlan};
 use super::trace::{PhaseSample, TraceSink};
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex, Once};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Once, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Lock `m`, recovering the guard from a poisoned mutex.  Every mutex
+/// in this module guards plain counters or job-board state that is
+/// valid at all times (jobs run *outside* the locks), so a panic on
+/// some other thread must not wedge the lock for everyone else.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// A backend that can execute compiled plans.
 pub trait PlanExecutor: Send + Sync {
@@ -121,6 +131,56 @@ pub trait PlanExecutor: Send + Sync {
     fn trace_sink(&self) -> Option<&TraceSink> {
         None
     }
+
+    /// Whether the [`CancelToken`] threaded through this backend's
+    /// [`SchedOpts`] has been cancelled (or its deadline passed).  The
+    /// pyramid driver checks it between levels, the phase loops between
+    /// phases — cooperative early return, never a panic.  Backends
+    /// without scheduling options are never cancellable.
+    fn cancelled(&self) -> bool {
+        false
+    }
+}
+
+/// Cooperative cancellation handle for a scheduled execution: an
+/// explicit flag ([`CancelToken::cancel`]) and/or a wall-clock deadline,
+/// checked at phase and pyramid-level boundaries.  Cancellation is a
+/// *quality-of-service* mechanism, not a correctness one: the executor
+/// returns early with the workspace in a valid (but partial) state, and
+/// the coordinator maps the expired token to a typed
+/// `RequestError::DeadlineExceeded` instead of returning the partial
+/// result.  Clones share the flag, so the coordinator can hold one end
+/// while the executor polls the other.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token with no deadline; fires only via [`CancelToken::cancel`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A token that reports cancelled once `deadline` passes.
+    pub fn with_deadline(deadline: Instant) -> Self {
+        Self {
+            flag: Arc::new(AtomicBool::new(false)),
+            deadline: Some(deadline),
+        }
+    }
+
+    /// Request cancellation explicitly (all clones observe it).
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// True once cancelled explicitly or past the deadline.
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+            || self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
 }
 
 /// The single-threaded default backend: the compiled schedule with
@@ -162,6 +222,15 @@ impl SingleExecutor {
             opts: self.opts.clone().with_trace(sink),
         }
     }
+
+    /// A cancellable clone of this executor: same interior bodies and
+    /// scheduling, early return at phase boundaries once `token` fires.
+    pub fn with_cancel(&self, token: CancelToken) -> Self {
+        Self {
+            vector: self.vector,
+            opts: self.opts.clone().with_cancel(token),
+        }
+    }
 }
 
 impl PlanExecutor for SingleExecutor {
@@ -179,6 +248,10 @@ impl PlanExecutor for SingleExecutor {
 
     fn trace_sink(&self) -> Option<&TraceSink> {
         self.opts.trace.as_deref()
+    }
+
+    fn cancelled(&self) -> bool {
+        self.opts.is_cancelled()
     }
 }
 
@@ -232,6 +305,11 @@ pub struct SchedOpts {
     /// default) keeps the request path branch-only: no timing, no
     /// recording, no allocation — `rust/tests/zero_alloc.rs` pins it.
     pub trace: Option<Arc<TraceSink>>,
+    /// Cooperative cancellation token, checked once per phase (and per
+    /// pyramid level).  `None` (the default) is the same zero-cost-off
+    /// discipline as `trace`: one branch per phase, nothing else —
+    /// `rust/tests/zero_alloc.rs` pins it.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for SchedOpts {
@@ -241,6 +319,7 @@ impl Default for SchedOpts {
             panel_rows: 0,
             stencil_cache: default_stencil_cache(),
             trace: None,
+            cancel: None,
         }
     }
 }
@@ -274,6 +353,18 @@ impl SchedOpts {
         self.trace = Some(sink);
         self
     }
+
+    /// Check `token` at phase boundaries and return early once it
+    /// cancels.
+    pub fn with_cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// True when this schedule's cancel token (if any) has fired.
+    pub(crate) fn is_cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|c| c.is_cancelled())
+    }
 }
 
 /// Panel height for a given row stride: the configured value when
@@ -301,6 +392,10 @@ pub(crate) fn execute_scheduled(
     opts: &SchedOpts,
 ) {
     for phase in &plan.schedule(opts.fuse).phases {
+        if opts.is_cancelled() {
+            return;
+        }
+        faults::maybe_stall_phase();
         let t0 = opts.trace.as_ref().map(|_| Instant::now());
         match phase {
             FusedPhase::InPlace(ks) => {
@@ -424,7 +519,7 @@ struct PoolShared {
 fn worker_loop(shared: &PoolShared) {
     loop {
         let (task, i) = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_clean(&shared.state);
             loop {
                 if st.shutdown {
                     return;
@@ -435,14 +530,19 @@ fn worker_loop(shared: &PoolShared) {
                         st.next += 1;
                         break (task, i);
                     }
-                    _ => st = shared.work.wait(st).unwrap(),
+                    _ => {
+                        st = shared
+                            .work
+                            .wait(st)
+                            .unwrap_or_else(PoisonError::into_inner)
+                    }
                 }
             }
         };
         // run outside the lock; catch so a panicking band job cannot
         // poison the board or kill the worker
         let result = catch_unwind(AssertUnwindSafe(|| task(i)));
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_clean(&shared.state);
         if let Err(p) = result {
             st.payload.get_or_insert(p);
         }
@@ -517,22 +617,30 @@ impl BandPool {
         if n == 0 {
             return;
         }
-        let _one_run = self.caller.lock().unwrap();
+        // poison-tolerant: resuming a caught band-job panic unwinds
+        // through this frame with the caller guard held, poisoning the
+        // mutex — the *next* run must still be able to claim the board
+        // (the panic-then-reuse tests pin it)
+        let _one_run = lock_clean(&self.caller);
         // SAFETY: the wait below blocks until all `n` indices have
         // completed, and the board's task slot is cleared before this
         // function returns — the erased borrow strictly outlives every
         // use on the worker threads and never escapes the run.
         let task: TaskRef = unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), TaskRef>(task) };
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_clean(&self.shared.state);
         st.task = Some(task);
         st.n = n;
         st.next = 0;
         st.pending = n;
         drop(st);
         self.shared.work.notify_all();
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_clean(&self.shared.state);
         while st.pending > 0 {
-            st = self.shared.done.wait(st).unwrap();
+            st = self
+                .shared
+                .done
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
         }
         st.task = None;
         st.n = 0;
@@ -552,7 +660,7 @@ impl BandPool {
         let cells: Vec<Mutex<Option<Box<dyn FnOnce() + Send + '_>>>> =
             jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
         self.run_indexed(cells.len(), &|i| {
-            if let Some(job) = cells[i].lock().unwrap().take() {
+            if let Some(job) = lock_clean(&cells[i]).take() {
                 job();
             }
         });
@@ -561,7 +669,7 @@ impl BandPool {
 
 impl Drop for BandPool {
     fn drop(&mut self) {
-        self.shared.state.lock().unwrap().shutdown = true;
+        lock_clean(&self.shared.state).shutdown = true;
         self.shared.work.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -656,6 +764,31 @@ impl ParallelExecutor {
         }
     }
 
+    /// A cancellable clone of this executor: the *same* band pool, same
+    /// interior bodies and scheduling, early return at phase boundaries
+    /// once `token` fires.  Like [`ParallelExecutor::traced`], this is
+    /// how the coordinator stamps a per-request deadline onto its
+    /// shared parallel backend.
+    pub fn with_cancel(&self, token: CancelToken) -> Self {
+        Self {
+            pool: Arc::clone(&self.pool),
+            vector: self.vector,
+            opts: self.opts.clone().with_cancel(token),
+        }
+    }
+
+    /// A clone of this executor (same pool and interior bodies) running
+    /// the given scheduling options — the coordinator builds one per
+    /// request when it needs to attach a trace sink and/or cancel token
+    /// without re-deciding fuse/panel policy.
+    pub fn with_schedule(&self, opts: SchedOpts) -> Self {
+        Self {
+            pool: Arc::clone(&self.pool),
+            vector: self.vector,
+            opts,
+        }
+    }
+
     pub fn threads(&self) -> usize {
         self.pool.size()
     }
@@ -698,6 +831,9 @@ impl ParallelExecutor {
         let vector = self.vector;
         let panel_rows = self.opts.panel_rows;
         self.pool.run_indexed(nbands, &|b| {
+            if b == 0 {
+                faults::maybe_panic_band_job();
+            }
             let range = band_range(h2, nbands, b);
             // SAFETY: run_indexed hands each index to exactly one job,
             // and distinct bands are disjoint row ranges of the same
@@ -732,6 +868,9 @@ impl ParallelExecutor {
         let base: [SendMut; 4] = std::array::from_fn(|i| SendMut(out.p[i].as_mut_ptr()));
         let vector = self.vector;
         self.pool.run_indexed(nbands, &|b| {
+            if b == 0 {
+                faults::maybe_panic_band_job();
+            }
             let range = band_range(h2, nbands, b);
             // SAFETY: as in run_inplace_phase — one job per index,
             // disjoint row ranges per band, borrow scoped by the
@@ -782,6 +921,10 @@ impl PlanExecutor for ParallelExecutor {
             return;
         }
         for phase in &plan.schedule(self.opts.fuse).phases {
+            if self.opts.is_cancelled() {
+                return;
+            }
+            faults::maybe_stall_phase();
             let t0 = self.opts.trace.as_ref().map(|_| Instant::now());
             match phase {
                 FusedPhase::InPlace(ks) => self.run_inplace_phase(plan, ks, planes, nbands),
@@ -814,7 +957,7 @@ impl PlanExecutor for ParallelExecutor {
         // state only, no job boxes
         let cells = [Mutex::new(Some(a)), Mutex::new(Some(b))];
         self.pool.run_indexed(2, &|i| {
-            if let Some(f) = cells[i].lock().unwrap().take() {
+            if let Some(f) = lock_clean(&cells[i]).take() {
                 f();
             }
         });
@@ -822,6 +965,10 @@ impl PlanExecutor for ParallelExecutor {
 
     fn trace_sink(&self) -> Option<&TraceSink> {
         self.opts.trace.as_deref()
+    }
+
+    fn cancelled(&self) -> bool {
+        self.opts.is_cancelled()
     }
 }
 
@@ -1035,21 +1182,30 @@ mod tests {
 
     #[test]
     fn run_indexed_survives_a_panicking_task_and_runs_again() {
+        // repeated panic-then-reuse rounds: the resumed unwind poisons
+        // the caller mutex on its way out, so the board must stay
+        // claimable through poison recovery, not just after one panic
         let pool = BandPool::new(2);
-        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            pool.run_indexed(4, &|i| {
-                if i == 2 {
-                    panic!("boom");
-                }
+        for round in 0..3 {
+            let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.run_indexed(4, &|i| {
+                    if i == 2 {
+                        panic!("boom");
+                    }
+                });
+            }));
+            assert!(result.is_err(), "round {round}");
+            // the board must be clean for the next run
+            let count = std::sync::atomic::AtomicUsize::new(0);
+            pool.run_indexed(5, &|_| {
+                count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
             });
-        }));
-        assert!(result.is_err());
-        // the board must be clean for the next run
-        let count = std::sync::atomic::AtomicUsize::new(0);
-        pool.run_indexed(5, &|_| {
-            count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-        });
-        assert_eq!(count.load(std::sync::atomic::Ordering::SeqCst), 5);
+            assert_eq!(
+                count.load(std::sync::atomic::Ordering::SeqCst),
+                5,
+                "round {round}"
+            );
+        }
     }
 
     #[test]
@@ -1425,6 +1581,52 @@ mod tests {
         assert!(ScalarExecutor.trace_sink().is_none());
         assert!(SingleExecutor::new(true, SchedOpts::default()).trace_sink().is_none());
         assert!(ParallelExecutor::with_threads(2).trace_sink().is_none());
+    }
+
+    #[test]
+    fn cancel_tokens_share_their_flag_and_honor_deadlines() {
+        use std::time::Duration;
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        let clone = t.clone();
+        clone.cancel();
+        assert!(t.is_cancelled(), "clones share the flag");
+        let future = CancelToken::with_deadline(Instant::now() + Duration::from_secs(3600));
+        assert!(!future.is_cancelled());
+        let past = CancelToken::with_deadline(
+            Instant::now()
+                .checked_sub(Duration::from_millis(1))
+                .unwrap_or_else(Instant::now),
+        );
+        assert!(past.is_cancelled());
+    }
+
+    #[test]
+    fn cancelled_executors_return_early_without_touching_the_planes() {
+        let wav = Wavelet::cdf97();
+        let plan =
+            KernelPlan::from_steps(&schemes::build(Scheme::SepLifting, &wav), Boundary::Periodic);
+        let img = Image::synthetic(64, 48, 81);
+        let planes0 = Planes::split(&img);
+        let token = CancelToken::new();
+        token.cancel();
+        let par = ParallelExecutor::with_opts(2, false, SchedOpts::default())
+            .with_cancel(token.clone());
+        assert!(par.cancelled());
+        assert!(
+            bit_equal(&planes0, &par.run(&plan, &planes0)),
+            "a pre-cancelled run must not execute a single phase"
+        );
+        let single =
+            SingleExecutor::new(false, SchedOpts::default()).with_cancel(token.clone());
+        assert!(single.cancelled());
+        assert!(bit_equal(&planes0, &single.run(&plan, &planes0)));
+        // the shared pool is unaffected: a fresh clone of the same
+        // executor (same board) still produces the full result
+        let fresh = par.with_schedule(SchedOpts::default());
+        assert!(!fresh.cancelled());
+        let want = ScalarExecutor.run(&plan, &planes0);
+        assert!(bit_equal(&want, &fresh.run(&plan, &planes0)));
     }
 
     #[test]

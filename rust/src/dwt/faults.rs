@@ -1,0 +1,297 @@
+//! Deterministic fault injection for the chaos tests and benches.
+//!
+//! Production fault paths are worthless untested, and panics are the
+//! hardest fault to stage organically: they need a *specific* thread to
+//! die at a *specific* point, reproducibly.  This module is a
+//! process-wide registry of named injection sites the request path
+//! probes at its hazard points — a band job about to run its kernels, a
+//! workspace checkout, a phase boundary — each armed with a
+//! *fire-on-Nth-hit* counter (no RNG anywhere, so a chaos test that
+//! passes once passes always).  A site fires **exactly once**, on its
+//! Nth probe after arming, then stays quiet until re-armed.
+//!
+//! Disarmed cost is one relaxed atomic load per probe — the same
+//! branch-only discipline as the `trace`/`cancel` options, pinned by
+//! `rust/tests/zero_alloc.rs` (compiled in, idle, zero allocations).
+//!
+//! Arming happens two ways:
+//! * programmatically, via [`arm`] / [`disarm_all`] (what the chaos
+//!   suite and the bench's `robustness` section use);
+//! * through the `PALLAS_FAULTS` environment knob (read once, at first
+//!   probe), a comma-separated `site:N` list parsed strictly by
+//!   [`super::knobs::parse_fault_spec`] — e.g.
+//!   `PALLAS_FAULTS=band-panic:3,pool-checkout:1`.  Malformed entries
+//!   and unknown site names warn once and are ignored.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Once;
+
+/// Named injection sites on the request path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Panic inside band 0's job of a band-parallel phase fan-out.
+    /// One probe per fan-out, so arming with `N = k` panics the k-th
+    /// banded phase of the run.
+    BandJobPanic,
+    /// Panic at the top of a [`super::pool::WorkspacePool`] sample
+    /// checkout ([`super::pool::WorkspacePool::take_vec`]).
+    PoolCheckoutFail,
+    /// Stall a phase boundary for [`STALL_MILLIS`] ms — long enough to
+    /// push a short deadline over or hold a request in flight while an
+    /// admission-control test submits another.
+    SlowPhase,
+    /// Report a hit from the strict-input scan even on finite data
+    /// (exercises the rejection path without crafting NaN images).
+    NonFiniteInput,
+}
+
+/// How long [`maybe_stall_phase`] sleeps when [`FaultSite::SlowPhase`]
+/// fires.
+pub const STALL_MILLIS: u64 = 40;
+
+const N_SITES: usize = 4;
+
+impl FaultSite {
+    /// Stable knob-spec name (`PALLAS_FAULTS=band-panic:3,...`).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::BandJobPanic => "band-panic",
+            FaultSite::PoolCheckoutFail => "pool-checkout",
+            FaultSite::SlowPhase => "slow-phase",
+            FaultSite::NonFiniteInput => "non-finite",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        [
+            FaultSite::BandJobPanic,
+            FaultSite::PoolCheckoutFail,
+            FaultSite::SlowPhase,
+            FaultSite::NonFiniteInput,
+        ]
+        .into_iter()
+        .find(|s| s.name() == name)
+    }
+}
+
+/// Fast-path state: 0 = not initialized (env not read yet), 1 = idle
+/// (nothing armed), 2 = at least one site armed.  A probe on an idle
+/// registry is a single relaxed load.
+const UNINIT: u8 = 0;
+const IDLE: u8 = 1;
+const ARMED: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+/// Per-site trigger: 0 = disarmed, `n` = fire on the n-th hit.
+static TRIGGERS: [AtomicU64; N_SITES] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+/// Per-site hit counters since the last arm/disarm.
+static HITS: [AtomicU64; N_SITES] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+fn init_from_env() {
+    static INIT: Once = Once::new();
+    INIT.call_once(|| {
+        static WARN: Once = Once::new();
+        let raw = std::env::var("PALLAS_FAULTS").ok();
+        let spec = super::knobs::parse_fault_spec("PALLAS_FAULTS", raw.as_deref(), &WARN);
+        let mut any = false;
+        for (name, n) in spec {
+            match FaultSite::by_name(&name) {
+                Some(site) => {
+                    TRIGGERS[site as usize].store(n, Ordering::Relaxed);
+                    any = true;
+                }
+                None => {
+                    static UNKNOWN: Once = Once::new();
+                    UNKNOWN.call_once(|| {
+                        eprintln!(
+                            "warning: ignoring unknown PALLAS_FAULTS site {name:?} \
+                             (known: band-panic, pool-checkout, slow-phase, non-finite)"
+                        );
+                    });
+                }
+            }
+        }
+        // racing probes may already have bumped STATE through arm();
+        // only replace the UNINIT value
+        let _ = STATE.compare_exchange(
+            UNINIT,
+            if any { ARMED } else { IDLE },
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+    });
+}
+
+/// Arm `site` to fire on its `nth` probe (1 = the very next one).
+/// Resets the site's hit counter, so a sequence of arm/probe rounds is
+/// deterministic regardless of history.
+pub fn arm(site: FaultSite, nth: u64) {
+    init_from_env();
+    HITS[site as usize].store(0, Ordering::Relaxed);
+    TRIGGERS[site as usize].store(nth.max(1), Ordering::Relaxed);
+    STATE.store(ARMED, Ordering::Release);
+}
+
+/// Disarm every site and zero the hit counters.  Probes go back to the
+/// single-load idle path.
+pub fn disarm_all() {
+    init_from_env();
+    for i in 0..N_SITES {
+        TRIGGERS[i].store(0, Ordering::Relaxed);
+        HITS[i].store(0, Ordering::Relaxed);
+    }
+    STATE.store(IDLE, Ordering::Release);
+}
+
+/// True when any site is armed (the bench reports armed-but-idle
+/// overhead against this).
+pub fn armed() -> bool {
+    STATE.load(Ordering::Acquire) == ARMED
+}
+
+/// Probes recorded at `site` since it was last armed (0 while
+/// disarmed — arming resets the count).
+pub fn hits(site: FaultSite) -> u64 {
+    HITS[site as usize].load(Ordering::Relaxed)
+}
+
+/// Probe `site`: true exactly once, on the Nth hit after arming.
+/// Disarmed sites cost one relaxed load.
+#[inline]
+pub fn fire(site: FaultSite) -> bool {
+    if STATE.load(Ordering::Relaxed) == IDLE {
+        return false;
+    }
+    fire_slow(site)
+}
+
+#[cold]
+fn fire_slow(site: FaultSite) -> bool {
+    init_from_env();
+    let trigger = TRIGGERS[site as usize].load(Ordering::Relaxed);
+    if trigger == 0 {
+        return false;
+    }
+    let hit = HITS[site as usize].fetch_add(1, Ordering::AcqRel) + 1;
+    hit == trigger
+}
+
+/// Stable panic payload of an injected band-job panic — the chaos
+/// tests (and [`crate::coordinator::RequestError::Internal`]) match on
+/// it.
+pub const BAND_PANIC_MSG: &str = "injected band-job panic";
+
+/// Stable panic payload of an injected pool-checkout failure.
+pub const POOL_PANIC_MSG: &str = "injected pool-checkout failure";
+
+/// Probe [`FaultSite::BandJobPanic`]; panics with [`BAND_PANIC_MSG`]
+/// when it fires.  Called once per band-parallel phase fan-out (band 0
+/// only, so the probe count equals the phase count).
+#[inline]
+pub fn maybe_panic_band_job() {
+    if fire(FaultSite::BandJobPanic) {
+        panic!("{}", BAND_PANIC_MSG);
+    }
+}
+
+/// Probe [`FaultSite::PoolCheckoutFail`]; panics with
+/// [`POOL_PANIC_MSG`] when it fires.
+#[inline]
+pub fn maybe_fail_pool_checkout() {
+    if fire(FaultSite::PoolCheckoutFail) {
+        panic!("{}", POOL_PANIC_MSG);
+    }
+}
+
+/// Probe [`FaultSite::SlowPhase`]; sleeps [`STALL_MILLIS`] ms when it
+/// fires.  Called at each phase boundary of the scheduled executors.
+#[inline]
+pub fn maybe_stall_phase() {
+    if fire(FaultSite::SlowPhase) {
+        std::thread::sleep(std::time::Duration::from_millis(STALL_MILLIS));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // the registry is process-global; serialize the tests that arm it
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        let g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        disarm_all();
+        g
+    }
+
+    #[test]
+    fn fires_exactly_once_on_the_nth_hit() {
+        let _g = serial();
+        arm(FaultSite::SlowPhase, 3);
+        assert!(!fire(FaultSite::SlowPhase));
+        assert!(!fire(FaultSite::SlowPhase));
+        assert!(fire(FaultSite::SlowPhase), "third hit fires");
+        for _ in 0..5 {
+            assert!(!fire(FaultSite::SlowPhase), "single-shot: never again");
+        }
+        assert_eq!(hits(FaultSite::SlowPhase), 8);
+        disarm_all();
+    }
+
+    #[test]
+    fn disarmed_sites_never_fire_and_count_nothing() {
+        let _g = serial();
+        for _ in 0..4 {
+            assert!(!fire(FaultSite::BandJobPanic));
+        }
+        assert_eq!(hits(FaultSite::BandJobPanic), 0, "idle probes are not hits");
+        assert!(!armed());
+        disarm_all();
+    }
+
+    #[test]
+    fn rearming_resets_the_counter() {
+        let _g = serial();
+        for round in 0..3 {
+            arm(FaultSite::PoolCheckoutFail, 2);
+            assert!(!fire(FaultSite::PoolCheckoutFail), "round {round}");
+            assert!(fire(FaultSite::PoolCheckoutFail), "round {round}");
+        }
+        disarm_all();
+    }
+
+    #[test]
+    fn sites_are_independent() {
+        let _g = serial();
+        arm(FaultSite::BandJobPanic, 1);
+        assert!(!fire(FaultSite::SlowPhase));
+        assert!(!fire(FaultSite::NonFiniteInput));
+        assert!(fire(FaultSite::BandJobPanic));
+        disarm_all();
+    }
+
+    #[test]
+    fn site_names_roundtrip() {
+        for site in [
+            FaultSite::BandJobPanic,
+            FaultSite::PoolCheckoutFail,
+            FaultSite::SlowPhase,
+            FaultSite::NonFiniteInput,
+        ] {
+            assert_eq!(FaultSite::by_name(site.name()), Some(site));
+        }
+        assert_eq!(FaultSite::by_name("rng-glitch"), None);
+    }
+}

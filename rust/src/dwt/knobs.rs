@@ -11,8 +11,10 @@
 //! [`super::simd::default_simd`] (`PALLAS_SIMD`),
 //! [`super::executor::default_fuse`] (`PALLAS_FUSE`),
 //! [`super::pool::default_pool`] (`PALLAS_POOL`),
-//! [`super::plan::default_stencil_cache`] (`PALLAS_STENCIL_CACHE`) and
-//! [`super::trace::default_trace`] (`PALLAS_TRACE`).
+//! [`super::plan::default_stencil_cache`] (`PALLAS_STENCIL_CACHE`),
+//! [`super::trace::default_trace`] (`PALLAS_TRACE`),
+//! [`crate::coordinator::service::default_strict_input`]
+//! (`PALLAS_STRICT_INPUT`) and [`super::faults`] (`PALLAS_FAULTS`).
 
 use std::sync::Once;
 
@@ -50,6 +52,37 @@ pub(crate) fn parse_switch(name: &str, raw: Option<&str>, warn: &Once, default: 
             default
         }
     }
+}
+
+/// Parse a fault-injection spec (`PALLAS_FAULTS`): a comma-separated
+/// list of `site:N` entries, `N` a positive integer hit count.  Unset
+/// or empty resolves to an empty list; a malformed entry (missing
+/// colon, non-numeric or zero count) warns once and is skipped while
+/// well-formed entries still apply.  Site-name resolution happens in
+/// [`super::faults`] — this parser only enforces the shape.
+pub(crate) fn parse_fault_spec(name: &str, raw: Option<&str>, warn: &Once) -> Vec<(String, u64)> {
+    let Some(v) = raw.map(str::trim).filter(|s| !s.is_empty()) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut ok = true;
+    for part in v.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once(':') {
+            Some((site, n)) => match n.trim().parse::<u64>() {
+                Ok(n) if n >= 1 => out.push((site.trim().to_string(), n)),
+                _ => ok = false,
+            },
+            None => ok = false,
+        }
+    }
+    if !ok {
+        warn_once(warn, name, v, "a comma-separated list of site:N entries");
+    }
+    out
 }
 
 fn warn_once(warn: &Once, name: &str, value: &str, expected: &str) {
@@ -90,5 +123,25 @@ mod tests {
         assert!(parse_switch("K", Some("yes"), &once, true));
         assert!(!parse_switch("K", Some("yes"), &once, false));
         assert!(parse_switch("K", Some("off"), &once, true));
+    }
+
+    #[test]
+    fn fault_spec_parses_site_count_pairs() {
+        let once = Once::new();
+        assert!(parse_fault_spec("F", None, &once).is_empty());
+        assert!(parse_fault_spec("F", Some("  "), &once).is_empty());
+        assert_eq!(
+            parse_fault_spec("F", Some("band-panic:3,pool-checkout:1"), &once),
+            vec![("band-panic".into(), 3), ("pool-checkout".into(), 1)]
+        );
+        assert_eq!(
+            parse_fault_spec("F", Some(" slow-phase : 2 "), &once),
+            vec![("slow-phase".into(), 2)]
+        );
+        // malformed entries are skipped, well-formed ones still apply
+        assert_eq!(
+            parse_fault_spec("F", Some("band-panic, slow-phase:0, non-finite:4"), &once),
+            vec![("non-finite".into(), 4)]
+        );
     }
 }

@@ -62,12 +62,17 @@
 //!   coordinator metrics).
 //! * `knobs` — strict parsing for the `PALLAS_*` environment knobs
 //!   (invalid values warn once and fall back to the default).
+//! * [`faults`] — the deterministic fault-injection registry behind
+//!   the chaos suite and `PALLAS_FAULTS`: named sites with
+//!   fire-on-Nth-hit counters (no RNG), a single relaxed atomic load
+//!   on the disarmed fast path.
 //!
 //! All paths compute identical coefficients; the test suite enforces it.
 
 pub mod apply;
 pub mod engine;
 pub mod executor;
+pub mod faults;
 pub(crate) mod knobs;
 pub mod lifting;
 pub mod multilevel;
@@ -81,9 +86,10 @@ pub mod vecn;
 
 pub use engine::{Engine, PlanVariant};
 pub use executor::{
-    default_fuse, default_threads, ParallelExecutor, PlanExecutor, ScalarExecutor, SchedOpts,
-    SingleExecutor,
+    default_fuse, default_threads, CancelToken, ParallelExecutor, PlanExecutor, ScalarExecutor,
+    SchedOpts, SingleExecutor,
 };
+pub use faults::FaultSite;
 pub use lifting::{Axis, Boundary};
 pub use plan::{
     default_stencil_cache, stencil_cache_stats, FusedPhase, KernelPlan, KernelRef, ProgTerm,

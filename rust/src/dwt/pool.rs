@@ -29,11 +29,21 @@
 //! [`WorkspacePool::stats`] and surfaced by the coordinator's metrics
 //! summary.
 
+use super::faults;
 use super::knobs;
 use super::planes::{Image, Planes};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, Once, OnceLock};
+use std::sync::{Mutex, MutexGuard, Once, OnceLock, PoisonError};
+
+/// Lock a shard, recovering the guard from a poisoned mutex.  Free
+/// lists are valid whenever the lock is free (pushes/pops are complete
+/// before any panic can occur), so a thread that died elsewhere while
+/// holding a shard must not take the arena down with it — the worst
+/// case is a stale counter, never a bad buffer.
+fn lock_shard<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Number of independent free-list shards (must be a power of two).
 const SHARDS: usize = 8;
@@ -145,8 +155,9 @@ impl WorkspacePool {
     /// Misses allocate zero-filled, so the two cases are only
     /// distinguishable by code that reads samples it never wrote.
     pub fn take_vec(&self, len: usize) -> Vec<f32> {
+        faults::maybe_fail_pool_checkout();
         if self.enabled {
-            let popped = self.shard(len).lock().unwrap().get_mut(&len).and_then(Vec::pop);
+            let popped = lock_shard(self.shard(len)).get_mut(&len).and_then(Vec::pop);
             if let Some(v) = popped {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 self.resident.fetch_sub(1, Ordering::Relaxed);
@@ -167,7 +178,7 @@ impl WorkspacePool {
             return; // dropping frees it
         }
         let len = v.len();
-        let mut shard = self.shard(len).lock().unwrap();
+        let mut shard = lock_shard(self.shard(len));
         let class = shard.entry(len).or_default();
         if class.len() >= MAX_PER_CLASS {
             drop(shard); // free outside the lock
@@ -189,12 +200,7 @@ impl WorkspacePool {
     /// hit/miss/resident counters as the sample classes.
     pub fn take_idx(&self, len: usize) -> Vec<u32> {
         if self.enabled {
-            let popped = self
-                .idx_shard(len)
-                .lock()
-                .unwrap()
-                .get_mut(&len)
-                .and_then(Vec::pop);
+            let popped = lock_shard(self.idx_shard(len)).get_mut(&len).and_then(Vec::pop);
             if let Some(v) = popped {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 self.resident.fetch_sub(1, Ordering::Relaxed);
@@ -214,7 +220,7 @@ impl WorkspacePool {
             return;
         }
         let len = v.len();
-        let mut shard = self.idx_shard(len).lock().unwrap();
+        let mut shard = lock_shard(self.idx_shard(len));
         let class = shard.entry(len).or_default();
         if class.len() >= MAX_PER_CLASS {
             drop(shard);
@@ -376,6 +382,28 @@ mod tests {
         disabled.put_idx(vec![1; 8]);
         assert_eq!(disabled.stats().resident, 0);
         assert!(disabled.take_idx(8).iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn poisoned_shard_still_serves_checkouts() {
+        // satellite pin: a thread that panics while holding a shard
+        // lock poisons the mutex, but the free list underneath is
+        // intact — checkouts and returns must keep working (and even
+        // hit the cached buffer)
+        let pool = WorkspacePool::new(true);
+        pool.put_vec(vec![7.0; 77]);
+        let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = pool.shard(77).lock().unwrap();
+            panic!("poison the shard");
+        }));
+        assert!(poisoned.is_err());
+        assert!(pool.shard(77).is_poisoned(), "the shard really is poisoned");
+        let v = pool.take_vec(77);
+        assert_eq!(v.len(), 77);
+        assert_eq!(v[0], 7.0, "the cached buffer survived the poisoning");
+        assert_eq!(pool.stats().hits, 1);
+        pool.put_vec(v);
+        assert_eq!(pool.stats().resident, 1, "returns keep working too");
     }
 
     #[test]

@@ -251,6 +251,12 @@ fn run_forward<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, img: &Imag
     ws.split_into(img);
     let mut scratch: Option<Planes> = None;
     for (i, lv) in pyr.levels().iter().enumerate() {
+        // cooperative cancellation between levels: the packed output
+        // stays memory-valid (partially written), and the coordinator
+        // discards it in favor of a typed deadline error
+        if exec.cancelled() {
+            break;
+        }
         if let Some(sink) = exec.trace_sink() {
             sink.begin_level(lv.level);
         }
@@ -304,6 +310,10 @@ fn run_inverse<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, packed: &I
     ws.set_region(deepest.w2, deepest.h2);
     load_ll(&mut ws, packed);
     for lv in pyr.levels().iter().rev() {
+        // cooperative cancellation between levels (see run_forward)
+        if exec.cancelled() {
+            break;
+        }
         if let Some(sink) = exec.trace_sink() {
             sink.begin_level(lv.level);
         }
@@ -315,7 +325,10 @@ fn run_inverse<E: PlanExecutor + ?Sized>(exec: &E, pyr: &PyramidPlan, packed: &I
             interleave_level(&mut ws, lv.w2, lv.h2);
         }
     }
-    // level 0 reconstructed the full polyphase components
+    // level 0 reconstructed the full polyphase components (an early
+    // cancelled break leaves a deeper region active — restore the full
+    // level-0 region so the merge below stays shape-valid)
+    ws.set_region(w2, h2);
     let mut img = pool.take_image(pyr.width, pyr.height);
     ws.merge_into(&mut img);
     pool.put_planes(ws);

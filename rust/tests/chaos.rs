@@ -1,0 +1,240 @@
+//! Chaos suite: the fault-tolerant request path under deterministic
+//! injected faults (`dwt_accel::dwt::faults`).
+//!
+//! Own test binary (see `Cargo.toml`): the injection registry is
+//! process-wide, and arming it here must not perturb the other test
+//! binaries.  Within this binary the tests serialize on a gate mutex —
+//! each arms, drives a coordinator, and disarms before releasing.
+//!
+//! What must hold (the PR's acceptance bar):
+//! * an injected band-job panic resolves to a typed
+//!   `RequestError::Internal` on the normal response channel — the
+//!   receiver gets `Err`, never a `RecvError` hang — and the *same*
+//!   coordinator (same band pool) serves subsequent requests;
+//! * the circuit breaker degrades parallel traffic to the
+//!   single-threaded SIMD executor after repeated panics and recovers
+//!   after its cooldown;
+//! * deadlines reject before execution when already expired and
+//!   cooperatively mid-execution via the phase-boundary cancel check;
+//! * admission control rejects the request beyond `max_in_flight` with
+//!   a typed `Overloaded` while the admitted request completes.
+
+use dwt_accel::coordinator::metrics::Backend;
+use dwt_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, Request, RequestError};
+use dwt_accel::dwt::faults::{self, FaultSite};
+use dwt_accel::dwt::Image;
+use dwt_accel::polyphase::schemes::Scheme;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Serialize the tests (the registry is process-global) and start each
+/// from a disarmed state.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    let g = GATE.lock().unwrap_or_else(PoisonError::into_inner);
+    faults::disarm_all();
+    g
+}
+
+/// Native-only coordinator with `parallel_threshold: 0` — every
+/// request routes to the shared band-parallel executor, where the
+/// band-panic and slow-phase sites live.  The breaker is disabled by
+/// default so panic tests observe the undegraded path; the breaker
+/// test overrides it.
+fn chaos_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifacts_dir: None,
+        workers: 2,
+        batch: BatchPolicy::default(),
+        parallel_threshold: 0,
+        threads: 2,
+        simd: false,
+        fuse: true,
+        trace: false,
+        breaker_threshold: 0,
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn request(seed: u64) -> Request {
+    Request::forward(
+        Image::synthetic(64, 64, seed),
+        "cdf97",
+        Scheme::SepLifting,
+    )
+}
+
+fn expect_request_error(err: &anyhow::Error) -> &RequestError {
+    err.downcast_ref::<RequestError>()
+        .unwrap_or_else(|| panic!("expected a typed RequestError, got: {err}"))
+}
+
+#[test]
+fn injected_band_panic_becomes_a_typed_internal_error() {
+    let _g = serial();
+    let coord = Coordinator::new(chaos_cfg()).unwrap();
+    faults::arm(FaultSite::BandJobPanic, 1);
+    let err = coord.transform(request(1)).unwrap_err();
+    match expect_request_error(&err) {
+        RequestError::Internal { site } => {
+            assert!(
+                site.contains(faults::BAND_PANIC_MSG),
+                "panic payload should ride on the error, got site {site:?}"
+            );
+        }
+        other => panic!("expected Internal, got {other:?}"),
+    }
+    faults::disarm_all();
+    // the same coordinator — same band pool, same job board — must
+    // keep serving after the recovered panic
+    for seed in 2..5 {
+        let resp = coord.transform(request(seed)).unwrap();
+        assert_eq!(resp.backend, Backend::NativeParallel);
+    }
+    let s = coord.metrics.summary();
+    assert_eq!(s.panics_recovered, 1);
+    assert_eq!(s.degraded_requests, 0, "breaker disabled in this config");
+}
+
+#[test]
+fn receiver_always_resolves_even_when_the_engine_panics() {
+    let _g = serial();
+    let coord = Coordinator::new(chaos_cfg()).unwrap();
+    faults::arm(FaultSite::BandJobPanic, 1);
+    let handle = coord.submit(request(7));
+    // the regression this pins: a panic between submit and respond
+    // used to drop the sender, leaving the receiver to error out (or
+    // block forever on recv()).  The unwind boundary must deliver a
+    // real Err instead.
+    let delivered = handle
+        .recv_timeout(Duration::from_secs(30))
+        .expect("response channel must resolve, not disconnect");
+    let err = delivered.unwrap_err();
+    assert!(matches!(
+        expect_request_error(&err),
+        RequestError::Internal { .. }
+    ));
+    faults::disarm_all();
+}
+
+#[test]
+fn injected_pool_checkout_failure_is_recovered() {
+    let _g = serial();
+    let coord = Coordinator::new(chaos_cfg()).unwrap();
+    faults::arm(FaultSite::PoolCheckoutFail, 1);
+    let err = coord.transform(request(11)).unwrap_err();
+    match expect_request_error(&err) {
+        RequestError::Internal { site } => {
+            assert!(site.contains("pool-checkout"), "got site {site:?}");
+        }
+        other => panic!("expected Internal, got {other:?}"),
+    }
+    faults::disarm_all();
+    let resp = coord.transform(request(12)).unwrap();
+    assert_eq!(resp.backend, Backend::NativeParallel);
+    assert_eq!(coord.metrics.summary().panics_recovered, 1);
+}
+
+#[test]
+fn breaker_degrades_to_single_threaded_and_recovers_after_cooldown() {
+    let _g = serial();
+    let cooldown = Duration::from_millis(100);
+    let coord = Coordinator::new(CoordinatorConfig {
+        breaker_threshold: 2,
+        breaker_window: Duration::from_secs(10),
+        breaker_cooldown: cooldown,
+        ..chaos_cfg()
+    })
+    .unwrap();
+    // two recovered panics on the parallel backend within the window
+    // trip the breaker
+    for seed in 0..2 {
+        faults::arm(FaultSite::BandJobPanic, 1);
+        let err = coord.transform(request(20 + seed)).unwrap_err();
+        assert!(matches!(
+            expect_request_error(&err),
+            RequestError::Internal { .. }
+        ));
+    }
+    faults::disarm_all();
+    // open breaker: parallel-eligible requests degrade to the
+    // single-threaded SIMD executor — and still produce coefficients
+    let resp = coord.transform(request(30)).unwrap();
+    assert_eq!(resp.backend, Backend::NativeSimd, "open breaker degrades");
+    // after the cooldown the next request is the half-open probe; it
+    // succeeds (faults disarmed), closing the breaker again
+    std::thread::sleep(cooldown + Duration::from_millis(50));
+    for seed in 31..33 {
+        let resp = coord.transform(request(seed)).unwrap();
+        assert_eq!(
+            resp.backend,
+            Backend::NativeParallel,
+            "probe and post-probe requests run parallel again"
+        );
+    }
+    let s = coord.metrics.summary();
+    assert_eq!(s.panics_recovered, 2);
+    assert!(s.degraded_requests >= 1, "got {}", s.degraded_requests);
+}
+
+#[test]
+fn deadlines_reject_before_and_during_execution() {
+    let _g = serial();
+    let coord = Coordinator::new(chaos_cfg()).unwrap();
+    // already expired at submission: rejected before the engine runs
+    let err = coord
+        .transform(request(40).deadline(Duration::ZERO))
+        .unwrap_err();
+    assert!(matches!(
+        expect_request_error(&err),
+        RequestError::DeadlineExceeded
+    ));
+    // mid-execution: a stalled phase pushes a short deadline over; the
+    // cancel token stops the run at the next phase boundary
+    faults::arm(FaultSite::SlowPhase, 1);
+    let err = coord
+        .transform(request(41).deadline(Duration::from_millis(10)))
+        .unwrap_err();
+    assert!(matches!(
+        expect_request_error(&err),
+        RequestError::DeadlineExceeded
+    ));
+    faults::disarm_all();
+    // no deadline: same geometry completes
+    coord.transform(request(42)).unwrap();
+    let s = coord.metrics.summary();
+    assert_eq!(s.deadline_exceeded, 2);
+    assert_eq!(s.panics_recovered, 0, "cancellation is not a panic");
+}
+
+#[test]
+fn admission_control_rejects_the_request_beyond_the_cap() {
+    let _g = serial();
+    let coord = Coordinator::new(CoordinatorConfig {
+        max_in_flight: 1,
+        ..chaos_cfg()
+    })
+    .unwrap();
+    // hold request A in flight on a stalled phase while B arrives
+    faults::arm(FaultSite::SlowPhase, 1);
+    let a = coord.submit(request(50));
+    let b = coord.submit(request(51));
+    let err = b
+        .recv_timeout(Duration::from_secs(30))
+        .expect("rejection is immediate")
+        .unwrap_err();
+    match expect_request_error(&err) {
+        RequestError::Overloaded { limit } => assert_eq!(*limit, 1),
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    // the admitted request completes normally despite the rejection
+    a.recv_timeout(Duration::from_secs(30))
+        .expect("admitted request must resolve")
+        .unwrap();
+    faults::disarm_all();
+    // capacity released: the next request is admitted again
+    coord.transform(request(52)).unwrap();
+    let s = coord.metrics.summary();
+    assert_eq!(s.rejected_overload, 1);
+}

@@ -20,6 +20,7 @@ fn native_cfg() -> CoordinatorConfig {
         simd: false,
         fuse: true,
         trace: false,
+        ..CoordinatorConfig::default()
     }
 }
 
@@ -244,6 +245,49 @@ fn absurd_pyramid_depth_is_a_typed_error() {
 }
 
 #[test]
+fn strict_input_rejects_non_finite_samples_with_the_index() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        strict_input: true,
+        ..native_cfg()
+    })
+    .unwrap();
+    // mid-chunk: index 517 falls inside a full 8-lane chunk of the scan
+    let mut img = Image::synthetic(32, 32, 60);
+    img.data[517] = f32::NAN;
+    let err = coord
+        .transform(Request::forward(img, "cdf53", Scheme::SepLifting))
+        .unwrap_err();
+    assert_eq!(
+        request_error(err),
+        RequestError::NonFiniteInput { index: 517 }
+    );
+    // remainder tail: 30x30 = 900 samples = 112 full chunks + 4; index
+    // 897 exercises the scalar remainder scan
+    let mut img = Image::synthetic(30, 30, 61);
+    img.data[897] = f32::INFINITY;
+    let err = coord
+        .transform(Request::forward(img, "cdf53", Scheme::SepLifting))
+        .unwrap_err();
+    assert_eq!(
+        request_error(err),
+        RequestError::NonFiniteInput { index: 897 }
+    );
+}
+
+#[test]
+fn default_config_serves_non_finite_input() {
+    // the scan is strictly opt-in: without strict_input the request
+    // executes (NaN propagates through the transform, as before)
+    let coord = Coordinator::new(native_cfg()).unwrap();
+    let mut img = Image::synthetic(32, 32, 62);
+    img.data[5] = f32::NAN;
+    let resp = coord
+        .transform(Request::forward(img, "cdf53", Scheme::SepLifting))
+        .unwrap();
+    assert_eq!(resp.backend, Backend::Native);
+}
+
+#[test]
 fn builder_requests_equal_struct_literals() {
     // the builder is sugar, not a new type: it must produce exactly the
     // literal it replaces, and validate() must agree with submit()
@@ -320,6 +364,7 @@ fn pjrt_route_used_at_serve_size_and_batches_form() {
         simd: true,
         fuse: true,
         trace: false,
+        ..CoordinatorConfig::default()
     })
     .unwrap();
     assert!(coord.pjrt_available());
@@ -508,6 +553,7 @@ fn bad_artifacts_dir_falls_back_to_native() {
         simd: false,
         fuse: true,
         trace: false,
+        ..CoordinatorConfig::default()
     })
     .unwrap();
     assert!(!coord.pjrt_available());
@@ -537,6 +583,7 @@ fn corrupt_manifest_falls_back_to_native() {
         simd: false,
         fuse: true,
         trace: false,
+        ..CoordinatorConfig::default()
     })
     .unwrap();
     assert!(!coord.pjrt_available());
@@ -722,6 +769,7 @@ fn deterministic_thread_count_is_respected() {
         simd: false,
         fuse: true,
         trace: false,
+        ..CoordinatorConfig::default()
     })
     .unwrap();
     let img = Image::synthetic(64, 64, 96);
